@@ -1,0 +1,87 @@
+//! Memory report: measured (small artifacts) vs analytical (paper scale).
+//!
+//! Prints the Figure 2 composition for ViT-B and LLaMA-13B, the Figure
+//! 5/6 per-block unit tallies, and — when artifacts are built — the
+//! *measured* residual breakdown of the small presets next to the
+//! memmodel's tape-mode prediction for the same dims (they must agree).
+//!
+//!   make artifacts && cargo run --release --example memory_report
+
+use ambp::memmodel::ops::{ActKind, Arch, MemCfg, Mode, NormKind, Tuning};
+use ambp::memmodel::report::composition_rows;
+use ambp::memmodel::{block_units, presets as mp, total_bytes};
+use ambp::runtime::Manifest;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    println!("── Figure 5/6: per-block activation units ──");
+    for (label, cfg) in [
+        ("ViT trainable (GELU+LN)  [paper 19.0]",
+         mp::vit_base(64, Tuning::Full, ActKind::Gelu, NormKind::Ln)),
+        ("ViT frozen    (GELU+LN)  [paper 12.0]",
+         mp::vit_base(64, Tuning::Frozen, ActKind::Gelu, NormKind::Ln)),
+        ("ViT ours (ReGELU2+MS-LN) [paper 11.5]",
+         mp::vit_base(64, Tuning::Full, ActKind::ReGelu2, NormKind::MsLn)),
+        ("LLaMA-13B trainable      [paper 21.8]",
+         mp::llama13b(4, 2048, ActKind::Silu, NormKind::Rms)),
+        ("LLaMA-13B ours           [paper 15.44]",
+         mp::llama13b(4, 2048, ActKind::ReSilu2, NormKind::MsRms)),
+    ] {
+        println!("  {label:<42} {:>6.2} units", block_units(&cfg));
+    }
+
+    println!("\n── Figure 2: composition (analytical, paper mode) ──");
+    for (label, cfg) in [
+        ("ViT-B LoRA", mp::vit_base(64, Tuning::LoraQv, ActKind::Gelu,
+                                    NormKind::Ln)),
+        ("LLaMA-13B", mp::llama13b(4, 2048, ActKind::Silu, NormKind::Rms)),
+    ] {
+        println!("  {label}:");
+        for (cat, pct) in composition_rows(&cfg) {
+            println!("    {cat:<16} {pct:>5.1}%");
+        }
+    }
+
+    // measured vs analytical cross-check on the small artifacts
+    println!("\n── measured (manifest) vs memmodel tape-mode ──");
+    for preset in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln",
+                   "llama_loraall_silu_rms"] {
+        let dir = ambp::runtime::artifacts_dir().join(preset);
+        if !dir.join("manifest.json").is_file() {
+            println!("  {preset}: artifact not built (make artifacts)");
+            continue;
+        }
+        let m = Manifest::load(&dir)?;
+        let cfg = MemCfg {
+            arch: match m.arch.as_str() {
+                "llama" => Arch::Llama,
+                "roberta" => Arch::Roberta,
+                _ => Arch::Vit,
+            },
+            dim: m.dim,
+            depth: m.depth,
+            n_heads: m.n_heads,
+            mlp_ratio: m.mlp_ratio,
+            n_tokens: m.n_tokens,
+            patch_dim: m.patch_dim,
+            n_classes: m.n_classes,
+            vocab: m.vocab,
+            lora_rank: m.lora_rank,
+            batch: m.batch,
+            tuning: ambp::exp::helpers::tuning_kind(&m.tuning),
+            act: ambp::exp::helpers::act_kind(&m.activation),
+            norm: ambp::exp::helpers::norm_kind(&m.norm),
+            mode: Mode::Tape,
+            ckpt: m.ckpt,
+        };
+        let predicted = total_bytes(&cfg);
+        let measured = m.residual_bytes_total;
+        let err = 100.0 * (predicted as f64 - measured as f64)
+            / measured as f64;
+        println!("  {preset:<28} measured {:>9.2} MiB | model {:>9.2} MiB \
+                  | Δ {err:+.1}%",
+                 measured as f64 / 1048576.0,
+                 predicted as f64 / 1048576.0);
+    }
+    Ok(())
+}

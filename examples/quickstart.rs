@@ -1,0 +1,43 @@
+//! Quickstart: load an AOT artifact, run a few fine-tuning steps, show
+//! the measured activation memory — the whole three-layer stack.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use ambp::coordinator::{TrainCfg, Trainer};
+use ambp::runtime::{Artifact, Runtime};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    for preset in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln"] {
+        let dir = ambp::runtime::artifacts_dir().join(preset);
+        let art = Artifact::load(&rt, &dir)?;
+        let m = &art.manifest;
+        println!(
+            "\n{preset}: {} ({}, act={}, norm={})",
+            m.arch, m.tuning, m.activation, m.norm
+        );
+
+        // three training steps, then report the measured residual bytes —
+        // the paper's "activation memory", observed at the fwd/bwd ABI
+        let mut trainer = Trainer::new(
+            &art,
+            TrainCfg { steps: 3, lr: 1e-3, log_every: 1,
+                       ..Default::default() },
+        )?;
+        let rep = trainer.train()?;
+        println!(
+            "loss {:.4} → eval acc {:.3} | activation memory {:.2} MiB",
+            rep.final_loss,
+            rep.eval_metric,
+            rep.peak_activation_bytes as f64 / 1048576.0
+        );
+        for (kind, bytes) in &rep.by_kind {
+            println!("   {:<13} {:>8.2} MiB", kind,
+                     *bytes as f64 / 1048576.0);
+        }
+    }
+    println!("\nReGELU2 turns the act_full tensor into 2-bit act_codes; \
+              MS-LN removes norm_input entirely (shares z with q/k/v).");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver (DESIGN.md §4, EXPERIMENTS.md §E2E):
+//! pretrain a ViT-style model full-tuning on task A, then LoRA-fine-tune
+//! it on task B twice — with {GELU, LN} and with {ReGELU2, MS-LN} — from
+//! the SAME pretrained checkpoint (affine-merged per eq. 17 for MS-LN).
+//!
+//! Logs both loss curves, final accuracy, throughput, and the measured
+//! activation-memory gap. This is the full paper workflow: pretrained
+//! weights → memory-efficient fine-tuning with an unchanged forward pass.
+//!
+//!   make artifacts && cargo run --release --example vit_lora_finetune \
+//!       [-- --pretrain-steps 120 --steps 200]
+
+use std::path::PathBuf;
+
+use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
+use ambp::coordinator::scheduler::Schedule;
+use ambp::coordinator::{TrainCfg, Trainer};
+use ambp::runtime::{Artifact, Runtime};
+use ambp::util::cli::Args;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let pretrain_steps = args.usize_or("pretrain-steps", 80)?;
+    let steps = args.usize_or("steps", 150)?;
+    let rt = Runtime::cpu()?;
+    let adir = ambp::runtime::artifacts_dir();
+    let out = PathBuf::from("target/e2e");
+    std::fs::create_dir_all(&out)?;
+
+    // ---- phase 1: "pretrain" (full tuning, task seed 100) --------------
+    println!("=== phase 1: pretrain e2e_vit (full tuning, GELU+LN) ===");
+    let pre = Artifact::load(&rt, &adir.join("e2e_vit_pretrain"))?;
+    let n_params: usize =
+        pre.manifest.params.iter()
+            .map(|p| p.shape.iter().product::<usize>()).sum();
+    println!("model: {:.1}M params, depth {}, dim {}",
+             n_params as f64 / 1e6, pre.manifest.depth, pre.manifest.dim);
+    let mut t = Trainer::new(&pre, TrainCfg {
+        steps: pretrain_steps,
+        lr: 3e-4,
+        seed: 100,
+        log_every: 20,
+        metrics_jsonl: Some(out.join("pretrain.jsonl")),
+        ..Default::default()
+    })?;
+    let rep = t.train()?;
+    println!("pretrain: loss {:.4}, acc {:.3}, {:.1} img/s",
+             rep.final_loss, rep.eval_metric, rep.throughput);
+    let ck = Checkpoint::from_params(&pre.manifest, &t.params);
+    ck.save(&out.join("pretrained"))?;
+
+    // ---- phase 2: LoRA fine-tune on task B, both variants --------------
+    let mut results = Vec::new();
+    for (label, preset, merge) in [
+        ("LoRA + GELU + LN", "e2e_vit_gelu_ln", false),
+        ("LoRA + ReGELU2 + MS-LN", "e2e_vit_regelu2_msln", true),
+    ] {
+        println!("\n=== phase 2: fine-tune {label} ===");
+        let art = Artifact::load(&rt, &adir.join(preset))?;
+        let mut tr = Trainer::new(&art, TrainCfg {
+            steps,
+            lr: 1.25e-3,
+            seed: 7, // task B
+            log_every: 25,
+            schedule: Schedule::WarmupCosine {
+                warmup: steps / 10,
+                warmup_init: 1e-6,
+            },
+            metrics_jsonl: Some(out.join(format!("{preset}.jsonl"))),
+            ..Default::default()
+        })?;
+        // restore pretrained weights (merged for the MS-LN variant)
+        let restored = if merge {
+            merge_affine(&ck, &art.manifest)?
+                .restore(&art.manifest, &mut tr.params)?
+        } else {
+            ck.restore(&art.manifest, &mut tr.params)?
+        };
+        println!("restored {restored} pretrained tensors \
+                  (LoRA adapters fresh)");
+        let rep = tr.train()?;
+        println!(
+            "{label}: loss {:.4}, eval acc {:.3}, {:.1} img/s, \
+             activation {:.1} MiB",
+            rep.final_loss, rep.eval_metric, rep.throughput,
+            rep.peak_activation_bytes as f64 / 1048576.0
+        );
+        results.push((label, rep));
+    }
+
+    // ---- summary --------------------------------------------------------
+    println!("\n=== e2e summary (full workflow: pretrain → LoRA) ===");
+    let base = &results[0].1;
+    for (label, rep) in &results {
+        println!(
+            "{label:<24} acc {:.3}  act-mem {:>7.1} MiB ({:+.0}%)  \
+             thr {:>6.1} img/s ({:+.0}%)",
+            rep.eval_metric,
+            rep.peak_activation_bytes as f64 / 1048576.0,
+            100.0 * (rep.peak_activation_bytes as f64
+                / base.peak_activation_bytes as f64 - 1.0),
+            rep.throughput,
+            100.0 * (rep.throughput / base.throughput - 1.0),
+        );
+    }
+    println!("\nloss curves in target/e2e/*.jsonl");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT exporter: lower each preset's fwd/bwd to HLO **text** + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Per preset, writes to ``artifacts/<preset>/``:
+  fwd.hlo.txt    (params…, x, y) -> (loss, metric, residual…)
+  bwd.hlo.txt    (params…, residual…, x, y) -> (grad…  for trainables)
+  params.bin     f32-LE initial parameters, concatenated in manifest order
+  manifest.json  the full ABI: params, batch, residuals (+bytes), merges
+
+Usage:  python -m compile.aot --out ../artifacts [preset …|--default|--all]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import Model
+from .presets import DEFAULT, PRESETS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(name: str, outdir: str) -> dict:
+    cfg = PRESETS[name]
+    model = Model(cfg)
+    params0 = model.init_params(seed=0)
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params0]
+    x_spec, y_spec = model.batch_spec()
+    n_params = len(pspecs)
+
+    def fwd_flat(*args):
+        P = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        return model.fwd(P, x, y)
+
+    # trace fwd first: records tape indices on the layer objects and
+    # tape specs on the model (needed before bwd can be traced).
+    # keep_unused=True: the ABI promises one HLO parameter per manifest
+    # entry even when XLA would dead-code-eliminate an unused input
+    # (e.g. frozen embeddings in bwd).
+    fwd_lowered = jax.jit(fwd_flat, keep_unused=True).lower(
+        *pspecs, x_spec, y_spec)
+    res_specs = model.tape_specs
+    res_shape_dtype = [
+        jax.ShapeDtypeStruct(s.shape, np.dtype(s.dtype)) for s in res_specs
+    ]
+
+    def bwd_flat(*args):
+        P = list(args[:n_params])
+        res = list(args[n_params:n_params + len(res_specs)])
+        x = args[n_params + len(res_specs)]
+        y = args[n_params + len(res_specs) + 1]
+        return model.bwd(P, res, x, y)
+
+    bwd_lowered = jax.jit(bwd_flat, keep_unused=True).lower(
+        *pspecs, *res_shape_dtype, x_spec, y_spec)
+
+    d = os.path.join(outdir, name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(fwd_lowered))
+    with open(os.path.join(d, "bwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(bwd_lowered))
+    with open(os.path.join(d, "params.bin"), "wb") as f:
+        for p in params0:
+            f.write(np.ascontiguousarray(p, dtype=np.float32).tobytes())
+
+    # ---- selfcheck: deterministic batch + eager expected outputs --------
+    # The rust e2e test (rust/tests/e2e_runtime.rs) loads these, runs the
+    # compiled fwd/bwd through PJRT, and asserts numeric agreement: the
+    # cross-language proof that all three layers compose.
+    rng = np.random.RandomState(42)
+    if cfg.arch == "vit":
+        x = (rng.randn(*x_spec.shape) * 1.0).astype(np.float32)
+        y = rng.randint(0, cfg.n_classes, y_spec.shape).astype(np.int32)
+    else:
+        x = rng.randint(0, cfg.vocab, x_spec.shape).astype(np.int32)
+        hi = cfg.vocab if cfg.arch == "llama" else cfg.n_classes
+        y = rng.randint(0, hi, y_spec.shape).astype(np.int32)
+    P = [jnp.asarray(p) for p in params0]
+    eager = model.fwd(P, jnp.asarray(x), jnp.asarray(y))
+    loss, metric, res = eager[0], eager[1], list(eager[2:])
+    grads = model.bwd(P, res, jnp.asarray(x), jnp.asarray(y))
+    with open(os.path.join(d, "selfcheck_x.bin"), "wb") as f:
+        f.write(x.tobytes())
+    with open(os.path.join(d, "selfcheck_y.bin"), "wb") as f:
+        f.write(y.tobytes())
+    with open(os.path.join(d, "selfcheck_grads.bin"), "wb") as f:
+        for g in grads:
+            f.write(np.ascontiguousarray(g, dtype=np.float32).tobytes())
+    selfcheck = {
+        "loss": float(loss),
+        "metric": float(metric),
+        "grad_l2": [float(jnp.sqrt(jnp.sum(g * g))) for g in grads],
+    }
+
+    def nbytes(spec):
+        return int(np.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
+
+    manifest = {
+        "preset": name,
+        "config": {k: getattr(cfg, k) for k in (
+            "arch", "dim", "depth", "n_heads", "mlp_ratio", "n_tokens",
+            "patch_dim", "n_classes", "vocab", "tuning", "activation",
+            "norm", "lora_rank", "use_pallas", "batch", "ckpt")},
+        "params": [
+            {"name": s.name, "shape": list(s.shape),
+             "trainable": bool(s.trainable)}
+            for s in model.param_specs
+        ],
+        "batch": {
+            "x": {"shape": list(x_spec.shape), "dtype": x_spec.dtype.name},
+            "y": {"shape": list(y_spec.shape), "dtype": y_spec.dtype.name},
+        },
+        "residuals": [
+            {"name": s.name, "kind": s.kind, "module": s.module,
+             "shape": list(s.shape), "dtype": s.dtype,
+             "bits_per_elem": s.bits_per_logical_elem,
+             "bytes": nbytes(s)}
+            for s in res_specs
+        ],
+        "residual_bytes_total": sum(nbytes(s) for s in res_specs),
+        "merges": model.merge_map(),
+        "selfcheck": selfcheck,
+        "files": {"fwd": "fwd.hlo.txt", "bwd": "bwd.hlo.txt",
+                  "params": "params.bin"},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("presets", nargs="*")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--default", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(args.presets)
+    if args.default or (not names and not args.all):
+        names += [n for n in DEFAULT if n not in names]
+    if args.all:
+        names = list(PRESETS)
+    for n in names:
+        if n not in PRESETS:
+            sys.exit(f"unknown preset {n!r}; known: {sorted(PRESETS)}")
+        m = export(n, args.out)
+        print(f"{n}: params={len(m['params'])} residuals="
+              f"{len(m['residuals'])} "
+              f"res_bytes={m['residual_bytes_total']:,}")
+
+
+if __name__ == "__main__":
+    main()

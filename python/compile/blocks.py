@@ -1,0 +1,312 @@
+"""Transformer blocks with the paper's residual-sharing wiring.
+
+The MS-norm → linear sharing (Prop 5.1) is routed here: when the norm is a
+MS variant *and* the following linear saves its input (full/lora modes),
+the linear reuses the norm's saved ``z`` instead of saving its own copy.
+LoRA-FA linears save only ``u = xAᵀ`` (condition 3 fails — the paper's
+reason MS-LN does not help LoRA-FA).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .layers import Activation, Linear, Norm, _as2d, _matgrad
+
+
+def _split_heads(x, n_heads):
+    b, n, c = x.shape
+    return x.reshape(b, n, n_heads, c // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+def linear_mode(which, tuning):
+    """Map (projection, tuning method) -> Linear mode.
+
+    tuning ∈ {full, lora_qv, lora_all, lorafa_qv, lorafa_all, frozen}.
+    `which` ∈ {q, k, v, proj, fc} — q/v adapted in *_qv; everything in *_all.
+    """
+    if tuning == "full":
+        return "full"
+    if tuning == "frozen":
+        return "frozen"
+    adapt = {"lora_qv": ("q", "v"), "lorafa_qv": ("q", "v")}.get(
+        tuning, ("q", "k", "v", "proj", "fc"))
+    kind = "lorafa" if tuning.startswith("lorafa") else "lora"
+    return kind if which in adapt else "frozen"
+
+
+class AttnBlock:
+    """Pre-norm multi-head self-attention block (ViT / LLaMA / RoBERTa)."""
+
+    def __init__(self, alloc, module, dim, n_heads, tuning, norm_kind,
+                 causal=False, lora_rank=4, use_pallas=False, qkv_bias=True):
+        self.module, self.n_heads, self.causal = module, n_heads, causal
+        self.norm = Norm(alloc, f"{module}.norm", dim, norm_kind,
+                         affine_trainable=(tuning == "full"),
+                         use_pallas=use_pallas)
+        mk = lambda which, name: Linear(
+            alloc, f"{module}.{name}", dim, dim,
+            linear_mode(which, tuning), bias=qkv_bias,
+            lora_rank=lora_rank)
+        self.q, self.k, self.v = mk("q", "q"), mk("k", "k"), mk("v", "v")
+        self.proj = mk("proj", "proj")
+
+    def fwd(self, P, tape, x):
+        z = self.norm.fwd(P, tape, x)
+        # q/k/v consume the same tensor z: like pytorch's refcounted saved
+        # tensors, z is stored ONCE and shared between them (and with the
+        # MS-norm output when the norm is memory-sharing). The MS-BP win is
+        # that the *norm input* x is not stored at all.
+        sh = self.norm.shared_out_idx
+        q = self.q.fwd(P, tape, z, shared_x_idx=sh)
+        sh = sh if sh is not None else self.q._x_idx
+        k = self.k.fwd(P, tape, z, shared_x_idx=sh)
+        sh = sh if sh is not None else self.k._x_idx
+        v = self.v.fwd(P, tape, z, shared_x_idx=sh)
+        self._rq = tape.save(self.module, "q", "attn_qkv", q)
+        self._rk = tape.save(self.module, "k", "attn_qkv", k)
+        self._rv = tape.save(self.module, "v", "attn_qkv", v)
+        o = ref.attention_fwd(
+            _split_heads(q, self.n_heads), _split_heads(k, self.n_heads),
+            _split_heads(v, self.n_heads), causal=self.causal)
+        o = _merge_heads(o)
+        y = self.proj.fwd(P, tape, o)
+        return x + y
+
+    def bwd(self, P, tr, gy):
+        grads = {}
+        go, g = self.proj.bwd(P, tr, gy)
+        grads.update(g)
+        q, k, v = tr[self._rq], tr[self._rk], tr[self._rv]
+        gq, gk, gv = ref.attention_bwd(
+            _split_heads(q, self.n_heads), _split_heads(k, self.n_heads),
+            _split_heads(v, self.n_heads),
+            _split_heads(go, self.n_heads), causal=self.causal)
+        gz = jnp.zeros_like(gy)
+        for lin, gh in ((self.q, gq), (self.k, gk), (self.v, gv)):
+            gx, g = lin.bwd(P, tr, _merge_heads(gh))
+            grads.update(g)
+            gz = gz + gx
+        gxn, g = self.norm.bwd(P, tr, gz)
+        grads.update(g)
+        return gy + gxn, grads
+
+
+class MlpBlock:
+    """Pre-norm ViT/RoBERTa MLP: norm → fc1 → act → fc2, residual add."""
+
+    def __init__(self, alloc, module, dim, hidden, tuning, norm_kind,
+                 act_kind, lora_rank=4, use_pallas=False):
+        self.module = module
+        self.norm = Norm(alloc, f"{module}.norm", dim, norm_kind,
+                         affine_trainable=(tuning == "full"),
+                         use_pallas=use_pallas)
+        self.fc1 = Linear(alloc, f"{module}.fc1", dim, hidden,
+                          linear_mode("fc", tuning), lora_rank=lora_rank)
+        self.act = Activation(f"{module}.act", act_kind, use_pallas)
+        self.fc2 = Linear(alloc, f"{module}.fc2", hidden, dim,
+                          linear_mode("fc", tuning), lora_rank=lora_rank)
+
+    def fwd(self, P, tape, x):
+        z = self.norm.fwd(P, tape, x)
+        h = self.fc1.fwd(P, tape, z, shared_x_idx=self.norm.shared_out_idx)
+        h = self.act.fwd(tape, h)
+        y = self.fc2.fwd(P, tape, h)
+        return x + y
+
+    def bwd(self, P, tr, gy):
+        grads = {}
+        gh, g = self.fc2.bwd(P, tr, gy)
+        grads.update(g)
+        gh = self.act.bwd(tr, gh)
+        gz, g = self.fc1.bwd(P, tr, gh)
+        grads.update(g)
+        gxn, g = self.norm.bwd(P, tr, gz)
+        grads.update(g)
+        return gy + gxn, grads
+
+
+class SwiGluBlock:
+    """LLaMA MLP: norm → (up=fc1, gate=fc2) → silu(gate)*up → fc3 (Fig 6)."""
+
+    def __init__(self, alloc, module, dim, hidden, tuning, norm_kind,
+                 act_kind, lora_rank=4, use_pallas=False):
+        self.module = module
+        self.norm = Norm(alloc, f"{module}.norm", dim, norm_kind,
+                         affine_trainable=(tuning == "full"),
+                         use_pallas=use_pallas)
+        mode = linear_mode("fc", tuning)
+        self.fc1 = Linear(alloc, f"{module}.fc1", dim, hidden, mode,
+                          bias=False, lora_rank=lora_rank)  # up
+        self.fc2 = Linear(alloc, f"{module}.fc2", dim, hidden, mode,
+                          bias=False, lora_rank=lora_rank)  # gate
+        self.act = Activation(f"{module}.act", act_kind, use_pallas)
+        self.fc3 = Linear(alloc, f"{module}.fc3", hidden, dim, mode,
+                          bias=False, lora_rank=lora_rank)  # down
+
+    def fwd(self, P, tape, x):
+        z = self.norm.fwd(P, tape, x)
+        # fc1/fc2 share the stored z (refcount semantics, as in AttnBlock)
+        sh = self.norm.shared_out_idx
+        up = self.fc1.fwd(P, tape, z, shared_x_idx=sh)
+        sh = sh if sh is not None else self.fc1._x_idx
+        gate = self.fc2.fwd(P, tape, z, shared_x_idx=sh)
+        s = self.act.fwd(tape, gate)
+        # gate multiply: both operands are residuals (Fig 6 "+5.4")
+        self._rs = tape.save(self.module, "x_silu", "gate_operand", s)
+        self._rup = tape.save(self.module, "x_fc1", "gate_operand", up)
+        h = s * up
+        y = self.fc3.fwd(P, tape, h)
+        return x + y
+
+    def bwd(self, P, tr, gy):
+        grads = {}
+        gh, g = self.fc3.bwd(P, tr, gy)
+        grads.update(g)
+        s, up = tr[self._rs], tr[self._rup]
+        gs = gh * up
+        gup = gh * s
+        ggate = self.act.bwd(tr, gs)
+        gz = jnp.zeros_like(gy)
+        for lin, gg in ((self.fc1, gup), (self.fc2, ggate)):
+            gx, g = lin.bwd(P, tr, gg)
+            grads.update(g)
+            gz = gz + gx
+        gxn, g = self.norm.bwd(P, tr, gz)
+        grads.update(g)
+        return gy + gxn, grads
+
+
+# ---------------------------------------------------------------------------
+# input adapters and heads
+# ---------------------------------------------------------------------------
+
+class PatchEmbed:
+    """ViT input: pre-patchified x [B, N, P] → linear → + pos-emb."""
+
+    def __init__(self, alloc, module, patch_dim, dim, n_tokens, trainable):
+        self.module = module
+        self.proj = Linear(alloc, f"{module}.proj", patch_dim, dim,
+                           "full" if trainable else "frozen")
+        self.ipos = alloc.add(f"{module}.pos", (1, n_tokens, dim),
+                              trainable, "normal:0.02")
+
+    def fwd(self, P, tape, x):
+        return self.proj.fwd(P, tape, x) + P[self.ipos]
+
+    def bwd(self, P, tr, gy):
+        _, grads = self.proj.bwd(P, tr, gy)
+        spec_trainable = self.proj.mode == "full"
+        if spec_trainable:
+            grads[self.ipos] = jnp.sum(gy, axis=0, keepdims=True)
+        return None, grads
+
+
+class TokenEmbed:
+    """LM input: tokens [B, T] i32 → table lookup."""
+
+    def __init__(self, alloc, module, vocab, dim, trainable):
+        self.module, self.vocab, self.trainable = module, vocab, trainable
+        self.itab = alloc.add(f"{module}.table", (vocab, dim), trainable,
+                              "normal:0.02")
+
+    def fwd(self, P, tape, tokens):
+        self._tokens_shape = tokens.shape
+        return P[self.itab][tokens]
+
+    def bwd(self, P, tr, gy, tokens):
+        grads = {}
+        if self.trainable:
+            flat = tokens.reshape(-1)
+            g2 = gy.reshape(-1, gy.shape[-1])
+            grads[self.itab] = jnp.zeros(
+                P[self.itab].shape, gy.dtype).at[flat].add(g2)
+        return None, grads
+
+
+class ClassifierHead:
+    """Final norm → mean-pool → linear → softmax CE (ViT / RoBERTa)."""
+
+    def __init__(self, alloc, module, dim, n_classes, tuning, norm_kind,
+                 use_pallas=False):
+        # the classifier itself is always trainable in fine-tuning
+        self.module = module
+        self.norm = Norm(alloc, f"{module}.norm", dim, norm_kind,
+                         affine_trainable=(tuning == "full"),
+                         use_pallas=use_pallas)
+        self.fc = Linear(alloc, f"{module}.fc", dim, n_classes, "full")
+
+    def fwd(self, P, tape, x, y):
+        z = self.norm.fwd(P, tape, x)
+        self._n_tokens = x.shape[1]
+        pooled = jnp.mean(z, axis=1)
+        # head input: with MS-norm, `z` is already on the tape but pooled is
+        # a reduction of it — the pooled vector is tiny, save it directly.
+        logits = self.fc.fwd(P, tape, pooled)
+        self._rlogits = tape.save(self.module, "logits", "head_input", logits)
+        logp = logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def bwd(self, P, tr, y):
+        logits = tr[self._rlogits]
+        b = logits.shape[0]
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=logits.dtype)
+        glogits = (p - onehot) / b
+        gpooled, grads = self.fc.bwd(P, tr, glogits)
+        gz = jnp.broadcast_to(
+            gpooled[:, None, :] / self._n_tokens,
+            (b, self._n_tokens, gpooled.shape[-1]))
+        gx, g = self.norm.bwd(P, tr, gz)
+        grads.update(g)
+        return gx, grads
+
+
+class LmHead:
+    """Final norm → linear → next-token CE (LLaMA-style)."""
+
+    def __init__(self, alloc, module, dim, vocab, tuning, norm_kind,
+                 head_trainable=False, use_pallas=False):
+        self.module = module
+        self.norm = Norm(alloc, f"{module}.norm", dim, norm_kind,
+                         affine_trainable=(tuning == "full"),
+                         use_pallas=use_pallas)
+        self.fc = Linear(alloc, f"{module}.fc", dim, vocab,
+                         "full" if head_trainable else "frozen", bias=False)
+
+    def fwd(self, P, tape, x, targets):
+        z = self.norm.fwd(P, tape, x)
+        if self.fc.mode == "frozen" and self.norm.shared_out_idx is None:
+            # frozen head does not save z; but bwd needs it to push grads
+            # through the norm — save it here (counted honestly).
+            self._rz = tape.save(self.module, "z", "head_input", z)
+        else:
+            self._rz = self.norm.shared_out_idx
+        logits = self.fc.fwd(P, tape, z,
+                             shared_x_idx=self.norm.shared_out_idx)
+        self._rlogits = tape.save(self.module, "logits", "head_input", logits)
+        logp = logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        loss = jnp.mean(nll)
+        acc = jnp.mean(
+            (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+        return loss, acc
+
+    def bwd(self, P, tr, targets):
+        logits = tr[self._rlogits]
+        n = logits.shape[0] * logits.shape[1]
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+        glogits = (p - onehot) / n
+        gz, grads = self.fc.bwd(P, tr, glogits)
+        gx, g = self.norm.bwd(P, tr, gz)
+        grads.update(g)
+        return gx, grads

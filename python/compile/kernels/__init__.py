@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the paper memory hot-spots + pure-jnp oracle.
+
+Modules: regelu2 / resilu2 (Approx-BP activations, 2-bit residuals),
+msnorm (MS-LN / MS-RMSNorm, Algorithms 2-3), quant8 (Mesa baseline),
+ref (oracle), coeffs (Appendix E constants).
+"""

@@ -1,0 +1,41 @@
+"""Quasi-optimal ReLU-combination coefficients from the paper (Appendix E / I).
+
+h̃_{a,c}(x) = a1·ReLU(x−c1) + a2·ReLU(x−c2) + (1−a1−a2)·ReLU(x−c3)
+
+Its derivative is the 4-segment step function with slopes
+    [0, a1, a1+a2, 1]   on segments split at (c1, c2, c3),
+which is what ReGELU2/ReSiLU2 use as the backward pass while keeping the
+exact GELU/SiLU forward.  Only the 2-bit segment index is stored for bwd.
+
+The rust substrate (`rust/src/coeffs/`) re-derives these via simulated
+annealing + adaptive Simpson integration; `exp appe` checks agreement.
+"""
+
+# Appendix E.1 — ReGELU2 (primitive-matching, adopted in the paper's code)
+A_GELU = (-0.04922261145617846, 1.0979632065417297)
+C_GELU = (-3.1858810036855245, -0.001178821281161997, 3.190832613414926)
+
+# Appendix E.2 — ReSiLU2
+A_SILU = (-0.04060357190528599, 1.080925428529668)
+C_SILU = (-6.3050461001646445, -0.0008684942046214787, 6.325815242089708)
+
+# Appendix I — ReGELU2-d (derivative-matching ablation, Table 6)
+A_GELU_D = (0.32465931184406527, 0.34812875668739607)
+C_GELU_D = (-0.4535743722857079, -0.0010587205574873046, 0.4487575313884231)
+
+
+def slopes(a):
+    """Step-function values per 2-bit segment code: [0, a1, a1+a2, 1]."""
+    a1, a2 = a
+    return (0.0, a1, a1 + a2, 1.0)
+
+
+SLOPES_GELU = slopes(A_GELU)
+SLOPES_SILU = slopes(A_SILU)
+SLOPES_GELU_D = slopes(A_GELU_D)
+
+BY_NAME = {
+    "regelu2": (A_GELU, C_GELU),
+    "resilu2": (A_SILU, C_SILU),
+    "regelu2d": (A_GELU_D, C_GELU_D),
+}

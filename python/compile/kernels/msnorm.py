@@ -1,0 +1,83 @@
+"""Memory-sharing normalization Pallas kernels (paper §5, Algorithms 2–3).
+
+MS-LN / MS-RMSNorm forward emits (z, σ); backward consumes (z, σ, gy) —
+z is *shared* with the following linear layer's saved input, so the norm's
+own incremental residual is just the per-row σ.  One row-slab stays
+resident in VMEM per grid step; σ is a VPU rowwise reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import pallas_common as pc
+
+
+def _msln_fwd_kernel(eps):
+    def kernel(x_ref, z_ref, sigma_ref):
+        x = x_ref[...]
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        xc = x - mu
+        sigma = jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+        z_ref[...] = xc / sigma
+        sigma_ref[...] = sigma
+
+    return kernel
+
+
+def _msln_bwd_kernel(z_ref, sigma_ref, gy_ref, gx_ref):
+    z, sigma, gy = z_ref[...], sigma_ref[...], gy_ref[...]
+    hg = gy - jnp.mean(gy, axis=-1, keepdims=True)
+    zg = jnp.mean(z * gy, axis=-1, keepdims=True)
+    gx_ref[...] = (hg - z * zg) / sigma
+
+
+def _msrms_fwd_kernel(eps):
+    def kernel(x_ref, z_ref, sigma_ref):
+        x = x_ref[...]
+        sigma = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        z_ref[...] = x / sigma
+        sigma_ref[...] = sigma
+
+    return kernel
+
+
+def _msrms_bwd_kernel(z_ref, sigma_ref, gy_ref, gx_ref):
+    z, sigma, gy = z_ref[...], sigma_ref[...], gy_ref[...]
+    zg = jnp.mean(z * gy, axis=-1, keepdims=True)
+    gx_ref[...] = (gy - z * zg) / sigma
+
+
+def msln_fwd(x, eps=1e-6):
+    """Returns (z, sigma); sigma has shape [..., 1]."""
+    x2 = pc.as2d(x)
+    z, sigma = pc.run_rowwise(
+        _msln_fwd_kernel(eps), x2, out_shapes=[(x2.shape[1], x.dtype), (1, x.dtype)]
+    )
+    return z.reshape(x.shape), sigma.reshape(*x.shape[:-1], 1)
+
+
+def msln_bwd(z, sigma, gy):
+    z2, s2, g2 = pc.as2d(z), pc.as2d(sigma), pc.as2d(gy)
+    (gx,) = pc.run_rowwise(
+        _msln_bwd_kernel, z2, out_shapes=[(z2.shape[1], z.dtype)],
+        extra_inputs=(s2, g2),
+    )
+    return gx.reshape(z.shape)
+
+
+def msrms_fwd(x, eps=1e-6):
+    """Returns (z, sigma); sigma has shape [..., 1]."""
+    x2 = pc.as2d(x)
+    z, sigma = pc.run_rowwise(
+        _msrms_fwd_kernel(eps), x2, out_shapes=[(x2.shape[1], x.dtype), (1, x.dtype)]
+    )
+    return z.reshape(x.shape), sigma.reshape(*x.shape[:-1], 1)
+
+
+def msrms_bwd(z, sigma, gy):
+    z2, s2, g2 = pc.as2d(z), pc.as2d(sigma), pc.as2d(gy)
+    (gx,) = pc.run_rowwise(
+        _msrms_bwd_kernel, z2, out_shapes=[(z2.shape[1], z.dtype)],
+        extra_inputs=(s2, g2),
+    )
+    return gx.reshape(z.shape)

@@ -1,0 +1,73 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernels assign one threadblock per row-slab; here each grid step keeps one
+(TR, C) slab resident in VMEM and streams slabs HBM→VMEM via BlockSpec.
+``interpret=True`` everywhere — CPU-PJRT cannot execute Mosaic custom-calls,
+so the real-TPU perf story is the VMEM/MXU estimate in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Target VMEM residency per input slab (elements). 8 KiB-lanes friendly:
+# rows are tiled so that TR*C stays below this; C itself is kept whole so
+# rowwise reductions (norms) need no cross-block accumulation.
+VMEM_SLAB_ELEMS = 1 << 16
+
+INTERPRET = True  # CPU correctness path; flip only for a real TPU toolchain.
+
+
+def row_tile(n_rows: int, n_cols: int) -> int:
+    """Pick a row-tile size: power of two, slab fits VMEM budget."""
+    tr = max(1, VMEM_SLAB_ELEMS // max(n_cols, 1))
+    # round down to a power of two for clean lane alignment
+    while tr & (tr - 1):
+        tr &= tr - 1
+    return max(1, min(tr, n_rows))
+
+
+def pad_rows(x2d, tr: int):
+    """Pad rows up to a multiple of tr. Returns (padded, original_rows)."""
+    r = x2d.shape[0]
+    rem = (-r) % tr
+    if rem:
+        x2d = jnp.pad(x2d, ((0, rem), (0, 0)))
+    return x2d, r
+
+
+def as2d(x):
+    """Collapse leading dims: [..., C] -> [R, C]."""
+    return x.reshape(-1, x.shape[-1])
+
+
+def run_rowwise(kernel, x2d, out_shapes, extra_inputs=()):
+    """Launch `kernel` over row tiles of x2d.
+
+    out_shapes: list of (cols, dtype) — every output is [R, cols_i].
+    extra_inputs: same-R 2D arrays tiled alongside x.
+    """
+    tr = row_tile(*x2d.shape)
+    xp, r = pad_rows(x2d, tr)
+    extras = [pad_rows(e, tr)[0] for e in extra_inputs]
+    grid = (xp.shape[0] // tr,)
+
+    in_specs = [pl.BlockSpec((tr, xp.shape[1]), lambda i: (i, 0))]
+    for e in extras:
+        in_specs.append(pl.BlockSpec((tr, e.shape[1]), lambda i: (i, 0)))
+    out_specs = [pl.BlockSpec((tr, c), lambda i: (i, 0)) for c, _ in out_shapes]
+    outs = [
+        jax.ShapeDtypeStruct((xp.shape[0], c), d) for c, d in out_shapes
+    ]
+    res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=outs if len(outs) > 1 else outs[0],
+        interpret=INTERPRET,
+    )(xp, *extras)
+    if not isinstance(res, (tuple, list)):
+        res = (res,)
+    return tuple(o[:r] for o in res)

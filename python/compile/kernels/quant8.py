@@ -1,0 +1,42 @@
+"""Mesa-like 8-bit activation quantization Pallas kernels (baseline).
+
+Per-row symmetric int8 quantization of the saved activation: the forward
+stores (q:int8, scale:f32 per row) instead of the f32 tensor; the backward
+dequantizes before use.  This reproduces the comparator's memory (~8 bits
+per element) *and* its throughput cost (extra quant/dequant passes), which
+is the contrast the paper draws in Tables 1/7.
+"""
+
+import jax.numpy as jnp
+
+from . import pallas_common as pc
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...]
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+    scale = amax / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, scale_ref, y_ref):
+    y_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def quant(x):
+    """x: [..., C] f32 -> (q int8 [..., C], scale f32 [..., 1])."""
+    x2 = pc.as2d(x)
+    q, scale = pc.run_rowwise(
+        _quant_kernel, x2, out_shapes=[(x2.shape[1], jnp.int8), (1, jnp.float32)]
+    )
+    return q.reshape(x.shape), scale.reshape(*x.shape[:-1], 1)
+
+
+def dequant(q, scale):
+    q2, s2 = pc.as2d(q), pc.as2d(scale)
+    (y,) = pc.run_rowwise(
+        _dequant_kernel, q2, out_shapes=[(q2.shape[1], jnp.float32)],
+        extra_inputs=(s2,),
+    )
+    return y.reshape(q.shape)

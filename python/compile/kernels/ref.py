@@ -1,0 +1,273 @@
+"""Pure-jnp oracle for every L1 kernel.
+
+Everything in this file is the *reference semantics*: the Pallas kernels in
+this package and the manual-backprop layers in ``layers.py`` are tested
+against these functions (pytest + hypothesis in ``python/tests``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import coeffs
+
+SQRT_2 = 1.4142135623730951
+
+
+def erf(x):
+    """erf from primitive HLO ops (Abramowitz–Stegun 7.1.26, |ε|≤1.5e-7
+    ≈ f32 eps).
+
+    jax ≥ 0.5 lowers ``jax.lax.erf`` to a dedicated `erf` HLO opcode that
+    the xla_extension 0.5.1 text parser rejects — so the AOT path needs an
+    erf composed of mul/add/exp only. 1.5e-7 is below f32 resolution over
+    the whole range, so the GELU forward stays bit-faithful in practice.
+    """
+    a = (0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429)
+    s = jnp.sign(x)
+    z = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * z)
+    poly = t * (a[0] + t * (a[1] + t * (a[2] + t * (a[3] + t * a[4]))))
+    return s * (1.0 - poly * jnp.exp(-z * z))
+
+
+# ---------------------------------------------------------------------------
+# activations and their exact derivatives
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    """Exact (erf-based) GELU — the paper's forward pass, eq. (40)."""
+    return 0.5 * x * (1.0 + erf(x / SQRT_2))
+
+
+def dgelu(x):
+    """Exact GELU derivative (for the GELU baseline backward)."""
+    cdf = 0.5 * (1.0 + erf(x / SQRT_2))
+    pdf = jnp.exp(-0.5 * x * x) / jnp.sqrt(2.0 * jnp.pi)
+    return cdf + x * pdf
+
+
+def silu(x):
+    """SiLU / swish, eq. (47)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def dsilu(x):
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def drelu(x):
+    return (x > 0.0).astype(x.dtype)
+
+
+def relu_comb(x, a, c):
+    """h̃_{a,c}: the 3-ReLU combination, eq. (13) with k=2."""
+    a1, a2 = a
+    c1, c2, c3 = c
+    return (
+        a1 * jnp.maximum(x - c1, 0.0)
+        + a2 * jnp.maximum(x - c2, 0.0)
+        + (1.0 - a1 - a2) * jnp.maximum(x - c3, 0.0)
+    )
+
+
+def bucketize2(x, c):
+    """2-bit segment code: #{thresholds below x} ∈ {0,1,2,3}."""
+    c1, c2, c3 = c
+    return (
+        (x >= c1).astype(jnp.uint8)
+        + (x >= c2).astype(jnp.uint8)
+        + (x >= c3).astype(jnp.uint8)
+    )
+
+
+def drelu_comb_from_codes(codes, a):
+    """Step-function derivative values from 2-bit codes (branch-free
+    arithmetic instead of a 4-entry gather — vectorizes on CPU/VPU)."""
+    s0, s1, s2, s3 = coeffs.slopes(a)
+    c = codes
+    return (
+        s0
+        + (c >= 1).astype(jnp.float32) * (s1 - s0)
+        + (c >= 2).astype(jnp.float32) * (s2 - s1)
+        + (c >= 3).astype(jnp.float32) * (s3 - s2)
+    )
+
+
+def drelu_comb(x, a, c):
+    """Step-function derivative of h̃_{a,c} (direct, for testing)."""
+    return drelu_comb_from_codes(bucketize2(x, c), a)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing: 4 codes per uint8, little-endian within the byte
+# ---------------------------------------------------------------------------
+
+def pack2bit(codes):
+    """codes: uint8 in {0..3}, flat length divisible by 4 -> packed uint8.
+
+    PLANAR layout (perf: EXPERIMENTS.md §Perf L2-1): byte b holds elements
+    {b, b+N/4, b+N/2, b+3N/4}. Packing/unpacking is then four full-width
+    vector passes with no per-element interleaving — XLA CPU lowers it to
+    straight-line vector code instead of the gather/transpose the
+    4-consecutive-elements layout produced (2.1× faster fwd+bwd)."""
+    c = codes.reshape(4, -1)
+    packed = c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6)
+    return packed.astype(jnp.uint8)
+
+
+def pack1bit(bits):
+    """bits: uint8 in {0,1}, flat length divisible by 8 -> packed uint8.
+
+    Used by the ReLU baseline (1-bit sign residual, §4.2). Planar layout
+    (see pack2bit)."""
+    b = bits.reshape(8, -1)
+    out = b[0]
+    for k in range(1, 8):
+        out = out | (b[k] << k)
+    return out.astype(jnp.uint8)
+
+
+def unpack1bit(packed, n):
+    p = packed.reshape(-1)
+    lanes = jnp.concatenate([(p >> k) & 1 for k in range(8)])
+    return lanes[:n].astype(jnp.uint8)
+
+
+def unpack2bit(packed, n):
+    """Inverse of pack2bit (planar); returns flat uint8 codes, length n."""
+    p = packed.reshape(-1)
+    lanes = jnp.concatenate([p & 3, (p >> 2) & 3, (p >> 4) & 3,
+                             (p >> 6) & 3])
+    return lanes[:n].astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# normalization layers (rowwise over the last axis)
+# ---------------------------------------------------------------------------
+
+def ln_fwd(x, weight, bias, eps=1e-6):
+    """Standard LayerNorm with affine. Returns (y, mean, rstd)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    return (xc * rstd) * weight + bias, mu, rstd
+
+
+def ln_bwd(x, mu, rstd, weight, gy):
+    """Standard LayerNorm backward from saved (x, mu, rstd)."""
+    xhat = (x - mu) * rstd
+    gxhat = gy * weight
+    gw = jnp.sum(gy * xhat, axis=tuple(range(gy.ndim - 1)))
+    gb = jnp.sum(gy, axis=tuple(range(gy.ndim - 1)))
+    gx = rstd * (
+        gxhat
+        - jnp.mean(gxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gxhat * xhat, axis=-1, keepdims=True)
+    )
+    return gx, gw, gb
+
+
+def rms_fwd(x, weight, eps=1e-6):
+    """Standard RMSNorm with affine scale. Returns (y, rstd)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    return x * rstd * weight, rstd
+
+
+def rms_bwd(x, rstd, weight, gy):
+    xhat = x * rstd
+    gxhat = gy * weight
+    gw = jnp.sum(gy * xhat, axis=tuple(range(gy.ndim - 1)))
+    gx = rstd * (gxhat - xhat * jnp.mean(gxhat * xhat, axis=-1, keepdims=True))
+    return gx, gw
+
+
+def msln_fwd(x, eps=1e-6):
+    """MS-LN forward (affine already merged into the next linear), eq. (18).
+
+    Returns (z, sigma): z is the only tensor saved for backward (and it is
+    shared with the following linear layer); sigma is one scalar per row.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    sigma = jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+    return xc / sigma, sigma
+
+
+def msln_bwd(z, sigma, gy):
+    """Algorithm 2: gx = σ⁻¹ (H − p⁻¹ z zᵀ) gy with H = I − p⁻¹ 1 1ᵀ."""
+    hg = gy - jnp.mean(gy, axis=-1, keepdims=True)
+    zg = jnp.mean(z * gy, axis=-1, keepdims=True)
+    return (hg - z * zg) / sigma
+
+
+def msrms_fwd(x, eps=1e-6):
+    """MS-RMSNorm forward, Algorithm 3. Returns (z, sigma)."""
+    sigma = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / sigma, sigma
+
+
+def msrms_bwd(z, sigma, gy):
+    """Algorithm 3: gx = σ⁻¹ (I − p⁻¹ z zᵀ) gy."""
+    zg = jnp.mean(z * gy, axis=-1, keepdims=True)
+    return (gy - z * zg) / sigma
+
+
+# ---------------------------------------------------------------------------
+# Mesa-like 8-bit activation quantization (baseline comparator)
+# ---------------------------------------------------------------------------
+
+def quant8(x):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention (memory-linear: bwd recomputes the probs from q,k,v)
+# ---------------------------------------------------------------------------
+
+def attention_fwd(q, k, v, causal=False):
+    """q,k,v: [B, H, N, D]. Returns o. Probs are NOT a residual."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(
+        jnp.asarray(d, dtype=q.dtype)
+    )
+    if causal:
+        n, m = logits.shape[-2:]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", probs, v)
+
+
+def attention_bwd(q, k, v, go, causal=False):
+    """Backward with prob recomputation (the FlashAttention memory shape)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+    if causal:
+        n, m = logits.shape[-2:]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv = jnp.einsum("bhnm,bhnd->bhmd", probs, go)
+    gprobs = jnp.einsum("bhnd,bhmd->bhnm", go, v)
+    # softmax vjp
+    dot = jnp.sum(gprobs * probs, axis=-1, keepdims=True)
+    glogits = probs * (gprobs - dot)
+    gq = jnp.einsum("bhnm,bhmd->bhnd", glogits, k) * scale
+    gk = jnp.einsum("bhnm,bhnd->bhmd", glogits, q) * scale
+    return gq, gk, gv

@@ -1,0 +1,96 @@
+"""ReGELU2 Pallas kernels (paper §4.2, Appendix E.1).
+
+Forward: exact GELU, *plus* the 2-bit segment codes of the input against
+the c* thresholds, packed 4-per-byte.  Backward: unpack codes in-register
+(shift/mask — no dequantization pass) and multiply the upstream gradient by
+the 4-entry slope table [0, a1, a1+a2, 1].
+
+The forward stores only ``codes`` (2 bits/element) for backward — this is
+the paper's entire memory saving for activation functions.
+"""
+
+import jax.numpy as jnp
+
+from . import coeffs, pallas_common as pc
+
+_SQRT_2 = 1.4142135623730951
+
+
+def _gelu(x):
+    from . import ref
+
+    return ref.gelu(x)
+
+
+def _encode_kernel_factory(c):
+    c1, c2, c3 = c
+
+    def kernel(x_ref, y_ref, packed_ref):
+        x = x_ref[...]
+        y_ref[...] = _gelu(x)
+        code = (
+            (x >= c1).astype(jnp.uint32)
+            + (x >= c2).astype(jnp.uint32)
+            + (x >= c3).astype(jnp.uint32)
+        )
+        # pack 4 lanes/byte: reshape (TR, C//4, 4); weights 1,4,16,64
+        tr, cc = code.shape
+        lanes = code.reshape(tr, cc // 4, 4)
+        packed = (
+            lanes[..., 0]
+            + lanes[..., 1] * 4
+            + lanes[..., 2] * 16
+            + lanes[..., 3] * 64
+        )
+        packed_ref[...] = packed.astype(jnp.uint8)
+
+    return kernel
+
+
+def _decode_kernel_factory(a):
+    # step-table as scalar constants: slope(code) = s0 + code>=1?(s1-s0)...
+    s0, s1, s2, s3 = coeffs.slopes(a)
+
+    def kernel(packed_ref, gy_ref, gx_ref):
+        p = packed_ref[...].astype(jnp.uint32)
+        tr, cq = p.shape
+        lanes = jnp.stack(
+            [p & 3, (p >> 2) & 3, (p >> 4) & 3, (p >> 6) & 3], axis=-1
+        )
+        codes = lanes.reshape(tr, cq * 4)
+        # branch-free slope lookup from scalar table entries
+        slopes = (
+            s0
+            + (codes >= 1).astype(jnp.float32) * (s1 - s0)
+            + (codes >= 2).astype(jnp.float32) * (s2 - s1)
+            + (codes >= 3).astype(jnp.float32) * (s3 - s2)
+        )
+        gx_ref[...] = gy_ref[...] * slopes
+
+    return kernel
+
+
+def fwd(x, a=coeffs.A_GELU, c=coeffs.C_GELU):
+    """x: [..., C] with C % 4 == 0. Returns (gelu(x), packed_codes)."""
+    x2 = pc.as2d(x)
+    r, cc = x2.shape
+    assert cc % 4 == 0, "feature dim must be divisible by 4 for 2-bit packing"
+    y, packed = pc.run_rowwise(
+        _encode_kernel_factory(c),
+        x2,
+        out_shapes=[(cc, x.dtype), (cc // 4, jnp.uint8)],
+    )
+    return y.reshape(x.shape), packed.reshape(*x.shape[:-1], cc // 4)
+
+
+def bwd(packed, gy, a=coeffs.A_GELU):
+    """packed: [..., C//4] uint8; gy: [..., C]. Returns gx."""
+    gy2 = pc.as2d(gy)
+    p2 = pc.as2d(packed)
+    (gx,) = pc.run_rowwise(
+        _decode_kernel_factory(a),
+        p2,
+        out_shapes=[(gy2.shape[1], gy.dtype)],
+        extra_inputs=(gy2,),
+    )
+    return gx.reshape(gy.shape)

@@ -1,0 +1,82 @@
+"""ReSiLU2 Pallas kernels (paper §4.2, Appendix E.2).
+
+Forward: exact SiLU + packed 2-bit segment codes; backward: step-function
+slope lookup. Same kernel structure as ReGELU2 with the SiLU coefficient
+set — see ``regelu2.py`` for the packing layout.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import coeffs, pallas_common as pc
+
+
+def _encode_kernel_factory(c):
+    c1, c2, c3 = c
+
+    def kernel(x_ref, y_ref, packed_ref):
+        x = x_ref[...]
+        y_ref[...] = x * jax.nn.sigmoid(x)
+        code = (
+            (x >= c1).astype(jnp.uint32)
+            + (x >= c2).astype(jnp.uint32)
+            + (x >= c3).astype(jnp.uint32)
+        )
+        tr, cc = code.shape
+        lanes = code.reshape(tr, cc // 4, 4)
+        packed = (
+            lanes[..., 0]
+            + lanes[..., 1] * 4
+            + lanes[..., 2] * 16
+            + lanes[..., 3] * 64
+        )
+        packed_ref[...] = packed.astype(jnp.uint8)
+
+    return kernel
+
+
+def _decode_kernel_factory(a):
+    s0, s1, s2, s3 = coeffs.slopes(a)
+
+    def kernel(packed_ref, gy_ref, gx_ref):
+        p = packed_ref[...].astype(jnp.uint32)
+        tr, cq = p.shape
+        lanes = jnp.stack(
+            [p & 3, (p >> 2) & 3, (p >> 4) & 3, (p >> 6) & 3], axis=-1
+        )
+        codes = lanes.reshape(tr, cq * 4)
+        slopes = (
+            s0
+            + (codes >= 1).astype(jnp.float32) * (s1 - s0)
+            + (codes >= 2).astype(jnp.float32) * (s2 - s1)
+            + (codes >= 3).astype(jnp.float32) * (s3 - s2)
+        )
+        gx_ref[...] = gy_ref[...] * slopes
+
+    return kernel
+
+
+def fwd(x, a=coeffs.A_SILU, c=coeffs.C_SILU):
+    """x: [..., C] with C % 4 == 0. Returns (silu(x), packed_codes)."""
+    x2 = pc.as2d(x)
+    r, cc = x2.shape
+    assert cc % 4 == 0, "feature dim must be divisible by 4 for 2-bit packing"
+    y, packed = pc.run_rowwise(
+        _encode_kernel_factory(c),
+        x2,
+        out_shapes=[(cc, x.dtype), (cc // 4, jnp.uint8)],
+    )
+    return y.reshape(x.shape), packed.reshape(*x.shape[:-1], cc // 4)
+
+
+def bwd(packed, gy, a=coeffs.A_SILU):
+    """packed: [..., C//4] uint8; gy: [..., C]. Returns gx."""
+    gy2 = pc.as2d(gy)
+    p2 = pc.as2d(packed)
+    (gx,) = pc.run_rowwise(
+        _decode_kernel_factory(a),
+        p2,
+        out_shapes=[(gy2.shape[1], gy.dtype)],
+        extra_inputs=(gy2,),
+    )
+    return gx.reshape(gy.shape)

@@ -1,0 +1,324 @@
+"""L2: manually-backpropagated transformer layers with explicit residuals.
+
+Every layer is written as ``fwd(P, tape, x) -> y`` / ``bwd(P, tr, gy) ->
+(gx, {param_idx: grad})``.  What goes on the tape is *exactly* the paper's
+activation-memory story:
+
+  Linear  full    — saves its input x            (Fig 5 "+1")
+          frozen  — saves nothing                (Fig 5 "\\")
+          lora    — saves x and u = xAᵀ          (§3.2, eq. 5)
+          lorafa  — saves only u                 (LoRA-FA, §3.2)
+  Act     gelu/silu     — saves x (full tensor)  (Fig 5 "+4")
+          regelu2/resilu2 — saves 2-bit codes    (Fig 5 "+0.5")
+          relu          — saves 1-bit signs
+          mesa8         — saves int8 x + scale   (Mesa baseline)
+  Norm    ln/rms        — saves x (+ per-row stats)
+          msln/msrms    — saves z shared with the next linear + per-row σ
+          mesaln8       — saves int8 x + stats
+
+Backward correctness is pytest-checked against ``jax.grad`` of the same
+forward (exact variants) or of the ReLU-combination surrogate (Approx-BP
+variants).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import coeffs, ref
+from .kernels import msnorm as k_msnorm
+from .kernels import quant8 as k_quant8
+from .kernels import regelu2 as k_regelu2
+from .kernels import resilu2 as k_resilu2
+
+
+# ---------------------------------------------------------------------------
+# parameter registry
+# ---------------------------------------------------------------------------
+
+class ParamSpec:
+    def __init__(self, name, shape, trainable, init):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.trainable = trainable
+        self.init = init  # "zeros" | "ones" | "normal:<std>"
+
+    def materialize(self, rng: np.random.RandomState):
+        if self.init == "zeros":
+            return np.zeros(self.shape, np.float32)
+        if self.init == "ones":
+            return np.ones(self.shape, np.float32)
+        if self.init.startswith("normal:"):
+            std = float(self.init.split(":", 1)[1])
+            return (rng.randn(*self.shape) * std).astype(np.float32)
+        raise ValueError(f"unknown init {self.init}")
+
+
+class Alloc:
+    """Assigns global parameter indices at model-build time."""
+
+    def __init__(self):
+        self.specs = []
+
+    def add(self, name, shape, trainable, init):
+        self.specs.append(ParamSpec(name, shape, trainable, init))
+        return len(self.specs) - 1
+
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+def _matgrad(gy, x):
+    """gW for y = x @ W.T: [dout, din]."""
+    return jnp.einsum("ro,ri->oi", _as2d(gy), _as2d(x))
+
+
+# ---------------------------------------------------------------------------
+# Linear with tuning modes
+# ---------------------------------------------------------------------------
+
+class Linear:
+    MODES = ("full", "frozen", "lora", "lorafa")
+
+    def __init__(self, alloc, module, din, dout, mode, bias=True,
+                 lora_rank=4, lora_scale=1.0, init_std=0.02):
+        assert mode in self.MODES
+        self.module, self.mode, self.bias = module, mode, bias
+        self.din, self.dout = din, dout
+        self.lora_scale = lora_scale
+        self.iw = alloc.add(f"{module}.W", (dout, din), mode == "full",
+                            f"normal:{init_std}")
+        self.ib = alloc.add(f"{module}.b", (dout,), mode == "full", "zeros") \
+            if bias else None
+        if mode in ("lora", "lorafa"):
+            # LoRA: A ~ N(0, std), B = 0 so the adapter starts as identity.
+            self.ia = alloc.add(f"{module}.lora_A", (lora_rank, din),
+                                mode == "lora", f"normal:{init_std}")
+            self.ib2 = alloc.add(f"{module}.lora_B", (dout, lora_rank),
+                                 True, "zeros")
+
+    def fwd(self, P, tape, x, shared_x_idx=None):
+        W = P[self.iw]
+        y = _as2d(x) @ W.T
+        if self.bias:
+            y = y + P[self.ib]
+        y = y.reshape(*x.shape[:-1], self.dout)
+        if self.mode in ("lora", "lorafa"):
+            u = _as2d(x) @ P[self.ia].T
+            u = u.reshape(*x.shape[:-1], -1)
+            y = y + (self.lora_scale * (_as2d(u) @ P[self.ib2].T)
+                     ).reshape(*x.shape[:-1], self.dout)
+        # --- residual policy (the paper's Table/Fig 5 accounting) ---
+        self._x_idx = None
+        self._u_idx = None
+        if self.mode == "full" or self.mode == "lora":
+            if shared_x_idx is not None:
+                self._x_idx = shared_x_idx  # share with MS-norm output
+            else:
+                self._x_idx = tape.save(self.module, "x", "linear_input", x)
+        if self.mode in ("lora", "lorafa"):
+            self._u_idx = tape.save(self.module, "u", "lora_u", u)
+        return y
+
+    def bwd(self, P, tr, gy):
+        W = P[self.iw]
+        grads = {}
+        gx = (_as2d(gy) @ W).reshape(*gy.shape[:-1], self.din)
+        if self.mode == "full":
+            x = tr[self._x_idx]
+            grads[self.iw] = _matgrad(gy, x)
+            if self.bias:
+                grads[self.ib] = jnp.sum(_as2d(gy), axis=0)
+        if self.mode in ("lora", "lorafa"):
+            u = tr[self._u_idx]
+            B = P[self.ib2]
+            gu = self.lora_scale * (_as2d(gy) @ B)
+            grads[self.ib2] = self.lora_scale * _matgrad(gy, u)
+            A = P[self.ia]
+            if self.mode == "lora":
+                x = tr[self._x_idx]
+                grads[self.ia] = _matgrad(gu.reshape(*gy.shape[:-1], -1), x)
+            gx = gx + (gu @ A).reshape(*gy.shape[:-1], self.din)
+        return gx, grads
+
+
+# ---------------------------------------------------------------------------
+# Activation functions
+# ---------------------------------------------------------------------------
+
+class Activation:
+    KINDS = ("gelu", "silu", "relu", "regelu2", "regelu2d", "resilu2",
+             "mesa_gelu8", "mesa_silu8")
+
+    def __init__(self, module, kind, use_pallas=False):
+        assert kind in self.KINDS
+        self.module, self.kind, self.use_pallas = module, kind, use_pallas
+
+    def fwd(self, tape, x):
+        k = self.kind
+        if k in ("gelu", "mesa_gelu8"):
+            y = ref.gelu(x)
+        elif k in ("silu", "mesa_silu8"):
+            y = ref.silu(x)
+        elif k == "relu":
+            y = ref.relu(x)
+        elif k in ("regelu2", "regelu2d"):
+            a, c = coeffs.BY_NAME[k]
+            if self.use_pallas:
+                y, packed = k_regelu2.fwd(x, a, c)
+                self._res = tape.save(self.module, "codes", "act_codes",
+                                      packed, bits=2.0)
+                self._shape = x.shape
+                return y
+            y = ref.gelu(x)
+        elif k == "resilu2":
+            a, c = coeffs.BY_NAME[k]
+            if self.use_pallas:
+                y, packed = k_resilu2.fwd(x, a, c)
+                self._res = tape.save(self.module, "codes", "act_codes",
+                                      packed, bits=2.0)
+                self._shape = x.shape
+                return y
+            y = ref.silu(x)
+
+        self._shape = x.shape
+        if k in ("gelu", "silu"):
+            self._res = tape.save(self.module, "x", "act_full", x)
+        elif k == "relu":
+            signs = (x > 0).astype(jnp.uint8).reshape(-1)
+            packed = ref.pack1bit(signs)
+            self._res = tape.save(self.module, "signs", "act_codes",
+                                  packed, bits=1.0)
+        elif k in ("regelu2", "regelu2d", "resilu2"):
+            a, c = coeffs.BY_NAME[k]
+            codes = ref.bucketize2(x, c).reshape(-1)
+            packed = ref.pack2bit(codes)
+            self._res = tape.save(self.module, "codes", "act_codes",
+                                  packed, bits=2.0)
+        else:  # mesa 8-bit
+            if self.use_pallas:
+                q, scale = k_quant8.quant(x)
+            else:
+                # per-row ref quant (same semantics as the pallas kernel)
+                x2 = _as2d(x)
+                amax = jnp.maximum(jnp.max(jnp.abs(x2), axis=-1,
+                                           keepdims=True), 1e-12)
+                scale = (amax / 127.0).reshape(*x.shape[:-1], 1)
+                q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            self._res = tape.save(self.module, "q", "act_q8", q, bits=8.0)
+            self._res_scale = tape.save(self.module, "scale", "act_scale",
+                                        scale)
+        return y
+
+    def bwd(self, tr, gy):
+        k = self.kind
+        if k == "gelu":
+            return gy * ref.dgelu(tr[self._res])
+        if k == "silu":
+            return gy * ref.dsilu(tr[self._res])
+        if k == "relu":
+            n = int(np.prod(self._shape))
+            signs = ref.unpack1bit(tr[self._res], n).reshape(self._shape)
+            return gy * signs.astype(gy.dtype)
+        if k in ("regelu2", "regelu2d", "resilu2"):
+            a, _ = coeffs.BY_NAME[k]
+            if self.use_pallas:
+                dec = k_regelu2 if k.startswith("regelu") else k_resilu2
+                packed = tr[self._res]
+                return dec.bwd(packed, gy, a)
+            n = int(np.prod(self._shape))
+            codes = ref.unpack2bit(tr[self._res], n).reshape(self._shape)
+            return gy * ref.drelu_comb_from_codes(codes, a)
+        # mesa 8-bit: dequantize then exact derivative on the dequantized x
+        q, scale = tr[self._res], tr[self._res_scale]
+        xhat = q.astype(jnp.float32) * scale
+        d = ref.dgelu(xhat) if k == "mesa_gelu8" else ref.dsilu(xhat)
+        return gy * d
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+class Norm:
+    KINDS = ("ln", "msln", "rms", "msrms", "mesa_ln8")
+
+    def __init__(self, alloc, module, dim, kind, affine_trainable,
+                 use_pallas=False, eps=1e-6):
+        assert kind in self.KINDS
+        self.module, self.kind, self.eps = module, kind, eps
+        self.dim, self.use_pallas = dim, use_pallas
+        self.affine_trainable = affine_trainable
+        self.shared_out_idx = None  # set by fwd for MS variants
+        if kind in ("ln", "mesa_ln8"):
+            self.iw = alloc.add(f"{module}.w", (dim,), affine_trainable, "ones")
+            self.ib = alloc.add(f"{module}.b", (dim,), affine_trainable, "zeros")
+        elif kind == "rms":
+            self.iw = alloc.add(f"{module}.w", (dim,), affine_trainable, "ones")
+        # MS variants: affine merged into the following linear (eq. 17)
+
+    def fwd(self, P, tape, x):
+        k = self.kind
+        self.shared_out_idx = None
+        if k == "ln":
+            y, mu, rstd = ref.ln_fwd(x, P[self.iw], P[self.ib], self.eps)
+            self._rx = tape.save(self.module, "x", "norm_input", x)
+            self._rmu = tape.save(self.module, "mu", "norm_stat", mu)
+            self._rrs = tape.save(self.module, "rstd", "norm_stat", rstd)
+            return y
+        if k == "mesa_ln8":
+            y, mu, rstd = ref.ln_fwd(x, P[self.iw], P[self.ib], self.eps)
+            x2 = _as2d(x)
+            amax = jnp.maximum(jnp.max(jnp.abs(x2), axis=-1, keepdims=True),
+                               1e-12)
+            scale = (amax / 127.0).reshape(*x.shape[:-1], 1)
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            self._rx = tape.save(self.module, "q", "act_q8", q, bits=8.0)
+            self._rsc = tape.save(self.module, "scale", "act_scale", scale)
+            self._rmu = tape.save(self.module, "mu", "norm_stat", mu)
+            self._rrs = tape.save(self.module, "rstd", "norm_stat", rstd)
+            return y
+        if k == "rms":
+            y, rstd = ref.rms_fwd(x, P[self.iw], self.eps)
+            self._rx = tape.save(self.module, "x", "norm_input", x)
+            self._rrs = tape.save(self.module, "rstd", "norm_stat", rstd)
+            return y
+        if k == "msln":
+            z, sigma = (k_msnorm.msln_fwd(x, self.eps) if self.use_pallas
+                        else ref.msln_fwd(x, self.eps))
+        else:  # msrms
+            z, sigma = (k_msnorm.msrms_fwd(x, self.eps) if self.use_pallas
+                        else ref.msrms_fwd(x, self.eps))
+        self._rz = tape.save(self.module, "z", "norm_shared", z)
+        self._rs = tape.save(self.module, "sigma", "norm_stat", sigma)
+        self.shared_out_idx = self._rz
+        return z
+
+    def bwd(self, P, tr, gy):
+        k = self.kind
+        grads = {}
+        if k in ("ln", "mesa_ln8"):
+            if k == "ln":
+                x = tr[self._rx]
+            else:
+                x = tr[self._rx].astype(jnp.float32) * tr[self._rsc]
+            mu, rstd = tr[self._rmu], tr[self._rrs]
+            gx, gw, gb = ref.ln_bwd(x, mu, rstd, P[self.iw], gy)
+            if self.affine_trainable:  # skip dead grads when frozen
+                grads[self.iw], grads[self.ib] = gw, gb
+            return gx, grads
+        if k == "rms":
+            x, rstd = tr[self._rx], tr[self._rrs]
+            gx, gw = ref.rms_bwd(x, rstd, P[self.iw], gy)
+            if self.affine_trainable:
+                grads[self.iw] = gw
+            return gx, grads
+        z, sigma = tr[self._rz], tr[self._rs]
+        if k == "msln":
+            gx = (k_msnorm.msln_bwd(z, sigma, gy) if self.use_pallas
+                  else ref.msln_bwd(z, sigma, gy))
+        else:
+            gx = (k_msnorm.msrms_bwd(z, sigma, gy) if self.use_pallas
+                  else ref.msrms_bwd(z, sigma, gy))
+        return gx, grads

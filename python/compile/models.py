@@ -1,0 +1,225 @@
+"""Model assembly: ViT-style, LLaMA-style, RoBERTa-style stacks.
+
+``Model`` exposes the two functions that become the AOT artifacts:
+
+  fwd(P, x, y)            -> (loss, metric, *residuals)
+  bwd(P, residuals, x, y) -> tuple of grads for trainable params (in order)
+
+plus a pure-autodiff reference ``loss_ref`` used by the pytest gradient
+checks (exact variants must match jax.grad; Approx-BP variants must match
+jax.grad of the ReLU-combination surrogate model).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks as B
+from .layers import Alloc
+from .tape import Tape, TapeReader
+
+
+@dataclasses.dataclass
+class ModelCfg:
+    arch: str = "vit"            # vit | llama | roberta
+    dim: int = 128
+    depth: int = 4
+    n_heads: int = 4
+    mlp_ratio: float = 4.0
+    n_tokens: int = 64           # patches (vit) or sequence length (llama)
+    patch_dim: int = 48          # vit: flattened patch size
+    n_classes: int = 10          # vit/roberta
+    vocab: int = 256             # llama/roberta
+    tuning: str = "lora_qv"      # full | lora_qv | lora_all | lorafa_qv | lorafa_all | frozen
+    activation: str = "gelu"     # see layers.Activation.KINDS
+    norm: str = "ln"             # see layers.Norm.KINDS
+    lora_rank: int = 4
+    use_pallas: bool = False
+    batch: int = 8
+    lm_head_trainable: bool = False
+    ckpt: bool = False           # gradient checkpointing baseline (Fig 1)
+
+    @property
+    def hidden(self):
+        return int(self.dim * self.mlp_ratio)
+
+
+class Model:
+    def __init__(self, cfg: ModelCfg):
+        self.cfg = cfg
+        alloc = Alloc()
+        self.blocks = []
+        act, norm, tun, r, up = (cfg.activation, cfg.norm, cfg.tuning,
+                                 cfg.lora_rank, cfg.use_pallas)
+        if cfg.arch in ("vit", "roberta"):
+            if cfg.arch == "vit":
+                self.embed = B.PatchEmbed(alloc, "embed", cfg.patch_dim,
+                                          cfg.dim, cfg.n_tokens,
+                                          trainable=(tun == "full"))
+            else:
+                self.embed = B.TokenEmbed(alloc, "embed", cfg.vocab, cfg.dim,
+                                          trainable=(tun == "full"))
+            for i in range(cfg.depth):
+                self.blocks.append(B.AttnBlock(
+                    alloc, f"block{i}.attn", cfg.dim, cfg.n_heads, tun,
+                    norm, causal=False, lora_rank=r, use_pallas=up))
+                self.blocks.append(B.MlpBlock(
+                    alloc, f"block{i}.mlp", cfg.dim, cfg.hidden, tun, norm,
+                    act, lora_rank=r, use_pallas=up))
+            self.head = B.ClassifierHead(alloc, "head", cfg.dim,
+                                         cfg.n_classes, tun, norm, up)
+        elif cfg.arch == "llama":
+            self.embed = B.TokenEmbed(alloc, "embed", cfg.vocab, cfg.dim,
+                                      trainable=(tun == "full"))
+            for i in range(cfg.depth):
+                self.blocks.append(B.AttnBlock(
+                    alloc, f"block{i}.attn", cfg.dim, cfg.n_heads, tun,
+                    norm, causal=True, lora_rank=r, use_pallas=up,
+                    qkv_bias=False))
+                self.blocks.append(B.SwiGluBlock(
+                    alloc, f"block{i}.mlp", cfg.dim, cfg.hidden, tun, norm,
+                    act, lora_rank=r, use_pallas=up))
+            self.head = B.LmHead(alloc, "head", cfg.dim, cfg.vocab, tun,
+                                 norm, cfg.lm_head_trainable, up)
+        else:
+            raise ValueError(cfg.arch)
+        self.param_specs = alloc.specs
+        self.trainable_idx = [i for i, s in enumerate(self.param_specs)
+                              if s.trainable]
+
+    # -- batch specs ------------------------------------------------------
+
+    def batch_spec(self):
+        c = self.cfg
+        if c.arch == "vit":
+            return (jax.ShapeDtypeStruct((c.batch, c.n_tokens, c.patch_dim),
+                                         jnp.float32),
+                    jax.ShapeDtypeStruct((c.batch,), jnp.int32))
+        if c.arch == "roberta":
+            return (jax.ShapeDtypeStruct((c.batch, c.n_tokens), jnp.int32),
+                    jax.ShapeDtypeStruct((c.batch,), jnp.int32))
+        return (jax.ShapeDtypeStruct((c.batch, c.n_tokens), jnp.int32),
+                jax.ShapeDtypeStruct((c.batch, c.n_tokens), jnp.int32))
+
+    # -- the two AOT entry points -----------------------------------------
+
+    def fwd(self, P, x, y):
+        tape = Tape()
+        h = self.embed.fwd(P, tape, x)
+        if self.cfg.ckpt:
+            # gradient-checkpointing baseline: save only block inputs; the
+            # inner residuals go to a throwaway tape and are recomputed in
+            # bwd (Chen et al. 2016 — "+CKPT" arm of Figure 1).
+            self._blk_in = []
+            for blk in self.blocks:
+                self._blk_in.append(
+                    tape.save(blk.module, "blk_in", "ckpt_input", h))
+                h = blk.fwd(P, Tape(), h)
+        else:
+            for blk in self.blocks:
+                h = blk.fwd(P, tape, h)
+        loss, metric = self.head.fwd(P, tape, h, y)
+        self.tape_specs = tape.specs
+        return (loss, metric, *tape.vals)
+
+    def bwd(self, P, residuals, x, y):
+        """Requires fwd to have been *traced* first (records tape indices)."""
+        tr = TapeReader(residuals)
+        grads = {}
+        gh, g = self.head.bwd(P, tr, y)
+        grads.update(g)
+        if self.cfg.ckpt:
+            for bi, blk in reversed(list(zip(self._blk_in, self.blocks))):
+                local = Tape()
+                blk.fwd(P, local, tr[bi])  # recompute inner residuals
+                gh, g = blk.bwd(P, TapeReader(local.vals), gh)
+                grads.update(g)
+        else:
+            for blk in reversed(self.blocks):
+                gh, g = blk.bwd(P, tr, gh)
+                grads.update(g)
+        if isinstance(self.embed, B.TokenEmbed):
+            _, g = self.embed.bwd(P, tr, gh, x)
+        else:
+            _, g = self.embed.bwd(P, tr, gh)
+        grads.update(g)
+        out = []
+        for i in self.trainable_idx:
+            if i in grads:
+                out.append(grads[i])
+            else:  # trainable param unused this config — zero grad
+                out.append(jnp.zeros(self.param_specs[i].shape, jnp.float32))
+        return tuple(out)
+
+    # -- pure-autodiff reference (for tests) ------------------------------
+
+    def loss_ref(self, P, x, y):
+        loss, _metric, *_res = self.fwd(P, x, y)
+        return loss
+
+    def init_params(self, seed=0):
+        rng = np.random.RandomState(seed)
+        return [s.materialize(rng) for s in self.param_specs]
+
+    def merge_map(self):
+        """Norm→linear affine-merge relationships (eq. 17), for the rust
+        checkpoint converter: which linears absorb which norm's (α, β) when
+        converting an LN/RMS checkpoint to an MS-LN/MS-RMSNorm model."""
+        out = []
+        for blk in self.blocks:
+            if isinstance(blk, B.AttnBlock):
+                out.append({"norm": blk.norm.module,
+                            "linears": [blk.q.module, blk.k.module,
+                                        blk.v.module]})
+            elif isinstance(blk, B.SwiGluBlock):
+                out.append({"norm": blk.norm.module,
+                            "linears": [blk.fc1.module, blk.fc2.module]})
+            elif isinstance(blk, B.MlpBlock):
+                out.append({"norm": blk.norm.module,
+                            "linears": [blk.fc1.module]})
+        if hasattr(self.head, "norm"):
+            if isinstance(self.head, B.LmHead):
+                out.append({"norm": self.head.norm.module,
+                            "linears": [self.head.fc.module]})
+            # ClassifierHead: norm output is mean-pooled before the fc, so
+            # the affine cannot be merged into fc directly; the pooled mean
+            # commutes with diag(α) — we merge there too.
+            else:
+                out.append({"norm": self.head.norm.module,
+                            "linears": [self.head.fc.module]})
+        return out
+
+
+def surrogate(cfg: ModelCfg) -> "Model":
+    """The Approx-BP surrogate f̃: same config but with h̃_{a,c} forwards.
+
+    Used by the gradient tests: our manual bwd for ReGELU2/ReSiLU2 must
+    equal jax.grad of THIS model (not of the exact-GELU model).
+    """
+    import copy
+
+    from .kernels import coeffs, ref
+    from . import layers
+
+    scfg = copy.deepcopy(cfg)
+    m = Model(scfg)
+
+    # monkeypatch activation forwards to the ReLU combination
+    for blk in m.blocks:
+        act = getattr(blk, "act", None)
+        if act is not None and act.kind in coeffs.BY_NAME:
+            a, c = coeffs.BY_NAME[act.kind]
+
+            def make_fwd(act, a, c):
+                def fwd(tape, x):
+                    act._shape = x.shape
+                    codes = ref.bucketize2(x, c).reshape(-1)
+                    act._res = tape.save(act.module, "codes", "act_codes",
+                                         ref.pack2bit(codes), bits=2.0)
+                    return ref.relu_comb(x, a, c)
+                return fwd
+
+            act.fwd = make_fwd(act, a, c)
+    return m

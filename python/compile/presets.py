@@ -1,0 +1,118 @@
+"""Named model presets → artifacts/<preset>/{fwd,bwd}.hlo.txt.
+
+Families:
+  vitt_*    — ViT-tiny-style   (the measured substrate for Tables 1/2/6/7,
+              Figures 1/4; the analytical memmodel extrapolates to ViT-B/L)
+  llama_*   — LLaMA-style decoder (Tables 3/8/9, Figure 6)
+  rob_*     — RoBERTa-style encoder (Table 4)
+  e2e_*     — the end-to-end example models (bigger, jnp path for speed)
+  pallas_*  — same math lowered through the Pallas kernels (composition
+              proof; used by rust e2e_runtime tests)
+"""
+
+from .models import ModelCfg
+
+VIT_T = dict(arch="vit", dim=128, depth=4, n_heads=4, n_tokens=64,
+             patch_dim=48, n_classes=10, batch=16)
+LLAMA_T = dict(arch="llama", dim=128, depth=4, n_heads=4, n_tokens=128,
+               vocab=512, batch=4, mlp_ratio=2.7)
+ROB_T = dict(arch="roberta", dim=128, depth=4, n_heads=4, n_tokens=64,
+             vocab=512, n_classes=4, batch=16)
+
+# End-to-end driver models (examples/). Sized for the 1-core CPU testbed:
+# ~2.7M params ≈ 1-2 s/step so a few-hundred-step fine-tune stays practical;
+# the paper-scale (ViT-B/L, LLaMA-7B/13B) numbers come from the analytical
+# memmodel (DESIGN.md §3 substitution table).
+VIT_E2E = dict(arch="vit", dim=192, depth=6, n_heads=6, n_tokens=64,
+               patch_dim=48, n_classes=10, batch=8)
+LLAMA_E2E = dict(arch="llama", dim=192, depth=4, n_heads=6, n_tokens=128,
+                 vocab=512, batch=2, mlp_ratio=2.7)
+
+
+def _mk(base, **kw):
+    d = dict(base)
+    d.update(kw)
+    return ModelCfg(**d)
+
+
+PRESETS = {}
+
+
+def _reg(name, base, **kw):
+    PRESETS[name] = _mk(base, **kw)
+
+
+# --- Table 1 / Figure 1 / Figure 4: ViT + LoRA/LoRA-FA -------------------
+for tun, tag in (("lora_qv", "loraqv"), ("lora_all", "loraall")):
+    _reg(f"vitt_{tag}_gelu_ln", VIT_T, tuning=tun, activation="gelu", norm="ln")
+    _reg(f"vitt_{tag}_mesa_ln", VIT_T, tuning=tun, activation="mesa_gelu8", norm="ln")
+    _reg(f"vitt_{tag}_regelu2_ln", VIT_T, tuning=tun, activation="regelu2", norm="ln")
+    _reg(f"vitt_{tag}_gelu_mesaln", VIT_T, tuning=tun, activation="gelu", norm="mesa_ln8")
+    _reg(f"vitt_{tag}_gelu_msln", VIT_T, tuning=tun, activation="gelu", norm="msln")
+    _reg(f"vitt_{tag}_mesa_mesaln", VIT_T, tuning=tun, activation="mesa_gelu8", norm="mesa_ln8")
+    _reg(f"vitt_{tag}_regelu2_msln", VIT_T, tuning=tun, activation="regelu2", norm="msln")
+    _reg(f"vitt_{tag}_relu_ln", VIT_T, tuning=tun, activation="relu", norm="ln")
+for tag, tun in (("lorafaqv", "lorafa_qv"), ("lorafaall", "lorafa_all")):
+    _reg(f"vitt_{tag}_gelu_ln", VIT_T, tuning=tun, activation="gelu", norm="ln")
+    _reg(f"vitt_{tag}_mesa_ln", VIT_T, tuning=tun, activation="mesa_gelu8", norm="ln")
+    _reg(f"vitt_{tag}_mesa_mesaln", VIT_T, tuning=tun, activation="mesa_gelu8", norm="mesa_ln8")
+    _reg(f"vitt_{tag}_regelu2_ln", VIT_T, tuning=tun, activation="regelu2", norm="ln")
+
+# CKPT baseline (Fig 1)
+_reg("vitt_loraqv_gelu_ln_ckpt", VIT_T, tuning="lora_qv", activation="gelu",
+     norm="ln", ckpt=True)
+
+# --- Table 2: full tuning --------------------------------------------------
+for act, nrm in (("gelu", "ln"), ("regelu2", "ln"), ("gelu", "msln"),
+                 ("regelu2", "msln")):
+    _reg(f"vitt_full_{act}_{nrm}", VIT_T, tuning="full", activation=act,
+         norm=nrm)
+
+# --- Table 6 / Appendix I: ReGELU2-d ablation ------------------------------
+_reg("vitt_loraqv_regelu2d_ln", VIT_T, tuning="lora_qv",
+     activation="regelu2d", norm="ln")
+_reg("vitt_loraall_regelu2d_ln", VIT_T, tuning="lora_all",
+     activation="regelu2d", norm="ln")
+
+# --- Table 3/8/9: LLaMA-style QLoRA-sim ------------------------------------
+for act, nrm in (("silu", "rms"), ("resilu2", "rms"), ("silu", "msrms"),
+                 ("resilu2", "msrms")):
+    _reg(f"llama_loraall_{act}_{nrm}", LLAMA_T, tuning="lora_all",
+         activation=act, norm=nrm)
+
+# --- Table 4: RoBERTa-style ------------------------------------------------
+for act, nrm in (("gelu", "ln"), ("regelu2", "ln"), ("gelu", "msln"),
+                 ("regelu2", "msln")):
+    _reg(f"rob_loraall_{act}_{nrm}", ROB_T, tuning="lora_all",
+         activation=act, norm=nrm)
+
+# --- Appendix C: substituting the forward pass degrades the model ---------
+# (handled in-test via models.surrogate; no artifact needed)
+
+# --- end-to-end drivers ----------------------------------------------------
+_reg("e2e_vit_pretrain", VIT_E2E, tuning="full", activation="gelu", norm="ln")
+_reg("e2e_vit_gelu_ln", VIT_E2E, tuning="lora_qv", activation="gelu", norm="ln")
+_reg("e2e_vit_regelu2_msln", VIT_E2E, tuning="lora_qv",
+     activation="regelu2", norm="msln")
+_reg("e2e_llama_silu_rms", LLAMA_E2E, tuning="lora_all", activation="silu",
+     norm="rms")
+_reg("e2e_llama_resilu2_msrms", LLAMA_E2E, tuning="lora_all",
+     activation="resilu2", norm="msrms")
+
+# --- pallas-lowered composition proof --------------------------------------
+_reg("pallas_vit_regelu2_msln", VIT_T, tuning="lora_qv",
+     activation="regelu2", norm="msln", use_pallas=True, batch=4)
+_reg("pallas_llama_resilu2_msrms", LLAMA_T, tuning="lora_all",
+     activation="resilu2", norm="msrms", use_pallas=True, batch=2)
+
+# the standard set `make artifacts` builds (examples+tests need these);
+# benches build the rest on demand via `ambp compile` -> aot.py
+DEFAULT = [
+    "vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln",
+    "vitt_loraqv_gelu_msln", "vitt_loraqv_mesa_mesaln",
+    "vitt_loraqv_gelu_ln_ckpt",
+    "llama_loraall_silu_rms", "llama_loraall_resilu2_msrms",
+    "e2e_vit_pretrain", "e2e_vit_gelu_ln", "e2e_vit_regelu2_msln",
+    "e2e_llama_silu_rms", "e2e_llama_resilu2_msrms",
+    "pallas_vit_regelu2_msln",
+]

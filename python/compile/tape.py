@@ -1,0 +1,63 @@
+"""Residual tape: the explicit fwd→bwd ABI boundary.
+
+Every tensor a layer saves for backward goes through ``Tape.save``.  The
+tape's entries become the trailing outputs of ``fwd.hlo`` and the residual
+inputs of ``bwd.hlo`` — so the bytes on the tape *are* the paper's
+"activation memory", measured exactly by the rust coordinator.
+
+Residual ``kind`` tags drive the per-module breakdown (Figure 2):
+  linear_input | lora_u | act_full | act_codes | act_q8 | act_scale |
+  norm_input | norm_stat | norm_shared | attn_qkv | gate_operand | head_input
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ResidualSpec:
+    name: str
+    kind: str
+    module: str  # e.g. "block3.mlp.act" — for per-module accounting
+    shape: tuple
+    dtype: str
+    bits_per_logical_elem: float  # for paper-style "units" reporting
+
+
+class Tape:
+    """Ordered residual store. fwd: save(); bwd: read by recorded index."""
+
+    def __init__(self):
+        self.vals = []
+        self.specs = []
+
+    def save(self, module, name, kind, arr, bits=None):
+        idx = len(self.vals)
+        self.vals.append(arr)
+        if bits is None:
+            bits = jnp.dtype(arr.dtype).itemsize * 8
+        self.specs.append(
+            ResidualSpec(
+                name=f"{module}.{name}",
+                kind=kind,
+                module=module,
+                shape=tuple(int(s) for s in arr.shape),
+                dtype=str(arr.dtype),
+                bits_per_logical_elem=float(bits),
+            )
+        )
+        return idx
+
+    def __len__(self):
+        return len(self.vals)
+
+
+class TapeReader:
+    """bwd-side view: layers read residuals by the indices recorded in fwd."""
+
+    def __init__(self, vals):
+        self.vals = list(vals)
+
+    def __getitem__(self, idx):
+        return self.vals[idx]

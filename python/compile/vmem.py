@@ -1,0 +1,122 @@
+"""L1 structural performance model: VMEM residency + HBM↔VMEM traffic.
+
+Under interpret=True there is no meaningful TPU wallclock, so the L1 perf
+deliverable is structural (DESIGN.md §6): for each kernel and shape this
+module reports the VMEM slab footprint chosen by ``pallas_common.row_tile``
+and the DMA bytes per element moved in each direction — the quantities the
+EXPERIMENTS.md §Perf L1 roofline argument is built on.
+
+Run as a script for the report:  python -m compile.vmem
+"""
+
+import dataclasses
+
+from .kernels import pallas_common as pc
+
+
+@dataclasses.dataclass
+class KernelProfile:
+    name: str
+    rows: int
+    cols: int
+    tile_rows: int
+    vmem_bytes: int          # resident slab bytes (all operands)
+    hbm_read_per_elem: float
+    hbm_write_per_elem: float
+
+    @property
+    def dma_per_elem(self):
+        return self.hbm_read_per_elem + self.hbm_write_per_elem
+
+
+def profile_act_fwd(rows, cols, codes_bits=2.0):
+    """ReGELU2/ReSiLU2 fused fwd+encode: read x, write y + packed codes."""
+    tr = pc.row_tile(rows, cols)
+    return KernelProfile(
+        name="act_fwd_encode",
+        rows=rows, cols=cols, tile_rows=tr,
+        vmem_bytes=tr * cols * 4 * 2 + tr * (cols // 4),
+        hbm_read_per_elem=4.0,
+        hbm_write_per_elem=4.0 + codes_bits / 8.0,
+    )
+
+
+def profile_act_bwd(rows, cols, codes_bits=2.0):
+    """Decode-bwd: read packed + gy, write gx (no dequant pass)."""
+    tr = pc.row_tile(rows, cols)
+    return KernelProfile(
+        name="act_bwd_decode",
+        rows=rows, cols=cols, tile_rows=tr,
+        vmem_bytes=tr * cols * 4 * 2 + tr * (cols // 4),
+        hbm_read_per_elem=4.0 + codes_bits / 8.0,
+        hbm_write_per_elem=4.0,
+    )
+
+
+def profile_act_bwd_baseline(rows, cols):
+    """GELU baseline bwd: read full x + gy, write gx."""
+    tr = pc.row_tile(rows, cols)
+    return KernelProfile(
+        name="act_bwd_full(gelu)",
+        rows=rows, cols=cols, tile_rows=tr,
+        vmem_bytes=tr * cols * 4 * 3,
+        hbm_read_per_elem=8.0,
+        hbm_write_per_elem=4.0,
+    )
+
+
+def profile_msnorm_fwd(rows, cols):
+    tr = pc.row_tile(rows, cols)
+    return KernelProfile(
+        name="msnorm_fwd",
+        rows=rows, cols=cols, tile_rows=tr,
+        vmem_bytes=tr * cols * 4 * 2 + tr * 4,
+        hbm_read_per_elem=4.0,
+        hbm_write_per_elem=4.0 + 4.0 / cols,
+    )
+
+
+def profile_msnorm_bwd(rows, cols):
+    tr = pc.row_tile(rows, cols)
+    return KernelProfile(
+        name="msnorm_bwd",
+        rows=rows, cols=cols, tile_rows=tr,
+        vmem_bytes=tr * cols * 4 * 3 + tr * 4,
+        hbm_read_per_elem=8.0 + 4.0 / cols,
+        hbm_write_per_elem=4.0,
+    )
+
+
+VMEM_BUDGET = 16 << 20  # ~16 MiB/core on contemporary TPUs
+
+
+def report(rows=8192, cols_list=(512, 768, 3072, 13824)):
+    out = []
+    for cols in cols_list:
+        for prof in (
+            profile_act_fwd(rows, cols),
+            profile_act_bwd(rows, cols),
+            profile_act_bwd_baseline(rows, cols),
+            profile_msnorm_fwd(rows, cols),
+            profile_msnorm_bwd(rows, cols),
+        ):
+            out.append(prof)
+    return out
+
+
+def main():
+    print(f"{'kernel':<22} {'cols':>6} {'TR':>5} {'VMEM KiB':>9} "
+          f"{'rd B/el':>8} {'wr B/el':>8} {'fits':>5}")
+    for p in report():
+        print(f"{p.name:<22} {p.cols:>6} {p.tile_rows:>5} "
+              f"{p.vmem_bytes / 1024:>9.1f} {p.hbm_read_per_elem:>8.2f} "
+              f"{p.hbm_write_per_elem:>8.2f} "
+              f"{'ok' if p.vmem_bytes < VMEM_BUDGET else 'NO':>5}")
+    base = profile_act_bwd_baseline(8192, 3072)
+    ours = profile_act_bwd(8192, 3072)
+    print(f"\nactivation bwd DMA reduction (ours vs full-tensor): "
+          f"{base.dma_per_elem / ours.dma_per_elem:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

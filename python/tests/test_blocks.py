@@ -1,0 +1,140 @@
+"""Block-level gradient checks + residual-sharing chain invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.blocks import AttnBlock, MlpBlock, SwiGluBlock
+from compile.layers import Alloc
+from compile.tape import Tape, TapeReader
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape)
+                       .astype("float32"))
+
+
+def _params(alloc, seed=3):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(s.materialize(rng)) for s in alloc.specs]
+
+
+def _gradcheck_block(blk, alloc, x, seed=5, tol=2e-4):
+    P = _params(alloc)
+    gy = _rand(x.shape, seed)
+    tape = Tape()
+    y = blk.fwd(P, tape, x)
+    gx, grads = blk.bwd(P, TapeReader(tape.vals), gy)
+
+    def f(P_, x_):
+        return jnp.vdot(blk.fwd(P_, Tape(), x_), gy)
+
+    gP, gx_want = jax.grad(f, argnums=(0, 1))(P, x)
+    np.testing.assert_allclose(gx, gx_want, atol=tol)
+    for i, s in enumerate(alloc.specs):
+        if s.trainable:
+            np.testing.assert_allclose(grads[i], gP[i], atol=tol,
+                                       err_msg=s.name)
+    return tape
+
+
+@pytest.mark.parametrize("tuning", ["full", "lora_qv", "lora_all",
+                                    "lorafa_all", "frozen"])
+@pytest.mark.parametrize("norm", ["ln", "msln"])
+def test_attn_block_grads(tuning, norm):
+    alloc = Alloc()
+    blk = AttnBlock(alloc, "b.attn", 16, 2, tuning, norm)
+    if tuning == "frozen":
+        # no trainables: just check it runs and gx matches autodiff
+        P = _params(alloc)
+        x = _rand((2, 4, 16), 1)
+        tape = Tape()
+        blk.fwd(P, tape, x)
+        gx, grads = blk.bwd(P, TapeReader(tape.vals), _rand(x.shape, 2))
+        assert grads == {}
+        return
+    _gradcheck_block(blk, alloc, _rand((2, 4, 16), 1))
+
+
+@pytest.mark.parametrize("act", ["gelu", "regelu2", "relu", "mesa_gelu8"])
+def test_mlp_block_grads(act):
+    alloc = Alloc()
+    blk = MlpBlock(alloc, "b.mlp", 16, 32, "lora_all", "msln", act)
+    tol = 2e-3 if act == "mesa_gelu8" else 2e-4
+    P = _params(alloc)
+    x = _rand((2, 4, 16), 7)
+    gy = _rand(x.shape, 8)
+    tape = Tape()
+    blk.fwd(P, tape, x)
+    gx, grads = blk.bwd(P, TapeReader(tape.vals), gy)
+    if act in ("gelu", "relu", "mesa_gelu8"):
+        def f(P_, x_):
+            return jnp.vdot(blk.fwd(P_, Tape(), x_), gy)
+        gP, gx_want = jax.grad(f, argnums=(0, 1))(P, x)
+        np.testing.assert_allclose(gx, gx_want, atol=tol)
+
+
+@pytest.mark.parametrize("act", ["silu", "resilu2"])
+def test_swiglu_block_grads(act):
+    alloc = Alloc()
+    blk = SwiGluBlock(alloc, "b.mlp", 16, 40, "lora_all", "msrms", act)
+    P = _params(alloc)
+    x = _rand((2, 4, 16), 9)
+    gy = _rand(x.shape, 10)
+    tape = Tape()
+    blk.fwd(P, tape, x)
+    gx, grads = blk.bwd(P, TapeReader(tape.vals), gy)
+    if act == "silu":
+        def f(P_, x_):
+            return jnp.vdot(blk.fwd(P_, Tape(), x_), gy)
+        gP, gx_want = jax.grad(f, argnums=(0, 1))(P, x)
+        np.testing.assert_allclose(gx, gx_want, atol=2e-4)
+        for i, s in enumerate(alloc.specs):
+            if s.trainable:
+                np.testing.assert_allclose(grads[i], gP[i], atol=2e-4,
+                                           err_msg=s.name)
+
+
+class TestSharingChains:
+    def _tape_kinds(self, tuning, norm, arch="attn"):
+        alloc = Alloc()
+        if arch == "attn":
+            blk = AttnBlock(alloc, "b", 16, 2, tuning, norm)
+            x = _rand((2, 4, 16), 11)
+        else:
+            blk = SwiGluBlock(alloc, "b", 16, 40, tuning, norm, "silu")
+            x = _rand((2, 4, 16), 11)
+        P = _params(alloc)
+        tape = Tape()
+        blk.fwd(P, tape, x)
+        return [s.kind for s in tape.specs]
+
+    def test_qkv_share_one_input_copy(self):
+        """q,k,v consume one stored z — exactly one linear_input (LN)."""
+        kinds = self._tape_kinds("lora_all", "ln")
+        assert kinds.count("linear_input") == 2  # z (shared) + proj input
+
+    def test_msnorm_removes_linear_input(self):
+        """With MS-LN, z comes from norm_shared; only proj saves input."""
+        kinds = self._tape_kinds("lora_all", "msln")
+        assert kinds.count("norm_shared") == 1
+        assert kinds.count("linear_input") == 1  # proj only
+        assert "norm_input" not in kinds
+
+    def test_swiglu_fc12_share(self):
+        kinds = self._tape_kinds("lora_all", "rms", arch="swiglu")
+        # fc1+fc2 share z (1) + fc3 input (1)
+        assert kinds.count("linear_input") == 2
+
+    def test_frozen_saves_nothing_linear(self):
+        kinds = self._tape_kinds("frozen", "ln")
+        assert "linear_input" not in kinds
+        assert "lora_u" not in kinds
+
+    def test_lorafa_saves_only_u(self):
+        kinds = self._tape_kinds("lorafa_all", "ln")
+        assert "linear_input" not in kinds
+        assert kinds.count("lora_u") == 4  # q,k,v,proj adapters

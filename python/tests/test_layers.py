@@ -1,0 +1,204 @@
+"""Per-layer manual-backprop gradient checks against jax autodiff."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.layers import Activation, Alloc, Linear, Norm
+from compile.tape import Tape, TapeReader
+from compile.kernels import coeffs, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).randn(*shape) * scale).astype("float32"))
+
+
+def _params(alloc, seed=7):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(s.materialize(rng)) for s in alloc.specs]
+
+
+def _run(layer_fwd, layer_bwd, P, x, gy):
+    """fwd -> tape -> bwd; returns (y, gx, grads)."""
+    tape = Tape()
+    y = layer_fwd(P, tape, x)
+    gx, grads = layer_bwd(P, TapeReader(tape.vals), gy)
+    return y, gx, grads, tape
+
+
+class TestLinearModes:
+    @pytest.mark.parametrize("mode", ["full", "frozen", "lora", "lorafa"])
+    def test_grad_matches_autodiff(self, mode):
+        alloc = Alloc()
+        lin = Linear(alloc, "l", 12, 8, mode)
+        P = _params(alloc)
+        x, gy = _rand((5, 12), 1), _rand((5, 8), 2)
+        y, gx, grads, _ = _run(lin.fwd, lin.bwd, P, x, gy)
+
+        def f(P_, x_):
+            t = Tape()
+            return jnp.vdot(lin.fwd(P_, t, x_), gy)
+
+        gP, gx_want = jax.grad(f, argnums=(0, 1))(P, x)
+        np.testing.assert_allclose(gx, gx_want, atol=1e-5)
+        for i, s in enumerate(alloc.specs):
+            if s.trainable:
+                assert i in grads, f"missing grad for {s.name}"
+                np.testing.assert_allclose(grads[i], gP[i], atol=1e-5)
+            else:
+                assert i not in grads
+
+    def test_residual_policy(self):
+        """What each mode saves is exactly the §3.2 story."""
+        for mode, kinds in [
+            ("full", {"linear_input"}),
+            ("frozen", set()),
+            ("lora", {"linear_input", "lora_u"}),
+            ("lorafa", {"lora_u"}),
+        ]:
+            alloc = Alloc()
+            lin = Linear(alloc, "l", 12, 8, mode)
+            P = _params(alloc)
+            tape = Tape()
+            lin.fwd(P, tape, _rand((5, 12)))
+            assert {s.kind for s in tape.specs} == kinds, mode
+
+    def test_shared_input_not_resaved(self):
+        alloc = Alloc()
+        lin = Linear(alloc, "l", 12, 8, "lora")
+        P = _params(alloc)
+        tape = Tape()
+        x = _rand((5, 12))
+        z_idx = tape.save("norm", "z", "norm_shared", x)
+        lin.fwd(P, tape, x, shared_x_idx=z_idx)
+        kinds = [s.kind for s in tape.specs]
+        assert "linear_input" not in kinds  # reused the shared z
+        # and bwd still works
+        gx, grads = lin.bwd(P, TapeReader(tape.vals), _rand((5, 8)))
+        assert gx.shape == x.shape
+
+    def test_lora_starts_as_identity(self):
+        """B = 0 init: LoRA output equals the frozen projection at t=0."""
+        alloc = Alloc()
+        lin = Linear(alloc, "l", 12, 8, "lora")
+        alloc2 = Alloc()
+        frz = Linear(alloc2, "l", 12, 8, "frozen")
+        P = _params(alloc)
+        P2 = _params(alloc2)
+        x = _rand((5, 12))
+        y1 = lin.fwd(P, Tape(), x)
+        y2 = frz.fwd(P2, Tape(), x)
+        np.testing.assert_allclose(y1, y2, atol=1e-6)
+
+
+class TestActivationLayers:
+    @pytest.mark.parametrize("kind", ["gelu", "silu", "relu"])
+    def test_exact_backward(self, kind):
+        act = Activation("a", kind)
+        x, gy = _rand((6, 16), 3, 2.0), _rand((6, 16), 4)
+        tape = Tape()
+        y = act.fwd(tape, x)
+        gx = act.bwd(TapeReader(tape.vals), gy)
+        f = {"gelu": ref.gelu, "silu": ref.silu, "relu": ref.relu}[kind]
+        _, vjp = jax.vjp(f, x)
+        np.testing.assert_allclose(gx, vjp(gy)[0], atol=1e-5)
+
+    @pytest.mark.parametrize("kind", ["regelu2", "regelu2d", "resilu2"])
+    def test_approx_backward_is_surrogate_derivative(self, kind):
+        act = Activation("a", kind)
+        x, gy = _rand((6, 16), 5, 3.0), _rand((6, 16), 6)
+        tape = Tape()
+        y = act.fwd(tape, x)
+        # forward is EXACT (the paper's key design point, Appendix C)
+        exact = ref.gelu(x) if kind.startswith("regelu") else ref.silu(x)
+        np.testing.assert_allclose(y, exact, atol=1e-6)
+        gx = act.bwd(TapeReader(tape.vals), gy)
+        a, c = coeffs.BY_NAME[kind]
+        np.testing.assert_allclose(gx, gy * ref.drelu_comb(x, a, c),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("kind,bits", [
+        ("gelu", 32), ("silu", 32), ("relu", 1),
+        ("regelu2", 2), ("resilu2", 2), ("mesa_gelu8", 8)])
+    def test_residual_bits(self, kind, bits):
+        act = Activation("a", kind)
+        x = _rand((8, 32), 7)
+        tape = Tape()
+        act.fwd(tape, x)
+        main = tape.specs[0]
+        assert main.bits_per_logical_elem == bits
+
+    def test_mesa_backward_close_to_exact(self):
+        act = Activation("a", "mesa_gelu8")
+        x, gy = _rand((6, 16), 8, 2.0), _rand((6, 16), 9)
+        tape = Tape()
+        act.fwd(tape, x)
+        gx = act.bwd(TapeReader(tape.vals), gy)
+        np.testing.assert_allclose(gx, gy * ref.dgelu(x), atol=0.05)
+
+
+class TestNormLayers:
+    @pytest.mark.parametrize("kind", ["ln", "rms"])
+    def test_exact_backward(self, kind):
+        alloc = Alloc()
+        nrm = Norm(alloc, "n", 16, kind, affine_trainable=True)
+        P = _params(alloc)
+        x, gy = _rand((6, 16), 10), _rand((6, 16), 11)
+        y, gx, grads, _ = _run(nrm.fwd, nrm.bwd, P, x, gy)
+
+        def f(P_, x_):
+            return jnp.vdot(nrm.fwd(P_, Tape(), x_), gy)
+
+        gP, gx_want = jax.grad(f, argnums=(0, 1))(P, x)
+        np.testing.assert_allclose(gx, gx_want, atol=1e-5)
+        for i, s in enumerate(alloc.specs):
+            np.testing.assert_allclose(grads[i], gP[i], atol=1e-5)
+
+    @pytest.mark.parametrize("kind", ["msln", "msrms"])
+    def test_ms_backward(self, kind):
+        alloc = Alloc()
+        nrm = Norm(alloc, "n", 16, kind, affine_trainable=False)
+        P = _params(alloc)
+        x, gy = _rand((6, 16), 12), _rand((6, 16), 13)
+        y, gx, grads, tape = _run(nrm.fwd, nrm.bwd, P, x, gy)
+        assert grads == {}  # MS variants have no params (merged, eq. 17)
+        assert nrm.shared_out_idx is not None
+
+        def f(x_):
+            return jnp.vdot(nrm.fwd(P, Tape(), x_), gy)
+
+        gx_want = jax.grad(f)(x)
+        np.testing.assert_allclose(gx, gx_want, atol=1e-5)
+
+    def test_merged_equivalence(self):
+        """eq. 16→18: LN+affine+linear == MS-LN + merged linear."""
+        p = 16
+        rng = np.random.RandomState(0)
+        alpha = jnp.asarray(rng.randn(p).astype("float32"))
+        beta = jnp.asarray(rng.randn(p).astype("float32"))
+        W = jnp.asarray(rng.randn(8, p).astype("float32"))
+        b = jnp.asarray(rng.randn(8).astype("float32"))
+        x = _rand((5, p), 14)
+        y_ln, _, _ = ref.ln_fwd(x, alpha, beta)
+        y1 = y_ln @ W.T + b
+        z, _ = ref.msln_fwd(x)
+        Wm = W * alpha[None, :]
+        bm = W @ beta + b
+        y2 = z @ Wm.T + bm
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+    def test_rms_merged_equivalence(self):
+        p = 16
+        rng = np.random.RandomState(1)
+        alpha = jnp.asarray(rng.randn(p).astype("float32"))
+        W = jnp.asarray(rng.randn(8, p).astype("float32"))
+        x = _rand((5, p), 15)
+        y_rms, _ = ref.rms_fwd(x, alpha)
+        y1 = y_rms @ W.T
+        z, _ = ref.msrms_fwd(x)
+        y2 = z @ (W * alpha[None, :]).T
+        np.testing.assert_allclose(y1, y2, atol=1e-4)

@@ -1,0 +1,229 @@
+"""Full-model gradient checks, residual accounting, CKPT equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.models import Model, ModelCfg, surrogate
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY_VIT = dict(arch="vit", dim=32, depth=2, n_heads=2, n_tokens=8,
+                patch_dim=12, batch=4)
+TINY_LLAMA = dict(arch="llama", dim=32, depth=2, n_heads=2, n_tokens=8,
+                  vocab=50, batch=4)
+TINY_ROB = dict(arch="roberta", dim=32, depth=2, n_heads=2, n_tokens=8,
+                vocab=50, n_classes=4, batch=4)
+
+
+def make_batch(cfg, seed=1):
+    rng = np.random.RandomState(seed)
+    if cfg.arch == "vit":
+        x = jnp.asarray(
+            rng.randn(cfg.batch, cfg.n_tokens, cfg.patch_dim).astype("f4"))
+        y = jnp.asarray(rng.randint(0, cfg.n_classes, cfg.batch), jnp.int32)
+    elif cfg.arch == "roberta":
+        x = jnp.asarray(rng.randint(0, cfg.vocab, (cfg.batch, cfg.n_tokens)),
+                        jnp.int32)
+        y = jnp.asarray(rng.randint(0, cfg.n_classes, cfg.batch), jnp.int32)
+    else:
+        x = jnp.asarray(rng.randint(0, cfg.vocab, (cfg.batch, cfg.n_tokens)),
+                        jnp.int32)
+        y = jnp.asarray(rng.randint(0, cfg.vocab, (cfg.batch, cfg.n_tokens)),
+                        jnp.int32)
+    return x, y
+
+
+def run_manual(m, P, x, y):
+    out = m.fwd(P, x, y)
+    loss, metric, res = out[0], out[1], list(out[2:])
+    grads = m.bwd(P, res, x, y)
+    return loss, metric, res, grads
+
+
+def autodiff_grads(m, P, x, y):
+    def loss_fn(tp):
+        P2 = list(P)
+        for i, idx in enumerate(m.trainable_idx):
+            P2[idx] = tp[i]
+        return m.loss_ref(P2, x, y)
+
+    return jax.grad(loss_fn)([P[i] for i in m.trainable_idx])
+
+
+EXACT_CASES = [
+    dict(**TINY_VIT, tuning="full", activation="gelu", norm="ln"),
+    dict(**TINY_VIT, tuning="lora_qv", activation="gelu", norm="ln"),
+    dict(**TINY_VIT, tuning="lora_qv", activation="gelu", norm="msln"),
+    dict(**TINY_VIT, tuning="lora_all", activation="mesa_gelu8", norm="msln"),
+    dict(**TINY_VIT, tuning="lorafa_qv", activation="relu", norm="ln"),
+    dict(**TINY_LLAMA, tuning="lora_all", activation="silu", norm="msrms"),
+    dict(**TINY_LLAMA, tuning="full", activation="silu", norm="rms"),
+    dict(**TINY_LLAMA, tuning="lorafa_all", activation="silu", norm="rms"),
+    dict(**TINY_ROB, tuning="lora_all", activation="gelu", norm="msln"),
+]
+
+
+@pytest.mark.parametrize("case", EXACT_CASES, ids=lambda c: "-".join(
+    str(c[k]) for k in ("arch", "tuning", "activation", "norm")))
+def test_manual_bwd_matches_autodiff(case):
+    cfg = ModelCfg(**case)
+    m = Model(cfg)
+    P = [jnp.asarray(p) for p in m.init_params(0)]
+    x, y = make_batch(cfg)
+    loss, metric, res, grads = run_manual(m, P, x, y)
+    want = autodiff_grads(m, P, x, y)
+    tol = 2e-3 if cfg.activation == "mesa_gelu8" else 2e-4
+    for g, w, idx in zip(grads, want, m.trainable_idx):
+        np.testing.assert_allclose(
+            g, w, atol=tol, err_msg=m.param_specs[idx].name)
+
+
+@pytest.mark.parametrize("case", [
+    dict(**TINY_VIT, tuning="lora_all", activation="regelu2", norm="msln"),
+    dict(**TINY_VIT, tuning="lora_qv", activation="regelu2d", norm="ln"),
+    dict(**TINY_LLAMA, tuning="lora_all", activation="resilu2", norm="msrms"),
+], ids=lambda c: c["activation"])
+def test_approxbp_matches_surrogate_autodiff(case):
+    """Manual bwd of the surrogate model == jax.grad of the surrogate."""
+    cfg = ModelCfg(**case)
+    sm = surrogate(cfg)
+    P = [jnp.asarray(p) for p in sm.init_params(0)]
+    x, y = make_batch(cfg)
+    loss, metric, res, grads = run_manual(sm, P, x, y)
+    want = autodiff_grads(sm, P, x, y)
+    for g, w, idx in zip(grads, want, sm.trainable_idx):
+        np.testing.assert_allclose(
+            g, w, atol=2e-4, err_msg=sm.param_specs[idx].name)
+
+
+def test_approx_forward_is_exact():
+    """Appendix C: the ReGELU2 model's FORWARD equals the GELU model's."""
+    base = ModelCfg(**TINY_VIT, tuning="lora_qv", activation="gelu",
+                    norm="ln")
+    alt = ModelCfg(**TINY_VIT, tuning="lora_qv", activation="regelu2",
+                   norm="ln")
+    m1, m2 = Model(base), Model(alt)
+    P = [jnp.asarray(p) for p in m1.init_params(0)]
+    x, y = make_batch(base)
+    l1 = m1.fwd(P, x, y)[0]
+    l2 = m2.fwd(P, x, y)[0]
+    np.testing.assert_allclose(l1, l2, atol=1e-6)
+
+
+def test_surrogate_forward_differs():
+    """Appendix C flip-side: substituting the forward DOES change outputs."""
+    cfg = ModelCfg(**TINY_VIT, tuning="lora_qv", activation="regelu2",
+                   norm="ln")
+    m, sm = Model(cfg), surrogate(cfg)
+    P = [jnp.asarray(p) for p in m.init_params(0)]
+    x, y = make_batch(cfg)
+    assert abs(float(m.fwd(P, x, y)[0]) - float(sm.fwd(P, x, y)[0])) > 1e-6
+
+
+class TestResidualAccounting:
+    def _bytes(self, cfg):
+        m = Model(ModelCfg(**cfg))
+        P = [jnp.asarray(p) for p in m.init_params(0)]
+        x, y = make_batch(m.cfg)
+        m.fwd(P, x, y)
+        return sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                   for s in m.tape_specs), m
+
+    def test_regelu2_saves_less_than_gelu(self):
+        b_gelu, _ = self._bytes(dict(**TINY_VIT, tuning="lora_qv",
+                                     activation="gelu", norm="ln"))
+        b_re, _ = self._bytes(dict(**TINY_VIT, tuning="lora_qv",
+                                   activation="regelu2", norm="ln"))
+        assert b_re < b_gelu
+
+    def test_msln_saves_less_than_ln_when_linears_adapted(self):
+        b_ln, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                   activation="gelu", norm="ln"))
+        b_ms, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                   activation="gelu", norm="msln"))
+        assert b_ms < b_ln
+
+    def test_combined_saving_ordering(self):
+        """(ReGELU2, MS-LN) < each single change < baseline — Table 1."""
+        base, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                   activation="gelu", norm="ln"))
+        only_act, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                       activation="regelu2", norm="ln"))
+        only_norm, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                        activation="gelu", norm="msln"))
+        both, _ = self._bytes(dict(**TINY_VIT, tuning="lora_all",
+                                   activation="regelu2", norm="msln"))
+        assert both < only_act < base
+        assert both < only_norm < base
+
+    def test_ckpt_saves_least_memory(self):
+        b_ckpt, _ = self._bytes(dict(**TINY_VIT, tuning="lora_qv",
+                                     activation="gelu", norm="ln", ckpt=True))
+        b_base, _ = self._bytes(dict(**TINY_VIT, tuning="lora_qv",
+                                     activation="gelu", norm="ln"))
+        assert b_ckpt < b_base
+
+    def test_lorafa_norm_sharing_is_moot(self):
+        """LoRA-FA: condition 3 of Prop 5.1 fails → MS-LN saves ~nothing
+        beyond what plain LN does (both store exactly one [B,N,C])."""
+        b_ln, m1 = self._bytes(dict(**TINY_VIT, tuning="lorafa_all",
+                                    activation="gelu", norm="ln"))
+        b_ms, m2 = self._bytes(dict(**TINY_VIT, tuning="lorafa_all",
+                                    activation="gelu", norm="msln"))
+        # MS-LN still avoids the separate mu tensor, but must NOT get the
+        # big shared-z win it gets with lora_all
+        big = lambda m: sum(
+            int(np.prod(s.shape)) * 4 for s in m.tape_specs
+            if s.kind in ("norm_input", "norm_shared", "linear_input"))
+        assert big(m2) == big(m1)
+
+
+def test_ckpt_grads_equal_plain_grads():
+    cfg_p = ModelCfg(**TINY_VIT, tuning="lora_qv", activation="gelu",
+                     norm="ln")
+    cfg_c = ModelCfg(**TINY_VIT, tuning="lora_qv", activation="gelu",
+                     norm="ln", ckpt=True)
+    mp, mc = Model(cfg_p), Model(cfg_c)
+    P = [jnp.asarray(p) for p in mp.init_params(0)]
+    x, y = make_batch(cfg_p)
+    _, _, _, gp = run_manual(mp, P, x, y)
+    _, _, _, gc = run_manual(mc, P, x, y)
+    for a, b in zip(gp, gc):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path():
+    """Composition proof: use_pallas=True gives identical loss and grads."""
+    base = dict(**TINY_VIT, tuning="lora_qv", activation="regelu2",
+                norm="msln")
+    m1 = Model(ModelCfg(**base))
+    m2 = Model(ModelCfg(**base, use_pallas=True))
+    P = [jnp.asarray(p) for p in m1.init_params(0)]
+    x, y = make_batch(m1.cfg)
+    l1, _, r1, g1 = run_manual(m1, P, x, y)
+    l2, _, r2, g2 = run_manual(m2, P, x, y)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_few_steps_of_sgd_reduce_loss():
+    """The whole manual-backprop stack actually trains."""
+    cfg = ModelCfg(**TINY_VIT, tuning="lora_all", activation="regelu2",
+                   norm="msln")
+    m = Model(cfg)
+    P = [jnp.asarray(p) for p in m.init_params(0)]
+    x, y = make_batch(cfg)
+    first = None
+    for step in range(30):
+        out = m.fwd(P, x, y)
+        loss, res = out[0], list(out[2:])
+        if first is None:
+            first = float(loss)
+        grads = m.bwd(P, res, x, y)
+        for gi, idx in enumerate(m.trainable_idx):
+            P[idx] = P[idx] - 0.05 * grads[gi]
+    assert float(loss) < first * 0.8, (first, float(loss))

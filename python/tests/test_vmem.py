@@ -1,0 +1,37 @@
+"""Structural L1 perf model invariants (EXPERIMENTS.md §Perf L1)."""
+
+from compile import vmem
+from compile.kernels import pallas_common as pc
+
+
+def test_all_profiles_fit_vmem_budget():
+    for p in vmem.report():
+        assert p.vmem_bytes < vmem.VMEM_BUDGET, p
+
+
+def test_tile_rows_power_of_two_and_bounded():
+    for cols in (4, 64, 768, 3072, 13824):
+        tr = pc.row_tile(100000, cols)
+        assert tr >= 1
+        assert tr & (tr - 1) == 0  # power of two
+        assert tr * cols <= pc.VMEM_SLAB_ELEMS or tr == 1
+
+
+def test_2bit_bwd_moves_less_dma_than_full():
+    ours = vmem.profile_act_bwd(8192, 3072)
+    base = vmem.profile_act_bwd_baseline(8192, 3072)
+    ratio = base.dma_per_elem / ours.dma_per_elem
+    assert 1.3 < ratio < 1.6, ratio  # ≈1.45× (12B vs 8.25B)
+
+
+def test_msnorm_bwd_traffic_independent_of_affine():
+    # MS-norm bwd reads z, σ, gy — no weight/bias traffic
+    p = vmem.profile_msnorm_bwd(4096, 768)
+    assert p.hbm_read_per_elem < 8.2
+    assert p.hbm_write_per_elem == 4.0
+
+
+def test_codes_bits_scale():
+    p1 = vmem.profile_act_bwd(1024, 1024, codes_bits=2.0)
+    p8 = vmem.profile_act_bwd(1024, 1024, codes_bits=8.0)
+    assert p8.hbm_read_per_elem > p1.hbm_read_per_elem

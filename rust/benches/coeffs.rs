@@ -1,0 +1,28 @@
+//! Coefficient-solver benchmarks (Appendix E substrate): objective
+//! evaluation, quadrature, SA+NM end-to-end solve.
+
+use ambp::coeffs::funcs::{gelu, PAPER_GELU};
+use ambp::coeffs::integrate::{adaptive_simpson, integrate_piecewise};
+use ambp::coeffs::{gelu_bound, objective, solve_gelu};
+use ambp::util::bench::{bench, black_box};
+
+fn main() {
+    let b = gelu_bound(1e-8);
+    bench("objective(gelu, paper) @1e-10", 50, || {
+        black_box(objective(&gelu, &PAPER_GELU, -b, b));
+    });
+    bench("adaptive_simpson gaussian", 100, || {
+        black_box(adaptive_simpson(&|x: f64| (-x * x).exp(), -8.0, 8.0,
+                                   1e-10));
+    });
+    bench("integrate_piecewise (3 kinks)", 100, || {
+        let f = |x: f64| {
+            let d = gelu(x) - PAPER_GELU.eval(x);
+            d * d
+        };
+        black_box(integrate_piecewise(&f, -b, b, &PAPER_GELU.c, 1e-10));
+    });
+    bench("solve_gelu (SA 8k + NM polish)", 1, || {
+        black_box(solve_gelu(1));
+    });
+}

@@ -1,0 +1,40 @@
+//! Memory-model benchmarks: full-model entry generation at paper scale,
+//! peak estimation, and the Table 9/11 budget searches.
+
+use ambp::memmodel::ops::{ActKind, NormKind, Tuning};
+use ambp::memmodel::report::{gib, peak};
+use ambp::memmodel::{model_entries, presets as mp, total_bytes};
+use ambp::util::bench::{bench, black_box};
+
+fn main() {
+    let vit = mp::vit_base(64, Tuning::LoraQv, ActKind::Gelu, NormKind::Ln);
+    let llama = mp::llama13b(4, 2048, ActKind::Silu, NormKind::Rms);
+    bench("model_entries vit-b (12 blocks)", 1000, || {
+        black_box(model_entries(black_box(&vit)));
+    });
+    bench("model_entries llama-13b (40 blocks)", 1000, || {
+        black_box(model_entries(black_box(&llama)));
+    });
+    bench("peak estimate llama-13b", 1000, || {
+        black_box(peak(black_box(&llama), 4.5));
+    });
+    bench("tab9 max-seq binary search", 100, || {
+        let fits = |seq: usize| {
+            gib(peak(&mp::llama7b(1, seq, ActKind::ReSilu2,
+                                  NormKind::MsRms), 4.5).total) <= 24.0
+        };
+        let (mut lo, mut hi) = (256usize, 1 << 20);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if fits(mid) { lo = mid } else { hi = mid - 1 }
+        }
+        black_box(lo);
+    });
+    // table-shape sanity printed for the record
+    let base = total_bytes(&mp::llama13b(4, 2048, ActKind::Silu,
+                                         NormKind::Rms));
+    let ours = total_bytes(&mp::llama13b(4, 2048, ActKind::ReSilu2,
+                                         NormKind::MsRms));
+    println!("\nllama-13b activation reduction (ours vs base): {:.1}%",
+             100.0 * (1.0 - ours as f64 / base as f64));
+}

@@ -1,0 +1,183 @@
+//! Simulated annealing (Kirkpatrick et al., 1983) — the paper's solver for
+//! the 5-scalar problem (14), plus a Nelder–Mead polish stage matching the
+//! "SGD also works, searched multiple inits" remark in Appendix E.
+
+use crate::util::rng::Rng;
+
+pub struct SaOpts {
+    pub iters: usize,
+    pub t0: f64,
+    pub t1: f64,
+    pub step0: f64,
+    pub seed: u64,
+}
+
+impl Default for SaOpts {
+    fn default() -> Self {
+        SaOpts { iters: 30_000, t0: 1e-2, t1: 1e-9, step0: 0.5, seed: 0 }
+    }
+}
+
+/// Minimize `f` over R^n starting at `x0`; returns (x*, f(x*)).
+pub fn anneal<F: Fn(&[f64]) -> f64>(f: &F, x0: &[f64],
+                                    opts: &SaOpts) -> (Vec<f64>, f64) {
+    let mut rng = Rng::new(opts.seed);
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut fx = f(&x);
+    let mut best = x.clone();
+    let mut fbest = fx;
+    let cool = (opts.t1 / opts.t0).powf(1.0 / opts.iters as f64);
+    let mut t = opts.t0;
+    for it in 0..opts.iters {
+        // proposal scale tracks the temperature schedule
+        let frac = it as f64 / opts.iters as f64;
+        let step = opts.step0 * (1.0 - 0.95 * frac);
+        let mut cand = x.clone();
+        let k = rng.below(n);
+        cand[k] += rng.normal() * step;
+        let fc = f(&cand);
+        let accept = fc < fx || rng.f64() < ((fx - fc) / t).exp();
+        if accept {
+            x = cand;
+            fx = fc;
+            if fx < fbest {
+                best = x.clone();
+                fbest = fx;
+            }
+        }
+        t *= cool;
+    }
+    (best, fbest)
+}
+
+/// Nelder–Mead downhill simplex polish.
+pub fn nelder_mead<F: Fn(&[f64]) -> f64>(
+    f: &F, x0: &[f64], scale: f64, iters: usize,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    let mut simplex: Vec<Vec<f64>> = vec![x0.to_vec()];
+    for i in 0..n {
+        let mut v = x0.to_vec();
+        v[i] += scale;
+        simplex.push(v);
+    }
+    let mut fv: Vec<f64> = simplex.iter().map(|v| f(v)).collect();
+    for _ in 0..iters {
+        // sort simplex by f
+        let mut idx: Vec<usize> = (0..=n).collect();
+        idx.sort_by(|&a, &b| fv[a].partial_cmp(&fv[b]).unwrap());
+        let ordered: Vec<Vec<f64>> =
+            idx.iter().map(|&i| simplex[i].clone()).collect();
+        let fo: Vec<f64> = idx.iter().map(|&i| fv[i]).collect();
+        simplex = ordered;
+        fv = fo;
+        if (fv[n] - fv[0]).abs() < 1e-15 {
+            break;
+        }
+        // centroid of all but worst
+        let mut c = vec![0.0; n];
+        for v in &simplex[..n] {
+            for (ci, vi) in c.iter_mut().zip(v) {
+                *ci += vi / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        let refl: Vec<f64> = c
+            .iter()
+            .zip(&worst)
+            .map(|(ci, wi)| ci + (ci - wi))
+            .collect();
+        let fr = f(&refl);
+        if fr < fv[0] {
+            // expand
+            let exp: Vec<f64> = c
+                .iter()
+                .zip(&worst)
+                .map(|(ci, wi)| ci + 2.0 * (ci - wi))
+                .collect();
+            let fe = f(&exp);
+            if fe < fr {
+                simplex[n] = exp;
+                fv[n] = fe;
+            } else {
+                simplex[n] = refl;
+                fv[n] = fr;
+            }
+        } else if fr < fv[n - 1] {
+            simplex[n] = refl;
+            fv[n] = fr;
+        } else {
+            // contract
+            let con: Vec<f64> = c
+                .iter()
+                .zip(&worst)
+                .map(|(ci, wi)| ci + 0.5 * (wi - ci))
+                .collect();
+            let fc = f(&con);
+            if fc < fv[n] {
+                simplex[n] = con;
+                fv[n] = fc;
+            } else {
+                // shrink toward best
+                let bestv = simplex[0].clone();
+                for v in simplex.iter_mut().skip(1) {
+                    for (vi, bi) in v.iter_mut().zip(&bestv) {
+                        *vi = bi + 0.5 * (*vi - bi);
+                    }
+                }
+                for i in 1..=n {
+                    fv[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+    let mut besti = 0;
+    for i in 1..=n {
+        if fv[i] < fv[besti] {
+            besti = i;
+        }
+    }
+    (simplex[besti].clone(), fv[besti])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rosenbrock(x: &[f64]) -> f64 {
+        (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2)
+    }
+
+    fn sphere5(x: &[f64]) -> f64 {
+        x.iter().enumerate()
+            .map(|(i, v)| (v - i as f64 * 0.1).powi(2))
+            .sum()
+    }
+
+    #[test]
+    fn nm_solves_rosenbrock() {
+        let (x, fx) = nelder_mead(&rosenbrock, &[-1.2, 1.0], 0.5, 2000);
+        assert!(fx < 1e-10, "{fx}");
+        assert!((x[0] - 1.0).abs() < 1e-4 && (x[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sa_plus_nm_solves_sphere() {
+        let opts = SaOpts { iters: 5000, ..Default::default() };
+        let (x, _) = anneal(&sphere5, &[2.0; 5], &opts);
+        let (x, fx) = nelder_mead(&sphere5, &x, 0.1, 1000);
+        assert!(fx < 1e-10, "{fx}");
+        for (i, v) in x.iter().enumerate() {
+            assert!((v - i as f64 * 0.1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sa_is_deterministic_given_seed() {
+        let opts = SaOpts { iters: 1000, ..Default::default() };
+        let a = anneal(&sphere5, &[2.0; 5], &opts);
+        let b = anneal(&sphere5, &[2.0; 5], &opts);
+        assert_eq!(a.0, b.0);
+    }
+}

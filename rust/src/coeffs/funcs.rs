@@ -1,0 +1,178 @@
+//! Scalar math for the coefficient solver: erf, GELU, SiLU, and the
+//! 3-ReLU combination h̃_{a,c} (eq. 13, k = 2).
+
+/// Error function, |rel err| < 1.2e-7 (Numerical Recipes erfc rational
+/// Chebyshev fit). Good enough: the objective integrand only needs ~1e-7.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223
+                                            + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Exact GELU, eq. (40).
+pub fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+pub fn dgelu(x: f64) -> f64 {
+    let cdf = 0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2));
+    let pdf = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    cdf + x * pdf
+}
+
+/// SiLU, eq. (47).
+pub fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn dsilu(x: f64) -> f64 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Coefficients of the 3-ReLU combination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReluComb {
+    pub a: [f64; 2],
+    pub c: [f64; 3],
+}
+
+impl ReluComb {
+    pub fn eval(&self, x: f64) -> f64 {
+        let [a1, a2] = self.a;
+        let [c1, c2, c3] = self.c;
+        a1 * (x - c1).max(0.0)
+            + a2 * (x - c2).max(0.0)
+            + (1.0 - a1 - a2) * (x - c3).max(0.0)
+    }
+
+    /// The 4-segment step derivative (Prop 4.3): [0, a1, a1+a2, 1].
+    pub fn slopes(&self) -> [f64; 4] {
+        [0.0, self.a[0], self.a[0] + self.a[1], 1.0]
+    }
+
+    /// 2-bit segment code of x against the thresholds.
+    pub fn code(&self, x: f64) -> u8 {
+        (x >= self.c[0]) as u8 + (x >= self.c[1]) as u8
+            + (x >= self.c[2]) as u8
+    }
+
+    pub fn derivative(&self, x: f64) -> f64 {
+        self.slopes()[self.code(x) as usize]
+    }
+
+    /// Zero-intercept constraint value of eq. (13) (should be ≈ 0).
+    pub fn constraint(&self) -> f64 {
+        let [a1, a2] = self.a;
+        let [c1, c2, c3] = self.c;
+        a1 * c1 + a2 * c2 + (1.0 - a1 - a2) * c3
+    }
+}
+
+/// The paper's published solutions (Appendix E / I).
+pub const PAPER_GELU: ReluComb = ReluComb {
+    a: [-0.04922261145617846, 1.0979632065417297],
+    c: [-3.1858810036855245, -0.001178821281161997, 3.190832613414926],
+};
+
+pub const PAPER_SILU: ReluComb = ReluComb {
+    a: [-0.04060357190528599, 1.080925428529668],
+    c: [-6.3050461001646445, -0.0008684942046214787, 6.325815242089708],
+};
+
+pub const PAPER_GELU_D: ReluComb = ReluComb {
+    a: [0.32465931184406527, 0.34812875668739607],
+    c: [-0.4535743722857079, -0.0010587205574873046, 0.4487575313884231],
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // table values of erf
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ] {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn gelu_values() {
+        assert!((gelu(0.0)).abs() < 1e-12);
+        assert!((gelu(1.0) - 0.8413447461).abs() < 1e-6);
+        assert!((gelu(-1.0) + 0.1586552539).abs() < 1e-6);
+        // limits: gelu(x) → x for large x, → 0 for very negative x
+        assert!((gelu(20.0) - 20.0).abs() < 1e-9);
+        assert!(gelu(-20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-12);
+        assert!((silu(1.0) - 0.7310585786).abs() < 1e-9);
+        assert!((silu(-30.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derivatives_match_finite_difference() {
+        let h = 1e-6;
+        for x in [-3.0, -1.0, -0.1, 0.0, 0.3, 1.7, 4.0] {
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((dgelu(x) - fd).abs() < 1e-5, "dgelu({x})");
+            let fd = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((dsilu(x) - fd).abs() < 1e-5, "dsilu({x})");
+        }
+    }
+
+    #[test]
+    fn relu_comb_limiting_behavior() {
+        // Prop 4.3: h̃ → h at ±∞
+        for (comb, h) in [(PAPER_GELU, gelu as fn(f64) -> f64),
+                          (PAPER_SILU, silu as fn(f64) -> f64)] {
+            assert!((comb.eval(50.0) - h(50.0)).abs() < 1e-4);
+            assert!((comb.eval(-50.0) - h(-50.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn paper_constraint_nearly_zero() {
+        assert!(PAPER_GELU.constraint().abs() < 2e-2);
+        assert!(PAPER_SILU.constraint().abs() < 2e-2);
+    }
+
+    #[test]
+    fn step_derivative_segments() {
+        let c = PAPER_GELU;
+        assert_eq!(c.derivative(-10.0), 0.0);
+        assert_eq!(c.derivative(-1.0), c.a[0]);
+        assert_eq!(c.derivative(1.0), c.a[0] + c.a[1]);
+        assert_eq!(c.derivative(10.0), 1.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Adaptive Simpson quadrature (QUADPACK stand-in, Appendix E's
+//! "definite integral over a bounded interval ... by numerical methods").
+
+/// Adaptive Simpson on [a, b] to absolute tolerance `tol`.
+pub fn adaptive_simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64,
+                                           tol: f64) -> f64 {
+    let fa = f(a);
+    let fb = f(b);
+    let m = 0.5 * (a + b);
+    let fm = f(m);
+    let whole = simpson(a, b, fa, fm, fb);
+    rec(f, a, b, fa, fm, fb, whole, tol, 50)
+}
+
+fn simpson(a: f64, b: f64, fa: f64, fm: f64, fb: f64) -> f64 {
+    (b - a) / 6.0 * (fa + 4.0 * fm + fb)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rec<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, fa: f64, fm: f64,
+                          fb: f64, whole: f64, tol: f64,
+                          depth: u32) -> f64 {
+    let m = 0.5 * (a + b);
+    let lm = 0.5 * (a + m);
+    let rm = 0.5 * (m + b);
+    let flm = f(lm);
+    let frm = f(rm);
+    let left = simpson(a, m, fa, flm, fm);
+    let right = simpson(m, b, fm, frm, fb);
+    let delta = left + right - whole;
+    if depth == 0 || delta.abs() <= 15.0 * tol {
+        left + right + delta / 15.0
+    } else {
+        rec(f, a, m, fa, flm, fm, left, 0.5 * tol, depth - 1)
+            + rec(f, m, b, fm, frm, fb, right, 0.5 * tol, depth - 1)
+    }
+}
+
+/// Piecewise integration with interior breakpoints (the h̃ kinks at c_i):
+/// integrating each smooth piece separately keeps Simpson's convergence.
+pub fn integrate_piecewise<F: Fn(f64) -> f64>(
+    f: &F, a: f64, b: f64, breaks: &[f64], tol: f64,
+) -> f64 {
+    let mut pts: Vec<f64> = vec![a];
+    let mut br: Vec<f64> = breaks
+        .iter()
+        .copied()
+        .filter(|x| *x > a && *x < b)
+        .collect();
+    br.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    pts.extend(br);
+    pts.push(b);
+    let per = tol / (pts.len() - 1) as f64;
+    pts.windows(2)
+        .map(|w| adaptive_simpson(f, w[0], w[1], per))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_polynomial_exactly() {
+        // Simpson is exact for cubics
+        let f = |x: f64| x * x * x - 2.0 * x + 1.0;
+        let got = adaptive_simpson(&f, -1.0, 3.0, 1e-12);
+        // ∫ = x⁴/4 − x² + x → (81/4−9+3) − (1/4−1−1) = 14.25 + 1.75
+        assert!((got - 16.0).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn integrates_gaussian() {
+        let f = |x: f64| (-x * x).exp();
+        let got = adaptive_simpson(&f, -8.0, 8.0, 1e-12);
+        assert!((got - std::f64::consts::PI.sqrt()).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn integrates_abs_with_breakpoint() {
+        let f = |x: f64| x.abs();
+        let got = integrate_piecewise(&f, -1.0, 1.0, &[0.0], 1e-12);
+        assert!((got - 1.0).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn kinked_integrand_converges() {
+        // integrand with two kinks: ∫₀³ max(x-1,0)·max(2-x,0) dx
+        let f = |x: f64| (x - 1.0f64).max(0.0) * (2.0 - x).max(0.0);
+        let got = integrate_piecewise(&f, 0.0, 3.0, &[1.0, 2.0], 1e-12);
+        // on [1,2]: ∫ (x-1)(2-x) dx = 1/6
+        assert!((got - 1.0 / 6.0).abs() < 1e-10, "{got}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Run configuration: JSON config files + CLI overrides.
+//!
+//! A run = (preset artifact, trainer hyper-parameters). Config files are
+//! JSON (the in-tree parser); every field can be overridden on the CLI:
+//!   ambp train --preset vitt_loraqv_gelu_ln --steps 200 --lr 1e-3
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::Schedule;
+use crate::coordinator::TrainCfg;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub preset: String,
+    pub artifacts_dir: PathBuf,
+    pub train: TrainCfg,
+    pub init_from: Option<PathBuf>,
+    pub save_to: Option<PathBuf>,
+}
+
+impl RunCfg {
+    pub fn from_args(args: &Args) -> Result<RunCfg> {
+        // optional JSON config file, then CLI overrides
+        let mut cfg = match args.get("config") {
+            Some(path) => Self::from_json_file(path)?,
+            None => RunCfg {
+                preset: "vitt_loraqv_gelu_ln".into(),
+                artifacts_dir: crate::runtime::artifacts_dir(),
+                train: TrainCfg::default(),
+                init_from: None,
+                save_to: None,
+            },
+        };
+        if let Some(p) = args.get("preset") {
+            cfg.preset = p.to_string();
+        }
+        if let Some(d) = args.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        cfg.train.steps = args.usize_or("steps", cfg.train.steps)?;
+        cfg.train.lr = args.f64_or("lr", cfg.train.lr as f64)? as f32;
+        cfg.train.weight_decay =
+            args.f64_or("weight-decay", cfg.train.weight_decay as f64)?
+                as f32;
+        cfg.train.grad_accum =
+            args.usize_or("grad-accum", cfg.train.grad_accum)?;
+        cfg.train.seed = args.usize_or("seed", cfg.train.seed as usize)?
+            as u64;
+        cfg.train.log_every =
+            args.usize_or("log-every", cfg.train.log_every)?;
+        if let Some(o) = args.get("optimizer") {
+            cfg.train.optimizer = o.to_string();
+        }
+        if let Some(s) = args.get("schedule") {
+            cfg.train.schedule = parse_schedule(s)?;
+        }
+        if let Some(p) = args.get("metrics") {
+            cfg.train.metrics_jsonl = Some(PathBuf::from(p));
+        }
+        if let Some(p) = args.get("init-from") {
+            cfg.init_from = Some(PathBuf::from(p));
+        }
+        if let Some(p) = args.get("save-to") {
+            cfg.save_to = Some(PathBuf::from(p));
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &str) -> Result<RunCfg> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let mut train = TrainCfg::default();
+        if let Some(t) = j.opt("train") {
+            if let Some(v) = t.opt("steps") {
+                train.steps = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("lr") {
+                train.lr = v.as_f64()? as f32;
+            }
+            if let Some(v) = t.opt("weight_decay") {
+                train.weight_decay = v.as_f64()? as f32;
+            }
+            if let Some(v) = t.opt("grad_accum") {
+                train.grad_accum = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("optimizer") {
+                train.optimizer = v.as_str()?.to_string();
+            }
+            if let Some(v) = t.opt("schedule") {
+                train.schedule = parse_schedule(v.as_str()?)?;
+            }
+            if let Some(v) = t.opt("seed") {
+                train.seed = v.as_f64()? as u64;
+            }
+        }
+        Ok(RunCfg {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            artifacts_dir: j
+                .opt("artifacts_dir")
+                .and_then(|v| v.as_str().ok().map(PathBuf::from))
+                .unwrap_or_else(crate::runtime::artifacts_dir),
+            train,
+            init_from: j
+                .opt("init_from")
+                .and_then(|v| v.as_str().ok().map(PathBuf::from)),
+            save_to: j
+                .opt("save_to")
+                .and_then(|v| v.as_str().ok().map(PathBuf::from)),
+        })
+    }
+}
+
+pub fn parse_schedule(s: &str) -> Result<Schedule> {
+    Ok(match s {
+        "constant" => Schedule::Constant,
+        "warmup_cosine" => Schedule::WarmupCosine {
+            warmup: 10,
+            warmup_init: 1e-6,
+        },
+        "warmup_linear" => Schedule::WarmupLinear { warmup_frac: 0.1 },
+        other => anyhow::bail!("unknown schedule {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(&[
+            "--preset".into(), "x".into(),
+            "--steps".into(), "42".into(),
+            "--lr".into(), "0.5".into(),
+            "--optimizer".into(), "sgd".into(),
+            "--schedule".into(), "constant".into(),
+        ]);
+        let cfg = RunCfg::from_args(&args).unwrap();
+        assert_eq!(cfg.preset, "x");
+        assert_eq!(cfg.train.steps, 42);
+        assert_eq!(cfg.train.lr, 0.5);
+        assert_eq!(cfg.train.optimizer, "sgd");
+        assert_eq!(cfg.train.schedule, Schedule::Constant);
+    }
+
+    #[test]
+    fn json_config_file() {
+        let dir = std::env::temp_dir().join("ambp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{
+            "preset": "llama_loraall_silu_rms",
+            "train": {"steps": 7, "lr": 0.001, "optimizer": "adamw",
+                      "schedule": "constant", "grad_accum": 2}
+        }"#).unwrap();
+        let cfg = RunCfg::from_json_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.preset, "llama_loraall_silu_rms");
+        assert_eq!(cfg.train.steps, 7);
+        assert_eq!(cfg.train.grad_accum, 2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bad_schedule_rejected() {
+        assert!(parse_schedule("nope").is_err());
+    }
+}

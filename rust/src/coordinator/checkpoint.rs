@@ -1,0 +1,175 @@
+//! Checkpoints + cross-preset conversion (pretrain → fine-tune, and the
+//! eq. 17 affine merge that turns an LN/RMS checkpoint into an
+//! MS-LN/MS-RMSNorm one).
+//!
+//! Format: `ckpt.json` (names + shapes) + `ckpt.bin` (f32 LE, in order).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{DType, Manifest, Tensor};
+use crate::util::json::{num, obj, s, Json};
+
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn from_params(manifest: &Manifest, params: &[Tensor]) -> Self {
+        let tensors = manifest
+            .params
+            .iter()
+            .zip(params)
+            .map(|(info, t)| (info.name.clone(), t.clone()))
+            .collect();
+        Checkpoint { tensors }
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut index = Vec::new();
+        let mut bin = std::io::BufWriter::new(
+            std::fs::File::create(dir.join("ckpt.bin"))?);
+        for (name, t) in &self.tensors {
+            index.push(obj(vec![
+                ("name", s(name)),
+                ("shape", Json::Arr(
+                    t.shape.iter().map(|d| num(*d as f64)).collect())),
+            ]));
+            bin.write_all(&t.data)?;
+        }
+        bin.flush()?;
+        std::fs::write(dir.join("ckpt.json"),
+                       Json::Arr(index).to_string())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let index = Json::parse(&std::fs::read_to_string(
+            dir.join("ckpt.json"))?)?;
+        let bin = std::fs::read(dir.join("ckpt.bin"))?;
+        let mut tensors = BTreeMap::new();
+        let mut off = 0usize;
+        for e in index.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let shape: Vec<usize> = e
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            let n: usize = shape.iter().product();
+            let mut t = Tensor::zeros(&shape, DType::F32);
+            t.data.copy_from_slice(&bin[off..off + n * 4]);
+            off += n * 4;
+            tensors.insert(name, t);
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    /// Restore into a parameter vector ordered by `manifest`.
+    /// Missing tensors (e.g. fresh LoRA adapters) keep their init values.
+    /// Returns the number of restored tensors.
+    pub fn restore(&self, manifest: &Manifest,
+                   params: &mut [Tensor]) -> Result<usize> {
+        let mut n = 0;
+        for (info, p) in manifest.params.iter().zip(params.iter_mut()) {
+            if let Some(t) = self.tensors.get(&info.name) {
+                if t.shape != info.shape {
+                    bail!("shape mismatch for {}: ckpt {:?} vs manifest {:?}",
+                          info.name, t.shape, info.shape);
+                }
+                p.data.copy_from_slice(&t.data);
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+/// eq. (17): merge each norm's affine (α, β) into the following linears:
+///   W̃ = W·diag(α),  b̃ = W·β + b
+/// Consumes a checkpoint trained with LN/RMS affine and produces the
+/// parameter set for the matching MS-LN/MS-RMSNorm preset.
+pub fn merge_affine(src: &Checkpoint, ms_manifest: &Manifest)
+                    -> Result<Checkpoint> {
+    let mut out = BTreeMap::new();
+    // start from every tensor the MS model also has
+    for info in &ms_manifest.params {
+        if let Some(t) = src.tensors.get(&info.name) {
+            out.insert(info.name.clone(), t.clone());
+        }
+    }
+    for m in &ms_manifest.merges {
+        let alpha = src.tensors.get(&format!("{}.w", m.norm));
+        let beta = src.tensors.get(&format!("{}.b", m.norm));
+        let Some(alpha) = alpha else {
+            // source model had no affine (already MS) — nothing to merge
+            continue;
+        };
+        let a = alpha.as_f32();
+        for lin in &m.linears {
+            let wname = format!("{lin}.W");
+            let Some(w) = out.get(&wname).cloned() else {
+                bail!("merge target {wname} missing");
+            };
+            let (dout, din) = (w.shape[0], w.shape[1]);
+            anyhow::ensure!(din == a.len(),
+                            "affine dim mismatch on {wname}");
+            let mut wm = w.clone();
+            {
+                let wv = wm.as_f32_mut();
+                for o in 0..dout {
+                    for i in 0..din {
+                        wv[o * din + i] *= a[i];
+                    }
+                }
+            }
+            if let Some(beta) = beta {
+                let bname = format!("{lin}.b");
+                let bv = beta.as_f32();
+                if let Some(bold) = out.get(&bname).cloned() {
+                    let wv = w.as_f32();
+                    let mut bm = bold.clone();
+                    let bmv = bm.as_f32_mut();
+                    for o in 0..dout {
+                        let mut acc = 0f32;
+                        for i in 0..din {
+                            acc += wv[o * din + i] * bv[i];
+                        }
+                        bmv[o] += acc;
+                    }
+                    out.insert(bname, bm);
+                }
+            }
+            out.insert(wname, wm);
+        }
+    }
+    Ok(Checkpoint { tensors: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ambp_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut tensors = BTreeMap::new();
+        tensors.insert("a.W".to_string(),
+                       Tensor::from_f32(&[2, 2], &[1., 2., 3., 4.]));
+        tensors.insert("a.b".to_string(),
+                       Tensor::from_f32(&[2], &[5., 6.]));
+        let ck = Checkpoint { tensors };
+        ck.save(&dir).unwrap();
+        let ck2 = Checkpoint::load(&dir).unwrap();
+        assert_eq!(ck2.tensors.len(), 2);
+        assert_eq!(ck2.tensors["a.W"].as_f32(), &[1., 2., 3., 4.]);
+        assert_eq!(ck2.tensors["a.b"].shape, vec![2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,126 @@
+//! Measured activation-memory accounting — the paper's headline metric,
+//! observed at the fwd/bwd residual ABI rather than estimated.
+//!
+//! Between `fwd` and `bwd` the residual tensors are the *only* live
+//! activation state (everything else is recomputed or fused inside the
+//! executables), so their byte sum is exactly the "activation memory" of
+//! §3.2, and `peak_bytes` is the per-step peak the Tables report.
+
+use crate::runtime::{Manifest, Tensor};
+
+#[derive(Debug, Default, Clone)]
+pub struct MemoryTracker {
+    pub current_bytes: u64,
+    pub peak_bytes: u64,
+    pub last_residual_bytes: u64,
+    /// (kind, bytes) at the last observation
+    pub by_kind: Vec<(String, u64)>,
+    /// (module, bytes) at the last observation
+    pub by_module: Vec<(String, u64)>,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the residual set held between fwd and bwd.
+    pub fn observe_residuals(&mut self, manifest: &Manifest,
+                             residuals: &[Tensor]) {
+        let mut total = 0u64;
+        let mut by_kind: Vec<(String, u64)> = Vec::new();
+        let mut by_module: Vec<(String, u64)> = Vec::new();
+        for (info, t) in manifest.residuals.iter().zip(residuals) {
+            let b = t.nbytes() as u64;
+            debug_assert_eq!(b, info.bytes, "manifest/runtime disagree");
+            total += b;
+            bump(&mut by_kind, &info.kind, b);
+            let module = info
+                .module
+                .split('.')
+                .next()
+                .unwrap_or(&info.module)
+                .to_string();
+            bump(&mut by_module, &module, b);
+        }
+        self.last_residual_bytes = total;
+        self.current_bytes = total;
+        self.peak_bytes = self.peak_bytes.max(total);
+        self.by_kind = by_kind;
+        self.by_module = by_module;
+    }
+
+    /// Literal-resident variant (§Perf L3-1): account residuals that
+    /// never left PJRT. Byte counts come from the literals themselves;
+    /// kind/module attribution from the manifest.
+    pub fn observe_residual_lits(&mut self, manifest: &Manifest,
+                                 residuals: &[xla::Literal],
+                                 total: u64) {
+        let mut by_kind: Vec<(String, u64)> = Vec::new();
+        let mut by_module: Vec<(String, u64)> = Vec::new();
+        for (info, l) in manifest.residuals.iter().zip(residuals) {
+            let b = l.size_bytes() as u64;
+            debug_assert_eq!(b, info.bytes, "manifest/runtime disagree");
+            bump(&mut by_kind, &info.kind, b);
+            let module = info
+                .module
+                .split('.')
+                .next()
+                .unwrap_or(&info.module)
+                .to_string();
+            bump(&mut by_module, &module, b);
+        }
+        self.last_residual_bytes = total;
+        self.current_bytes = total;
+        self.peak_bytes = self.peak_bytes.max(total);
+        self.by_kind = by_kind;
+        self.by_module = by_module;
+    }
+
+    /// Account additional transient state (grads held before the
+    /// optimizer step, accumulated microbatch grads, …).
+    pub fn observe_extra(&mut self, bytes: u64) {
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes + bytes);
+    }
+
+    pub fn release(&mut self) {
+        self.current_bytes = 0;
+    }
+
+    pub fn mib(&self) -> f64 {
+        self.peak_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+fn bump(v: &mut Vec<(String, u64)>, k: &str, b: u64) {
+    match v.iter_mut().find(|(key, _)| key == k) {
+        Some((_, old)) => *old += b,
+        None => v.push((k.to_string(), b)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_max() {
+        let mut m = MemoryTracker::new();
+        m.current_bytes = 100;
+        m.peak_bytes = 100;
+        m.observe_extra(50);
+        assert_eq!(m.peak_bytes, 150);
+        m.release();
+        assert_eq!(m.current_bytes, 0);
+        assert_eq!(m.peak_bytes, 150);
+    }
+
+    #[test]
+    fn bump_accumulates() {
+        let mut v = Vec::new();
+        bump(&mut v, "a", 1);
+        bump(&mut v, "b", 2);
+        bump(&mut v, "a", 3);
+        assert_eq!(v, vec![("a".to_string(), 4), ("b".to_string(), 2)]);
+    }
+}

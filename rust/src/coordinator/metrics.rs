@@ -1,0 +1,163 @@
+//! Metrics sink: loss curves, throughput, memory — console + JSONL.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s, Json};
+
+pub struct Metrics {
+    writer: Option<BufWriter<File>>,
+    start: Instant,
+    pub rows: Vec<StepRow>,
+    samples_done: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    pub step: usize,
+    pub loss: f32,
+    pub metric: f32,
+    pub lr: f32,
+    pub activation_bytes: u64,
+    pub elapsed_s: f64,
+}
+
+impl Metrics {
+    pub fn new(jsonl_path: Option<&Path>) -> Result<Metrics> {
+        let writer = match jsonl_path {
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                Some(BufWriter::new(File::create(p)?))
+            }
+            None => None,
+        };
+        Ok(Metrics {
+            writer,
+            start: Instant::now(),
+            rows: Vec::new(),
+            samples_done: 0,
+        })
+    }
+
+    pub fn log_step(&mut self, row: StepRow, batch: usize) -> Result<()> {
+        self.samples_done += batch as u64;
+        if let Some(w) = &mut self.writer {
+            let j = obj(vec![
+                ("step", num(row.step as f64)),
+                ("loss", num(row.loss as f64)),
+                ("metric", num(row.metric as f64)),
+                ("lr", num(row.lr as f64)),
+                ("act_bytes", num(row.activation_bytes as f64)),
+                ("t", num(row.elapsed_s)),
+            ]);
+            writeln!(w, "{}", j.to_string())?;
+        }
+        self.rows.push(row);
+        Ok(())
+    }
+
+    /// Samples per second since construction.
+    pub fn throughput(&self) -> f64 {
+        self.samples_done as f64 / self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn mean_recent_loss(&self, window: usize) -> f32 {
+        let n = self.rows.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.rows[lo..];
+        slice.iter().map(|r| r.loss).sum::<f32>() / slice.len() as f32
+    }
+
+    pub fn mean_recent_metric(&self, window: usize) -> f32 {
+        let n = self.rows.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.rows[lo..];
+        slice.iter().map(|r| r.metric).sum::<f32>() / slice.len() as f32
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(w) = &mut self.writer {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Serialize the final summary as JSON (for EXPERIMENTS.md capture).
+    pub fn summary(&self, label: &str, peak_act_bytes: u64) -> Json {
+        obj(vec![
+            ("label", s(label)),
+            ("steps", num(self.rows.len() as f64)),
+            ("final_loss", num(self.mean_recent_loss(20) as f64)),
+            ("final_metric", num(self.mean_recent_metric(20) as f64)),
+            ("throughput_samples_per_s", num(self.throughput())),
+            ("peak_activation_bytes", num(peak_act_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_means() {
+        let mut m = Metrics::new(None).unwrap();
+        for i in 0..10 {
+            m.log_step(
+                StepRow {
+                    step: i,
+                    loss: 10.0 - i as f32,
+                    metric: i as f32 / 10.0,
+                    lr: 0.1,
+                    activation_bytes: 1000,
+                    elapsed_s: 0.0,
+                },
+                4,
+            )
+            .unwrap();
+        }
+        assert_eq!(m.rows.len(), 10);
+        assert!((m.mean_recent_loss(2) - 1.5).abs() < 1e-6);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn jsonl_written() {
+        let dir = std::env::temp_dir().join("ambp_metrics_test");
+        let path = dir.join("m.jsonl");
+        let mut m = Metrics::new(Some(&path)).unwrap();
+        m.log_step(
+            StepRow {
+                step: 0,
+                loss: 1.0,
+                metric: 0.5,
+                lr: 0.01,
+                activation_bytes: 7,
+                elapsed_s: 0.1,
+            },
+            1,
+        )
+        .unwrap();
+        m.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("loss").unwrap().as_f64().unwrap(), 1.0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

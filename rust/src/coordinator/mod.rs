@@ -1,0 +1,11 @@
+//! L3 coordinator: training loop, optimizers, LR schedules, measured
+//! memory accounting, metrics, checkpoints.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod optimizer;
+pub mod scheduler;
+pub mod trainer;
+
+pub use trainer::{TrainCfg, TrainReport, Trainer};

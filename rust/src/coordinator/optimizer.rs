@@ -1,0 +1,179 @@
+//! Host-side optimizers over the trainable parameter tensors.
+//!
+//! The optimizer is deliberately on the rust side of the ABI: parameter
+//! state lives in host memory (like the paper's paged AdamW in QLoRA),
+//! only fwd/bwd run through PJRT.
+
+use crate::runtime::Tensor;
+
+pub trait Optimizer {
+    /// In-place update of `params[i]` from `grads[i]` (same order).
+    fn step(&mut self, params: &mut [&mut Tensor], grads: &[Tensor], lr: f32);
+    fn name(&self) -> &'static str;
+}
+
+/// AdamW (Loshchilov & Hutter, 2017) — the paper's optimizer.
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl AdamW {
+    pub fn new(weight_decay: f32) -> AdamW {
+        AdamW {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Optimizer-state bytes (the Tables' "optimizer" memory term).
+    pub fn state_bytes(&self) -> usize {
+        self.m.iter().map(|v| v.len() * 4).sum::<usize>()
+            + self.v.iter().map(|v| v.len() * 4).sum::<usize>()
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [&mut Tensor], grads: &[Tensor],
+            lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.is_empty() {
+            for g in grads {
+                self.m.push(vec![0.0; g.elems()]);
+                self.v.push(vec![0.0; g.elems()]);
+            }
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let pv = p.as_f32_mut();
+            let gv = g.as_f32();
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            for j in 0..pv.len() {
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gv[j];
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gv[j] * gv[j];
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                pv[j] -= lr * (mhat / (vhat.sqrt() + self.eps)
+                    + self.weight_decay * pv[j]);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+}
+
+/// Plain SGD (with optional momentum) — the convergence-theory baseline
+/// (Theorem 4.2 is stated for SGD).
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Sgd {
+        Sgd { momentum, vel: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [&mut Tensor], grads: &[Tensor],
+            lr: f32) {
+        if self.momentum > 0.0 && self.vel.is_empty() {
+            for g in grads {
+                self.vel.push(vec![0.0; g.elems()]);
+            }
+        }
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let pv = p.as_f32_mut();
+            let gv = g.as_f32();
+            if self.momentum > 0.0 {
+                let vel = &mut self.vel[i];
+                for j in 0..pv.len() {
+                    vel[j] = self.momentum * vel[j] + gv[j];
+                    pv[j] -= lr * vel[j];
+                }
+            } else {
+                for j in 0..pv.len() {
+                    pv[j] -= lr * gv[j];
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(p: &Tensor) -> Tensor {
+        // f(p) = ||p - 3||²/2, grad = p - 3
+        let g: Vec<f32> = p.as_f32().iter().map(|v| v - 3.0).collect();
+        Tensor::from_f32(&p.shape, &g)
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        let mut p = Tensor::from_f32(&[4], &[0.0, 10.0, -5.0, 3.0]);
+        let mut opt = AdamW::new(0.0);
+        for _ in 0..800 {
+            let g = quad_grad(&p);
+            opt.step(&mut [&mut p], &[g], 0.05);
+        }
+        for v in p.as_f32() {
+            assert!((v - 3.0).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut p = Tensor::from_f32(&[2], &[10.0, -10.0]);
+        let mut opt = Sgd::new(0.9);
+        for _ in 0..300 {
+            let g = quad_grad(&p);
+            opt.step(&mut [&mut p], &[g], 0.05);
+        }
+        for v in p.as_f32() {
+            assert!((v - 3.0).abs() < 0.01, "{v}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = Tensor::from_f32(&[1], &[1.0]);
+        let mut opt = AdamW::new(0.5);
+        let zero = Tensor::from_f32(&[1], &[0.0]);
+        for _ in 0..10 {
+            opt.step(&mut [&mut p], std::slice::from_ref(&zero), 0.1);
+        }
+        assert!(p.as_f32()[0] < 1.0);
+    }
+
+    #[test]
+    fn adamw_state_bytes_tracks_params() {
+        let mut p = Tensor::from_f32(&[8], &[0.0; 8]);
+        let mut opt = AdamW::new(0.0);
+        assert_eq!(opt.state_bytes(), 0);
+        let g = quad_grad(&p);
+        opt.step(&mut [&mut p], &[g], 0.1);
+        assert_eq!(opt.state_bytes(), 2 * 8 * 4);
+    }
+}

@@ -1,0 +1,89 @@
+//! Learning-rate schedules (Appendix H: warmup + cosine for ViT,
+//! constant for QLoRA-LLaMA, linear-with-warmup for RoBERTa).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup from `warmup_init` over `warmup` steps, then cosine
+    /// decay to ~0 over the remaining steps.
+    WarmupCosine { warmup: usize, warmup_init: f32 },
+    /// Linear warmup then linear decay to 0.
+    WarmupLinear { warmup_frac: f32 },
+}
+
+impl Schedule {
+    pub fn lr(&self, base: f32, step: usize, total: usize) -> f32 {
+        match *self {
+            Schedule::Constant => base,
+            Schedule::WarmupCosine { warmup, warmup_init } => {
+                if step < warmup {
+                    let t = step as f32 / warmup.max(1) as f32;
+                    warmup_init + t * (base - warmup_init)
+                } else {
+                    let t = (step - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    base * 0.5
+                        * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos())
+                }
+            }
+            Schedule::WarmupLinear { warmup_frac } => {
+                let warmup =
+                    ((total as f32) * warmup_frac).round() as usize;
+                if step < warmup {
+                    base * (step as f32 + 1.0) / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    base * (1.0 - t.min(1.0))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant;
+        assert_eq!(s.lr(0.1, 0, 100), 0.1);
+        assert_eq!(s.lr(0.1, 99, 100), 0.1);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = Schedule::WarmupCosine { warmup: 10, warmup_init: 1e-6 };
+        assert!(s.lr(1.0, 0, 100) < 0.2);
+        assert!((s.lr(1.0, 10, 100) - 1.0).abs() < 1e-5);
+        assert!(s.lr(1.0, 55, 100) < 1.0);
+        assert!(s.lr(1.0, 99, 100) < 0.01);
+        // monotone increase during warmup
+        for i in 0..9 {
+            assert!(s.lr(1.0, i, 100) <= s.lr(1.0, i + 1, 100));
+        }
+    }
+
+    #[test]
+    fn warmup_linear_shape() {
+        let s = Schedule::WarmupLinear { warmup_frac: 0.1 };
+        assert!(s.lr(1.0, 0, 100) <= 0.1 + 1e-6);
+        assert!((s.lr(1.0, 10, 100) - 1.0).abs() < 0.11);
+        assert!(s.lr(1.0, 99, 100) < 0.02);
+    }
+
+    #[test]
+    fn never_negative_or_nan() {
+        for s in [
+            Schedule::Constant,
+            Schedule::WarmupCosine { warmup: 5, warmup_init: 0.0 },
+            Schedule::WarmupLinear { warmup_frac: 0.05 },
+        ] {
+            for step in 0..120 {
+                let lr = s.lr(0.3, step, 100);
+                assert!(lr.is_finite() && lr >= 0.0, "{s:?} {step} {lr}");
+            }
+        }
+    }
+}

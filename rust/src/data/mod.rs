@@ -1,0 +1,6 @@
+//! Synthetic datasets + batching (the paper's CIFAR/FGVC/Alpaca/GLUE
+//! stand-ins — see DESIGN.md §3 substitution table).
+
+pub mod loader;
+pub mod synth_images;
+pub mod synth_text;

@@ -1,0 +1,117 @@
+//! Shared experiment plumbing: artifact cache, short training runs,
+//! paper-scale extrapolation, row formatting.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::scheduler::Schedule;
+use crate::coordinator::{TrainCfg, TrainReport, Trainer};
+use crate::memmodel::ops::{ActKind, NormKind, Tuning};
+use crate::runtime::{Artifact, Runtime};
+use crate::util::cli::Args;
+
+thread_local! {
+    // PjRtClient is Rc-based (not Send/Sync): keep the runtime and the
+    // artifact cache per-thread. The experiment harness is effectively
+    // single-threaded; leaking is intentional process-lifetime caching.
+    static RUNTIME: &'static Runtime =
+        Box::leak(Box::new(Runtime::cpu().expect("PJRT CPU client")));
+    static ARTIFACTS: std::cell::RefCell<BTreeMap<String, &'static Artifact>> =
+        const { std::cell::RefCell::new(BTreeMap::new()) };
+}
+
+pub fn runtime() -> &'static Runtime {
+    RUNTIME.with(|rt| *rt)
+}
+
+/// Load (and cache for the thread lifetime) a preset's artifact.
+pub fn artifact(preset: &str) -> Result<&'static Artifact> {
+    ARTIFACTS.with(|cell| {
+        let mut map = cell.borrow_mut();
+        if let Some(a) = map.get(preset) {
+            return Ok(*a);
+        }
+        let dir = crate::runtime::artifacts_dir().join(preset);
+        anyhow::ensure!(
+            dir.join("manifest.json").is_file(),
+            "artifact {preset:?} not built — run:\n  \
+             cd python && python -m compile.aot --out ../artifacts {preset}"
+        );
+        let art = Artifact::load(runtime(), &dir)
+            .with_context(|| format!("loading {preset}"))?;
+        let leaked: &'static Artifact = Box::leak(Box::new(art));
+        map.insert(preset.to_string(), leaked);
+        Ok(leaked)
+    })
+}
+
+/// Short measured fine-tuning run of a preset.
+pub fn train_preset(preset: &str, steps: usize, lr: f32,
+                    seed: u64) -> Result<TrainReport> {
+    let art = artifact(preset)?;
+    let cfg = TrainCfg {
+        steps,
+        lr,
+        seed,
+        log_every: 0,
+        schedule: Schedule::WarmupCosine {
+            warmup: (steps / 10).max(1),
+            warmup_init: 1e-6,
+        },
+        eval_batches: 8,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(art, cfg)?;
+    t.train()
+}
+
+/// Map a preset naming suffix to memmodel kinds.
+pub fn act_kind(s: &str) -> ActKind {
+    match s {
+        "regelu2" => ActKind::ReGelu2,
+        "regelu2d" => ActKind::ReGelu2d,
+        "resilu2" => ActKind::ReSilu2,
+        "relu" => ActKind::Relu,
+        "mesa" | "mesa_gelu8" => ActKind::MesaGelu8,
+        "mesa_silu8" => ActKind::MesaSilu8,
+        "silu" => ActKind::Silu,
+        _ => ActKind::Gelu,
+    }
+}
+
+pub fn norm_kind(s: &str) -> NormKind {
+    match s {
+        "msln" => NormKind::MsLn,
+        "rms" => NormKind::Rms,
+        "msrms" => NormKind::MsRms,
+        "mesaln" | "mesa_ln8" => NormKind::MesaLn8,
+        _ => NormKind::Ln,
+    }
+}
+
+pub fn tuning_kind(s: &str) -> Tuning {
+    match s {
+        "full" => Tuning::Full,
+        "loraall" | "lora_all" => Tuning::LoraAll,
+        "lorafaqv" | "lorafa_qv" => Tuning::LoraFaQv,
+        "lorafaall" | "lorafa_all" => Tuning::LoraFaAll,
+        "frozen" => Tuning::Frozen,
+        _ => Tuning::LoraQv,
+    }
+}
+
+pub fn pct(ours: f64, base: f64) -> String {
+    if base <= 0.0 {
+        return "--".into();
+    }
+    format!("{:+.0}%", 100.0 * (ours - base) / base)
+}
+
+pub fn default_steps(args: &Args, d: usize) -> usize {
+    args.usize_or("steps", d).unwrap_or(d)
+}
+
+pub fn hline(width: usize) {
+    println!("{}", "-".repeat(width));
+}

@@ -1,0 +1,56 @@
+//! Experiment harness: one runner per paper table/figure (`ambp exp <id>`).
+//!
+//! Each runner prints the paper-style rows. Measured numbers come from
+//! short fine-tuning runs of the small presets on this testbed; the
+//! paper-scale memory columns come from the analytical memmodel at
+//! ViT-B/L / LLaMA-7B/13B dimensions (DESIGN.md §3/§4).
+
+pub mod appendix;
+pub mod figs;
+pub mod helpers;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => figs::fig1(args),
+        "fig2" => figs::fig2(args),
+        "fig3" | "fig7" | "fig8" => figs::fig3(args),
+        "fig4" => figs::fig4(args),
+        "fig5" => figs::fig5(args),
+        "fig6" => figs::fig6(args),
+        "tab1" => tables::tab1(args),
+        "tab2" => tables::tab2(args),
+        "tab3" => tables::tab3(args),
+        "tab4" => tables::tab4(args),
+        "tab5" => tables::tab5(args),
+        "tab6" => tables::tab6(args),
+        "tab7" => tables::tab7(args),
+        "tab8" => tables::tab8(args),
+        "tab9" => tables::tab9(args),
+        "tab10" => tables::tab10(args),
+        "tab11" => tables::tab11(args),
+        "tab12" => tables::tab12(args),
+        "appc" => appendix::appc(args),
+        "appe" => appendix::appe(args),
+        "all" => {
+            for id in [
+                "fig2", "fig3", "fig5", "fig6", "tab5", "tab9", "tab10",
+                "tab11", "tab12", "appe", // analytic/cheap first
+                "fig1", "fig4", "tab1", "tab2", "tab3", "tab4", "tab6",
+                "tab7", "tab8", "appc",
+            ] {
+                println!("\n════════ exp {id} ════════");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment {other:?}; try fig1..fig8, tab1..tab12, \
+             appc, appe, all"
+        ),
+    }
+}

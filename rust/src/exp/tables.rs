@@ -1,0 +1,504 @@
+//! Table reproductions (1–12).
+
+use anyhow::Result;
+
+use crate::memmodel::ops::{ActKind, NormKind, Tuning};
+use crate::memmodel::report::{gib, mib, peak};
+use crate::memmodel::{presets as mp, total_bytes};
+use crate::quant::nf4;
+use crate::util::cli::Args;
+
+use super::helpers::*;
+
+struct Row {
+    label: String,
+    top1: f32,
+    mem_mib: f64,
+    thr: f64,
+}
+
+fn print_rows(title: &str, rows: &[Row], big_est: Option<Vec<f64>>) {
+    println!("{title}");
+    let has_big = big_est.is_some();
+    print!("{:<26} {:>9} {:>12} {:>9} {:>12} {:>9}", "variant",
+           "top1/acc", "mem (MiB)", "Δmem", "thr (sps)", "Δthr");
+    if has_big {
+        print!(" {:>14}", "paper-scale");
+    }
+    println!();
+    hline(if has_big { 100 } else { 84 });
+    let base = &rows[0];
+    for (i, r) in rows.iter().enumerate() {
+        print!("{:<26} {:>9.3} {:>12.1} {:>9} {:>12.1} {:>9}",
+               r.label, r.top1, r.mem_mib,
+               pct(r.mem_mib, base.mem_mib), r.thr, pct(r.thr, base.thr));
+        if let Some(big) = &big_est {
+            print!(" {:>11.2} GiB", big[i]);
+        }
+        println!();
+    }
+}
+
+/// Measure one (preset, label) row.
+fn row(label: &str, preset: &str, steps: usize, lr: f32,
+       seed: u64) -> Result<Row> {
+    let rep = train_preset(preset, steps, lr, seed)?;
+    Ok(Row {
+        label: label.to_string(),
+        top1: rep.eval_metric,
+        mem_mib: rep.peak_activation_bytes as f64 / 1048576.0,
+        thr: rep.throughput,
+    })
+}
+
+/// Table 1: ViT-base LoRA / LoRA-FA across activation × norm variants.
+pub fn tab1(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 40);
+    for (tun_tag, tun_label, tun) in [
+        ("loraqv", "LoRA r=4 (adapt Q,V)", Tuning::LoraQv),
+        ("loraall", "LoRA r=4 (adapt all linear)", Tuning::LoraAll),
+    ] {
+        let variants = [
+            ("GELU + LN", "gelu_ln", ActKind::Gelu, NormKind::Ln),
+            ("Mesa-GELU + LN", "mesa_ln", ActKind::MesaGelu8, NormKind::Ln),
+            ("ReGELU2 + LN", "regelu2_ln", ActKind::ReGelu2, NormKind::Ln),
+            ("GELU + Mesa-LN", "gelu_mesaln", ActKind::Gelu,
+             NormKind::MesaLn8),
+            ("GELU + MS-LN", "gelu_msln", ActKind::Gelu, NormKind::MsLn),
+            ("Mesa-GELU + Mesa-LN", "mesa_mesaln", ActKind::MesaGelu8,
+             NormKind::MesaLn8),
+            ("ReGELU2 + MS-LN", "regelu2_msln", ActKind::ReGelu2,
+             NormKind::MsLn),
+        ];
+        let mut rows = Vec::new();
+        let mut big = Vec::new();
+        for (label, suffix, act, norm) in variants {
+            rows.push(row(label, &format!("vitt_{tun_tag}_{suffix}"),
+                          steps, 1.25e-3, 0)?);
+            big.push(gib(peak(&mp::vit_base(64, tun, act, norm), 16.0)
+                         .total));
+        }
+        print_rows(&format!("\nTable 1 — {tun_label} (paper −29%/-30% for \
+                             ours)"), &rows, Some(big));
+    }
+    // LoRA-FA: MS-LN gives no extra win (Prop 5.1 cond. 3) → ReGELU2 only
+    let mut rows = Vec::new();
+    let mut big = Vec::new();
+    for (label, suffix, act, norm) in [
+        ("GELU + LN", "gelu_ln", ActKind::Gelu, NormKind::Ln),
+        ("Mesa-GELU + LN", "mesa_ln", ActKind::MesaGelu8, NormKind::Ln),
+        ("Mesa-GELU + Mesa-LN", "mesa_mesaln", ActKind::MesaGelu8,
+         NormKind::MesaLn8),
+        ("ReGELU2 + LN", "regelu2_ln", ActKind::ReGelu2, NormKind::Ln),
+    ] {
+        rows.push(row(label, &format!("vitt_lorafaqv_{suffix}"), steps,
+                      1.25e-3, 0)?);
+        big.push(gib(peak(&mp::vit_base(64, Tuning::LoraFaQv, act, norm),
+                          16.0).total));
+    }
+    print_rows("\nTable 1 — LoRA-FA r=4 (adapt Q,V; paper −23% for \
+                ReGELU2)", &rows, Some(big));
+    Ok(())
+}
+
+/// Table 2: full fine-tuning, ViT-base + ViT-large extrapolation.
+pub fn tab2(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 40);
+    let variants = [
+        ("GELU + LN", "gelu_ln", ActKind::Gelu, NormKind::Ln),
+        ("ReGELU2 + LN", "regelu2_ln", ActKind::ReGelu2, NormKind::Ln),
+        ("GELU + MS-LN", "gelu_msln", ActKind::Gelu, NormKind::MsLn),
+        ("ReGELU2 + MS-LN", "regelu2_msln", ActKind::ReGelu2,
+         NormKind::MsLn),
+    ];
+    let mut rows = Vec::new();
+    let mut big = Vec::new();
+    for (label, suffix, act, norm) in variants {
+        rows.push(row(label, &format!("vitt_full_{suffix}"), steps,
+                      1.25e-5 * 100.0, 0)?);
+        let b = gib(peak(&mp::vit_base(64, Tuning::Full, act, norm), 16.0)
+                    .total);
+        let l = gib(peak(&mp::vit_large(64, Tuning::Full, act, norm),
+                         16.0).total);
+        big.push(b + l * 0.0); // base col; large printed separately below
+    }
+    print_rows("\nTable 2 — Full-Tuning ViT (paper −27% for ours)",
+               &rows, Some(big));
+    println!("\nViT-large peak estimates (paper: 15.7 → 11.5 GiB):");
+    for (label, _, act, norm) in variants {
+        let est = peak(&mp::vit_large(64, Tuning::Full, act, norm), 16.0);
+        println!("  {:<18} {:>8.2} GiB", label, gib(est.total));
+    }
+    Ok(())
+}
+
+/// Table 3: LLaMA QLoRA-sim (NF4 weights + LoRA-all + Alpaca stand-in).
+pub fn tab3(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 30);
+    let variants = [
+        ("SiLU + RMSNorm", "silu_rms", ActKind::Silu, NormKind::Rms),
+        ("ReSiLU2 + RMSNorm", "resilu2_rms", ActKind::ReSilu2,
+         NormKind::Rms),
+        ("SiLU + MS-RMSNorm", "silu_msrms", ActKind::Silu,
+         NormKind::MsRms),
+        ("ReSiLU2 + MS-RMSNorm", "resilu2_msrms", ActKind::ReSilu2,
+         NormKind::MsRms),
+    ];
+    let mut rows = Vec::new();
+    let mut big = Vec::new();
+    for (label, suffix, act, norm) in variants {
+        rows.push(row(label, &format!("llama_loraall_{suffix}"), steps,
+                      1e-4 * 20.0, 0)?);
+        // QLoRA: NF4 weights (bits_per_elem@block64) + bf16 activations
+        let cfg7 = mp::llama7b(4, 512, act, norm);
+        big.push(gib(peak(&cfg7, nf4::bits_per_elem(64)).total));
+    }
+    print_rows("\nTable 3 — LLaMA-style QLoRA (paper: 20.6 → 14.6 GiB on \
+                7B, −29%)", &rows, Some(big));
+    println!("\nLLaMA-13B peak estimates (paper: 31.4 → 22.3 GiB):");
+    for (label, _, act, norm) in variants {
+        let est = peak(&mp::llama13b(4, 512, act, norm),
+                       nf4::bits_per_elem(64));
+        println!("  {:<22} {:>8.2} GiB", label, gib(est.total));
+    }
+    Ok(())
+}
+
+/// Table 4: RoBERTa-style LoRA on 5 synthetic GLUE stand-in tasks.
+pub fn tab4(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 30);
+    let tasks = ["CoLA*", "SST-2*", "MRPC*", "STS-B*", "RTE*"];
+    let variants = [
+        ("GELU + LN", "gelu_ln"),
+        ("ReGELU2 + LN", "regelu2_ln"),
+        ("GELU + MS-LN", "gelu_msln"),
+        ("ReGELU2 + MS-LN", "regelu2_msln"),
+    ];
+    println!("\nTable 4 — RoBERTa-style LoRA r=4, 5 synthetic tasks \
+              (* = synthetic stand-in; paper −21% mem for ours)");
+    print!("{:<18}", "variant");
+    for t in tasks {
+        print!(" {t:>8}");
+    }
+    println!(" {:>8} {:>12} {:>12}", "mean", "mem (MiB)", "thr (sps)");
+    hline(100);
+    let mut base_mem = 0.0;
+    for (label, suffix) in variants {
+        let mut accs = Vec::new();
+        let mut mem = 0f64;
+        let mut thr = 0f64;
+        for (ti, _) in tasks.iter().enumerate() {
+            let rep = train_preset(&format!("rob_loraall_{suffix}"),
+                                   steps, 5e-4, ti as u64)?;
+            accs.push(rep.eval_metric);
+            mem = rep.peak_activation_bytes as f64 / 1048576.0;
+            thr += rep.throughput / tasks.len() as f64;
+        }
+        if base_mem == 0.0 {
+            base_mem = mem;
+        }
+        let mean: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
+        print!("{label:<18}");
+        for a in &accs {
+            print!(" {a:>8.3}");
+        }
+        println!(" {:>8.3} {:>7.1} ({:>4}) {:>12.1}", mean, mem,
+                 pct(mem, base_mem), thr);
+    }
+    Ok(())
+}
+
+/// Table 5: qualitative comparison matrix (+ programmatic evidence).
+pub fn tab5(_args: &Args) -> Result<()> {
+    println!("Table 5 — qualitative comparison");
+    println!("{:<12} {:>11} {:>17} {:>12}", "method", "non-linear",
+             "keep throughput", "beyond LoRA");
+    hline(56);
+    for (m, a, b, c) in [
+        ("Freeze", "x", "ok", "ok"),
+        ("CKPT", "ok", "x", "ok"),
+        ("ACT/Mesa", "ok", "x", "ok"),
+        ("LoRA-FA", "x", "ok", "x"),
+        ("Ours", "ok", "ok", "ok"),
+    ] {
+        println!("{m:<12} {a:>11} {b:>17} {c:>12}");
+    }
+    println!("\nprogrammatic evidence (analytical, ViT-B LoRA bs=64):");
+    let base = total_bytes(&mp::vit_base(64, Tuning::LoraQv,
+                                         ActKind::Gelu, NormKind::Ln));
+    let ours = total_bytes(&mp::vit_base(64, Tuning::LoraQv,
+                                         ActKind::ReGelu2, NormKind::MsLn));
+    println!("  ours reduces non-linear activation bytes: {:.0} → {:.0} \
+              MiB ({})", mib(base), mib(ours),
+             pct(mib(ours), mib(base)));
+    Ok(())
+}
+
+/// Table 6 / Appendix I: ReGELU2-d (derivative-matching) ablation.
+pub fn tab6(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 40);
+    println!("Table 6 — optimization-objective ablation (paper: ReGELU2 ≥ \
+              ReGELU2-d on every dataset)");
+    println!("{:<16} {:>10} {:>10} {:>10}", "activation", "task0",
+             "task1", "mean");
+    hline(50);
+    for (label, preset) in [
+        ("GELU", "vitt_loraqv_gelu_ln"),
+        ("ReGELU2-d", "vitt_loraqv_regelu2d_ln"),
+        ("ReGELU2", "vitt_loraqv_regelu2_ln"),
+    ] {
+        let mut accs = Vec::new();
+        for seed in 0..2 {
+            accs.push(train_preset(preset, steps, 1.25e-3, seed)?
+                      .eval_metric);
+        }
+        let mean: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
+        println!("{:<16} {:>10.3} {:>10.3} {:>10.3}", label, accs[0],
+                 accs[1], mean);
+    }
+    Ok(())
+}
+
+/// Table 7: expanded ViT table — 7 synthetic tasks (incl. ReLU row).
+pub fn tab7(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 30);
+    let n_tasks = args.usize_or("tasks", 3)?;
+    println!("\nTable 7 — per-dataset expansion, LoRA q,v ({n_tasks} \
+              synthetic tasks; paper: ReLU degrades, ReGELU2 ≈ GELU)");
+    print!("{:<16}", "activation");
+    for t in 0..n_tasks {
+        print!("  task{t:>4}");
+    }
+    println!(" {:>8} {:>12}", "mean", "mem (MiB)");
+    hline(70);
+    for (label, preset) in [
+        ("GELU", "vitt_loraqv_gelu_ln"),
+        ("ReLU", "vitt_loraqv_relu_ln"),
+        ("Mesa-GELU", "vitt_loraqv_mesa_ln"),
+        ("ReGELU2", "vitt_loraqv_regelu2_ln"),
+        ("ReGELU2+MS-LN", "vitt_loraqv_regelu2_msln"),
+    ] {
+        let mut accs = Vec::new();
+        let mut mem = 0.0;
+        for t in 0..n_tasks {
+            let rep = train_preset(preset, steps, 1.25e-3, t as u64)?;
+            accs.push(rep.eval_metric);
+            mem = rep.peak_activation_bytes as f64 / 1048576.0;
+        }
+        let mean: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
+        print!("{label:<16}");
+        for a in &accs {
+            print!("  {a:>7.3}");
+        }
+        println!(" {mean:>8.3} {mem:>12.1}");
+    }
+    Ok(())
+}
+
+/// Table 8: supplementary LLaMA metrics — 7 held-out eval suites.
+pub fn tab8(args: &Args) -> Result<()> {
+    let steps = default_steps(args, 30);
+    let suites = ["BoolQ*", "PIQA*", "SIQA*", "HS*", "WG*", "ARC*",
+                  "OBQA*"];
+    println!("\nTable 8 — supplementary eval suites (synthetic stand-ins; \
+              paper: ours ≈ baseline across the board)");
+    print!("{:<22}", "checkpoint");
+    for s in suites {
+        print!(" {s:>7}");
+    }
+    println!();
+    hline(80);
+    for (label, preset) in [
+        ("fine-tuned (baseline)", "llama_loraall_silu_rms"),
+        ("with ReSiLU2+MS-RMS", "llama_loraall_resilu2_msrms"),
+    ] {
+        let art = artifact(preset)?;
+        let mut t = crate::coordinator::Trainer::new(
+            art,
+            crate::coordinator::TrainCfg {
+                steps,
+                lr: 2e-3,
+                log_every: 0,
+                ..Default::default()
+            },
+        )?;
+        let _ = t.train()?;
+        print!("{label:<22}");
+        for (si, _) in suites.iter().enumerate() {
+            // each "suite" = a disjoint held-out slice of the task space
+            let (_, acc) = t.evaluate(100_000 + si * 1000, 4)?;
+            print!(" {acc:>7.3}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 9: max affordable sequence length under a fixed memory budget.
+pub fn tab9(args: &Args) -> Result<()> {
+    let budget_gib = args.f64_or("budget", 24.0)?; // RTX4090
+    println!("Table 9 — max trainable sequence length, LLaMA-7B QLoRA, \
+              bs=1, {budget_gib:.0} GiB budget (paper: +46% for ours)");
+    let mut base_len = 0usize;
+    for (label, act, norm) in [
+        ("SiLU + RMSNorm", ActKind::Silu, NormKind::Rms),
+        ("ReSiLU2 + RMSNorm", ActKind::ReSilu2, NormKind::Rms),
+        ("SiLU + MS-RMSNorm", ActKind::Silu, NormKind::MsRms),
+        ("ReSiLU2 + MS-RMSNorm", ActKind::ReSilu2, NormKind::MsRms),
+    ] {
+        // binary search the longest sequence fitting the budget
+        let fits = |seq: usize| -> bool {
+            let cfg = mp::llama7b(1, seq, act, norm);
+            gib(peak(&cfg, nf4::bits_per_elem(64)).total) <= budget_gib
+        };
+        let (mut lo, mut hi) = (256usize, 1_048_576usize);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        if base_len == 0 {
+            base_len = lo;
+        }
+        println!("  {:<22} {:>8} tokens  ({})", label, lo,
+                 pct(lo as f64, base_len as f64));
+    }
+    Ok(())
+}
+
+/// Table 10: Swin + RetinaNet detection proxy (analytical).
+pub fn tab10(_args: &Args) -> Result<()> {
+    println!("Table 10 — Swin-T full-tuning detection proxy \
+              (paper: −18% total memory)");
+    let mut base = 0.0;
+    for (label, act, norm) in [
+        ("GELU + LN", ActKind::Gelu, NormKind::Ln),
+        ("ReGELU2 + MS-LN", ActKind::ReGelu2, NormKind::MsLn),
+    ] {
+        let cfg = mp::swin_tiny(4, act, norm);
+        // detection head/neck ≈ fixed extra workspace (backbone dominates)
+        let est = peak(&cfg, 32.0);
+        let total = gib(est.total) + 1.5;
+        if base == 0.0 {
+            base = total;
+        }
+        println!("  {:<18} {:>7.2} GiB  ({})", label, total,
+                 pct(total, base));
+    }
+    Ok(())
+}
+
+/// Table 11: BERT-base max batch via memory budget (+ throughput note).
+pub fn tab11(args: &Args) -> Result<()> {
+    let budget_gib = args.f64_or("budget", 12.0)?; // RTX3060
+    println!("Table 11 — BERT-base full-tuning max batch per GPU, \
+              {budget_gib:.0} GiB (paper: 30 → 36, +20%)");
+    let mut base = 0usize;
+    for (label, act, norm) in [
+        ("GELU + LN", ActKind::Gelu, NormKind::Ln),
+        ("ReGELU2 + MS-LN", ActKind::ReGelu2, NormKind::MsLn),
+    ] {
+        let fits = |b: usize| {
+            gib(peak(&mp::bert_base(b, 384, act, norm), 32.0).total)
+                <= budget_gib
+        };
+        let mut b = 1;
+        while fits(b + 1) && b < 4096 {
+            b += 1;
+        }
+        if base == 0 {
+            base = b;
+        }
+        println!("  {:<18} batch {:>4}  ({})", label, b,
+                 pct(b as f64, base as f64));
+    }
+    Ok(())
+}
+
+/// Table 12: BERT-large ZeRO-3 throughput model (+26% via bigger batch).
+pub fn tab12(args: &Args) -> Result<()> {
+    let budget_gib = args.f64_or("budget", 12.0)?;
+    let n_gpus = 4.0;
+    println!("Table 12 — BERT-large ZeRO3+offload data-parallel \
+              throughput model, {n_gpus:.0} GPUs (paper: +26%)");
+    // ZeRO-3: per-step cost = compute(batch) + comm(params) — a bigger
+    // affordable batch amortizes the (fixed) parameter all-gather.
+    let comm_cost = 2.0; // normalized fixed cost per step
+    let mut base_thr = 0.0;
+    for (label, act, norm) in [
+        ("GELU + LN", ActKind::Gelu, NormKind::Ln),
+        ("ReGELU2 + MS-LN", ActKind::ReGelu2, NormKind::MsLn),
+    ] {
+        let fits = |b: usize| {
+            gib(peak(&mp::bert_large(b, 384, act, norm), 32.0).total)
+                <= budget_gib
+        };
+        let mut b = 1;
+        while fits(b + 1) && b < 4096 {
+            b += 1;
+        }
+        let thr = n_gpus * b as f64 / (b as f64 + comm_cost);
+        if base_thr == 0.0 {
+            base_thr = thr;
+        }
+        println!("  {:<18} batch {:>4}  model-thr {:>6.2} ({})", label, b,
+                 thr, pct(thr, base_thr));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::ops::{Arch, MemCfg, Mode};
+
+    #[test]
+    fn tab9_budget_search_monotone() {
+        // sanity on the binary search: larger budget → longer sequence
+        let len = |budget: f64| {
+            let fits = |seq: usize| {
+                gib(peak(&mp::llama7b(1, seq, ActKind::Silu, NormKind::Rms),
+                         4.5).total) <= budget
+            };
+            let (mut lo, mut hi) = (256usize, 1_048_576usize);
+            while lo < hi {
+                let mid = (lo + hi + 1) / 2;
+                if fits(mid) { lo = mid } else { hi = mid - 1 }
+            }
+            lo
+        };
+        assert!(len(30.0) > len(20.0));
+    }
+
+    #[test]
+    fn ours_extends_sequence_length() {
+        // Table 9 shape: ReSiLU2+MS-RMSNorm affords longer sequences
+        let max_len = |act: ActKind, norm: NormKind| {
+            let fits = |seq: usize| {
+                gib(peak(&mp::llama7b(1, seq, act, norm), 4.5).total)
+                    <= 24.0
+            };
+            let (mut lo, mut hi) = (256usize, 1_048_576usize);
+            while lo < hi {
+                let mid = (lo + hi + 1) / 2;
+                if fits(mid) { lo = mid } else { hi = mid - 1 }
+            }
+            lo
+        };
+        let base = max_len(ActKind::Silu, NormKind::Rms);
+        let ours = max_len(ActKind::ReSilu2, NormKind::MsRms);
+        let gain = ours as f64 / base as f64;
+        assert!(gain > 1.2, "gain {gain}");
+    }
+
+    #[test]
+    fn memcfg_is_send_static() {
+        fn assert_send<T: Send + 'static>() {}
+        assert_send::<MemCfg>();
+        let _ = Mode::Paper;
+        let _ = Arch::Vit;
+    }
+}

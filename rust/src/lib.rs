@@ -1,0 +1,23 @@
+//! `ambp` — Approximate & Memory-Sharing Backpropagation (ICML 2024)
+//! reproduced as a three-layer rust + JAX + Pallas stack.
+//!
+//! * L1/L2 live in `python/compile/` (build-time only): Pallas kernels for
+//!   ReGELU2/ReSiLU2/MS-LN/MS-RMSNorm and manually-backpropagated
+//!   transformer models, AOT-lowered to HLO text.
+//! * L3 (this crate) is the fine-tuning coordinator: it loads the HLO
+//!   artifacts via PJRT, drives the training loop, owns the optimizer,
+//!   data pipeline, metrics, and the *measured* activation-memory
+//!   accounting at the fwd/bwd residual ABI.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod coeffs;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod runtime;
+pub mod data;
+pub mod memmodel;
+pub mod packing;
+pub mod quant;
+pub mod util;

@@ -1,0 +1,222 @@
+//! `ambp` CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!   train     fine-tune a preset artifact (the main entry point)
+//!   eval      forward-only evaluation of a (possibly restored) model
+//!   exp       reproduce a paper table/figure (fig1..fig8, tab1..tab12,
+//!             appc, appe, all)
+//!   mem       analytical activation-memory report for a named scale
+//!   convert   merge LN/RMS affine params into the following linears
+//!             (eq. 17) to produce an MS-LN/MS-RMSNorm checkpoint
+//!   solve     re-derive the ReGELU2/ReSiLU2 coefficients (Appendix E)
+//!   info      print a preset's manifest summary
+
+use std::path::{Path, PathBuf};
+
+use ambp::config::RunCfg;
+use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
+use ambp::coordinator::{TrainCfg, Trainer};
+use ambp::runtime::{Artifact, Runtime};
+use ambp::util::cli::Args;
+use anyhow::{bail, Context, Result};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => train(&args),
+        "eval" => eval(&args),
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("usage: ambp exp <fig1..|tab1..|appc|appe|all>")?;
+            ambp::exp::run(id, &args)
+        }
+        "mem" => mem_report(&args),
+        "convert" => convert(&args),
+        "solve" => ambp::exp::appendix::appe(&args),
+        "info" => info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn load_artifact(cfg: &RunCfg) -> Result<Artifact> {
+    let rt = Runtime::cpu()?;
+    let dir = cfg.artifacts_dir.join(&cfg.preset);
+    anyhow::ensure!(
+        dir.join("manifest.json").is_file(),
+        "artifact {:?} not found — build it with:\n  cd python && python \
+         -m compile.aot --out ../artifacts {}",
+        dir,
+        cfg.preset
+    );
+    Artifact::load(&rt, &dir)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = RunCfg::from_args(args)?;
+    let art = load_artifact(&cfg)?;
+    println!(
+        "preset {} — arch={} tuning={} act={} norm={} | {} params \
+         ({} trainable), {} residuals",
+        cfg.preset,
+        art.manifest.arch,
+        art.manifest.tuning,
+        art.manifest.activation,
+        art.manifest.norm,
+        art.manifest.params.len(),
+        art.manifest.trainable_indices().len(),
+        art.manifest.residuals.len()
+    );
+    let mut trainer = Trainer::new(&art, cfg.train.clone())?;
+    if let Some(src) = &cfg.init_from {
+        let ck = Checkpoint::load(src)?;
+        let n = ck.restore(&art.manifest, &mut trainer.params)?;
+        println!("restored {n} tensors from {src:?}");
+    }
+    let report = trainer.train()?;
+    println!(
+        "\ndone: final loss {:.4}  eval acc {:.3}  throughput {:.1} \
+         samples/s  peak activation {:.1} MiB",
+        report.final_loss,
+        report.eval_metric,
+        report.throughput,
+        report.peak_activation_bytes as f64 / 1048576.0
+    );
+    println!("activation memory by kind:");
+    for (kind, bytes) in &report.by_kind {
+        println!("  {:<14} {:>10.2} MiB", kind,
+                 *bytes as f64 / 1048576.0);
+    }
+    if let Some(dst) = &cfg.save_to {
+        Checkpoint::from_params(&art.manifest, &trainer.params)
+            .save(dst)?;
+        println!("checkpoint saved to {dst:?}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let cfg = RunCfg::from_args(args)?;
+    let art = load_artifact(&cfg)?;
+    let mut trainer = Trainer::new(&art, TrainCfg {
+        log_every: 0,
+        ..cfg.train.clone()
+    })?;
+    if let Some(src) = &cfg.init_from {
+        let ck = Checkpoint::load(src)?;
+        let n = ck.restore(&art.manifest, &mut trainer.params)?;
+        println!("restored {n} tensors from {src:?}");
+    }
+    let batches = args.usize_or("batches", 16)?;
+    let (loss, metric) = trainer.evaluate(1_000_000, batches)?;
+    println!("eval: loss {loss:.4}  metric {metric:.3}  \
+              ({batches} held-out batches)");
+    Ok(())
+}
+
+fn mem_report(args: &Args) -> Result<()> {
+    use ambp::memmodel::presets as mp;
+    use ambp::memmodel::report::{mib, peak};
+    use ambp::memmodel::{block_units, by_category, total_bytes};
+    let scale = args.get_or("scale", "vit_base");
+    let act = ambp::exp::helpers::act_kind(args.get_or("act", "gelu"));
+    let norm = ambp::exp::helpers::norm_kind(args.get_or("norm", "ln"));
+    let tuning =
+        ambp::exp::helpers::tuning_kind(args.get_or("tuning", "lora_qv"));
+    let batch = args.usize_or("batch", 64)?;
+    let seq = args.usize_or("seq", 512)?;
+    let mut cfg = match scale {
+        "vit_base" => mp::vit_base(batch, tuning, act, norm),
+        "vit_large" => mp::vit_large(batch, tuning, act, norm),
+        "llama7b" => mp::llama7b(batch, seq, act, norm),
+        "llama13b" => mp::llama13b(batch, seq, act, norm),
+        "roberta" => mp::roberta_base(batch, seq, act, norm),
+        "swin_tiny" => mp::swin_tiny(batch, act, norm),
+        "bert_base" => mp::bert_base(batch, seq, act, norm),
+        "bert_large" => mp::bert_large(batch, seq, act, norm),
+        other => bail!("unknown scale {other:?}"),
+    };
+    cfg.tuning = tuning;
+    let bits = args.f64_or("weight-bits", 16.0)?;
+    let est = peak(&cfg, bits);
+    println!("{scale} | act={act:?} norm={norm:?} tuning={tuning:?} \
+              batch={batch}");
+    println!("  per-block units: {:.2}", block_units(&cfg));
+    println!("  activations: {:>10.1} MiB", mib(est.activations));
+    println!("  weights:     {:>10.1} MiB ({bits}-bit)",
+             mib(est.weights));
+    println!("  grads:       {:>10.1} MiB", mib(est.grads));
+    println!("  optimizer:   {:>10.1} MiB", mib(est.optimizer));
+    println!("  peak total:  {:>10.1} MiB", mib(est.total));
+    println!("  activation breakdown:");
+    let total = total_bytes(&cfg);
+    for (cat, b) in by_category(&cfg) {
+        println!("    {:<16} {:>10.1} MiB  {:>5.1}%", cat, mib(b),
+                 100.0 * b as f64 / total as f64);
+    }
+    Ok(())
+}
+
+fn convert(args: &Args) -> Result<()> {
+    let src = PathBuf::from(
+        args.get("src").context("--src <ckpt dir> required")?);
+    let dst = PathBuf::from(
+        args.get("dst").context("--dst <ckpt dir> required")?);
+    let preset = args
+        .get("to-preset")
+        .context("--to-preset <ms preset> required")?;
+    let dir = ambp::runtime::artifacts_dir().join(preset);
+    let manifest = ambp::runtime::Manifest::load(Path::new(&dir))?;
+    let ck = Checkpoint::load(&src)?;
+    let merged = merge_affine(&ck, &manifest)?;
+    merged.save(&dst)?;
+    println!("merged {} tensors → {:?} (eq. 17: W̃=W·diag(α), b̃=Wβ+b)",
+             merged.tensors.len(), dst);
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = RunCfg::from_args(args)?;
+    let dir = cfg.artifacts_dir.join(&cfg.preset);
+    let m = ambp::runtime::Manifest::load(&dir)?;
+    println!("preset {}: arch={} dim={} depth={} tuning={} act={} norm={}",
+             m.preset, m.arch, m.dim, m.depth, m.tuning, m.activation,
+             m.norm);
+    println!("  params: {} ({} trainable)", m.params.len(),
+             m.trainable_indices().len());
+    println!("  residuals: {} tensors, {:.2} MiB total",
+             m.residuals.len(),
+             m.residual_bytes_total as f64 / 1048576.0);
+    for (kind, bytes) in m.residual_bytes_by_kind() {
+        println!("    {:<14} {:>10.2} MiB", kind,
+                 bytes as f64 / 1048576.0);
+    }
+    println!("  selfcheck: loss={:.4} metric={:.3}", m.selfcheck.loss,
+             m.selfcheck.metric);
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "ambp — Approximate & Memory-Sharing Backpropagation (ICML 2024)
+usage: ambp <cmd> [--flags]
+  train   --preset P [--steps N --lr X --optimizer adamw|sgd
+          --schedule constant|warmup_cosine|warmup_linear
+          --grad-accum K --seed S --metrics out.jsonl
+          --init-from ckpt/ --save-to ckpt/]
+  eval    --preset P [--init-from ckpt/ --batches N]
+  exp     <fig1..fig8|tab1..tab12|appc|appe|all> [--steps N]
+  mem     --scale vit_base|vit_large|llama7b|llama13b|roberta|swin_tiny|\
+bert_base|bert_large
+          [--act gelu|regelu2|.. --norm ln|msln|.. --tuning full|lora_qv|..
+           --batch B --seq T --weight-bits 16]
+  convert --src ckpt/ --dst ckpt/ --to-preset P
+  solve   [--seeds N]        re-derive a*,c* (Appendix E)
+  info    --preset P"
+    );
+}

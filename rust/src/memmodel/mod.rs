@@ -1,0 +1,175 @@
+//! Analytical activation-memory model.
+//!
+//! Mirrors the residual-tape semantics of the L2 model exactly (the rust
+//! integration tests cross-check it against artifact manifests), and in
+//! *paper mode* reproduces the Figure 5/6 per-block unit tallies
+//! (ViT 19 / 12 / 11.5; LLaMA-13B 21.8 / 16.1 / 15.4375), the Figure 2
+//! composition pies, and the memory columns of Tables 1–4 extrapolated to
+//! ViT-B/L and LLaMA-7B/13B scale.
+
+pub mod ops;
+pub mod presets;
+pub mod report;
+
+pub use ops::{model_entries, Arch, Entry, MemCfg, Mode, NormKind, ActKind,
+              Tuning};
+
+/// Sum of residual bytes across the whole model.
+pub fn total_bytes(cfg: &MemCfg) -> u64 {
+    model_entries(cfg).iter().map(|e| e.bytes).sum()
+}
+
+/// Per-block activation units (unit = one 16-bit [B,N,C] tensor), the
+/// Figure 5/6 metric. Only counts one attn + one mlp block.
+pub fn block_units(cfg: &MemCfg) -> f64 {
+    let unit = (cfg.batch * cfg.n_tokens * cfg.dim) as f64 * 2.0;
+    ops::block_entries(cfg, 0)
+        .iter()
+        .map(|e| e.bytes as f64)
+        .sum::<f64>()
+        / unit
+}
+
+/// Group totals by residual category (Figure 2).
+pub fn by_category(cfg: &MemCfg) -> Vec<(String, u64)> {
+    let mut cats: Vec<(String, u64)> = Vec::new();
+    for e in model_entries(cfg) {
+        let cat = category(&e.kind).to_string();
+        match cats.iter_mut().find(|(c, _)| *c == cat) {
+            Some((_, b)) => *b += e.bytes,
+            None => cats.push((cat, e.bytes)),
+        }
+    }
+    cats.sort_by(|a, b| b.1.cmp(&a.1));
+    cats
+}
+
+pub fn category(kind: &str) -> &'static str {
+    match kind {
+        "act_full" | "act_codes" | "act_q8" | "act_scale" => "activation_fn",
+        "norm_input" | "norm_stat" | "norm_shared" => "normalization",
+        "attn_qkv" | "attn_out" => "attention",
+        "linear_input" | "lora_u" => "linear",
+        "gate_operand" => "gate_mul",
+        "head_input" => "head",
+        "ckpt_input" => "checkpoint",
+        _ => "other",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ops::*;
+
+    fn vit_paper(tuning: Tuning, act: ActKind, norm: NormKind) -> MemCfg {
+        MemCfg {
+            arch: Arch::Vit,
+            dim: 768,
+            depth: 12,
+            n_heads: 12,
+            mlp_ratio: 4.0,
+            n_tokens: 197,
+            patch_dim: 768,
+            n_classes: 10,
+            vocab: 0,
+            lora_rank: 4,
+            batch: 64,
+            tuning,
+            act,
+            norm,
+            mode: Mode::Paper,
+            ckpt: false,
+        }
+    }
+
+    fn llama13b(act: ActKind, norm: NormKind, tuning: Tuning) -> MemCfg {
+        MemCfg {
+            arch: Arch::Llama,
+            dim: 5120,
+            depth: 40,
+            n_heads: 40,
+            mlp_ratio: 2.7,
+            n_tokens: 2048,
+            patch_dim: 0,
+            n_classes: 0,
+            vocab: 32000,
+            lora_rank: 64,
+            batch: 4,
+            tuning,
+            act,
+            norm,
+            mode: Mode::Paper,
+            ckpt: false,
+        }
+    }
+
+    #[test]
+    fn fig5_vit_trainable_19_units() {
+        let cfg = vit_paper(Tuning::Full, ActKind::Gelu, NormKind::Ln);
+        let u = block_units(&cfg);
+        assert!((u - 19.0).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig5_vit_frozen_12_units() {
+        let cfg = vit_paper(Tuning::Frozen, ActKind::Gelu, NormKind::Ln);
+        let u = block_units(&cfg);
+        assert!((u - 12.0).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig5_vit_ours_11_5_units() {
+        let cfg = vit_paper(Tuning::Full, ActKind::ReGelu2, NormKind::MsLn);
+        let u = block_units(&cfg);
+        assert!((u - 11.5).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig6_llama_trainable_21_8_units() {
+        let cfg = llama13b(ActKind::Silu, NormKind::Rms, Tuning::Full);
+        let u = block_units(&cfg);
+        assert!((u - 21.8).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig6_llama_frozen_16_1_units() {
+        let cfg = llama13b(ActKind::Silu, NormKind::Rms, Tuning::Frozen);
+        let u = block_units(&cfg);
+        assert!((u - 16.1).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig6_llama_ours_15_44_units() {
+        let cfg =
+            llama13b(ActKind::ReSilu2, NormKind::MsRms, Tuning::Full);
+        let u = block_units(&cfg);
+        assert!((u - 15.4375).abs() < 0.2, "{u}");
+    }
+
+    #[test]
+    fn fig2_nonlinear_fraction_matches_paper_ballpark() {
+        // paper: GELU+LN ≈ 21% each... combined act-fn + norm share of ViT
+        // activation memory with frozen linears is large (~63% non-linear
+        // incl. attention). Check act_fn+norm ≳ 45% for the frozen ViT.
+        let cfg = vit_paper(Tuning::Frozen, ActKind::Gelu, NormKind::Ln);
+        let cats = by_category(&cfg);
+        let total: u64 = cats.iter().map(|c| c.1).sum();
+        let actnorm: u64 = cats.iter()
+            .filter(|(c, _)| c == "activation_fn" || c == "normalization")
+            .map(|c| c.1).sum();
+        let frac = actnorm as f64 / total as f64;
+        assert!(frac > 0.4 && frac < 0.8, "{frac}");
+    }
+
+    #[test]
+    fn ours_saves_about_30_percent_on_llama() {
+        // Table 3 shape: ReSiLU2 + MS-RMSNorm ≈ −29% activation memory
+        let base = llama13b(ActKind::Silu, NormKind::Rms, Tuning::Full);
+        let ours =
+            llama13b(ActKind::ReSilu2, NormKind::MsRms, Tuning::Full);
+        let rel = 1.0 - total_bytes(&ours) as f64
+            / total_bytes(&base) as f64;
+        assert!(rel > 0.22 && rel < 0.40, "{rel}");
+    }
+}

@@ -1,0 +1,318 @@
+//! Per-op residual entries, mirroring the L2 residual tape exactly.
+//!
+//! Two accounting modes:
+//! * `Mode::Paper` — 16-bit activations, fp32 norm stats, FlashAttention
+//!   saves {q,k,v,o,l} (Figures 5/6 parity).
+//! * `Mode::Tape`  — f32 everything, attention saves {q,k,v} only
+//!   (matches the measured artifact manifests bit-for-bit).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Vit,
+    Llama,
+    Roberta,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tuning {
+    Full,
+    LoraQv,
+    LoraAll,
+    LoraFaQv,
+    LoraFaAll,
+    Frozen,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Gelu,
+    Silu,
+    Relu,
+    ReGelu2,
+    ReGelu2d,
+    ReSilu2,
+    MesaGelu8,
+    MesaSilu8,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    Ln,
+    MsLn,
+    Rms,
+    MsRms,
+    MesaLn8,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Paper,
+    Tape,
+}
+
+#[derive(Debug, Clone)]
+pub struct MemCfg {
+    pub arch: Arch,
+    pub dim: usize,
+    pub depth: usize,
+    pub n_heads: usize,
+    pub mlp_ratio: f64,
+    pub n_tokens: usize,
+    pub patch_dim: usize,
+    pub n_classes: usize,
+    pub vocab: usize,
+    pub lora_rank: usize,
+    pub batch: usize,
+    pub tuning: Tuning,
+    pub act: ActKind,
+    pub norm: NormKind,
+    pub mode: Mode,
+    pub ckpt: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub module: String,
+    pub kind: String,
+    pub bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LinMode {
+    Full,
+    Frozen,
+    Lora,
+    LoraFa,
+}
+
+fn linear_mode(which: &str, tuning: Tuning) -> LinMode {
+    match tuning {
+        Tuning::Full => LinMode::Full,
+        Tuning::Frozen => LinMode::Frozen,
+        Tuning::LoraQv | Tuning::LoraFaQv => {
+            let adapted = which == "q" || which == "v";
+            match (adapted, tuning) {
+                (true, Tuning::LoraQv) => LinMode::Lora,
+                (true, _) => LinMode::LoraFa,
+                (false, _) => LinMode::Frozen,
+            }
+        }
+        Tuning::LoraAll => LinMode::Lora,
+        Tuning::LoraFaAll => LinMode::LoraFa,
+    }
+}
+
+impl MemCfg {
+    pub fn hidden(&self) -> usize {
+        (self.dim as f64 * self.mlp_ratio) as usize
+    }
+
+    fn act_bytes(&self) -> f64 {
+        match self.mode {
+            Mode::Paper => 2.0,
+            Mode::Tape => 4.0,
+        }
+    }
+
+    fn rows(&self) -> u64 {
+        (self.batch * self.n_tokens) as u64
+    }
+}
+
+struct Acc<'a> {
+    cfg: &'a MemCfg,
+    out: Vec<Entry>,
+}
+
+impl<'a> Acc<'a> {
+    fn push(&mut self, module: &str, kind: &str, bytes: f64) {
+        if bytes > 0.0 {
+            self.out.push(Entry {
+                module: module.to_string(),
+                kind: kind.to_string(),
+                bytes: bytes.round() as u64,
+            });
+        }
+    }
+
+    /// Norm residuals. Returns true when the norm output z is stored and
+    /// shareable with the following linears (MS variants).
+    fn norm(&mut self, module: &str, cols: usize) -> bool {
+        let c = self.cfg;
+        let rows = c.rows() as f64;
+        let stats = rows * 4.0; // per-row fp32 scalar
+        match c.norm {
+            NormKind::Ln => {
+                // x (fp32 in paper mode), mu, rstd
+                self.push(module, "norm_input", rows * cols as f64 * 4.0);
+                self.push(module, "norm_stat", 2.0 * stats);
+                false
+            }
+            NormKind::Rms => {
+                self.push(module, "norm_input", rows * cols as f64 * 4.0);
+                self.push(module, "norm_stat", stats);
+                false
+            }
+            NormKind::MesaLn8 => {
+                self.push(module, "act_q8", rows * cols as f64);
+                self.push(module, "act_scale", stats);
+                self.push(module, "norm_stat", 2.0 * stats);
+                false
+            }
+            NormKind::MsLn | NormKind::MsRms => {
+                self.push(module, "norm_shared",
+                          rows * cols as f64 * c.act_bytes());
+                self.push(module, "norm_stat", stats);
+                true
+            }
+        }
+    }
+
+    /// Linear residuals. `have_shared_x`: the input tensor is already
+    /// stored (by an MS norm or an earlier sibling linear). Returns
+    /// whether x is stored after this linear (for share-chaining).
+    fn linear(&mut self, module: &str, which: &str, din: usize,
+              have_shared_x: bool) -> bool {
+        let c = self.cfg;
+        let rows = c.rows() as f64;
+        let mode = linear_mode(which, c.tuning);
+        let mut stored = have_shared_x;
+        if matches!(mode, LinMode::Full | LinMode::Lora) && !have_shared_x {
+            self.push(module, "linear_input",
+                      rows * din as f64 * c.act_bytes());
+            stored = true;
+        }
+        if matches!(mode, LinMode::Lora | LinMode::LoraFa) {
+            self.push(module, "lora_u",
+                      rows * c.lora_rank as f64 * c.act_bytes());
+        }
+        stored
+    }
+
+    fn activation(&mut self, module: &str, cols: usize) {
+        let c = self.cfg;
+        let n = c.rows() as f64 * cols as f64;
+        match c.act {
+            ActKind::Gelu | ActKind::Silu => {
+                self.push(module, "act_full", n * c.act_bytes());
+            }
+            ActKind::Relu => self.push(module, "act_codes", n / 8.0),
+            ActKind::ReGelu2 | ActKind::ReGelu2d | ActKind::ReSilu2 => {
+                self.push(module, "act_codes", n / 4.0);
+            }
+            ActKind::MesaGelu8 | ActKind::MesaSilu8 => {
+                self.push(module, "act_q8", n);
+                self.push(module, "act_scale", c.rows() as f64 * 4.0);
+            }
+        }
+    }
+
+    fn attn_block(&mut self, i: usize) {
+        let c = self.cfg;
+        let m = format!("block{i}.attn");
+        let rows = c.rows() as f64;
+        let d = c.dim as f64;
+        let shared = self.norm(&format!("{m}.norm"), c.dim);
+        let mut sh = shared;
+        for w in ["q", "k", "v"] {
+            sh = self.linear(&format!("{m}.{w}"), w, c.dim, sh);
+        }
+        // attention saves q,k,v (+o and the logsumexp rows in Paper mode,
+        // matching the FlashAttention residual set of Figs 5/6)
+        let qkv = match c.mode {
+            Mode::Paper => 4.0,
+            Mode::Tape => 3.0,
+        };
+        self.push(&m, "attn_qkv", qkv * rows * d * c.act_bytes());
+        if c.mode == Mode::Paper {
+            self.push(&m, "attn_out", rows * c.n_heads as f64 * 4.0); // l
+        }
+        self.linear(&format!("{m}.proj"), "proj", c.dim, false);
+    }
+
+    fn mlp_block(&mut self, i: usize) {
+        let c = self.cfg;
+        let m = format!("block{i}.mlp");
+        let h = c.hidden();
+        let shared = self.norm(&format!("{m}.norm"), c.dim);
+        match c.arch {
+            Arch::Vit | Arch::Roberta => {
+                self.linear(&format!("{m}.fc1"), "fc", c.dim, shared);
+                self.activation(&format!("{m}.act"), h);
+                self.linear(&format!("{m}.fc2"), "fc", h, false);
+            }
+            Arch::Llama => {
+                let sh = self.linear(&format!("{m}.fc1"), "fc", c.dim,
+                                     shared);
+                self.linear(&format!("{m}.fc2"), "fc", c.dim, sh);
+                self.activation(&format!("{m}.act"), h);
+                // gate multiply stores both operands (Fig 6 "+5.4")
+                let rows = c.rows() as f64;
+                self.push(&m, "gate_operand",
+                          2.0 * rows * h as f64 * c.act_bytes());
+                self.linear(&format!("{m}.fc3"), "fc", h, false);
+            }
+        }
+    }
+
+    fn embed(&mut self) {
+        let c = self.cfg;
+        if c.arch == Arch::Vit && c.tuning == Tuning::Full {
+            self.push("embed.proj", "linear_input",
+                      c.rows() as f64 * c.patch_dim as f64 * c.act_bytes());
+        }
+        // token embeddings: gather, no residual
+    }
+
+    fn head(&mut self) {
+        let c = self.cfg;
+        let b = c.batch as f64;
+        let shared = self.norm("head.norm", c.dim);
+        match c.arch {
+            Arch::Vit | Arch::Roberta => {
+                // pooled input + logits
+                self.push("head.fc", "head_input",
+                          b * c.dim as f64 * c.act_bytes());
+                self.push("head", "head_input",
+                          b * c.n_classes as f64 * c.act_bytes());
+            }
+            Arch::Llama => {
+                if !shared {
+                    self.push("head", "head_input",
+                              c.rows() as f64 * c.dim as f64
+                                  * c.act_bytes());
+                }
+                self.push("head", "head_input",
+                          c.rows() as f64 * c.vocab as f64 * c.act_bytes());
+            }
+        }
+    }
+}
+
+/// Residual entries for one (attn + mlp) block pair.
+pub fn block_entries(cfg: &MemCfg, i: usize) -> Vec<Entry> {
+    let mut acc = Acc { cfg, out: Vec::new() };
+    acc.attn_block(i);
+    acc.mlp_block(i);
+    acc.out
+}
+
+/// Residual entries for the whole model.
+pub fn model_entries(cfg: &MemCfg) -> Vec<Entry> {
+    let mut acc = Acc { cfg, out: Vec::new() };
+    acc.embed();
+    if cfg.ckpt {
+        // gradient checkpointing: one block input per block
+        for i in 0..cfg.depth * 2 {
+            acc.push(&format!("block{}", i / 2), "ckpt_input",
+                     cfg.rows() as f64 * cfg.dim as f64 * cfg.act_bytes());
+        }
+    } else {
+        for i in 0..cfg.depth {
+            acc.attn_block(i);
+            acc.mlp_block(i);
+        }
+    }
+    acc.head();
+    acc.out
+}

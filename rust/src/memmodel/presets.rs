@@ -1,0 +1,104 @@
+//! Paper-scale architecture configs for extrapolation (Tables 1–4, 9–12).
+
+use super::ops::{ActKind, Arch, MemCfg, Mode, NormKind, Tuning};
+
+pub fn vit_base(batch: usize, tuning: Tuning, act: ActKind,
+                norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Vit, dim: 768, depth: 12, n_heads: 12, mlp_ratio: 4.0,
+        n_tokens: 197, patch_dim: 768, n_classes: 100, vocab: 0,
+        lora_rank: 4, batch, tuning, act, norm, mode: Mode::Paper,
+        ckpt: false,
+    }
+}
+
+pub fn vit_large(batch: usize, tuning: Tuning, act: ActKind,
+                 norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Vit, dim: 1024, depth: 24, n_heads: 16, mlp_ratio: 4.0,
+        n_tokens: 197, patch_dim: 1024, n_classes: 100, vocab: 0,
+        lora_rank: 4, batch, tuning, act, norm, mode: Mode::Paper,
+        ckpt: false,
+    }
+}
+
+pub fn llama7b(batch: usize, seq: usize, act: ActKind,
+               norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Llama, dim: 4096, depth: 32, n_heads: 32,
+        mlp_ratio: 11008.0 / 4096.0, n_tokens: seq, patch_dim: 0,
+        n_classes: 0, vocab: 32000, lora_rank: 64, batch,
+        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper, ckpt: false,
+    }
+}
+
+pub fn llama13b(batch: usize, seq: usize, act: ActKind,
+                norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Llama, dim: 5120, depth: 40, n_heads: 40,
+        mlp_ratio: 13824.0 / 5120.0, n_tokens: seq, patch_dim: 0,
+        n_classes: 0, vocab: 32000, lora_rank: 64, batch,
+        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper, ckpt: false,
+    }
+}
+
+pub fn roberta_base(batch: usize, seq: usize, act: ActKind,
+                    norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Roberta, dim: 768, depth: 12, n_heads: 12,
+        mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
+        vocab: 50265, lora_rank: 64, batch, tuning: Tuning::LoraAll, act,
+        norm, mode: Mode::Paper, ckpt: false,
+    }
+}
+
+/// Swin-T proxy (Table 10): hierarchical windows approximated by the
+/// dominant stage (stage-3: dim 384, 14×14 tokens per window batch).
+pub fn swin_tiny(batch: usize, act: ActKind, norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Vit, dim: 384, depth: 12, n_heads: 12, mlp_ratio: 4.0,
+        n_tokens: 392, patch_dim: 384, n_classes: 20, vocab: 0,
+        lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
+        mode: Mode::Paper, ckpt: false,
+    }
+}
+
+pub fn bert_base(batch: usize, seq: usize, act: ActKind,
+                 norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Roberta, dim: 768, depth: 12, n_heads: 12,
+        mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
+        vocab: 30522, lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
+        mode: Mode::Paper, ckpt: false,
+    }
+}
+
+pub fn bert_large(batch: usize, seq: usize, act: ActKind,
+                  norm: NormKind) -> MemCfg {
+    MemCfg {
+        arch: Arch::Roberta, dim: 1024, depth: 24, n_heads: 16,
+        mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
+        vocab: 30522, lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
+        mode: Mode::Paper, ckpt: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::total_bytes;
+
+    #[test]
+    fn vit_l_uses_more_than_vit_b() {
+        let b = vit_base(64, Tuning::LoraQv, ActKind::Gelu, NormKind::Ln);
+        let l = vit_large(64, Tuning::LoraQv, ActKind::Gelu, NormKind::Ln);
+        assert!(total_bytes(&l) > 2 * total_bytes(&b));
+    }
+
+    #[test]
+    fn llama13b_bigger_than_7b() {
+        let a = llama7b(4, 512, ActKind::Silu, NormKind::Rms);
+        let b = llama13b(4, 512, ActKind::Silu, NormKind::Rms);
+        assert!(total_bytes(&b) > total_bytes(&a));
+    }
+}

@@ -1,0 +1,150 @@
+//! Peak-memory estimation and table/figure renderers.
+//!
+//! Peak fine-tuning memory ≈ weights + trainable grads + optimizer state
+//! + activations (this model) + framework workspace. The workspace terms
+//! are calibrated constants; the *activation* term is the paper's subject.
+
+use super::ops::{Arch, MemCfg, Tuning};
+use super::{by_category, total_bytes};
+
+/// Parameter count of the configured architecture.
+pub fn param_count(cfg: &MemCfg) -> u64 {
+    let d = cfg.dim as u64;
+    let h = cfg.hidden() as u64;
+    let per_block = 4 * d * d          // qkv + proj
+        + match cfg.arch {
+            Arch::Llama => 3 * d * h,  // up, gate, down
+            _ => 2 * d * h + d + h,    // fc1 + fc2 + biases
+        }
+        + 4 * d; // norms + misc
+    let embed = match cfg.arch {
+        Arch::Vit => cfg.patch_dim as u64 * d + cfg.n_tokens as u64 * d,
+        _ => cfg.vocab as u64 * d,
+    };
+    let head = match cfg.arch {
+        Arch::Llama => cfg.vocab as u64 * d,
+        _ => d * cfg.n_classes as u64,
+    };
+    embed + per_block * cfg.depth as u64 + head
+}
+
+/// Trainable parameter count under the tuning mode.
+pub fn trainable_count(cfg: &MemCfg) -> u64 {
+    let d = cfg.dim as u64;
+    let r = cfg.lora_rank as u64;
+    let h = cfg.hidden() as u64;
+    match cfg.tuning {
+        Tuning::Full => param_count(cfg),
+        Tuning::Frozen => 0,
+        Tuning::LoraQv | Tuning::LoraFaQv => {
+            // q and v adapters per attn block (+ head classifier)
+            cfg.depth as u64 * 2 * (r * d + d * r)
+                + d * cfg.n_classes.max(1) as u64
+        }
+        Tuning::LoraAll | Tuning::LoraFaAll => {
+            let per_attn = 4 * (r * d + d * r);
+            let per_mlp = match cfg.arch {
+                Arch::Llama => (r * d + h * r) * 2 + (r * h + d * r),
+                _ => (r * d + h * r) + (r * h + d * r),
+            };
+            cfg.depth as u64 * (per_attn + per_mlp)
+                + d * cfg.n_classes.max(1) as u64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PeakEstimate {
+    pub weights: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub total: u64,
+}
+
+/// Peak memory estimate in bytes.
+/// `weight_bits`: 16 (AMP), 32 (fp32), or ~4.5 (QLoRA NF4).
+pub fn peak(cfg: &MemCfg, weight_bits: f64) -> PeakEstimate {
+    let weights =
+        (param_count(cfg) as f64 * weight_bits / 8.0).round() as u64;
+    let trainable = trainable_count(cfg);
+    let grads = trainable * 4;
+    let optimizer = trainable * 8; // AdamW m+v (fp32)
+    let activations = total_bytes(cfg);
+    PeakEstimate {
+        weights,
+        grads,
+        optimizer,
+        activations,
+        total: weights + grads + optimizer + activations,
+    }
+}
+
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+}
+
+/// Render the Figure 2 composition pie as text rows.
+pub fn composition_rows(cfg: &MemCfg) -> Vec<(String, f64)> {
+    let cats = by_category(cfg);
+    let total: u64 = cats.iter().map(|c| c.1).sum();
+    cats.into_iter()
+        .map(|(name, b)| (name, 100.0 * b as f64 / total as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::ops::{ActKind, NormKind};
+    use crate::memmodel::presets;
+
+    #[test]
+    fn vit_base_param_count_ballpark() {
+        // ViT-B ≈ 86M params
+        let cfg = presets::vit_base(64, Tuning::Full, ActKind::Gelu,
+                                    NormKind::Ln);
+        let p = param_count(&cfg);
+        assert!(p > 80_000_000 && p < 95_000_000, "{p}");
+    }
+
+    #[test]
+    fn llama7b_param_count_ballpark() {
+        let cfg = presets::llama7b(4, 512, ActKind::Silu, NormKind::Rms);
+        let p = param_count(&cfg);
+        assert!(p > 6_000_000_000 && p < 7_500_000_000, "{p}");
+    }
+
+    #[test]
+    fn lora_trainable_tiny_fraction() {
+        let cfg = presets::vit_base(64, Tuning::LoraQv, ActKind::Gelu,
+                                    NormKind::Ln);
+        let t = trainable_count(&cfg);
+        let p = param_count(&cfg);
+        assert!((t as f64) / (p as f64) < 0.01, "{t}/{p}");
+    }
+
+    #[test]
+    fn peak_is_dominated_by_activations_for_lora() {
+        let cfg = presets::vit_base(64, Tuning::LoraQv, ActKind::Gelu,
+                                    NormKind::Ln);
+        let est = peak(&cfg, 16.0);
+        assert!(est.activations > est.grads + est.optimizer);
+        assert_eq!(est.total,
+                   est.weights + est.grads + est.optimizer
+                       + est.activations);
+    }
+
+    #[test]
+    fn composition_sums_to_100() {
+        let cfg = presets::vit_base(64, Tuning::LoraQv, ActKind::Gelu,
+                                    NormKind::Ln);
+        let rows = composition_rows(&cfg);
+        let s: f64 = rows.iter().map(|r| r.1).sum();
+        assert!((s - 100.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,108 @@
+//! 2-bit / 1-bit residual packing — rust mirror of the Pallas kernels'
+//! byte layout (4 codes/byte resp. 8 signs/byte, little-endian in-byte).
+//! Used by the memory accounting, the quant baselines, and as the oracle
+//! for the in-tree property tests.
+
+/// Pack 2-bit codes (values 0..=3), 4 per byte. Length padded with zeros.
+pub fn pack2(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c < 4);
+        out[i / 4] |= (c & 3) << (2 * (i % 4));
+    }
+    out
+}
+
+pub fn unpack2(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push((packed[i / 4] >> (2 * (i % 4))) & 3);
+    }
+    out
+}
+
+/// Pack 1-bit signs, 8 per byte.
+pub fn pack1(bits: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; bits.len().div_ceil(8)];
+    for (i, &b) in bits.iter().enumerate() {
+        debug_assert!(b < 2);
+        out[i / 8] |= (b & 1) << (i % 8);
+    }
+    out
+}
+
+pub fn unpack1(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push((packed[i / 8] >> (i % 8)) & 1);
+    }
+    out
+}
+
+/// Bucketize f32s against 3 thresholds → 2-bit codes (ReGELU2 encode).
+pub fn bucketize2(xs: &[f32], c: [f64; 3]) -> Vec<u8> {
+    xs.iter()
+        .map(|&x| {
+            let x = x as f64;
+            (x >= c[0]) as u8 + (x >= c[1]) as u8 + (x >= c[2]) as u8
+        })
+        .collect()
+}
+
+/// Apply the 4-entry slope table to packed codes (ReGELU2 decode-bwd).
+pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
+    let s: [f32; 4] = [slopes[0] as f32, slopes[1] as f32,
+                       slopes[2] as f32, slopes[3] as f32];
+    gy.iter()
+        .enumerate()
+        .map(|(i, &g)| g * s[((packed[i / 4] >> (2 * (i % 4))) & 3) as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack2_roundtrip_odd_lengths() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 3, 4, 5, 17, 64, 1001] {
+            let codes: Vec<u8> =
+                (0..n).map(|_| rng.below(4) as u8).collect();
+            let packed = pack2(&codes);
+            assert_eq!(packed.len(), n.div_ceil(4));
+            assert_eq!(unpack2(&packed, n), codes);
+        }
+    }
+
+    #[test]
+    fn pack1_roundtrip() {
+        let mut rng = Rng::new(1);
+        for n in [1, 7, 8, 9, 250] {
+            let bits: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+            assert_eq!(unpack1(&pack1(&bits), n), bits);
+        }
+    }
+
+    #[test]
+    fn bucketize_matches_kernel_semantics() {
+        let c = crate::coeffs::funcs::PAPER_GELU.c;
+        let xs = [-10.0f32, -1.0, 0.5, 10.0];
+        assert_eq!(bucketize2(&xs, c), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn apply_slopes_matches_scalar() {
+        let comb = crate::coeffs::funcs::PAPER_GELU;
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..97).map(|_| rng.normal_f32() * 3.0).collect();
+        let gy: Vec<f32> = (0..97).map(|_| rng.normal_f32()).collect();
+        let packed = pack2(&bucketize2(&xs, comb.c));
+        let got = apply_slopes(&packed, &gy, comb.slopes());
+        for ((x, g), got) in xs.iter().zip(&gy).zip(&got) {
+            let want = *g as f64 * comb.derivative(*x as f64);
+            assert!((*got as f64 - want).abs() < 1e-6);
+        }
+    }
+}

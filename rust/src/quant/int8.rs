@@ -1,0 +1,67 @@
+//! Per-row symmetric int8 activation quantization — rust mirror of the
+//! Mesa-baseline Pallas kernel (`python/compile/kernels/quant8.py`).
+
+/// Quantize rows of length `cols`. Returns (q, per-row scale).
+pub fn quant_rows(x: &[f32], cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len() % cols, 0);
+    let rows = x.len() / cols;
+    let mut q = vec![0i8; x.len()];
+    let mut scales = vec![0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let amax = row.iter().fold(1e-12f32, |m, v| m.max(v.abs()));
+        let scale = amax / 127.0;
+        scales[r] = scale;
+        for (i, v) in row.iter().enumerate() {
+            q[r * cols + i] = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+pub fn dequant_rows(q: &[i8], scales: &[f32], cols: usize) -> Vec<f32> {
+    q.iter()
+        .enumerate()
+        .map(|(i, &v)| v as f32 * scales[i / cols])
+        .collect()
+}
+
+/// Bytes stored per element by this codec (8-bit code + amortized scale).
+pub fn bits_per_elem(cols: usize) -> f64 {
+    8.0 + 32.0 / cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(3);
+        let cols = 64;
+        let x: Vec<f32> = (0..cols * 8).map(|_| rng.normal_f32()).collect();
+        let (q, s) = quant_rows(&x, cols);
+        let xhat = dequant_rows(&q, &s, cols);
+        for (r, chunk) in x.chunks(cols).enumerate() {
+            let amax = chunk.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let bound = amax / 127.0 * 0.5 + 1e-7;
+            for (i, v) in chunk.iter().enumerate() {
+                assert!((v - xhat[r * cols + i]).abs() <= bound);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_are_exact() {
+        let (q, s) = quant_rows(&[0.0; 16], 8);
+        let xhat = dequant_rows(&q, &s, 8);
+        assert!(xhat.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((bits_per_elem(64) - 8.5).abs() < 1e-9);
+        assert!(bits_per_elem(1024) < 8.04);
+    }
+}

@@ -1,0 +1,5 @@
+//! Quantization substrates: per-row symmetric int8 (Mesa-like activation
+//! compression baseline) and NF4 (QLoRA weight storage simulation).
+
+pub mod int8;
+pub mod nf4;

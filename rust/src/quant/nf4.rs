@@ -1,0 +1,124 @@
+//! NF4 (NormalFloat-4) block-wise quantization — QLoRA's weight storage
+//! format (Dettmers et al., 2023), used by the Table 3 simulation to
+//! account for frozen-weight memory and to exercise the paper's remark
+//! about transposing merged weights to preserve the block-wise
+//! quantization conditional distribution.
+
+/// The 16 NF4 levels: quantiles of N(0,1) normalized to [-1, 1]
+/// (values from the QLoRA reference implementation).
+pub const NF4_LEVELS: [f32; 16] = [
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+];
+
+/// Block-wise NF4 quantization: per-block absmax scale + 4-bit codes
+/// packed 2 per byte.
+pub struct Nf4Tensor {
+    pub codes: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+    pub block: usize,
+}
+
+pub fn quantize(x: &[f32], block: usize) -> Nf4Tensor {
+    let n_blocks = x.len().div_ceil(block);
+    let mut scales = Vec::with_capacity(n_blocks);
+    let mut codes = vec![0u8; x.len().div_ceil(2)];
+    for b in 0..n_blocks {
+        let lo = b * block;
+        let hi = (lo + block).min(x.len());
+        let amax = x[lo..hi].iter().fold(1e-12f32, |m, v| m.max(v.abs()));
+        scales.push(amax);
+        for i in lo..hi {
+            let v = x[i] / amax;
+            let code = nearest_level(v);
+            codes[i / 2] |= code << (4 * (i % 2));
+        }
+    }
+    Nf4Tensor { codes, scales, len: x.len(), block }
+}
+
+fn nearest_level(v: f32) -> u8 {
+    let mut best = 0u8;
+    let mut bd = f32::MAX;
+    for (i, l) in NF4_LEVELS.iter().enumerate() {
+        let d = (v - l).abs();
+        if d < bd {
+            bd = d;
+            best = i as u8;
+        }
+    }
+    best
+}
+
+pub fn dequantize(t: &Nf4Tensor) -> Vec<f32> {
+    (0..t.len)
+        .map(|i| {
+            let code = (t.codes[i / 2] >> (4 * (i % 2))) & 0xf;
+            NF4_LEVELS[code as usize] * t.scales[i / t.block]
+        })
+        .collect()
+}
+
+/// Stored bits per element (4-bit code + amortized f32 block scale).
+pub fn bits_per_elem(block: usize) -> f64 {
+    4.0 + 32.0 / block as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn levels_are_sorted_symmetricish() {
+        for w in NF4_LEVELS.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(NF4_LEVELS[0], -1.0);
+        assert_eq!(NF4_LEVELS[15], 1.0);
+        assert_eq!(NF4_LEVELS[7], 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_reasonable_for_gaussian() {
+        // NF4 is optimal for N(0,1) data: rel RMS error ~ 0.07-0.12
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..4096).map(|_| rng.normal_f32()).collect();
+        let t = quantize(&x, 64);
+        let xhat = dequantize(&t);
+        let mse: f64 = x.iter().zip(&xhat)
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+            / x.len() as f64;
+        let var: f64 = x.iter().map(|a| (*a as f64).powi(2)).sum::<f64>()
+            / x.len() as f64;
+        let rel = (mse / var).sqrt();
+        assert!(rel < 0.15, "{rel}");
+    }
+
+    #[test]
+    fn block_boundary_handling() {
+        let x: Vec<f32> = (0..70).map(|i| (i as f32 - 35.0) / 10.0).collect();
+        let t = quantize(&x, 64);
+        assert_eq!(t.scales.len(), 2);
+        let xhat = dequantize(&t);
+        assert_eq!(xhat.len(), 70);
+    }
+
+    #[test]
+    fn exact_at_block_absmax() {
+        // the absmax element maps to ±1 level → exact reconstruction
+        let x = vec![0.1f32, -2.0, 0.5, 0.3];
+        let t = quantize(&x, 4);
+        let xhat = dequantize(&t);
+        assert!((xhat[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((bits_per_elem(64) - 4.5).abs() < 1e-9);
+    }
+}

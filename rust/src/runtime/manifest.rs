@@ -1,0 +1,223 @@
+//! Artifact manifest: the ABI contract emitted by `python -m compile.aot`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub trainable: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ResInfo {
+    pub name: String,
+    pub kind: String,
+    pub module: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub bits_per_elem: f64,
+    pub bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchInfo {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct MergeOp {
+    pub norm: String,
+    pub linears: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SelfCheck {
+    pub loss: f64,
+    pub metric: f64,
+    pub grad_l2: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub arch: String,
+    pub tuning: String,
+    pub activation: String,
+    pub norm: String,
+    pub dim: usize,
+    pub depth: usize,
+    pub n_heads: usize,
+    pub n_tokens: usize,
+    pub batch: usize,
+    pub n_classes: usize,
+    pub vocab: usize,
+    pub mlp_ratio: f64,
+    pub lora_rank: usize,
+    pub patch_dim: usize,
+    pub ckpt: bool,
+    pub params: Vec<ParamInfo>,
+    pub x: BatchInfo,
+    pub y: BatchInfo,
+    pub residuals: Vec<ResInfo>,
+    pub residual_bytes_total: u64,
+    pub merges: Vec<MergeOp>,
+    pub selfcheck: SelfCheck,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Result<Vec<_>>>()?)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let j = Json::parse(&text)?;
+        let cfg = j.get("config")?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: shape_of(p.get("shape")?)?,
+                    trainable: p.get("trainable")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let residuals = j
+            .get("residuals")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(ResInfo {
+                    name: r.get("name")?.as_str()?.to_string(),
+                    kind: r.get("kind")?.as_str()?.to_string(),
+                    module: r.get("module")?.as_str()?.to_string(),
+                    shape: shape_of(r.get("shape")?)?,
+                    dtype: DType::from_manifest(r.get("dtype")?.as_str()?)?,
+                    bits_per_elem: r.get("bits_per_elem")?.as_f64()?,
+                    bytes: r.get("bytes")?.as_f64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let batch = j.get("batch")?;
+        let binfo = |k: &str| -> Result<BatchInfo> {
+            let b = batch.get(k)?;
+            Ok(BatchInfo {
+                shape: shape_of(b.get("shape")?)?,
+                dtype: DType::from_manifest(b.get("dtype")?.as_str()?)?,
+            })
+        };
+        let merges = j
+            .get("merges")?
+            .as_arr()?
+            .iter()
+            .map(|m| {
+                Ok(MergeOp {
+                    norm: m.get("norm")?.as_str()?.to_string(),
+                    linears: m
+                        .get("linears")?
+                        .as_arr()?
+                        .iter()
+                        .map(|l| Ok(l.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let sc = j.get("selfcheck")?;
+        let selfcheck = SelfCheck {
+            loss: sc.get("loss")?.as_f64()?,
+            metric: sc.get("metric")?.as_f64()?,
+            grad_l2: sc
+                .get("grad_l2")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(Manifest {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            arch: cfg.get("arch")?.as_str()?.to_string(),
+            tuning: cfg.get("tuning")?.as_str()?.to_string(),
+            activation: cfg.get("activation")?.as_str()?.to_string(),
+            norm: cfg.get("norm")?.as_str()?.to_string(),
+            dim: cfg.get("dim")?.as_usize()?,
+            depth: cfg.get("depth")?.as_usize()?,
+            n_heads: cfg.get("n_heads")?.as_usize()?,
+            n_tokens: cfg.get("n_tokens")?.as_usize()?,
+            batch: cfg.get("batch")?.as_usize()?,
+            n_classes: cfg.get("n_classes")?.as_usize()?,
+            vocab: cfg.get("vocab")?.as_usize()?,
+            mlp_ratio: cfg.get("mlp_ratio")?.as_f64()?,
+            lora_rank: cfg.get("lora_rank")?.as_usize()?,
+            patch_dim: cfg.get("patch_dim")?.as_usize()?,
+            ckpt: cfg.get("ckpt")?.as_bool()?,
+            params,
+            x: binfo("x")?,
+            y: binfo("y")?,
+            residuals,
+            residual_bytes_total: j
+                .get("residual_bytes_total")?
+                .as_f64()? as u64,
+            merges,
+            selfcheck,
+        })
+    }
+
+    pub fn trainable_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.trainable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Load params.bin (f32 LE, concatenated in manifest order).
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<Tensor>> {
+        let bytes = std::fs::read(dir.join("params.bin"))?;
+        let mut off = 0usize;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let n: usize = p.shape.iter().product();
+            let nb = n * 4;
+            anyhow::ensure!(off + nb <= bytes.len(), "params.bin too small");
+            let mut t = Tensor::zeros(&p.shape, DType::F32);
+            t.data.copy_from_slice(&bytes[off..off + nb]);
+            off += nb;
+            out.push(t);
+        }
+        anyhow::ensure!(off == bytes.len(), "params.bin has trailing bytes");
+        Ok(out)
+    }
+
+    /// Measured per-category residual bytes (the Figure 2 breakdown,
+    /// from the *actual* ABI rather than the analytical model).
+    pub fn residual_bytes_by_kind(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        for r in &self.residuals {
+            match out.iter_mut().find(|(k, _)| *k == r.kind) {
+                Some((_, b)) => *b += r.bytes,
+                None => out.push((r.kind.clone(), r.bytes)),
+            }
+        }
+        out.sort_by(|a, b| b.1.cmp(&a.1));
+        out
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime: load `artifacts/<preset>/{fwd,bwd}.hlo.txt`, compile on
+//! the CPU client, execute from the training hot path.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO *text* interchange (the
+//! text parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits that
+//! xla_extension 0.5.1 would reject), `return_tuple=True` on the python
+//! side, `to_tuple()` here.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::Manifest;
+pub use tensor::{DType, Tensor};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+}
+
+pub struct FwdOut {
+    pub loss: f32,
+    pub metric: f32,
+    pub residuals: Vec<Tensor>,
+}
+
+/// A compiled fwd/bwd pair plus its manifest.
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    fwd: xla::PjRtLoadedExecutable,
+    bwd: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Artifact> {
+        let manifest = Manifest::load(dir)?;
+        let fwd = compile(rt, &dir.join("fwd.hlo.txt"))
+            .with_context(|| format!("compiling fwd for {dir:?}"))?;
+        let bwd = compile(rt, &dir.join("bwd.hlo.txt"))
+            .with_context(|| format!("compiling bwd for {dir:?}"))?;
+        Ok(Artifact { dir: dir.to_path_buf(), manifest, fwd, bwd })
+    }
+
+    pub fn load_params(&self) -> Result<Vec<Tensor>> {
+        self.manifest.load_params(&self.dir)
+    }
+
+    /// Forward pass: (params…, x, y) -> (loss, metric, residuals…).
+    pub fn run_fwd(&self, params: &[Tensor], x: &Tensor,
+                   y: &Tensor) -> Result<FwdOut> {
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + 2);
+        for p in params {
+            args.push(p.to_literal()?);
+        }
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        let bufs = self.fwd.execute::<xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let mut outs = tuple.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == 2 + self.manifest.residuals.len(),
+            "fwd arity mismatch: got {}, manifest says {}",
+            outs.len(),
+            2 + self.manifest.residuals.len()
+        );
+        let residuals = outs
+            .split_off(2)
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let metric = outs[1].to_vec::<f32>()?[0];
+        Ok(FwdOut { loss, metric, residuals })
+    }
+
+    /// Backward pass: (params…, residuals…, x, y) -> grads… (trainables).
+    pub fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor],
+                   x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + residuals.len() + 2);
+        for p in params {
+            args.push(p.to_literal()?);
+        }
+        for r in residuals {
+            args.push(r.to_literal()?);
+        }
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        let bufs = self.bwd.execute::<xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let n_train = self.manifest.trainable_indices().len();
+        anyhow::ensure!(
+            outs.len() == n_train,
+            "bwd arity mismatch: got {}, expected {n_train}",
+            outs.len()
+        );
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+pub struct FwdOutLit {
+    pub loss: f32,
+    pub metric: f32,
+    pub residuals: Vec<xla::Literal>,
+    pub residual_bytes: u64,
+}
+
+impl Artifact {
+    /// Literal-resident fast path (EXPERIMENTS.md §Perf L3-1): residuals
+    /// stay as PJRT literals between fwd and bwd — no host Tensor
+    /// materialization. Params are passed as pre-built literals that the
+    /// trainer updates in place after each optimizer step.
+    pub fn run_fwd_lit(&self, params: &[xla::Literal], x: &xla::Literal,
+                       y: &xla::Literal) -> Result<FwdOutLit> {
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(params.len() + 2);
+        args.extend(params.iter());
+        args.push(x);
+        args.push(y);
+        let bufs = self.fwd.execute::<&xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let mut outs = tuple.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2 + self.manifest.residuals.len());
+        let residuals = outs.split_off(2);
+        let residual_bytes =
+            residuals.iter().map(|l| l.size_bytes() as u64).sum();
+        Ok(FwdOutLit {
+            loss: outs[0].to_vec::<f32>()?[0],
+            metric: outs[1].to_vec::<f32>()?[0],
+            residuals,
+            residual_bytes,
+        })
+    }
+
+    pub fn run_bwd_lit(&self, params: &[xla::Literal],
+                       residuals: &[xla::Literal], x: &xla::Literal,
+                       y: &xla::Literal) -> Result<Vec<Tensor>> {
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(params.len() + residuals.len() + 2);
+        args.extend(params.iter());
+        args.extend(residuals.iter());
+        args.push(x);
+        args.push(y);
+        let bufs = self.bwd.execute::<&xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+fn compile(rt: &Runtime, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 path")?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(rt.client.compile(&comp)?)
+}
+
+/// Locate the artifacts directory (repo root or CWD).
+pub fn artifacts_dir() -> PathBuf {
+    for base in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(base);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}

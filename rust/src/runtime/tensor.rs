@@ -1,0 +1,207 @@
+//! Host tensors: dtype-tagged byte buffers bridging manifests, PJRT
+//! literals, and the optimizer's f32 views.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+    I8,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint8" => DType::U8,
+            "int8" => DType::I8,
+            _ => bail!("unsupported dtype {s:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 | DType::I8 => 1,
+        }
+    }
+
+    pub fn primitive(self) -> xla::PrimitiveType {
+        match self {
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::I32 => xla::PrimitiveType::S32,
+            DType::U8 => xla::PrimitiveType::U8,
+            DType::I8 => xla::PrimitiveType::S8,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), dtype, data: vec![0; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], v: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    pub fn from_i32(shape: &[usize], v: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::I32, data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const f32,
+                self.data.len() / 4,
+            )
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.data.as_mut_ptr() as *mut f32,
+                self.data.len() / 4,
+            )
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        assert_eq!(self.dtype, DType::I32);
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const i32,
+                self.data.len() / 4,
+            )
+        }
+    }
+
+    /// Convert to a PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let mut lit = xla::Literal::create_from_shape(
+            self.dtype.primitive(),
+            &self.shape,
+        );
+        match self.dtype {
+            DType::F32 => lit.copy_raw_from::<f32>(self.as_f32())?,
+            DType::I32 => lit.copy_raw_from::<i32>(self.as_i32())?,
+            DType::U8 => lit.copy_raw_from::<u8>(&self.data)?,
+            DType::I8 => lit.copy_raw_from::<i8>(unsafe {
+                std::slice::from_raw_parts(
+                    self.data.as_ptr() as *const i8,
+                    self.data.len(),
+                )
+            })?,
+        }
+        Ok(lit)
+    }
+
+    /// Read a PJRT literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|d| *d as usize).collect();
+        let dtype = match shape.primitive_type() {
+            xla::PrimitiveType::F32 => DType::F32,
+            xla::PrimitiveType::S32 => DType::I32,
+            xla::PrimitiveType::U8 => DType::U8,
+            xla::PrimitiveType::S8 => DType::I8,
+            t => bail!("unsupported literal type {t:?}"),
+        };
+        let mut t = Tensor::zeros(&dims, dtype);
+        match dtype {
+            DType::F32 => lit.copy_raw_to::<f32>(t.as_f32_mut())?,
+            DType::I32 => {
+                let n = t.data.len() / 4;
+                let sl = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        t.data.as_mut_ptr() as *mut i32,
+                        n,
+                    )
+                };
+                lit.copy_raw_to::<i32>(sl)?;
+            }
+            DType::U8 => lit.copy_raw_to::<u8>(&mut t.data)?,
+            DType::I8 => {
+                let sl = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        t.data.as_mut_ptr() as *mut i8,
+                        t.data.len(),
+                    )
+                };
+                lit.copy_raw_to::<i8>(sl)?;
+            }
+        }
+        Ok(t)
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.as_f32().iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_views() {
+        let t = Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.as_f32()[4], 5.0);
+    }
+
+    #[test]
+    fn mutation_via_view() {
+        let mut t = Tensor::zeros(&[4], DType::F32);
+        t.as_f32_mut()[2] = 7.5;
+        assert_eq!(t.as_f32(), &[0.0, 0.0, 7.5, 0.0]);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::U8.size(), 1);
+        assert_eq!(DType::from_manifest("float32").unwrap(), DType::F32);
+        assert!(DType::from_manifest("float64").is_err());
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = Tensor::from_f32(&[2], &[3.0, 4.0]);
+        assert!((t.l2() - 5.0).abs() < 1e-9);
+    }
+}

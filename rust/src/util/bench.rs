@@ -1,0 +1,97 @@
+//! Minimal bench harness for `cargo bench` targets (criterion unavailable).
+//!
+//! Measures wall-clock with warmup, reports mean / p50 / p95 / min in a
+//! criterion-like one-liner. Deterministic iteration counts so runs are
+//! comparable across the perf-pass iterations logged in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup calls, then timed samples.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..2.min(samples) {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples,
+        mean_ns: mean,
+        p50_ns: times[times.len() / 2],
+        p95_ns: times[((times.len() as f64 * 0.95) as usize)
+            .min(times.len() - 1)],
+        min_ns: times[0],
+    };
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let mut acc = 0u64;
+        let r = bench("noop", 50, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

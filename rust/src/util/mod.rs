@@ -1,0 +1,6 @@
+//! In-tree utility substrates (offline testbed: no serde/clap/rand/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,205 @@
+//! Property tests (in-tree harness; proptest unavailable offline):
+//! randomized invariants over the coordinator substrates, seeded and
+//! iterated — shrinkless but deterministic and reproducible.
+
+use ambp::coeffs::funcs::{PAPER_GELU, PAPER_SILU};
+use ambp::coordinator::optimizer::{AdamW, Optimizer, Sgd};
+use ambp::coordinator::scheduler::Schedule;
+use ambp::packing;
+use ambp::quant::{int8, nf4};
+use ambp::runtime::Tensor;
+use ambp::util::json::Json;
+use ambp::util::rng::Rng;
+
+const CASES: usize = 64;
+
+#[test]
+fn prop_pack2_roundtrip() {
+    let mut rng = Rng::new(11);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(4096);
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+        let packed = packing::pack2(&codes);
+        assert_eq!(packed.len(), n.div_ceil(4));
+        assert_eq!(packing::unpack2(&packed, n), codes);
+    }
+}
+
+#[test]
+fn prop_pack1_roundtrip() {
+    let mut rng = Rng::new(12);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(4096);
+        let bits: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+        assert_eq!(packing::unpack1(&packing::pack1(&bits), n), bits);
+    }
+}
+
+#[test]
+fn prop_decode_matches_scalar_derivative() {
+    let mut rng = Rng::new(13);
+    for comb in [PAPER_GELU, PAPER_SILU] {
+        for _ in 0..CASES / 2 {
+            let n = 4 + rng.below(512);
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32() * 5.0).collect();
+            let gy: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let packed = packing::pack2(&packing::bucketize2(&xs, comb.c));
+            let gx = packing::apply_slopes(&packed, &gy, comb.slopes());
+            for i in 0..n {
+                let want = gy[i] as f64 * comb.derivative(xs[i] as f64);
+                assert!((gx[i] as f64 - want).abs() < 1e-5);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_int8_error_bound() {
+    let mut rng = Rng::new(14);
+    for _ in 0..CASES {
+        let cols = 1 + rng.below(256);
+        let rows = 1 + rng.below(8);
+        let x: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.normal_f32() * rng.range(0.1, 100.0) as f32)
+            .collect();
+        let (q, s) = int8::quant_rows(&x, cols);
+        let xh = int8::dequant_rows(&q, &s, cols);
+        for r in 0..rows {
+            let amax = x[r * cols..(r + 1) * cols]
+                .iter()
+                .fold(0f32, |m, v| m.max(v.abs()));
+            for c in 0..cols {
+                let i = r * cols + c;
+                assert!((x[i] - xh[i]).abs() <= amax / 127.0 * 0.5 + 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_nf4_idempotent() {
+    // quantize(dequantize(q)) == q — codes are fixed points
+    let mut rng = Rng::new(15);
+    for _ in 0..16 {
+        let n = 64 + rng.below(512);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let t = nf4::quantize(&x, 64);
+        let xh = nf4::dequantize(&t);
+        let t2 = nf4::quantize(&xh, 64);
+        let xh2 = nf4::dequantize(&t2);
+        for (a, b) in xh.iter().zip(&xh2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(16);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5))
+                .map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.below(5))
+                .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    for _ in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+}
+
+#[test]
+fn prop_sgd_descends_convex() {
+    // on a convex quadratic, each SGD step reduces distance to optimum
+    let mut rng = Rng::new(17);
+    for _ in 0..16 {
+        let n = 1 + rng.below(64);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut p = Tensor::from_f32(
+            &[n], &(0..n).map(|_| rng.normal_f32() * 5.0).collect::<Vec<_>>());
+        let mut opt = Sgd::new(0.0);
+        let mut prev = dist(&p, &target);
+        for _ in 0..20 {
+            let g: Vec<f32> = p.as_f32().iter().zip(&target)
+                .map(|(a, b)| a - b).collect();
+            let g = Tensor::from_f32(&[n], &g);
+            opt.step(&mut [&mut p], &[g], 0.1);
+            let d = dist(&p, &target);
+            assert!(d <= prev + 1e-6);
+            prev = d;
+        }
+    }
+}
+
+fn dist(p: &Tensor, t: &[f32]) -> f64 {
+    p.as_f32().iter().zip(t)
+        .map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+#[test]
+fn prop_adamw_bounded_step_size() {
+    // |Δp| ≤ lr · (1/(1−β1)) approx bound per step (no decay)
+    let mut rng = Rng::new(18);
+    for _ in 0..16 {
+        let n = 1 + rng.below(32);
+        let mut p = Tensor::from_f32(&[n], &vec![0.0; n]);
+        let mut opt = AdamW::new(0.0);
+        let lr = 0.01f32;
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..n)
+                .map(|_| rng.normal_f32() * 100.0).collect();
+            let before = p.as_f32().to_vec();
+            opt.step(&mut [&mut p],
+                     &[Tensor::from_f32(&[n], &g)], lr);
+            for (b, a) in before.iter().zip(p.as_f32()) {
+                assert!((a - b).abs() <= lr * 12.0, "step too large");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_bounded_by_base() {
+    let mut rng = Rng::new(19);
+    for _ in 0..CASES {
+        let total = 10 + rng.below(500);
+        let base = rng.range(1e-5, 1.0) as f32;
+        for s in [
+            Schedule::Constant,
+            Schedule::WarmupCosine { warmup: total / 10, warmup_init: 0.0 },
+            Schedule::WarmupLinear { warmup_frac: 0.1 },
+        ] {
+            for step in 0..total {
+                let lr = s.lr(base, step, total);
+                assert!(lr >= 0.0 && lr <= base * 1.0001);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rng_shuffle_uniform_first_element() {
+    // coarse uniformity: each element appears first ~equally often
+    let mut rng = Rng::new(20);
+    let k = 8;
+    let mut counts = vec![0usize; k];
+    let trials = 8000;
+    for _ in 0..trials {
+        let mut v: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut v);
+        counts[v[0]] += 1;
+    }
+    let expect = trials as f64 / k as f64;
+    for c in counts {
+        assert!((c as f64 - expect).abs() < expect * 0.2, "{c}");
+    }
+}
