@@ -3,17 +3,23 @@
 //! fwd/bwd step latency per variant (Tables 1–4 throughput columns),
 //! packing/codec microbenches, optimizer step, data synthesis.
 //!
-//!   make artifacts && cargo bench --bench hotpath
+//! Emits `BENCH_hotpath.json` (`name → mean ns/iter`) at the repo root
+//! so the perf trajectory is diffable across PRs.
+//!
+//!   cargo bench --bench hotpath
 
 use ambp::coordinator::optimizer::{AdamW, Optimizer};
 use ambp::data::synth_images::ImageTask;
 use ambp::packing;
 use ambp::quant::{int8, nf4};
-use ambp::runtime::{Artifact, Runtime, Tensor};
-use ambp::util::bench::{bench, black_box};
+use ambp::runtime::{load_or_synth, Runtime, Tensor};
+use ambp::util::bench::{bench, black_box, repo_root, write_json,
+                        BenchResult};
 use ambp::util::rng::Rng;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     println!("== packing / codec microbenches (1M elements) ==");
     let mut rng = Rng::new(0);
     let xs: Vec<f32> = (0..1 << 20).map(|_| rng.normal_f32() * 3.0).collect();
@@ -21,72 +27,70 @@ fn main() {
     let comb = ambp::coeffs::funcs::PAPER_GELU;
     let codes = packing::bucketize2(&xs, comb.c);
     let packed = packing::pack2(&codes);
-    bench("bucketize2 (encode)", 20, || {
+    results.push(bench("bucketize2 (encode)", 20, || {
         black_box(packing::bucketize2(black_box(&xs), comb.c));
-    });
-    bench("pack2", 20, || {
+    }));
+    results.push(bench("pack2", 20, || {
         black_box(packing::pack2(black_box(&codes)));
-    });
-    bench("apply_slopes (decode-bwd)", 20, || {
+    }));
+    results.push(bench("apply_slopes (decode-bwd)", 20, || {
         black_box(packing::apply_slopes(black_box(&packed), &gy,
                                         comb.slopes()));
-    });
-    bench("int8 quant_rows (Mesa baseline)", 20, || {
+    }));
+    results.push(bench("int8 quant_rows (Mesa baseline)", 20, || {
         black_box(int8::quant_rows(black_box(&xs), 1024));
-    });
-    bench("nf4 quantize (QLoRA weights)", 5, || {
+    }));
+    results.push(bench("nf4 quantize (QLoRA weights)", 5, || {
         black_box(nf4::quantize(black_box(&xs), 64));
-    });
+    }));
 
     println!("\n== optimizer step (1M params) ==");
     let mut p = Tensor::from_f32(&[1 << 20], &xs);
     let g = Tensor::from_f32(&[1 << 20], &gy);
     let mut opt = AdamW::new(0.01);
-    bench("adamw step 1M", 20, || {
+    results.push(bench("adamw step 1M", 20, || {
         opt.step(&mut [&mut p], std::slice::from_ref(&g), 1e-3);
-    });
+    }));
 
     println!("\n== data pipeline ==");
     let task = ImageTask::new(10, 64, 48, 0.5, 0);
-    bench("synth image batch b=16", 50, || {
+    results.push(bench("synth image batch b=16", 50, || {
         black_box(task.batch(0, 16));
-    });
+    }));
 
-    println!("\n== end-to-end train step (PJRT fwd+bwd), per variant ==");
-    let rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("PJRT unavailable: {e}");
-            return;
-        }
-    };
+    println!("\n== end-to-end train step (native fwd+bwd), per variant ==");
+    let rt = Runtime::cpu().expect("native runtime");
     for preset in [
         "vitt_loraqv_gelu_ln",
         "vitt_loraqv_regelu2_msln",
-        "vitt_loraqv_mesa_mesaln",
-        "vitt_loraqv_gelu_ln_ckpt",
+        "vitt_full_gelu_ln",
+        "vitt_full_regelu2_msln",
         "llama_loraall_silu_rms",
         "llama_loraall_resilu2_msrms",
     ] {
-        let dir = ambp::runtime::artifacts_dir().join(preset);
-        if !dir.join("manifest.json").is_file() {
-            println!("{preset:<44} [artifact not built — make artifacts]");
-            continue;
-        }
-        let art = Artifact::load(&rt, &dir).expect("load artifact");
+        let art = match load_or_synth(&rt, preset) {
+            Ok(a) => a,
+            Err(e) => {
+                println!("{preset:<44} [unavailable: {e}]");
+                continue;
+            }
+        };
         let params = art.load_params().expect("params");
-        let m = &art.manifest;
-        let (x, y) = make_batch(m);
-        bench(&format!("{preset} fwd"), 10, || {
+        let (x, y) = make_batch(&art.manifest);
+        results.push(bench(&format!("{preset} fwd"), 10, || {
             black_box(art.run_fwd(&params, &x, &y).expect("fwd"));
-        });
+        }));
         let out = art.run_fwd(&params, &x, &y).expect("fwd");
-        bench(&format!("{preset} bwd"), 10, || {
+        results.push(bench(&format!("{preset} bwd"), 10, || {
             black_box(
                 art.run_bwd(&params, &out.residuals, &x, &y).expect("bwd"),
             );
-        });
+        }));
     }
+
+    let out_path = repo_root().join("BENCH_hotpath.json");
+    write_json(&results, &out_path).expect("write BENCH_hotpath.json");
+    println!("\nwrote {} entries to {:?}", results.len(), out_path);
 }
 
 fn make_batch(m: &ambp::runtime::Manifest) -> (Tensor, Tensor) {

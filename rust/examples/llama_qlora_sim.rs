@@ -3,12 +3,11 @@
 //! instruction corpus, with NF4 weight-storage accounting, comparing
 //! {SiLU, RMSNorm} against {ReSiLU2, MS-RMSNorm}.
 //!
-//!   make artifacts && cargo run --release --example llama_qlora_sim \
-//!       [-- --steps 120]
+//!   cargo run --release --example llama_qlora_sim [-- --steps 120]
 
 use ambp::coordinator::{TrainCfg, Trainer};
 use ambp::quant::nf4;
-use ambp::runtime::{Artifact, Runtime};
+use ambp::runtime::{load_or_synth, Runtime};
 use ambp::util::cli::Args;
 use anyhow::Result;
 
@@ -16,15 +15,14 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 100)?;
     let rt = Runtime::cpu()?;
-    let adir = ambp::runtime::artifacts_dir();
 
     let mut rows = Vec::new();
     for (label, preset) in [
-        ("SiLU + RMSNorm", "e2e_llama_silu_rms"),
-        ("ReSiLU2 + MS-RMSNorm", "e2e_llama_resilu2_msrms"),
+        ("SiLU + RMSNorm", "llama_loraall_silu_rms"),
+        ("ReSiLU2 + MS-RMSNorm", "llama_loraall_resilu2_msrms"),
     ] {
         println!("\n=== {label} ({preset}) ===");
-        let art = Artifact::load(&rt, &adir.join(preset))?;
+        let art = load_or_synth(&rt, preset)?;
         // NF4 weight-storage accounting for the frozen base weights
         // (QLoRA stores them in NF4; the LoRA adapters stay f32)
         let tidx = art.manifest.trainable_indices();

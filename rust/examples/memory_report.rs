@@ -10,7 +10,6 @@
 use ambp::memmodel::ops::{ActKind, Arch, MemCfg, Mode, NormKind, Tuning};
 use ambp::memmodel::report::composition_rows;
 use ambp::memmodel::{block_units, presets as mp, total_bytes};
-use ambp::runtime::Manifest;
 use anyhow::Result;
 
 fn main() -> Result<()> {
@@ -42,16 +41,14 @@ fn main() -> Result<()> {
         }
     }
 
-    // measured vs analytical cross-check on the small artifacts
+    // measured vs analytical cross-check on the small presets (on-disk
+    // artifacts when built, native synthesis otherwise)
     println!("\n── measured (manifest) vs memmodel tape-mode ──");
+    let rt = ambp::runtime::Runtime::cpu()?;
     for preset in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln",
                    "llama_loraall_silu_rms"] {
-        let dir = ambp::runtime::artifacts_dir().join(preset);
-        if !dir.join("manifest.json").is_file() {
-            println!("  {preset}: artifact not built (make artifacts)");
-            continue;
-        }
-        let m = Manifest::load(&dir)?;
+        let art = ambp::runtime::load_or_synth(&rt, preset)?;
+        let m = &art.manifest;
         let cfg = MemCfg {
             arch: match m.arch.as_str() {
                 "llama" => Arch::Llama,

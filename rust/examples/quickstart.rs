@@ -1,17 +1,17 @@
-//! Quickstart: load an AOT artifact, run a few fine-tuning steps, show
-//! the measured activation memory — the whole three-layer stack.
+//! Quickstart: load (or synthesize) an artifact, run a few fine-tuning
+//! steps, show the measured activation memory. Works offline with zero
+//! build-time artifacts — the native backend synthesizes the presets.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 
 use ambp::coordinator::{TrainCfg, Trainer};
-use ambp::runtime::{Artifact, Runtime};
+use ambp::runtime::{load_or_synth, Runtime};
 use anyhow::Result;
 
 fn main() -> Result<()> {
     let rt = Runtime::cpu()?;
     for preset in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln"] {
-        let dir = ambp::runtime::artifacts_dir().join(preset);
-        let art = Artifact::load(&rt, &dir)?;
+        let art = load_or_synth(&rt, preset)?;
         let m = &art.manifest;
         println!(
             "\n{preset}: {} ({}, act={}, norm={})",

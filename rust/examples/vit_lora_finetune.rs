@@ -7,7 +7,7 @@
 //! activation-memory gap. This is the full paper workflow: pretrained
 //! weights → memory-efficient fine-tuning with an unchanged forward pass.
 //!
-//!   make artifacts && cargo run --release --example vit_lora_finetune \
+//!   cargo run --release --example vit_lora_finetune \
 //!       [-- --pretrain-steps 120 --steps 200]
 
 use std::path::PathBuf;
@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
 use ambp::coordinator::scheduler::Schedule;
 use ambp::coordinator::{TrainCfg, Trainer};
-use ambp::runtime::{Artifact, Runtime};
+use ambp::runtime::{load_or_synth, Runtime};
 use ambp::util::cli::Args;
 use anyhow::Result;
 
@@ -24,13 +24,12 @@ fn main() -> Result<()> {
     let pretrain_steps = args.usize_or("pretrain-steps", 80)?;
     let steps = args.usize_or("steps", 150)?;
     let rt = Runtime::cpu()?;
-    let adir = ambp::runtime::artifacts_dir();
     let out = PathBuf::from("target/e2e");
     std::fs::create_dir_all(&out)?;
 
     // ---- phase 1: "pretrain" (full tuning, task seed 100) --------------
-    println!("=== phase 1: pretrain e2e_vit (full tuning, GELU+LN) ===");
-    let pre = Artifact::load(&rt, &adir.join("e2e_vit_pretrain"))?;
+    println!("=== phase 1: pretrain vitt (full tuning, GELU+LN) ===");
+    let pre = load_or_synth(&rt, "vitt_full_gelu_ln")?;
     let n_params: usize =
         pre.manifest.params.iter()
             .map(|p| p.shape.iter().product::<usize>()).sum();
@@ -53,11 +52,11 @@ fn main() -> Result<()> {
     // ---- phase 2: LoRA fine-tune on task B, both variants --------------
     let mut results = Vec::new();
     for (label, preset, merge) in [
-        ("LoRA + GELU + LN", "e2e_vit_gelu_ln", false),
-        ("LoRA + ReGELU2 + MS-LN", "e2e_vit_regelu2_msln", true),
+        ("LoRA + GELU + LN", "vitt_loraqv_gelu_ln", false),
+        ("LoRA + ReGELU2 + MS-LN", "vitt_loraqv_regelu2_msln", true),
     ] {
         println!("\n=== phase 2: fine-tune {label} ===");
-        let art = Artifact::load(&rt, &adir.join(preset))?;
+        let art = load_or_synth(&rt, preset)?;
         let mut tr = Trainer::new(&art, TrainCfg {
             steps,
             lr: 1.25e-3,

@@ -4,11 +4,17 @@
 
 use crate::util::rng::Rng;
 
+/// Simulated-annealing hyperparameters.
 pub struct SaOpts {
+    /// Total proposal iterations.
     pub iters: usize,
+    /// Initial temperature.
     pub t0: f64,
+    /// Final temperature (geometric cooling to `t1`).
     pub t1: f64,
+    /// Initial per-coordinate proposal scale.
     pub step0: f64,
+    /// RNG seed (runs are deterministic given the seed).
     pub seed: u64,
 }
 

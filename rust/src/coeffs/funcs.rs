@@ -7,6 +7,7 @@ pub fn erf(x: f64) -> f64 {
     1.0 - erfc(x)
 }
 
+/// Complementary error function (`1 − erf`).
 pub fn erfc(x: f64) -> f64 {
     let z = x.abs();
     let t = 1.0 / (1.0 + 0.5 * z);
@@ -34,6 +35,7 @@ pub fn gelu(x: f64) -> f64 {
     0.5 * x * (1.0 + erf(x / std::f64::consts::SQRT_2))
 }
 
+/// Exact GELU derivative: `Φ(x) + x·φ(x)`.
 pub fn dgelu(x: f64) -> f64 {
     let cdf = 0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2));
     let pdf = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
@@ -45,6 +47,7 @@ pub fn silu(x: f64) -> f64 {
     x / (1.0 + (-x).exp())
 }
 
+/// Exact SiLU derivative: `σ(x)·(1 + x·(1 − σ(x)))`.
 pub fn dsilu(x: f64) -> f64 {
     let s = 1.0 / (1.0 + (-x).exp());
     s * (1.0 + x * (1.0 - s))
@@ -165,6 +168,37 @@ mod tests {
     fn paper_constraint_nearly_zero() {
         assert!(PAPER_GELU.constraint().abs() < 2e-2);
         assert!(PAPER_SILU.constraint().abs() < 2e-2);
+    }
+
+    #[test]
+    fn golden_appendix_e_coefficients() {
+        // Pin the published Appendix E / I solutions bit-for-bit: any
+        // edit to these constants is a deliberate, reviewed change.
+        let g = PAPER_GELU;
+        assert_eq!(g.a, [-0.04922261145617846, 1.0979632065417297]);
+        assert_eq!(
+            g.c,
+            [-3.1858810036855245, -0.001178821281161997,
+             3.190832613414926]
+        );
+        let s = PAPER_SILU;
+        assert_eq!(s.a, [-0.04060357190528599, 1.080925428529668]);
+        assert_eq!(
+            s.c,
+            [-6.3050461001646445, -0.0008684942046214787,
+             6.325815242089708]
+        );
+        let d = PAPER_GELU_D;
+        assert_eq!(d.a, [0.32465931184406527, 0.34812875668739607]);
+        assert_eq!(
+            d.c,
+            [-0.4535743722857079, -0.0010587205574873046,
+             0.4487575313884231]
+        );
+        // derived quantities the kernels depend on
+        assert!((g.slopes()[2] - (g.a[0] + g.a[1])).abs() < 1e-15);
+        assert!(g.constraint().abs() < 2e-2);
+        assert!(s.constraint().abs() < 2e-2);
     }
 
     #[test]

@@ -39,8 +39,11 @@ fn vec_to_comb(v: &[f64]) -> ReluComb {
     ReluComb { a: [v[0], v[1]], c: [v[2], v[3], v[4]] }
 }
 
+/// Result of a coefficient solve.
 pub struct Solved {
+    /// The optimized 3-ReLU combination.
     pub comb: ReluComb,
+    /// Final objective value (eq. 14 / eq. 63).
     pub objective: f64,
 }
 
@@ -81,16 +84,20 @@ pub fn silu_bound(eps: f64) -> f64 {
     -2.0 * (eps / 2.0).ln()
 }
 
+/// Re-derive the ReGELU2 coefficients (Appendix E, eq. 14 objective).
 pub fn solve_gelu(seed: u64) -> Solved {
     let b = gelu_bound(1e-8);
     solve(gelu, -b, b, &[-0.05, 1.1, -3.0, 0.0, 3.0], seed, false)
 }
 
+/// Re-derive the ReSiLU2 coefficients (Appendix E, eq. 14 objective).
 pub fn solve_silu(seed: u64) -> Solved {
     let b = silu_bound(1e-8);
     solve(silu, -b, b, &[-0.04, 1.08, -6.0, 0.0, 6.0], seed, false)
 }
 
+/// Re-derive the ReGELU2-d coefficients (Appendix I, derivative
+/// objective, eq. 63).
 pub fn solve_gelu_d(seed: u64) -> Solved {
     // derivative objective decays fast; a modest window suffices
     solve(dgelu, -8.0, 8.0, &[0.33, 0.35, -0.5, 0.0, 0.5], seed, true)

@@ -50,33 +50,6 @@ impl MemoryTracker {
         self.by_module = by_module;
     }
 
-    /// Literal-resident variant (§Perf L3-1): account residuals that
-    /// never left PJRT. Byte counts come from the literals themselves;
-    /// kind/module attribution from the manifest.
-    pub fn observe_residual_lits(&mut self, manifest: &Manifest,
-                                 residuals: &[xla::Literal],
-                                 total: u64) {
-        let mut by_kind: Vec<(String, u64)> = Vec::new();
-        let mut by_module: Vec<(String, u64)> = Vec::new();
-        for (info, l) in manifest.residuals.iter().zip(residuals) {
-            let b = l.size_bytes() as u64;
-            debug_assert_eq!(b, info.bytes, "manifest/runtime disagree");
-            bump(&mut by_kind, &info.kind, b);
-            let module = info
-                .module
-                .split('.')
-                .next()
-                .unwrap_or(&info.module)
-                .to_string();
-            bump(&mut by_module, &module, b);
-        }
-        self.last_residual_bytes = total;
-        self.current_bytes = total;
-        self.peak_bytes = self.peak_bytes.max(total);
-        self.by_kind = by_kind;
-        self.by_module = by_module;
-    }
-
     /// Account additional transient state (grads held before the
     /// optimizer step, accumulated microbatch grads, …).
     pub fn observe_extra(&mut self, bytes: u64) {

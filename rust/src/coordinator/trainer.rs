@@ -1,8 +1,11 @@
 //! The fine-tuning training loop.
 //!
-//! Per step: prefetch batch → PJRT fwd (loss, metric, residuals) →
-//! [residual bytes == activation memory, tracked] → PJRT bwd (grads) →
-//! gradient accumulation → optimizer step on the host. Python never runs.
+//! Per step: prefetch batch → backend fwd (loss, metric, residuals) →
+//! [residual bytes == activation memory, tracked] → backend bwd (grads)
+//! → gradient accumulation → optimizer step on the host. The loop is
+//! backend-agnostic: it only speaks the residual ABI of
+//! `runtime::Executor`, so the same code drives the native CPU backend
+//! and (with `--features pjrt`) compiled XLA artifacts.
 
 use std::path::PathBuf;
 
@@ -17,19 +20,30 @@ use crate::data::synth_images::ImageTask;
 use crate::data::synth_text::TextTask;
 use crate::runtime::{Artifact, Tensor};
 
+/// Trainer hyper-parameters (CLI-overridable; see `config::RunCfg`).
 #[derive(Debug, Clone)]
 pub struct TrainCfg {
+    /// Optimizer steps to run.
     pub steps: usize,
+    /// Base learning rate.
     pub lr: f32,
+    /// AdamW decoupled weight decay.
     pub weight_decay: f32,
+    /// Learning-rate schedule.
     pub schedule: Schedule,
-    pub optimizer: String, // "adamw" | "sgd"
+    /// `"adamw"` or `"sgd"`.
+    pub optimizer: String,
+    /// Microbatches averaged per optimizer step.
     pub grad_accum: usize,
+    /// Console logging period (0 = silent).
     pub log_every: usize,
+    /// Data seed.
     pub seed: u64,
+    /// Per-sample noise of the synthetic image task.
     pub data_noise: f32,
+    /// Optional JSONL sink for per-step metrics.
     pub metrics_jsonl: Option<PathBuf>,
-    /// held-out evaluation batches at the end of training
+    /// Held-out evaluation batches at the end of training.
     pub eval_batches: usize,
 }
 
@@ -54,16 +68,27 @@ impl Default for TrainCfg {
     }
 }
 
+/// Summary of a finished training run.
 pub struct TrainReport {
+    /// Mean loss over the last up-to-20 steps.
     pub final_loss: f32,
+    /// Mean metric over the last up-to-20 steps.
     pub final_metric: f32,
+    /// Held-out loss after training.
     pub eval_loss: f32,
+    /// Held-out metric after training.
     pub eval_metric: f32,
+    /// Samples per second over the whole run.
     pub throughput: f64,
+    /// Peak measured activation(+grad) bytes — the paper's headline.
     pub peak_activation_bytes: u64,
+    /// Steps actually run.
     pub steps: usize,
+    /// Per-step rows (loss/metric/lr/bytes).
     pub rows: Vec<StepRow>,
+    /// Residual bytes by kind at the last observation.
     pub by_kind: Vec<(String, u64)>,
+    /// Residual bytes by module at the last observation.
     pub by_module: Vec<(String, u64)>,
 }
 
@@ -115,15 +140,22 @@ fn to_tensors(art: &Artifact, batch: Batch) -> (Tensor, Tensor) {
     }
 }
 
+/// Drives fwd/bwd/optimizer over an artifact.
 pub struct Trainer<'a> {
+    /// The artifact being fine-tuned.
     pub art: &'a Artifact,
+    /// Hyper-parameters.
     pub cfg: TrainCfg,
+    /// Current parameters (manifest order).
     pub params: Vec<Tensor>,
+    /// Host-side optimizer over the trainables.
     pub opt: Box<dyn Optimizer>,
+    /// Measured activation-memory accounting.
     pub memory: MemoryTracker,
 }
 
 impl<'a> Trainer<'a> {
+    /// Build a trainer with the artifact's initial parameters.
     pub fn new(art: &'a Artifact, cfg: TrainCfg) -> Result<Trainer<'a>> {
         let params = art.load_params()?;
         let opt: Box<dyn Optimizer> = match cfg.optimizer.as_str() {
@@ -138,6 +170,7 @@ impl<'a> Trainer<'a> {
         self.params = params;
     }
 
+    /// Run the configured number of steps; returns the report.
     pub fn train(&mut self) -> Result<TrainReport> {
         let cfg = self.cfg.clone();
         let producer = make_producer(self.art, &cfg);
@@ -146,27 +179,18 @@ impl<'a> Trainer<'a> {
         let tidx = self.art.manifest.trainable_indices();
         let mut accum: Option<Vec<Tensor>> = None;
 
-        // §Perf L3-1: params live as PJRT literals for the whole run;
-        // only the trainable ones are re-written after an optimizer step
-        // (for LoRA that is a tiny fraction of the bytes). Residuals stay
-        // as literals between fwd and bwd — no host materialization.
-        let mut param_lits: Vec<xla::Literal> = self
-            .params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<_>>()?;
-
-        // §Perf L3-3: one unmeasured warmup fwd/bwd so PJRT's first-run
-        // lazy initialization is not charged to the throughput meter
-        // (it systematically penalized whichever variant ran first).
+        // One unmeasured warmup fwd/bwd so first-run lazy initialization
+        // (PJRT compilation caches, page faults on the parameter arrays)
+        // is not charged to the throughput meter — it systematically
+        // penalized whichever variant ran first.
         {
             let producer2 = make_producer(self.art, &cfg);
-            let (x, y) = to_tensors(self.art, producer2(usize::MAX / 2));
-            let xl = x.to_literal()?;
-            let yl = y.to_literal()?;
-            let out = self.art.run_fwd_lit(&param_lits, &xl, &yl)?;
-            let _ = self.art.run_bwd_lit(&param_lits, &out.residuals,
-                                         &xl, &yl)?;
+            // far outside any train/eval index range, but small enough
+            // that `step * batch` cannot overflow inside the producer
+            let (x, y) = to_tensors(self.art, producer2(u32::MAX as usize));
+            let out = self.art.run_fwd(&self.params, &x, &y)?;
+            let _ = self.art.run_bwd(&self.params, &out.residuals,
+                                     &x, &y)?;
         }
         let mut metrics = Metrics::new(cfg.metrics_jsonl.as_deref())?;
 
@@ -177,17 +201,14 @@ impl<'a> Trainer<'a> {
             for _ in 0..cfg.grad_accum {
                 let batch = prefetch.next().expect("prefetcher exhausted");
                 let (x, y) = to_tensors(self.art, batch);
-                let xl = x.to_literal()?;
-                let yl = y.to_literal()?;
-                let out = self.art.run_fwd_lit(&param_lits, &xl, &yl)?;
+                let out = self.art.run_fwd(&self.params, &x, &y)?;
                 loss_acc += out.loss / cfg.grad_accum as f32;
                 metric_acc += out.metric / cfg.grad_accum as f32;
                 // ---- the measured activation-memory moment ----
-                self.memory.observe_residual_lits(
-                    &self.art.manifest, &out.residuals,
-                    out.residual_bytes);
-                let grads = self.art.run_bwd_lit(
-                    &param_lits, &out.residuals, &xl, &yl)?;
+                self.memory.observe_residuals(&self.art.manifest,
+                                              &out.residuals);
+                let grads = self.art.run_bwd(&self.params, &out.residuals,
+                                             &x, &y)?;
                 let gbytes: u64 =
                     grads.iter().map(|g| g.nbytes() as u64).sum();
                 self.memory.observe_extra(gbytes);
@@ -228,11 +249,6 @@ impl<'a> Trainer<'a> {
                     refs.push(unsafe { &mut **p });
                 }
                 self.opt.step(&mut refs, &grads, lr);
-            }
-            // push updated trainables back into the literal mirror
-            for &i in &tidx {
-                param_lits[i].copy_raw_from::<f32>(
-                    self.params[i].as_f32())?;
             }
             metrics.log_step(
                 StepRow {

@@ -12,11 +12,19 @@ use crate::runtime::{Artifact, Runtime};
 use crate::util::cli::Args;
 
 thread_local! {
-    // PjRtClient is Rc-based (not Send/Sync): keep the runtime and the
-    // artifact cache per-thread. The experiment harness is effectively
-    // single-threaded; leaking is intentional process-lifetime caching.
-    static RUNTIME: &'static Runtime =
-        Box::leak(Box::new(Runtime::cpu().expect("PJRT CPU client")));
+    // Backends may be !Send (the PJRT client is Rc-based): keep the
+    // runtime and the artifact cache per-thread. The experiment harness
+    // is effectively single-threaded; leaking is intentional
+    // process-lifetime caching. Backend selectable via AMBP_BACKEND
+    // (the harness has no CLI plumbing of its own) — needed to run the
+    // Mesa/ReLU/ckpt variants on a pjrt-enabled build.
+    static RUNTIME: &'static Runtime = Box::leak(Box::new(
+        Runtime::from_name(
+            &std::env::var("AMBP_BACKEND")
+                .unwrap_or_else(|_| "native".into()),
+        )
+        .expect("experiment runtime (AMBP_BACKEND)"),
+    ));
     static ARTIFACTS: std::cell::RefCell<BTreeMap<String, &'static Artifact>> =
         const { std::cell::RefCell::new(BTreeMap::new()) };
 }
@@ -32,13 +40,8 @@ pub fn artifact(preset: &str) -> Result<&'static Artifact> {
         if let Some(a) = map.get(preset) {
             return Ok(*a);
         }
-        let dir = crate::runtime::artifacts_dir().join(preset);
-        anyhow::ensure!(
-            dir.join("manifest.json").is_file(),
-            "artifact {preset:?} not built — run:\n  \
-             cd python && python -m compile.aot --out ../artifacts {preset}"
-        );
-        let art = Artifact::load(runtime(), &dir)
+        // on-disk artifact if built, native synthesis otherwise
+        let art = crate::runtime::load_or_synth(runtime(), preset)
             .with_context(|| format!("loading {preset}"))?;
         let leaked: &'static Artifact = Box::leak(Box::new(art));
         map.insert(preset.to_string(), leaked);

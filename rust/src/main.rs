@@ -44,22 +44,18 @@ fn main() -> Result<()> {
     }
 }
 
-fn load_artifact(cfg: &RunCfg) -> Result<Artifact> {
-    let rt = Runtime::cpu()?;
-    let dir = cfg.artifacts_dir.join(&cfg.preset);
-    anyhow::ensure!(
-        dir.join("manifest.json").is_file(),
-        "artifact {:?} not found — build it with:\n  cd python && python \
-         -m compile.aot --out ../artifacts {}",
-        dir,
-        cfg.preset
-    );
-    Artifact::load(&rt, &dir)
+fn runtime(args: &Args) -> Result<Runtime> {
+    Runtime::from_name(args.get_or("backend", "native"))
+}
+
+fn load_artifact(cfg: &RunCfg, args: &Args) -> Result<Artifact> {
+    let rt = runtime(args)?;
+    ambp::runtime::load_or_synth_in(&rt, &cfg.artifacts_dir, &cfg.preset)
 }
 
 fn train(args: &Args) -> Result<()> {
     let cfg = RunCfg::from_args(args)?;
-    let art = load_artifact(&cfg)?;
+    let art = load_artifact(&cfg, args)?;
     println!(
         "preset {} — arch={} tuning={} act={} norm={} | {} params \
          ({} trainable), {} residuals",
@@ -102,7 +98,7 @@ fn train(args: &Args) -> Result<()> {
 
 fn eval(args: &Args) -> Result<()> {
     let cfg = RunCfg::from_args(args)?;
-    let art = load_artifact(&cfg)?;
+    let art = load_artifact(&cfg, args)?;
     let mut trainer = Trainer::new(&art, TrainCfg {
         log_every: 0,
         ..cfg.train.clone()
@@ -182,8 +178,19 @@ fn convert(args: &Args) -> Result<()> {
 
 fn info(args: &Args) -> Result<()> {
     let cfg = RunCfg::from_args(args)?;
+    // metadata-only query: read manifest.json directly when it exists
+    // (works for every preset, incl. ones no backend can execute);
+    // otherwise synthesize the manifest via the backend.
     let dir = cfg.artifacts_dir.join(&cfg.preset);
-    let m = ambp::runtime::Manifest::load(&dir)?;
+    let loaded;
+    let synthesized;
+    let m = if dir.join("manifest.json").is_file() {
+        loaded = ambp::runtime::Manifest::load(&dir)?;
+        &loaded
+    } else {
+        synthesized = load_artifact(&cfg, args)?;
+        &synthesized.manifest
+    };
     println!("preset {}: arch={} dim={} depth={} tuning={} act={} norm={}",
              m.preset, m.arch, m.dim, m.depth, m.tuning, m.activation,
              m.norm);
@@ -205,6 +212,9 @@ fn print_help() {
     println!(
         "ambp — Approximate & Memory-Sharing Backpropagation (ICML 2024)
 usage: ambp <cmd> [--flags]
+global: --backend native|pjrt   (default native; presets with no on-disk
+        artifact are synthesized by the native backend, e.g.
+        vitt_loraqv_regelu2_msln, llama_loraall_resilu2_msrms)
   train   --preset P [--steps N --lr X --optimizer adamw|sgd
           --schedule constant|warmup_cosine|warmup_linear
           --grad-accum K --seed S --metrics out.jsonl

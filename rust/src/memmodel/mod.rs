@@ -51,7 +51,7 @@ pub fn category(kind: &str) -> &'static str {
         "attn_qkv" | "attn_out" => "attention",
         "linear_input" | "lora_u" => "linear",
         "gate_operand" => "gate_mul",
-        "head_input" => "head",
+        "head_input" | "logits" => "head",
         "ckpt_input" => "checkpoint",
         _ => "other",
     }

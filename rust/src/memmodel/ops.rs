@@ -44,9 +44,36 @@ pub enum NormKind {
     MesaLn8,
 }
 
+/// Accounting mode: which residual-byte formulas the model applies.
+///
+/// With `R = batch · n_tokens` rows, width `C`, hidden `M = C·ratio`,
+/// heads `H`, and `e` = activation element size:
+///
+/// * `Paper` (`e = 2`, AMP bf16 activations; Figures 5/6 parity):
+///   - norm (LN):  `R·C·4` input (fp32) + `2·R·4` stats (μ, 1/σ)
+///   - attention:  `4·R·C·e` (FlashAttention saves {q,k,v,o}) +
+///     `R·H·4` logsumexp rows
+///   - activation: `R·M·e` full (GELU/SiLU), `R·M/4` 2-bit codes
+///     (ReGELU2/ReSiLU2, Prop 4.3), `R·M + R·4` Mesa int8+scale
+///   - linear:     `R·din·e` input iff Full/LoRA (shareable), plus
+///     `R·r·e` LoRA `u = xA`
+/// * `Tape` (`e = 4`, fp32 everything; matches the measured artifact
+///   manifests bit-for-bit):
+///   - attention saves `3·R·C·4` ({q,k,v} only — probabilities are
+///     recomputed in bwd), no logsumexp
+///   - everything else as above with `e = 4`
+///
+/// MS-LN/MS-RMSNorm store one shared `R·C·e` tensor (`norm_shared`)
+/// serving both the norm backward and the following linears' inputs —
+/// that sharing is the eq. 16–18 saving; plain LN/RMS store the norm
+/// input *and* (when a linear needs it) the affine output separately.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// 16-bit activations, fp32 norm stats, FlashAttention residual set
+    /// `{q,k,v,o,l}` — reproduces the Figure 5/6 unit tallies.
     Paper,
+    /// f32 everything, attention saves `{q,k,v}` only — mirrors the
+    /// measured residual tape of the artifact manifests.
     Tape,
 }
 

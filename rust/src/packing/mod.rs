@@ -13,7 +13,17 @@ pub fn pack2(codes: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Unpack the first `n` 2-bit codes.
+///
+/// Contract: `n ≤ 4 · packed.len()` — `packed` must come from a `pack2`
+/// of at least `n` codes. Violations panic (with a clear message rather
+/// than a raw index-out-of-bounds) instead of fabricating codes.
 pub fn unpack2(packed: &[u8], n: usize) -> Vec<u8> {
+    assert!(
+        n <= packed.len() * 4,
+        "unpack2: n={n} exceeds packed capacity {}",
+        packed.len() * 4
+    );
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         out.push((packed[i / 4] >> (2 * (i % 4))) & 3);
@@ -31,7 +41,15 @@ pub fn pack1(bits: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Unpack the first `n` 1-bit signs.
+///
+/// Contract: `n ≤ 8 · packed.len()` (see [`unpack2`]); panics otherwise.
 pub fn unpack1(packed: &[u8], n: usize) -> Vec<u8> {
+    assert!(
+        n <= packed.len() * 8,
+        "unpack1: n={n} exceeds packed capacity {}",
+        packed.len() * 8
+    );
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         out.push((packed[i / 8] >> (i % 8)) & 1);
@@ -40,6 +58,10 @@ pub fn unpack1(packed: &[u8], n: usize) -> Vec<u8> {
 }
 
 /// Bucketize f32s against 3 thresholds → 2-bit codes (ReGELU2 encode).
+///
+/// Kernel semantics: code = #{thresholds ≤ x}, so a value exactly at a
+/// threshold belongs to the segment *above* it (`>=`, matching the
+/// Pallas kernels and `ReluComb::code`).
 pub fn bucketize2(xs: &[f32], c: [f64; 3]) -> Vec<u8> {
     xs.iter()
         .map(|&x| {
@@ -49,8 +71,17 @@ pub fn bucketize2(xs: &[f32], c: [f64; 3]) -> Vec<u8> {
         .collect()
 }
 
-/// Apply the 4-entry slope table to packed codes (ReGELU2 decode-bwd).
+/// Apply the 4-entry slope table to packed codes (ReGELU2 decode-bwd):
+/// `gx[i] = gy[i] · slopes[code(i)]`.
+///
+/// Contract: `gy.len() ≤ 4 · packed.len()`; panics otherwise.
 pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
+    assert!(
+        gy.len() <= packed.len() * 4,
+        "apply_slopes: gy length {} exceeds packed capacity {}",
+        gy.len(),
+        packed.len() * 4
+    );
     let s: [f32; 4] = [slopes[0] as f32, slopes[1] as f32,
                        slopes[2] as f32, slopes[3] as f32];
     gy.iter()
@@ -90,6 +121,53 @@ mod tests {
         let c = crate::coeffs::funcs::PAPER_GELU.c;
         let xs = [-10.0f32, -1.0, 0.5, 10.0];
         assert_eq!(bucketize2(&xs, c), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bucketize_threshold_boundaries() {
+        // exactly-at-threshold values take the segment ABOVE (x >= c)
+        let c = [-1.0f64, 0.0, 1.0];
+        let xs = [-1.0f32, 0.0, 1.0];
+        assert_eq!(bucketize2(&xs, c), vec![1, 2, 3]);
+        // just below each threshold stays in the segment below
+        let eps = 1e-4f32;
+        let xs = [-1.0 - eps, 0.0 - eps, 1.0 - eps];
+        assert_eq!(bucketize2(&xs, c), vec![0, 1, 2]);
+        // paper thresholds behave identically
+        let pc = crate::coeffs::funcs::PAPER_GELU.c;
+        let at: Vec<f32> = pc.iter().map(|v| *v as f32).collect();
+        let codes = bucketize2(&at, pc);
+        for (i, code) in codes.iter().enumerate() {
+            // f32 rounding can land just below the f64 threshold; the
+            // code must be the exact count of thresholds ≤ the f32 value
+            let want = pc.iter()
+                .filter(|&&t| at[i] as f64 >= t)
+                .count() as u8;
+            assert_eq!(*code, want);
+        }
+    }
+
+    #[test]
+    fn unpack_full_capacity_ok() {
+        // n exactly at capacity (including the zero-padded tail codes)
+        let packed = pack2(&[1, 2, 3]); // capacity 4
+        assert_eq!(unpack2(&packed, 4), vec![1, 2, 3, 0]);
+        let packed = pack1(&[1, 0, 1]); // capacity 8
+        assert_eq!(unpack1(&packed, 8), vec![1, 0, 1, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds packed capacity")]
+    fn unpack2_beyond_capacity_panics() {
+        let packed = pack2(&[1, 2, 3]); // 1 byte, capacity 4
+        let _ = unpack2(&packed, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds packed capacity")]
+    fn unpack1_beyond_capacity_panics() {
+        let packed = pack1(&[1]); // 1 byte, capacity 8
+        let _ = unpack1(&packed, 9);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Artifact manifest: the ABI contract emitted by `python -m compile.aot`.
+//! Artifact manifest: the ABI contract between the model layer and the
+//! coordinator — emitted by `python -m compile.aot` for compiled
+//! artifacts, or synthesized by the native backend's dry run.
 
 use std::path::Path;
 
@@ -7,78 +9,127 @@ use anyhow::{Context, Result};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::util::json::Json;
 
+/// One model parameter: name, shape, and whether it trains.
 #[derive(Debug, Clone)]
 pub struct ParamInfo {
+    /// Dotted module path, e.g. `block0.attn.q.W`.
     pub name: String,
+    /// Row-major shape.
     pub shape: Vec<usize>,
+    /// Whether the optimizer updates this tensor.
     pub trainable: bool,
 }
 
+/// One residual tensor held between fwd and bwd.
 #[derive(Debug, Clone)]
 pub struct ResInfo {
+    /// Unique residual name.
     pub name: String,
+    /// Category (`norm_input`, `attn_qkv`, `act_codes`, …) — the
+    /// Figure 2 breakdown axis.
     pub kind: String,
+    /// Producing module path.
     pub module: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Storage dtype.
     pub dtype: DType,
+    /// Effective bits per *logical* element (2.0 for packed codes).
     pub bits_per_elem: f64,
+    /// Total storage bytes.
     pub bytes: u64,
 }
 
+/// Shape/dtype of one side of the training batch.
 #[derive(Debug, Clone)]
 pub struct BatchInfo {
+    /// Batch tensor shape.
     pub shape: Vec<usize>,
+    /// Batch tensor dtype.
     pub dtype: DType,
 }
 
+/// One eq. 17 affine merge: the norm whose (α, β) fold into `linears`.
 #[derive(Debug, Clone)]
 pub struct MergeOp {
+    /// Norm module path.
     pub norm: String,
+    /// Linear module paths consuming the norm output.
     pub linears: Vec<String>,
 }
 
+/// Reference values recorded at export time (or at synthesis dry-run):
+/// the loss/metric/grad-norms of one deterministic batch.
 #[derive(Debug, Clone)]
 pub struct SelfCheck {
+    /// Reference loss.
     pub loss: f64,
+    /// Reference metric.
     pub metric: f64,
+    /// Reference L2 norm per trainable gradient.
     pub grad_l2: Vec<f64>,
 }
 
+/// The full artifact manifest (`manifest.json`).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Preset name.
     pub preset: String,
+    /// Architecture tag: `vit` | `llama` | `roberta`.
     pub arch: String,
+    /// Tuning tag: `full` | `frozen` | `lora_qv` | ….
     pub tuning: String,
+    /// Activation tag: `gelu` | `regelu2` | `silu` | `resilu2` | ….
     pub activation: String,
+    /// Norm tag: `ln` | `msln` | `rms` | `msrms` | ….
     pub norm: String,
+    /// Embedding width C.
     pub dim: usize,
+    /// Transformer depth.
     pub depth: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Tokens per sequence N.
     pub n_tokens: usize,
+    /// Batch size B.
     pub batch: usize,
+    /// Classifier classes.
     pub n_classes: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// MLP expansion ratio.
     pub mlp_ratio: f64,
+    /// LoRA rank.
     pub lora_rank: usize,
+    /// ViT patch feature size P.
     pub patch_dim: usize,
+    /// Whether the artifact uses gradient checkpointing.
     pub ckpt: bool,
+    /// Parameter layout, in `params.bin` order.
     pub params: Vec<ParamInfo>,
+    /// Input batch contract.
     pub x: BatchInfo,
+    /// Target batch contract.
     pub y: BatchInfo,
+    /// Residual plan, in fwd-output order.
     pub residuals: Vec<ResInfo>,
+    /// Sum of residual bytes — the measured activation memory per step.
     pub residual_bytes_total: u64,
+    /// Affine merges for LN→MS-LN checkpoint conversion (eq. 17).
     pub merges: Vec<MergeOp>,
+    /// Export-time reference values.
     pub selfcheck: SelfCheck,
 }
 
 fn shape_of(j: &Json) -> Result<Vec<usize>> {
-    Ok(j.as_arr()?
+    j.as_arr()?
         .iter()
         .map(|v| v.as_usize())
-        .collect::<Result<Vec<_>>>()?)
+        .collect::<Result<Vec<_>>>()
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {dir:?}"))?;
@@ -176,6 +227,8 @@ impl Manifest {
         })
     }
 
+    /// Indices of the trainable parameters, in manifest order — the
+    /// order bwd emits gradients in.
     pub fn trainable_indices(&self) -> Vec<usize> {
         self.params
             .iter()
@@ -185,11 +238,12 @@ impl Manifest {
             .collect()
     }
 
+    /// Index of a parameter by name.
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|p| p.name == name)
     }
 
-    /// Load params.bin (f32 LE, concatenated in manifest order).
+    /// Load `params.bin` (f32 LE, concatenated in manifest order).
     pub fn load_params(&self, dir: &Path) -> Result<Vec<Tensor>> {
         let bytes = std::fs::read(dir.join("params.bin"))?;
         let mut off = 0usize;

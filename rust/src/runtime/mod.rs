@@ -1,170 +1,184 @@
-//! PJRT runtime: load `artifacts/<preset>/{fwd,bwd}.hlo.txt`, compile on
-//! the CPU client, execute from the training hot path.
+//! Execution runtime: the [`Backend`] abstraction plus its
+//! implementations.
 //!
-//! Wiring follows /opt/xla-example/load_hlo: HLO *text* interchange (the
-//! text parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits that
-//! xla_extension 0.5.1 would reject), `return_tuple=True` on the python
-//! side, `to_tuple()` here.
+//! A backend turns an artifact (a model description + parameters) into an
+//! [`Executor`] that runs the decoupled forward/backward pair of the
+//! fine-tuning step. Two implementations exist:
+//!
+//! * [`native`] (default feature `native`): an in-tree pure-Rust CPU
+//!   backend that executes the step directly from the manifest — blocked
+//!   matmuls, multi-head attention, LN/RMS/MS-LN/MS-RMSNorm, and the
+//!   ReGELU2/ReSiLU2 forward + 2-bit packed backward — parallelized with
+//!   a chunked worker pool. It can also *synthesize* artifacts for the
+//!   small named presets, so nothing outside this crate is needed.
+//! * `pjrt` (feature `pjrt`, off by default): loads
+//!   `artifacts/<preset>/{fwd,bwd}.hlo.txt` and compiles them through an
+//!   external PJRT/XLA client. Enabling the feature requires adding the
+//!   `xla` crate to Cargo.toml; see DESIGN.md §2.4.
+//!
+//! The fwd/bwd **residual ABI** shared by both backends is documented in
+//! DESIGN.md §2.2: `fwd(params…, x, y) -> (loss, metric, residuals…)` and
+//! `bwd(params…, residuals…, x, y) -> grads…` over the trainable
+//! parameters, in manifest order.
 
 pub mod manifest;
+#[cfg(feature = "native")]
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod tensor;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 pub use manifest::Manifest;
 pub use tensor::{DType, Tensor};
 
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-}
-
+/// Output of one forward pass at the residual ABI.
 pub struct FwdOut {
+    /// Scalar training loss (mean over the batch).
     pub loss: f32,
+    /// Task metric (classification / next-token accuracy).
     pub metric: f32,
+    /// The residual tensors held between fwd and bwd — the *measured*
+    /// activation memory of the step, in manifest order.
     pub residuals: Vec<Tensor>,
 }
 
-/// A compiled fwd/bwd pair plus its manifest.
+/// A compiled fwd/bwd pair. Implementations must honor the residual ABI:
+/// `run_bwd` receives exactly the residuals `run_fwd` produced.
+pub trait Executor {
+    /// Forward pass: `(params…, x, y) -> (loss, metric, residuals…)`.
+    fn run_fwd(&self, params: &[Tensor], x: &Tensor, y: &Tensor)
+        -> Result<FwdOut>;
+
+    /// Backward pass: `(params…, residuals…, x, y) -> grads…` for the
+    /// trainable parameters, in `Manifest::trainable_indices` order.
+    fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
+               y: &Tensor) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: loads (or synthesizes) artifacts.
+pub trait Backend {
+    /// Short backend identifier (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Load an artifact directory (`manifest.json` + `params.bin`, plus
+    /// backend-specific files such as HLO text for PJRT).
+    fn load(&self, dir: &Path) -> Result<Artifact>;
+
+    /// Build an artifact in memory from a named preset spec, with no
+    /// files on disk. Backends without synthesis support return an error.
+    fn synthesize(&self, preset: &str) -> Result<Artifact> {
+        bail!("backend {:?} cannot synthesize preset {preset:?}",
+              self.name())
+    }
+}
+
+/// A backend handle. `Runtime::cpu()` returns the default (native) CPU
+/// backend; the PJRT client is selected with `Runtime::from_name("pjrt")`
+/// when the `pjrt` feature is enabled.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// The default CPU runtime (native backend).
+    #[cfg(feature = "native")]
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(native::NativeBackend) })
+    }
+
+    /// Select a backend by name: `"native"` (alias `"cpu"`) or `"pjrt"`.
+    pub fn from_name(name: &str) -> Result<Runtime> {
+        match name {
+            #[cfg(feature = "native")]
+            "native" | "cpu" => {
+                Ok(Runtime { backend: Box::new(native::NativeBackend) })
+            }
+            #[cfg(feature = "pjrt")]
+            "pjrt" => {
+                Ok(Runtime { backend: Box::new(pjrt::PjrtBackend::cpu()?) })
+            }
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => bail!(
+                "backend \"pjrt\" requires building with --features pjrt \
+                 (and the external xla crate; see DESIGN.md §2.4)"
+            ),
+            other => bail!("unknown backend {other:?} (try \"native\")"),
+        }
+    }
+
+    /// The active backend's identifier.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+/// A loaded (or synthesized) fwd/bwd pair plus its manifest and initial
+/// parameters.
 pub struct Artifact {
+    /// Source directory, or `<synthetic>/<preset>` for in-memory specs.
     pub dir: PathBuf,
+    /// The ABI contract: parameter layout, residual plan, batch shapes.
     pub manifest: Manifest,
-    fwd: xla::PjRtLoadedExecutable,
-    bwd: xla::PjRtLoadedExecutable,
+    params0: Vec<Tensor>,
+    exec: Box<dyn Executor>,
 }
 
 impl Artifact {
+    /// Load an artifact directory through the runtime's backend.
     pub fn load(rt: &Runtime, dir: &Path) -> Result<Artifact> {
-        let manifest = Manifest::load(dir)?;
-        let fwd = compile(rt, &dir.join("fwd.hlo.txt"))
-            .with_context(|| format!("compiling fwd for {dir:?}"))?;
-        let bwd = compile(rt, &dir.join("bwd.hlo.txt"))
-            .with_context(|| format!("compiling bwd for {dir:?}"))?;
-        Ok(Artifact { dir: dir.to_path_buf(), manifest, fwd, bwd })
+        rt.backend
+            .load(dir)
+            .with_context(|| format!("loading artifact {dir:?}"))
     }
 
+    /// Synthesize a named preset through the runtime's backend (native
+    /// only); no files are read or written.
+    pub fn synth(rt: &Runtime, preset: &str) -> Result<Artifact> {
+        rt.backend.synthesize(preset)
+    }
+
+    /// Assemble an artifact from parts (used by backend implementations).
+    pub fn from_parts(dir: PathBuf, manifest: Manifest,
+                      params0: Vec<Tensor>, exec: Box<dyn Executor>)
+                      -> Artifact {
+        Artifact { dir, manifest, params0, exec }
+    }
+
+    /// The artifact's initial parameters, in manifest order.
     pub fn load_params(&self) -> Result<Vec<Tensor>> {
-        self.manifest.load_params(&self.dir)
+        Ok(self.params0.clone())
     }
 
-    /// Forward pass: (params…, x, y) -> (loss, metric, residuals…).
+    /// Forward pass: `(params…, x, y) -> (loss, metric, residuals…)`.
     pub fn run_fwd(&self, params: &[Tensor], x: &Tensor,
                    y: &Tensor) -> Result<FwdOut> {
-        let mut args: Vec<xla::Literal> =
-            Vec::with_capacity(params.len() + 2);
-        for p in params {
-            args.push(p.to_literal()?);
-        }
-        args.push(x.to_literal()?);
-        args.push(y.to_literal()?);
-        let bufs = self.fwd.execute::<xla::Literal>(&args)?;
-        let tuple = bufs[0][0].to_literal_sync()?;
-        let mut outs = tuple.to_tuple()?;
+        let out = self.exec.run_fwd(params, x, y)?;
         anyhow::ensure!(
-            outs.len() == 2 + self.manifest.residuals.len(),
+            out.residuals.len() == self.manifest.residuals.len(),
             "fwd arity mismatch: got {}, manifest says {}",
-            outs.len(),
-            2 + self.manifest.residuals.len()
+            out.residuals.len(),
+            self.manifest.residuals.len()
         );
-        let residuals = outs
-            .split_off(2)
-            .iter()
-            .map(Tensor::from_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let loss = outs[0].to_vec::<f32>()?[0];
-        let metric = outs[1].to_vec::<f32>()?[0];
-        Ok(FwdOut { loss, metric, residuals })
+        Ok(out)
     }
 
-    /// Backward pass: (params…, residuals…, x, y) -> grads… (trainables).
+    /// Backward pass: `(params…, residuals…, x, y) -> grads…`
+    /// (trainables, in manifest order).
     pub fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor],
                    x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
-        let mut args: Vec<xla::Literal> =
-            Vec::with_capacity(params.len() + residuals.len() + 2);
-        for p in params {
-            args.push(p.to_literal()?);
-        }
-        for r in residuals {
-            args.push(r.to_literal()?);
-        }
-        args.push(x.to_literal()?);
-        args.push(y.to_literal()?);
-        let bufs = self.bwd.execute::<xla::Literal>(&args)?;
-        let tuple = bufs[0][0].to_literal_sync()?;
-        let outs = tuple.to_tuple()?;
+        let grads = self.exec.run_bwd(params, residuals, x, y)?;
         let n_train = self.manifest.trainable_indices().len();
         anyhow::ensure!(
-            outs.len() == n_train,
+            grads.len() == n_train,
             "bwd arity mismatch: got {}, expected {n_train}",
-            outs.len()
+            grads.len()
         );
-        outs.iter().map(Tensor::from_literal).collect()
+        Ok(grads)
     }
-}
-
-pub struct FwdOutLit {
-    pub loss: f32,
-    pub metric: f32,
-    pub residuals: Vec<xla::Literal>,
-    pub residual_bytes: u64,
-}
-
-impl Artifact {
-    /// Literal-resident fast path (EXPERIMENTS.md §Perf L3-1): residuals
-    /// stay as PJRT literals between fwd and bwd — no host Tensor
-    /// materialization. Params are passed as pre-built literals that the
-    /// trainer updates in place after each optimizer step.
-    pub fn run_fwd_lit(&self, params: &[xla::Literal], x: &xla::Literal,
-                       y: &xla::Literal) -> Result<FwdOutLit> {
-        let mut args: Vec<&xla::Literal> =
-            Vec::with_capacity(params.len() + 2);
-        args.extend(params.iter());
-        args.push(x);
-        args.push(y);
-        let bufs = self.fwd.execute::<&xla::Literal>(&args)?;
-        let tuple = bufs[0][0].to_literal_sync()?;
-        let mut outs = tuple.to_tuple()?;
-        anyhow::ensure!(outs.len() == 2 + self.manifest.residuals.len());
-        let residuals = outs.split_off(2);
-        let residual_bytes =
-            residuals.iter().map(|l| l.size_bytes() as u64).sum();
-        Ok(FwdOutLit {
-            loss: outs[0].to_vec::<f32>()?[0],
-            metric: outs[1].to_vec::<f32>()?[0],
-            residuals,
-            residual_bytes,
-        })
-    }
-
-    pub fn run_bwd_lit(&self, params: &[xla::Literal],
-                       residuals: &[xla::Literal], x: &xla::Literal,
-                       y: &xla::Literal) -> Result<Vec<Tensor>> {
-        let mut args: Vec<&xla::Literal> =
-            Vec::with_capacity(params.len() + residuals.len() + 2);
-        args.extend(params.iter());
-        args.extend(residuals.iter());
-        args.push(x);
-        args.push(y);
-        let bufs = self.bwd.execute::<&xla::Literal>(&args)?;
-        let tuple = bufs[0][0].to_literal_sync()?;
-        let outs = tuple.to_tuple()?;
-        outs.iter().map(Tensor::from_literal).collect()
-    }
-}
-
-fn compile(rt: &Runtime, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().context("non-utf8 path")?,
-    )?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(rt.client.compile(&comp)?)
 }
 
 /// Locate the artifacts directory (repo root or CWD).
@@ -176,4 +190,29 @@ pub fn artifacts_dir() -> PathBuf {
         }
     }
     PathBuf::from("artifacts")
+}
+
+/// Load `preset` from the artifacts directory when it exists on disk,
+/// falling back to native synthesis otherwise. This is what lets the CLI
+/// and the examples run with zero build-time artifacts.
+pub fn load_or_synth(rt: &Runtime, preset: &str) -> Result<Artifact> {
+    load_or_synth_in(rt, &artifacts_dir(), preset)
+}
+
+/// [`load_or_synth`] against an explicit artifacts base directory (the
+/// CLI's `--artifacts` override).
+pub fn load_or_synth_in(rt: &Runtime, base: &Path,
+                        preset: &str) -> Result<Artifact> {
+    let dir = base.join(preset);
+    if dir.join("manifest.json").is_file() {
+        Artifact::load(rt, &dir)
+    } else {
+        Artifact::synth(rt, preset).with_context(|| {
+            format!(
+                "artifact {dir:?} not found and preset {preset:?} is not \
+                 synthesizable; build it with:\n  cd python && python -m \
+                 compile.aot --out ../artifacts {preset}"
+            )
+        })
+    }
 }

@@ -1,0 +1,602 @@
+//! CPU kernels for the native backend: blocked matmuls, layer norms,
+//! softmax cross-entropy, multi-head attention, and activation
+//! forward/backward — all parallelized over contiguous row chunks via
+//! [`super::pool`], all deterministic (each output element is reduced
+//! sequentially by one worker).
+//!
+//! Matrix layout is row-major. Linear weights follow the `[dout, din]`
+//! convention (`y = x · Wᵀ`), which is what the checkpoint affine-merge
+//! (eq. 17) assumes.
+
+use super::pool::parallel_rows;
+use crate::coeffs::funcs;
+
+/// Epsilon used by every normalization variant.
+pub const NORM_EPS: f32 = 1e-5;
+
+fn grain(work_per_row: usize) -> usize {
+    (1 << 15) / work_per_row.max(1) + 1
+}
+
+/// `c[m,n] = a[m,k] · b[k,n]`.
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
+        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(i0 + ci) * k..(i0 + ci + 1) * k];
+            for (t, &av) in arow.iter().enumerate() {
+                let brow = &b[t * n..(t + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `c[m,n] = a[m,k] · b[n,k]ᵀ` — both operands walked contiguously.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut c = vec![0f32; m * n];
+    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
+        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(i0 + ci) * k..(i0 + ci + 1) * k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                *cv = dot(arow, brow);
+            }
+        }
+    });
+    c
+}
+
+/// `c[m,n] = a[k,m]ᵀ · b[k,n]` — the weight-gradient product
+/// (`dW = dyᵀ · x`).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
+        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
+            let i = i0 + ci;
+            for t in 0..k {
+                let av = a[t * m + i];
+                let brow = &b[t * n..(t + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// Dot product, sequential accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Column sums of `a[rows, cols]` (bias gradients).
+pub fn colsum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * cols);
+    let mut out = vec![0f32; cols];
+    for r in 0..rows {
+        let arow = &a[r * cols..(r + 1) * cols];
+        for (o, &v) in out.iter_mut().zip(arow) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// `a += b`, elementwise.
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Broadcast-add a `[cols]` bias onto every row of `a[rows, cols]`.
+pub fn add_bias(a: &mut [f32], bias: &[f32]) {
+    for row in a.chunks_mut(bias.len()) {
+        for (x, &v) in row.iter_mut().zip(bias) {
+            *x += v;
+        }
+    }
+}
+
+/// Normalization forward. Returns `(xhat, stat)` where `stat` is the
+/// per-row reciprocal std (LN) or reciprocal RMS (RMSNorm); the affine
+/// transform, if any, is applied by the caller.
+pub fn norm_fwd(x: &[f32], rows: usize, c: usize,
+                rms: bool) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), rows * c);
+    let mut xhat = vec![0f32; rows * c];
+    let mut stat = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * c..(r + 1) * c];
+        let hr = &mut xhat[r * c..(r + 1) * c];
+        if rms {
+            let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / c as f32;
+            let rho = 1.0 / (ms + NORM_EPS).sqrt();
+            stat[r] = rho;
+            for (h, &v) in hr.iter_mut().zip(xr) {
+                *h = v * rho;
+            }
+        } else {
+            let mu: f32 = xr.iter().sum::<f32>() / c as f32;
+            let var: f32 =
+                xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>()
+                    / c as f32;
+            let rstd = 1.0 / (var + NORM_EPS).sqrt();
+            stat[r] = rstd;
+            for (h, &v) in hr.iter_mut().zip(xr) {
+                *h = (v - mu) * rstd;
+            }
+        }
+    }
+    (xhat, stat)
+}
+
+/// Normalization backward given the upstream grad `dyh` (already
+/// multiplied by the affine weight when one exists):
+///
+/// * LN:  `dx = rstd · (dyh − mean(dyh) − x̂ · mean(dyh·x̂))`
+/// * RMS: `dx = ρ · (dyh − x̂ · mean(dyh·x̂))`
+pub fn norm_bwd(dyh: &[f32], xhat: &[f32], stat: &[f32], rows: usize,
+                c: usize, rms: bool) -> Vec<f32> {
+    let mut dx = vec![0f32; rows * c];
+    for r in 0..rows {
+        let dyr = &dyh[r * c..(r + 1) * c];
+        let xr = &xhat[r * c..(r + 1) * c];
+        let out = &mut dx[r * c..(r + 1) * c];
+        let m2: f32 = dot(dyr, xr) / c as f32;
+        if rms {
+            for ((o, &d), &xh) in out.iter_mut().zip(dyr).zip(xr) {
+                *o = stat[r] * (d - xh * m2);
+            }
+        } else {
+            let m1: f32 = dyr.iter().sum::<f32>() / c as f32;
+            for ((o, &d), &xh) in out.iter_mut().zip(dyr).zip(xr) {
+                *o = stat[r] * (d - m1 - xh * m2);
+            }
+        }
+    }
+    dx
+}
+
+/// Mean softmax cross-entropy over `rows` rows of `k` logits.
+/// Returns `(loss, accuracy)`.
+pub fn softmax_ce(z: &[f32], rows: usize, k: usize,
+                  y: &[i32]) -> (f32, f32) {
+    assert_eq!(z.len(), rows * k);
+    assert_eq!(y.len(), rows);
+    let mut loss = 0f64;
+    let mut hits = 0usize;
+    for r in 0..rows {
+        let zr = &z[r * k..(r + 1) * k];
+        let (mut mx, mut arg) = (f32::NEG_INFINITY, 0usize);
+        for (j, &v) in zr.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                arg = j;
+            }
+        }
+        let lse: f32 =
+            mx + zr.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+        let t = y[r] as usize;
+        loss += (lse - zr[t]) as f64;
+        hits += usize::from(arg == t);
+    }
+    ((loss / rows as f64) as f32, hits as f32 / rows as f32)
+}
+
+/// Gradient of [`softmax_ce`] w.r.t. the logits:
+/// `dz = (softmax(z) − onehot(y)) / rows`.
+pub fn softmax_ce_grad(z: &[f32], rows: usize, k: usize,
+                       y: &[i32]) -> Vec<f32> {
+    let mut dz = vec![0f32; rows * k];
+    let inv = 1.0 / rows as f32;
+    for r in 0..rows {
+        let zr = &z[r * k..(r + 1) * k];
+        let out = &mut dz[r * k..(r + 1) * k];
+        let mx = zr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for (o, &v) in out.iter_mut().zip(zr) {
+            *o = (v - mx).exp();
+            sum += *o;
+        }
+        for o in out.iter_mut() {
+            *o = *o / sum * inv;
+        }
+        out[y[r] as usize] -= inv;
+    }
+    dz
+}
+
+/// Shape of a multi-head attention problem over `[B·N, H·dh]` tensors.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnDims {
+    /// Batch size.
+    pub b: usize,
+    /// Tokens per sequence.
+    pub n: usize,
+    /// Number of heads.
+    pub h: usize,
+    /// Head dimension (`C = h · dh`).
+    pub dh: usize,
+}
+
+impl AttnDims {
+    fn c(&self) -> usize {
+        self.h * self.dh
+    }
+}
+
+fn gather_head(src: &[f32], d: &AttnDims, bi: usize, hi: usize,
+               out: &mut [f32]) {
+    let c = d.c();
+    for i in 0..d.n {
+        let row = (bi * d.n + i) * c + hi * d.dh;
+        out[i * d.dh..(i + 1) * d.dh]
+            .copy_from_slice(&src[row..row + d.dh]);
+    }
+}
+
+/// Row-softmax of the scaled score matrix `q·kᵀ/√dh` for one head.
+/// `lim(i)` = number of valid key positions for query `i`.
+fn head_probs(qs: &[f32], ks: &[f32], d: &AttnDims, causal: bool)
+              -> Vec<f32> {
+    let n = d.n;
+    let scale = 1.0 / (d.dh as f32).sqrt();
+    let mut p = vec![0f32; n * n];
+    for i in 0..n {
+        let lim = if causal { i + 1 } else { n };
+        let prow = &mut p[i * n..i * n + lim];
+        let qrow = &qs[i * d.dh..(i + 1) * d.dh];
+        for (j, pv) in prow.iter_mut().enumerate() {
+            *pv = dot(qrow, &ks[j * d.dh..(j + 1) * d.dh]) * scale;
+        }
+        let mx = prow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for pv in prow.iter_mut() {
+            *pv = (*pv - mx).exp();
+            sum += *pv;
+        }
+        for pv in prow.iter_mut() {
+            *pv /= sum;
+        }
+    }
+    p
+}
+
+/// Multi-head attention forward: `o = softmax(q·kᵀ/√dh)·v`, computed per
+/// `(batch, head)` task in parallel. Probabilities are **not** retained —
+/// the backward pass recomputes them from the saved q/k (the FlashAttn
+/// residual policy the measured tape assumes).
+pub fn attn_fwd(q: &[f32], k: &[f32], v: &[f32], d: &AttnDims,
+                causal: bool) -> Vec<f32> {
+    let (n, dh, c) = (d.n, d.dh, d.c());
+    let tasks = d.b * d.h;
+    let mut o_hm = vec![0f32; tasks * n * dh];
+    super::pool::parallel_tasks(&mut o_hm, n * dh, |t, slot| {
+        let (bi, hi) = (t / d.h, t % d.h);
+        let mut qs = vec![0f32; n * dh];
+        let mut ks = vec![0f32; n * dh];
+        let mut vs = vec![0f32; n * dh];
+        gather_head(q, d, bi, hi, &mut qs);
+        gather_head(k, d, bi, hi, &mut ks);
+        gather_head(v, d, bi, hi, &mut vs);
+        let p = head_probs(&qs, &ks, d, causal);
+        for i in 0..n {
+            let orow = &mut slot[i * dh..(i + 1) * dh];
+            let lim = if causal { i + 1 } else { n };
+            for (j, &pv) in p[i * n..i * n + lim].iter().enumerate() {
+                let vrow = &vs[j * dh..(j + 1) * dh];
+                for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                    *ov += pv * vv;
+                }
+            }
+        }
+    });
+    // head-major [B,H,N,dh] → row-major [B·N, C]
+    let mut o = vec![0f32; d.b * n * c];
+    for t in 0..tasks {
+        let (bi, hi) = (t / d.h, t % d.h);
+        for i in 0..n {
+            let src = &o_hm[(t * n + i) * dh..(t * n + i + 1) * dh];
+            let row = (bi * n + i) * c + hi * dh;
+            o[row..row + dh].copy_from_slice(src);
+        }
+    }
+    o
+}
+
+/// Multi-head attention backward. Recomputes the probabilities from the
+/// saved `q`/`k`, then returns `(dq, dk, dv)` in `[B·N, C]` layout.
+pub fn attn_bwd(dout: &[f32], q: &[f32], k: &[f32], v: &[f32],
+                d: &AttnDims, causal: bool)
+                -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (n, dh, c) = (d.n, d.dh, d.c());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let tasks = d.b * d.h;
+    // one slot per task holding [dq | dk | dv] head-major
+    let mut dqkv = vec![0f32; tasks * 3 * n * dh];
+    super::pool::parallel_tasks(&mut dqkv, 3 * n * dh, |t, slot| {
+        let (bi, hi) = (t / d.h, t % d.h);
+        let mut qs = vec![0f32; n * dh];
+        let mut ks = vec![0f32; n * dh];
+        let mut vs = vec![0f32; n * dh];
+        let mut dos = vec![0f32; n * dh];
+        gather_head(q, d, bi, hi, &mut qs);
+        gather_head(k, d, bi, hi, &mut ks);
+        gather_head(v, d, bi, hi, &mut vs);
+        gather_head(dout, d, bi, hi, &mut dos);
+        let p = head_probs(&qs, &ks, d, causal);
+        let (dq_s, rest) = slot.split_at_mut(n * dh);
+        let (dk_s, dv_s) = rest.split_at_mut(n * dh);
+        let mut ds = vec![0f32; n * n];
+        for i in 0..n {
+            let lim = if causal { i + 1 } else { n };
+            let prow = &p[i * n..i * n + lim];
+            let dorow = &dos[i * dh..(i + 1) * dh];
+            // dp row, then ds = p ∘ (dp − Σ dp∘p)
+            let dsrow = &mut ds[i * n..i * n + lim];
+            let mut inner = 0f32;
+            for (j, dsv) in dsrow.iter_mut().enumerate() {
+                *dsv = dot(dorow, &vs[j * dh..(j + 1) * dh]); // dp
+                inner += *dsv * prow[j];
+            }
+            for (dsv, &pv) in dsrow.iter_mut().zip(prow) {
+                *dsv = pv * (*dsv - inner);
+            }
+            // dv += pᵀ·do ; dq = ds·k·scale ; dk += dsᵀ·q·scale
+            let qrow = &qs[i * dh..(i + 1) * dh];
+            let dqrow = &mut dq_s[i * dh..(i + 1) * dh];
+            for j in 0..lim {
+                let pv = prow[j];
+                let dsv = ds[i * n + j];
+                let krow = &ks[j * dh..(j + 1) * dh];
+                let vrow_d = &mut dv_s[j * dh..(j + 1) * dh];
+                for (x, &dv_) in vrow_d.iter_mut().zip(dorow) {
+                    *x += pv * dv_;
+                }
+                for (x, &kv) in dqrow.iter_mut().zip(krow) {
+                    *x += dsv * kv * scale;
+                }
+                let krow_d = &mut dk_s[j * dh..(j + 1) * dh];
+                for (x, &qv) in krow_d.iter_mut().zip(qrow) {
+                    *x += dsv * qv * scale;
+                }
+            }
+        }
+    });
+    let mut dq = vec![0f32; d.b * n * c];
+    let mut dk = vec![0f32; d.b * n * c];
+    let mut dv = vec![0f32; d.b * n * c];
+    for t in 0..tasks {
+        let (bi, hi) = (t / d.h, t % d.h);
+        let base = t * 3 * n * dh;
+        for i in 0..n {
+            let row = (bi * n + i) * c + hi * dh;
+            let off = base + i * dh;
+            dq[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+            let off = base + (n + i) * dh;
+            dk[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+            let off = base + (2 * n + i) * dh;
+            dv[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Exact activation forward (`GELU` per eq. 40 / `SiLU` per eq. 47); the
+/// same forward is used by the ReGELU2/ReSiLU2 variants — only the saved
+/// residual and the backward differ.
+pub fn act_fwd(u: &[f32], gelu: bool) -> Vec<f32> {
+    let mut out = vec![0f32; u.len()];
+    parallel_rows(&mut out, 1, 4096, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let x = u[i0 + i] as f64;
+            *o = if gelu { funcs::gelu(x) } else { funcs::silu(x) } as f32;
+        }
+    });
+    out
+}
+
+/// Exact activation backward: `du = dy ∘ h'(u)` from the full-precision
+/// saved pre-activation.
+pub fn act_bwd_exact(u: &[f32], dy: &[f32], gelu: bool) -> Vec<f32> {
+    let mut out = vec![0f32; u.len()];
+    parallel_rows(&mut out, 1, 4096, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let x = u[i0 + i] as f64;
+            let d = if gelu { funcs::dgelu(x) } else { funcs::dsilu(x) };
+            *o = dy[i0 + i] * d as f32;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize,
+                n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..k {
+                    acc += (a[i * k + t] * b[t * n + j]) as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_naive() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (7, 11, 5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let want = naive_nn(&a, &b, m, k, n);
+        let got = matmul_nn(&a, &b, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // bt[n,k] with bt[j,t] = b[t,j] → nt must match nn
+        let mut bt = vec![0f32; n * k];
+        for t in 0..k {
+            for j in 0..n {
+                bt[j * k + t] = b[t * n + j];
+            }
+        }
+        let got = matmul_nt(&a, &bt, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // at[k,m] with at[t,i] = a[i,t] → tn must match nn
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for t in 0..k {
+                at[t * m + i] = a[i * k + t];
+            }
+        }
+        let got = matmul_tn(&at, &b, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn norm_fwd_is_normalized() {
+        let mut rng = Rng::new(4);
+        let (rows, c) = (6, 16);
+        let x = randv(&mut rng, rows * c);
+        let (xhat, stat) = norm_fwd(&x, rows, c, false);
+        for r in 0..rows {
+            let row = &xhat[r * c..(r + 1) * c];
+            let mu: f32 = row.iter().sum::<f32>() / c as f32;
+            let var: f32 =
+                row.iter().map(|v| v * v).sum::<f32>() / c as f32;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+            assert!(stat[r] > 0.0);
+        }
+        let (xhat, _) = norm_fwd(&x, rows, c, true);
+        for r in 0..rows {
+            let row = &xhat[r * c..(r + 1) * c];
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / c as f32;
+            assert!((ms - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let k = 8;
+        let z = vec![0f32; 2 * k];
+        let (loss, _) = softmax_ce(&z, 2, k, &[1, 5]);
+        assert!((loss - (k as f32).ln()).abs() < 1e-5);
+        let dz = softmax_ce_grad(&z, 2, k, &[1, 5]);
+        // rows of dz sum to zero
+        for r in 0..2 {
+            let s: f32 = dz[r * k..(r + 1) * k].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attn_rows_are_convex_combinations() {
+        // with v = const per row index, each output stays in the convex
+        // hull of the values; causal row 0 attends only to itself
+        let d = AttnDims { b: 1, n: 4, h: 1, dh: 2 };
+        let mut rng = Rng::new(5);
+        let q = randv(&mut rng, 8);
+        let k = randv(&mut rng, 8);
+        let v: Vec<f32> =
+            (0..8).map(|i| (i / 2) as f32).collect(); // row j → value j
+        let o = attn_fwd(&q, &k, &v, &d, true);
+        assert!((o[0] - 0.0).abs() < 1e-6); // row 0 sees only v[0] = 0
+        assert!(o[6] >= 0.0 && o[6] <= 3.0);
+    }
+
+    #[test]
+    fn attn_bwd_matches_finite_difference() {
+        let d = AttnDims { b: 2, n: 3, h: 2, dh: 2 };
+        let c = d.h * d.dh;
+        let sz = d.b * d.n * c;
+        let mut rng = Rng::new(6);
+        let q = randv(&mut rng, sz);
+        let k = randv(&mut rng, sz);
+        let v = randv(&mut rng, sz);
+        let w = randv(&mut rng, sz); // random linear functional
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            attn_fwd(q, k, v, &d, false)
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| (a * b) as f64)
+                .sum()
+        };
+        let (dq, dk, dv) = attn_bwd(&w, &q, &k, &v, &d, false);
+        let eps = 1e-3f32;
+        for (buf, grad, which) in [(&q, &dq, 0), (&k, &dk, 1), (&v, &dv, 2)]
+        {
+            for i in [0usize, 5, sz - 1] {
+                let mut plus = buf.to_vec();
+                plus[i] += eps;
+                let mut minus = buf.to_vec();
+                minus[i] -= eps;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    1 => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad[i]).abs() < 2e-2 * fd.abs().max(1.0),
+                    "which={which} i={i}: fd={fd} an={}", grad[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn act_exact_matches_scalar() {
+        let u = [-2.0f32, -0.5, 0.0, 0.7, 3.0];
+        let dy = [1.0f32; 5];
+        let y = act_fwd(&u, true);
+        let du = act_bwd_exact(&u, &dy, true);
+        for i in 0..5 {
+            assert!((y[i] as f64 - funcs::gelu(u[i] as f64)).abs() < 1e-6);
+            assert!((du[i] as f64 - funcs::dgelu(u[i] as f64)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn colsum_and_bias() {
+        let a = [1f32, 2., 3., 4., 5., 6.];
+        assert_eq!(colsum(&a, 2, 3), vec![5.0, 7.0, 9.0]);
+        let mut b = a;
+        add_bias(&mut b, &[10.0, 20.0, 30.0]);
+        assert_eq!(b[0], 11.0);
+        assert_eq!(b[5], 36.0);
+    }
+}

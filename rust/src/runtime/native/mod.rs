@@ -1,0 +1,62 @@
+//! The in-tree pure-Rust CPU backend (default).
+//!
+//! Executes the fine-tuning step directly from the manifest: the
+//! [`model`] module builds the transformer and runs the decoupled
+//! forward/backward passes, [`kernels`] provides the blocked matmul /
+//! attention / norm / activation primitives, [`pool`] fans the hot loops
+//! out over cores, and [`spec`] parses preset names and synthesizes
+//! manifests by dry-running the model — so `ambp train --preset
+//! vitt_loraqv_regelu2_msln` works with zero build-time artifacts.
+
+pub mod kernels;
+pub mod model;
+pub mod pool;
+pub mod spec;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, Backend, Executor, FwdOut, Tensor};
+
+pub use model::{Act, Arch, Model, NetCfg, Norm, Tuning};
+
+/// The native CPU backend (unit struct — all state lives in artifacts).
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, dir: &Path) -> Result<Artifact> {
+        spec::load_artifact(dir)
+    }
+
+    fn synthesize(&self, preset: &str) -> Result<Artifact> {
+        spec::synth_artifact(preset)
+    }
+}
+
+/// [`Executor`] over a built native [`Model`].
+pub struct NativeExec {
+    /// The model whose layout matches the artifact manifest.
+    pub model: Model,
+}
+
+impl Executor for NativeExec {
+    fn run_fwd(&self, params: &[Tensor], x: &Tensor,
+               y: &Tensor) -> Result<FwdOut> {
+        let (loss, metric, saves) = self.model.forward(params, x, y)?;
+        Ok(FwdOut {
+            loss,
+            metric,
+            residuals: saves.into_iter().map(|s| s.tensor).collect(),
+        })
+    }
+
+    fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
+               y: &Tensor) -> Result<Vec<Tensor>> {
+        self.model.backward(params, residuals, x, y)
+    }
+}

@@ -1,0 +1,1110 @@
+//! The native backend's transformer: built directly from a manifest
+//! config, with *manually decoupled* forward/backward passes.
+//!
+//! The forward pass saves exactly the residual set the paper's tape
+//! stores (see DESIGN.md §2.2): per block, the normalized input (shared
+//! with the following linears under MS-LN/MS-RMSNorm), the per-row norm
+//! statistic, q/k/v (attention probabilities are recomputed in backward),
+//! the linear inputs that weight/LoRA gradients need, and the activation
+//! residual — a full-precision pre-activation for GELU/SiLU, or a 2-bit
+//! packed code tensor for ReGELU2/ReSiLU2 (Prop 4.3: the backward slope
+//! is one of 4 values, so 2 bits suffice).
+//!
+//! The backward pass consumes the residual list in exact reverse push
+//! order; the gradient math was cross-checked against finite differences
+//! for every (arch × tuning × norm) combination.
+
+use anyhow::{bail, ensure, Result};
+
+use super::kernels::{
+    add_bias, add_inplace, attn_bwd, attn_fwd, colsum, matmul_nn,
+    matmul_nt, matmul_tn, norm_bwd, norm_fwd, softmax_ce, softmax_ce_grad,
+    AttnDims,
+};
+use crate::coeffs::funcs::{ReluComb, PAPER_GELU, PAPER_SILU};
+use crate::packing;
+use crate::runtime::manifest::ParamInfo;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::rng::Rng;
+
+/// Model family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Patch-token classifier (ViT): f32 `[B,N,P]` input, `[B]` labels.
+    Vit,
+    /// Causal LM (LLaMA-style: RMS norms, no biases): i32 `[B,N]` tokens,
+    /// `[B,N]` next-token targets.
+    Llama,
+    /// Bidirectional sequence classifier (RoBERTa-style): i32 `[B,N]`
+    /// tokens, `[B]` labels.
+    Roberta,
+}
+
+/// Which parameters train (the paper's Table 1/3 axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tuning {
+    /// Everything trains.
+    Full,
+    /// Only the classifier head trains (linear probe).
+    Frozen,
+    /// LoRA adapters on q/v (+ head).
+    LoraQv,
+    /// LoRA adapters on every block linear (+ head).
+    LoraAll,
+    /// LoRA-FA on q/v: A frozen, so linear inputs need not be saved.
+    LoraFaQv,
+    /// LoRA-FA on every block linear.
+    LoraFaAll,
+}
+
+/// Activation function variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// Exact GELU fwd, exact bwd from the saved f32 pre-activation.
+    Gelu,
+    /// Exact GELU fwd, approximate bwd from 2-bit codes (ReGELU2).
+    ReGelu2,
+    /// Exact SiLU fwd/bwd.
+    Silu,
+    /// Exact SiLU fwd, approximate bwd from 2-bit codes (ReSiLU2).
+    ReSilu2,
+}
+
+/// Normalization variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Norm {
+    /// LayerNorm with affine; stores x̂ *and* the affine output.
+    Ln,
+    /// Memory-sharing LayerNorm: affine merged into the next linears
+    /// (eq. 17), one shared x̂ residual.
+    MsLn,
+    /// RMSNorm with scale.
+    Rms,
+    /// Memory-sharing RMSNorm.
+    MsRms,
+}
+
+/// Architecture + variant configuration of a native model, mirroring the
+/// manifest `config` section.
+#[derive(Debug, Clone)]
+pub struct NetCfg {
+    /// Model family.
+    pub arch: Arch,
+    /// Embedding width C.
+    pub dim: usize,
+    /// Number of transformer blocks.
+    pub depth: usize,
+    /// Attention heads (must divide `dim`).
+    pub n_heads: usize,
+    /// Tokens per sequence N.
+    pub n_tokens: usize,
+    /// Batch size B.
+    pub batch: usize,
+    /// Classifier classes (ViT / RoBERTa).
+    pub n_classes: usize,
+    /// Vocabulary size (LLaMA / RoBERTa).
+    pub vocab: usize,
+    /// MLP expansion ratio (hidden = dim · ratio).
+    pub mlp_ratio: f64,
+    /// LoRA rank r.
+    pub lora_rank: usize,
+    /// Patch dimension P (ViT input feature size).
+    pub patch_dim: usize,
+    /// Trainability mode.
+    pub tuning: Tuning,
+    /// Activation variant.
+    pub act: Act,
+    /// Normalization variant.
+    pub norm: Norm,
+}
+
+impl NetCfg {
+    /// MLP hidden width M.
+    pub fn hidden(&self) -> usize {
+        (self.dim as f64 * self.mlp_ratio) as usize
+    }
+
+    fn is_ms(&self) -> bool {
+        matches!(self.norm, Norm::MsLn | Norm::MsRms)
+    }
+
+    fn is_rms(&self) -> bool {
+        matches!(self.norm, Norm::Rms | Norm::MsRms)
+    }
+
+    fn has_affine(&self) -> bool {
+        matches!(self.norm, Norm::Ln | Norm::Rms)
+    }
+
+    fn use_bias(&self) -> bool {
+        self.arch != Arch::Llama
+    }
+
+    fn causal(&self) -> bool {
+        self.arch == Arch::Llama
+    }
+
+    fn act_exact_bwd(&self) -> bool {
+        matches!(self.act, Act::Gelu | Act::Silu)
+    }
+
+    fn is_gelu(&self) -> bool {
+        matches!(self.act, Act::Gelu | Act::ReGelu2)
+    }
+
+    fn comb(&self) -> &'static ReluComb {
+        if self.is_gelu() { &PAPER_GELU } else { &PAPER_SILU }
+    }
+
+    fn lora_fa(&self) -> bool {
+        matches!(self.tuning, Tuning::LoraFaQv | Tuning::LoraFaAll)
+    }
+
+    fn lora_on(&self, which: &str) -> bool {
+        match self.tuning {
+            Tuning::LoraQv | Tuning::LoraFaQv => which == "q" || which == "v",
+            Tuning::LoraAll | Tuning::LoraFaAll => true,
+            Tuning::Full | Tuning::Frozen => false,
+        }
+    }
+
+    fn head_trainable(&self) -> bool {
+        match self.arch {
+            Arch::Llama => self.tuning == Tuning::Full,
+            _ => true,
+        }
+    }
+
+    /// Basic structural validation; returns a descriptive error on
+    /// configs the native backend cannot run.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.dim > 0 && self.depth > 0 && self.n_tokens > 0
+                    && self.batch > 0, "empty model dims");
+        ensure!(self.dim % self.n_heads == 0,
+                "dim {} not divisible by n_heads {}", self.dim,
+                self.n_heads);
+        ensure!(self.hidden() % 4 == 0,
+                "mlp hidden {} must be a multiple of 4 (2-bit packing)",
+                self.hidden());
+        match self.arch {
+            Arch::Vit => ensure!(self.patch_dim > 0 && self.n_classes > 1,
+                                 "vit needs patch_dim and n_classes"),
+            Arch::Llama => ensure!(self.vocab > 1, "llama needs vocab"),
+            Arch::Roberta => ensure!(self.vocab > 1 && self.n_classes > 1,
+                                     "roberta needs vocab and n_classes"),
+        }
+        if matches!(self.tuning, Tuning::LoraQv | Tuning::LoraAll
+                        | Tuning::LoraFaQv | Tuning::LoraFaAll) {
+            ensure!(self.lora_rank > 0, "lora tuning needs lora_rank > 0");
+        }
+        Ok(())
+    }
+
+    /// Parse the manifest `tuning` string (both `lora_qv` and `loraqv`
+    /// spellings are accepted).
+    pub fn tuning_from_str(s: &str) -> Result<Tuning> {
+        Ok(match s {
+            "full" => Tuning::Full,
+            "frozen" => Tuning::Frozen,
+            "lora_qv" | "loraqv" => Tuning::LoraQv,
+            "lora_all" | "loraall" => Tuning::LoraAll,
+            "lorafa_qv" | "lorafaqv" => Tuning::LoraFaQv,
+            "lorafa_all" | "lorafaall" => Tuning::LoraFaAll,
+            other => bail!("unsupported tuning {other:?}"),
+        })
+    }
+
+    /// Parse the manifest `activation` string.
+    pub fn act_from_str(s: &str) -> Result<Act> {
+        Ok(match s {
+            "gelu" => Act::Gelu,
+            "regelu2" => Act::ReGelu2,
+            "silu" => Act::Silu,
+            "resilu2" => Act::ReSilu2,
+            other => bail!("unsupported activation {other:?} (native \
+                            backend supports gelu|regelu2|silu|resilu2)"),
+        })
+    }
+
+    /// Parse the manifest `norm` string.
+    pub fn norm_from_str(s: &str) -> Result<Norm> {
+        Ok(match s {
+            "ln" => Norm::Ln,
+            "msln" => Norm::MsLn,
+            "rms" => Norm::Rms,
+            "msrms" => Norm::MsRms,
+            other => bail!("unsupported norm {other:?} (native backend \
+                            supports ln|msln|rms|msrms)"),
+        })
+    }
+
+    /// Parse the manifest `arch` string.
+    pub fn arch_from_str(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "vit" => Arch::Vit,
+            "llama" => Arch::Llama,
+            "roberta" => Arch::Roberta,
+            other => bail!("unsupported arch {other:?}"),
+        })
+    }
+}
+
+/// One residual pushed by the forward pass (a manifest `ResInfo` minus
+/// the derived byte counts).
+pub struct SavedRes {
+    /// Producing module path (e.g. `block0.attn.q`).
+    pub module: String,
+    /// Residual kind (`norm_input`, `attn_qkv`, `act_codes`, …).
+    pub kind: &'static str,
+    /// The saved tensor.
+    pub tensor: Tensor,
+}
+
+struct LinDef {
+    name: String,
+    din: usize,
+    dout: usize,
+    w: usize,
+    b: Option<usize>,
+    la: Option<usize>,
+    lb: Option<usize>,
+    fa: bool,
+    base_train: bool,
+}
+
+impl LinDef {
+    fn need_x(&self) -> bool {
+        self.base_train || (self.la.is_some() && !self.fa)
+    }
+}
+
+struct NormDef {
+    name: String,
+    g: Option<usize>,
+    b: Option<usize>,
+}
+
+struct BlockDef {
+    attn_name: String,
+    mlp_name: String,
+    norm1: NormDef,
+    q: LinDef,
+    k: LinDef,
+    v: LinDef,
+    proj: LinDef,
+    norm2: NormDef,
+    fc1: LinDef,
+    fc2: LinDef,
+}
+
+/// A built native model: the parameter layout plus fwd/bwd execution.
+pub struct Model {
+    /// The configuration the layout was derived from.
+    pub cfg: NetCfg,
+    /// Parameter layout in manifest order.
+    pub infos: Vec<ParamInfo>,
+    embed_w: Option<usize>,
+    embed_b: Option<usize>,
+    tok_e: Option<usize>,
+    pos: usize,
+    blocks: Vec<BlockDef>,
+    normf: NormDef,
+    head: LinDef,
+}
+
+struct Reg {
+    infos: Vec<ParamInfo>,
+}
+
+impl Reg {
+    fn add(&mut self, name: String, shape: Vec<usize>,
+           trainable: bool) -> usize {
+        self.infos.push(ParamInfo { name, shape, trainable });
+        self.infos.len() - 1
+    }
+}
+
+impl Model {
+    /// Derive the parameter layout from a config.
+    pub fn build(cfg: NetCfg) -> Result<Model> {
+        cfg.validate()?;
+        let c = cfg.dim;
+        let m = cfg.hidden();
+        let r = cfg.lora_rank;
+        let full = cfg.tuning == Tuning::Full;
+        let mut reg = Reg { infos: Vec::new() };
+
+        let (embed_w, embed_b, tok_e) = match cfg.arch {
+            Arch::Vit => (
+                Some(reg.add("embed.proj.W".into(),
+                             vec![c, cfg.patch_dim], full)),
+                Some(reg.add("embed.proj.b".into(), vec![c], full)),
+                None,
+            ),
+            _ => (
+                None,
+                None,
+                Some(reg.add("embed.tok.E".into(), vec![cfg.vocab, c],
+                             full)),
+            ),
+        };
+        let pos = reg.add("embed.pos".into(), vec![cfg.n_tokens, c], full);
+
+        let add_norm = |reg: &mut Reg, name: &str| -> NormDef {
+            if cfg.has_affine() {
+                let g = reg.add(format!("{name}.w"), vec![c], full);
+                let b = if cfg.is_rms() {
+                    None
+                } else {
+                    Some(reg.add(format!("{name}.b"), vec![c], full))
+                };
+                NormDef { name: name.to_string(), g: Some(g), b }
+            } else {
+                NormDef { name: name.to_string(), g: None, b: None }
+            }
+        };
+        let add_lin = |reg: &mut Reg, name: &str, which: &str, din: usize,
+                       dout: usize| -> LinDef {
+            let w = reg.add(format!("{name}.W"), vec![dout, din], full);
+            let b = if cfg.use_bias() {
+                Some(reg.add(format!("{name}.b"), vec![dout], full))
+            } else {
+                None
+            };
+            let (la, lb) = if cfg.lora_on(which) {
+                (
+                    Some(reg.add(format!("{name}.lora_a"), vec![r, din],
+                                 !cfg.lora_fa())),
+                    Some(reg.add(format!("{name}.lora_b"), vec![dout, r],
+                                 true)),
+                )
+            } else {
+                (None, None)
+            };
+            LinDef {
+                name: name.to_string(),
+                din,
+                dout,
+                w,
+                b,
+                la,
+                lb,
+                fa: cfg.lora_fa(),
+                base_train: full,
+            }
+        };
+
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for i in 0..cfg.depth {
+            let an = format!("block{i}.attn");
+            let mn = format!("block{i}.mlp");
+            let norm1 = add_norm(&mut reg, &format!("{an}.norm"));
+            let q = add_lin(&mut reg, &format!("{an}.q"), "q", c, c);
+            let k = add_lin(&mut reg, &format!("{an}.k"), "k", c, c);
+            let v = add_lin(&mut reg, &format!("{an}.v"), "v", c, c);
+            let proj =
+                add_lin(&mut reg, &format!("{an}.proj"), "proj", c, c);
+            let norm2 = add_norm(&mut reg, &format!("{mn}.norm"));
+            let fc1 = add_lin(&mut reg, &format!("{mn}.fc1"), "fc1", c, m);
+            let fc2 = add_lin(&mut reg, &format!("{mn}.fc2"), "fc2", m, c);
+            blocks.push(BlockDef {
+                attn_name: an,
+                mlp_name: mn,
+                norm1,
+                q,
+                k,
+                v,
+                proj,
+                norm2,
+                fc1,
+                fc2,
+            });
+        }
+        let normf = add_norm(&mut reg, "head.norm");
+        let head_out = match cfg.arch {
+            Arch::Llama => cfg.vocab,
+            _ => cfg.n_classes,
+        };
+        let ht = cfg.head_trainable();
+        let hw = reg.add("head.fc.W".into(), vec![head_out, c], ht);
+        let hb = if cfg.use_bias() {
+            Some(reg.add("head.fc.b".into(), vec![head_out], ht))
+        } else {
+            None
+        };
+        let head = LinDef {
+            name: "head.fc".into(),
+            din: c,
+            dout: head_out,
+            w: hw,
+            b: hb,
+            la: None,
+            lb: None,
+            fa: false,
+            base_train: ht,
+        };
+        Ok(Model {
+            cfg,
+            infos: reg.infos,
+            embed_w,
+            embed_b,
+            tok_e,
+            pos,
+            blocks,
+            normf,
+            head,
+        })
+    }
+
+    /// Deterministic parameter init (He-scaled weights, identity norms,
+    /// zero biases and LoRA-B). Each tensor's stream is keyed by
+    /// `(seed, name)`, so parameters shared between presets (e.g. the
+    /// frozen base under different LoRA layouts) get identical values —
+    /// which is also what makes LoRA variants start exactly at the base
+    /// model.
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        fn fnv1a(s: &str) -> u64 {
+            let mut h = 0xcbf29ce484222325u64;
+            for b in s.bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        }
+        self.infos
+            .iter()
+            .map(|info| {
+                let mut rng = Rng::new(seed ^ fnv1a(&info.name));
+                let n: usize = info.shape.iter().product();
+                let mut v = vec![0f32; n];
+                let name = info.name.as_str();
+                if name.ends_with(".norm.w") {
+                    v.fill(1.0);
+                } else if name == "head.fc.W"
+                    || name == "embed.pos"
+                    || name == "embed.tok.E"
+                {
+                    for x in v.iter_mut() {
+                        *x = rng.normal_f32() * 0.02;
+                    }
+                } else if name.ends_with(".W") || name.ends_with(".lora_a")
+                {
+                    let scale =
+                        1.0 / (info.shape[1] as f32).sqrt();
+                    for x in v.iter_mut() {
+                        *x = rng.normal_f32() * scale;
+                    }
+                }
+                // biases, lora_b, norm .b stay zero
+                Tensor::from_f32(&info.shape, &v)
+            })
+            .collect()
+    }
+
+    fn norm_kind(&self) -> &'static str {
+        if self.cfg.is_ms() { "norm_shared" } else { "norm_input" }
+    }
+
+    fn rows(&self) -> usize {
+        self.cfg.batch * self.cfg.n_tokens
+    }
+
+    fn attn_dims(&self) -> AttnDims {
+        AttnDims {
+            b: self.cfg.batch,
+            n: self.cfg.n_tokens,
+            h: self.cfg.n_heads,
+            dh: self.cfg.dim / self.cfg.n_heads,
+        }
+    }
+
+    fn check_batch(&self, x: &Tensor, y: &Tensor) -> Result<()> {
+        let (b, n) = (self.cfg.batch, self.cfg.n_tokens);
+        match self.cfg.arch {
+            Arch::Vit => {
+                ensure!(x.dtype == DType::F32
+                            && x.shape == [b, n, self.cfg.patch_dim],
+                        "bad x for vit: {:?}", x.shape);
+                ensure!(y.dtype == DType::I32 && y.elems() == b,
+                        "bad y for vit: {:?}", y.shape);
+            }
+            Arch::Llama => {
+                ensure!(x.dtype == DType::I32 && x.shape == [b, n],
+                        "bad x for llama: {:?}", x.shape);
+                ensure!(y.dtype == DType::I32 && y.elems() == b * n,
+                        "bad y for llama: {:?}", y.shape);
+            }
+            Arch::Roberta => {
+                ensure!(x.dtype == DType::I32 && x.shape == [b, n],
+                        "bad x for roberta: {:?}", x.shape);
+                ensure!(y.dtype == DType::I32 && y.elems() == b,
+                        "bad y for roberta: {:?}", y.shape);
+            }
+        }
+        // labels index the logits in softmax_ce: range-check them like
+        // embed_fwd does for input token ids
+        let hi = match self.cfg.arch {
+            Arch::Llama => self.cfg.vocab,
+            _ => self.cfg.n_classes,
+        };
+        for &t in y.as_i32() {
+            ensure!(t >= 0 && (t as usize) < hi,
+                    "label {t} out of range 0..{hi}");
+        }
+        Ok(())
+    }
+
+    fn embed_fwd(&self, params: &[Tensor], x: &Tensor) -> Result<Vec<f32>> {
+        let c = self.cfg.dim;
+        let rows = self.rows();
+        let mut h = match self.cfg.arch {
+            Arch::Vit => {
+                let mut e = matmul_nt(
+                    x.as_f32(),
+                    params[self.embed_w.unwrap()].as_f32(),
+                    rows,
+                    self.cfg.patch_dim,
+                    c,
+                );
+                add_bias(&mut e, params[self.embed_b.unwrap()].as_f32());
+                e
+            }
+            _ => {
+                let emb = params[self.tok_e.unwrap()].as_f32();
+                let toks = x.as_i32();
+                let mut e = vec![0f32; rows * c];
+                for (r, &t) in toks.iter().enumerate() {
+                    ensure!((t as usize) < self.cfg.vocab,
+                            "token {t} out of range");
+                    let t = t as usize;
+                    e[r * c..(r + 1) * c]
+                        .copy_from_slice(&emb[t * c..(t + 1) * c]);
+                }
+                e
+            }
+        };
+        let pos = params[self.pos].as_f32();
+        let n = self.cfg.n_tokens;
+        for r in 0..rows {
+            let prow = &pos[(r % n) * c..(r % n + 1) * c];
+            add_inplace(&mut h[r * c..(r + 1) * c], prow);
+        }
+        Ok(h)
+    }
+
+    fn norm_affine(&self, params: &[Tensor], nd: &NormDef,
+                   xhat: &[f32]) -> Option<Vec<f32>> {
+        let gi = nd.g?;
+        let g = params[gi].as_f32();
+        let c = g.len();
+        let mut y = vec![0f32; xhat.len()];
+        for (yrow, xrow) in y.chunks_mut(c).zip(xhat.chunks(c)) {
+            for ((o, &xh), &gv) in yrow.iter_mut().zip(xrow).zip(g) {
+                *o = xh * gv;
+            }
+        }
+        if let Some(bi) = nd.b {
+            add_bias(&mut y, params[bi].as_f32());
+        }
+        Some(y)
+    }
+
+    fn acc(&self, grads: &mut [Option<Vec<f32>>], idx: usize,
+           g: Vec<f32>) {
+        if !self.infos[idx].trainable {
+            return;
+        }
+        match &mut grads[idx] {
+            Some(a) => add_inplace(a, &g),
+            slot @ None => *slot = Some(g),
+        }
+    }
+
+    fn lin_fwd(&self, params: &[Tensor], lin: &LinDef, x: &[f32],
+               rows: usize, lead: &[usize],
+               saves: &mut Vec<SavedRes>) -> Vec<f32> {
+        let mut y = matmul_nt(x, params[lin.w].as_f32(), rows, lin.din,
+                              lin.dout);
+        if let Some(bi) = lin.b {
+            add_bias(&mut y, params[bi].as_f32());
+        }
+        if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
+            let r = self.cfg.lora_rank;
+            let u = matmul_nt(x, params[lai].as_f32(), rows, lin.din, r);
+            let mut shape = lead.to_vec();
+            shape.push(r);
+            saves.push(SavedRes {
+                module: lin.name.clone(),
+                kind: "lora_u",
+                tensor: Tensor::from_f32(&shape, &u),
+            });
+            let up = matmul_nt(&u, params[lbi].as_f32(), rows, r,
+                               lin.dout);
+            add_inplace(&mut y, &up);
+        }
+        y
+    }
+
+    fn lin_bwd(&self, params: &[Tensor], lin: &LinDef, dy: &[f32],
+               x: Option<&[f32]>, u: Option<&[f32]>, rows: usize,
+               grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
+        if lin.base_train {
+            let xx = x.expect("linear input residual missing");
+            self.acc(grads, lin.w,
+                     matmul_tn(dy, xx, lin.dout, rows, lin.din));
+            if let Some(bi) = lin.b {
+                self.acc(grads, bi, colsum(dy, rows, lin.dout));
+            }
+        }
+        let mut dx =
+            matmul_nn(dy, params[lin.w].as_f32(), rows, lin.dout, lin.din);
+        if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
+            let r = self.cfg.lora_rank;
+            let uu = u.expect("lora_u residual missing");
+            let du =
+                matmul_nn(dy, params[lbi].as_f32(), rows, lin.dout, r);
+            self.acc(grads, lbi, matmul_tn(dy, uu, lin.dout, rows, r));
+            if !lin.fa {
+                let xx = x.expect("linear input residual missing (lora)");
+                self.acc(grads, lai,
+                         matmul_tn(&du, xx, r, rows, lin.din));
+            }
+            let dxl =
+                matmul_nn(&du, params[lai].as_f32(), rows, r, lin.din);
+            add_inplace(&mut dx, &dxl);
+        }
+        dx
+    }
+
+    fn norm_param_bwd(&self, params: &[Tensor], nd: &NormDef, dy: &[f32],
+                      xhat: &[f32], stat: &[f32], rows: usize,
+                      grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
+        let c = self.cfg.dim;
+        if let Some(gi) = nd.g {
+            let mut dg = vec![0f32; c];
+            for (dyrow, xrow) in dy.chunks(c).zip(xhat.chunks(c)) {
+                for ((o, &d), &xh) in dg.iter_mut().zip(dyrow).zip(xrow) {
+                    *o += d * xh;
+                }
+            }
+            self.acc(grads, gi, dg);
+            if let Some(bi) = nd.b {
+                self.acc(grads, bi, colsum(dy, rows, c));
+            }
+            let g = params[gi].as_f32();
+            let mut dyh = vec![0f32; dy.len()];
+            for (orow, dyrow) in dyh.chunks_mut(c).zip(dy.chunks(c)) {
+                for ((o, &d), &gv) in orow.iter_mut().zip(dyrow).zip(g) {
+                    *o = d * gv;
+                }
+            }
+            norm_bwd(&dyh, xhat, stat, rows, c, self.cfg.is_rms())
+        } else {
+            norm_bwd(dy, xhat, stat, rows, c, self.cfg.is_rms())
+        }
+    }
+
+    /// Forward pass. Returns `(loss, metric, residuals)` with residuals
+    /// in the canonical push order (the manifest order).
+    pub fn forward(&self, params: &[Tensor], x: &Tensor,
+                   y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
+        ensure!(params.len() == self.infos.len(),
+                "param arity: got {}, expected {}", params.len(),
+                self.infos.len());
+        self.check_batch(x, y)?;
+        let cfg = &self.cfg;
+        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
+        let rows = self.rows();
+        let mut saves: Vec<SavedRes> = Vec::new();
+        let mut h = self.embed_fwd(params, x)?;
+        for blk in &self.blocks {
+            h = self.block_fwd(params, blk, h, &mut saves);
+        }
+        let (xhatf, statf) = norm_fwd(&h, rows, c, cfg.is_rms());
+        saves.push(SavedRes {
+            module: self.normf.name.clone(),
+            kind: self.norm_kind(),
+            tensor: Tensor::from_f32(&[bsz, n, c], &xhatf),
+        });
+        saves.push(SavedRes {
+            module: self.normf.name.clone(),
+            kind: "norm_stat",
+            tensor: Tensor::from_f32(&[bsz, n], &statf),
+        });
+        let afff = self.norm_affine(params, &self.normf, &xhatf);
+        let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
+        let (loss, metric) = match cfg.arch {
+            Arch::Llama => {
+                if self.head.need_x() {
+                    saves.push(SavedRes {
+                        module: self.head.name.clone(),
+                        kind: "head_input",
+                        tensor: Tensor::from_f32(&[bsz, n, c], hn),
+                    });
+                }
+                let z = self.lin_fwd(params, &self.head, hn, rows,
+                                     &[bsz, n], &mut saves);
+                let out = softmax_ce(&z, rows, cfg.vocab, y.as_i32());
+                saves.push(SavedRes {
+                    module: "head".into(),
+                    kind: "logits",
+                    tensor: Tensor::from_f32(&[bsz, n, cfg.vocab], &z),
+                });
+                out
+            }
+            _ => {
+                let mut pooled = vec![0f32; bsz * c];
+                for b in 0..bsz {
+                    let prow = &mut pooled[b * c..(b + 1) * c];
+                    for i in 0..n {
+                        let hrow = &hn[(b * n + i) * c..(b * n + i + 1) * c];
+                        add_inplace(prow, hrow);
+                    }
+                    for v in prow.iter_mut() {
+                        *v /= n as f32;
+                    }
+                }
+                saves.push(SavedRes {
+                    module: self.head.name.clone(),
+                    kind: "head_input",
+                    tensor: Tensor::from_f32(&[bsz, c], &pooled),
+                });
+                let z = self.lin_fwd(params, &self.head, &pooled, bsz,
+                                     &[bsz], &mut saves);
+                let out = softmax_ce(&z, bsz, cfg.n_classes, y.as_i32());
+                saves.push(SavedRes {
+                    module: "head".into(),
+                    kind: "logits",
+                    tensor: Tensor::from_f32(&[bsz, cfg.n_classes], &z),
+                });
+                out
+            }
+        };
+        Ok((loss, metric, saves))
+    }
+
+    fn block_fwd(&self, params: &[Tensor], blk: &BlockDef, mut h: Vec<f32>,
+                 saves: &mut Vec<SavedRes>) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
+        let rows = self.rows();
+        let lead = [bsz, n];
+        // ---- attention half ----
+        let (xhat1, stat1) = norm_fwd(&h, rows, c, cfg.is_rms());
+        saves.push(SavedRes {
+            module: blk.norm1.name.clone(),
+            kind: self.norm_kind(),
+            tensor: Tensor::from_f32(&[bsz, n, c], &xhat1),
+        });
+        saves.push(SavedRes {
+            module: blk.norm1.name.clone(),
+            kind: "norm_stat",
+            tensor: Tensor::from_f32(&[bsz, n], &stat1),
+        });
+        let aff1 = self.norm_affine(params, &blk.norm1, &xhat1);
+        let xn1: &[f32] = aff1.as_deref().unwrap_or(&xhat1);
+        let need_qkv_x =
+            blk.q.need_x() || blk.k.need_x() || blk.v.need_x();
+        if !cfg.is_ms() && need_qkv_x {
+            saves.push(SavedRes {
+                module: format!("{}.qkv", blk.attn_name),
+                kind: "linear_input",
+                tensor: Tensor::from_f32(&[bsz, n, c], xn1),
+            });
+        }
+        let q = self.lin_fwd(params, &blk.q, xn1, rows, &lead, saves);
+        let k = self.lin_fwd(params, &blk.k, xn1, rows, &lead, saves);
+        let v = self.lin_fwd(params, &blk.v, xn1, rows, &lead, saves);
+        for (name, t) in [(&blk.q.name, &q), (&blk.k.name, &k),
+                          (&blk.v.name, &v)] {
+            saves.push(SavedRes {
+                module: name.clone(),
+                kind: "attn_qkv",
+                tensor: Tensor::from_f32(&[bsz, n, c], t),
+            });
+        }
+        let o = attn_fwd(&q, &k, &v, &self.attn_dims(), cfg.causal());
+        if blk.proj.need_x() {
+            saves.push(SavedRes {
+                module: blk.proj.name.clone(),
+                kind: "linear_input",
+                tensor: Tensor::from_f32(&[bsz, n, c], &o),
+            });
+        }
+        let po = self.lin_fwd(params, &blk.proj, &o, rows, &lead, saves);
+        add_inplace(&mut h, &po);
+        // ---- mlp half ----
+        let m = cfg.hidden();
+        let (xhat2, stat2) = norm_fwd(&h, rows, c, cfg.is_rms());
+        saves.push(SavedRes {
+            module: blk.norm2.name.clone(),
+            kind: self.norm_kind(),
+            tensor: Tensor::from_f32(&[bsz, n, c], &xhat2),
+        });
+        saves.push(SavedRes {
+            module: blk.norm2.name.clone(),
+            kind: "norm_stat",
+            tensor: Tensor::from_f32(&[bsz, n], &stat2),
+        });
+        let aff2 = self.norm_affine(params, &blk.norm2, &xhat2);
+        let xn2: &[f32] = aff2.as_deref().unwrap_or(&xhat2);
+        if !cfg.is_ms() && blk.fc1.need_x() {
+            saves.push(SavedRes {
+                module: blk.fc1.name.clone(),
+                kind: "linear_input",
+                tensor: Tensor::from_f32(&[bsz, n, c], xn2),
+            });
+        }
+        let u = self.lin_fwd(params, &blk.fc1, xn2, rows, &lead, saves);
+        let hact = super::kernels::act_fwd(&u, cfg.is_gelu());
+        if cfg.act_exact_bwd() {
+            saves.push(SavedRes {
+                module: format!("{}.act", blk.mlp_name),
+                kind: "act_full",
+                tensor: Tensor::from_f32(&[bsz, n, m], &u),
+            });
+        } else {
+            let codes = packing::bucketize2(&u, cfg.comb().c);
+            let packed = packing::pack2(&codes);
+            saves.push(SavedRes {
+                module: format!("{}.act", blk.mlp_name),
+                kind: "act_codes",
+                tensor: Tensor::from_u8(&[bsz, n, m / 4], &packed),
+            });
+        }
+        if blk.fc2.need_x() {
+            saves.push(SavedRes {
+                module: blk.fc2.name.clone(),
+                kind: "linear_input",
+                tensor: Tensor::from_f32(&[bsz, n, m], &hact),
+            });
+        }
+        let mo = self.lin_fwd(params, &blk.fc2, &hact, rows, &lead, saves);
+        add_inplace(&mut h, &mo);
+        h
+    }
+
+    /// Backward pass from the residual list `forward` produced. Returns
+    /// gradients for the trainable parameters, in manifest order.
+    pub fn backward(&self, params: &[Tensor], residuals: &[Tensor],
+                    x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
+        ensure!(params.len() == self.infos.len(), "param arity");
+        self.check_batch(x, y)?;
+        let cfg = &self.cfg;
+        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
+        let rows = self.rows();
+        let mut grads: Vec<Option<Vec<f32>>> = Vec::new();
+        grads.resize_with(self.infos.len(), || None);
+        let mut st = Stack { res: residuals, top: residuals.len() };
+
+        // ---- head / loss ----
+        let z = st.pop()?;
+        let dhn: Vec<f32> = match cfg.arch {
+            Arch::Llama => {
+                ensure!(z.elems() == rows * cfg.vocab, "bad z residual");
+                let dz =
+                    softmax_ce_grad(z.as_f32(), rows, cfg.vocab,
+                                    y.as_i32());
+                let hn = if self.head.need_x() {
+                    Some(st.pop()?)
+                } else {
+                    None
+                };
+                self.lin_bwd(params, &self.head, &dz,
+                             hn.map(|t| t.as_f32()), None, rows,
+                             &mut grads)
+            }
+            _ => {
+                ensure!(z.elems() == bsz * cfg.n_classes,
+                        "bad z residual");
+                let dz = softmax_ce_grad(z.as_f32(), bsz, cfg.n_classes,
+                                         y.as_i32());
+                let pooled = st.pop()?;
+                let dpooled = self.lin_bwd(params, &self.head, &dz,
+                                           Some(pooled.as_f32()), None,
+                                           bsz, &mut grads);
+                let mut dhn = vec![0f32; rows * c];
+                let inv = 1.0 / n as f32;
+                for b in 0..bsz {
+                    let src = &dpooled[b * c..(b + 1) * c];
+                    for i in 0..n {
+                        let dst = &mut dhn
+                            [(b * n + i) * c..(b * n + i + 1) * c];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d = s * inv;
+                        }
+                    }
+                }
+                dhn
+            }
+        };
+        let statf = st.pop()?;
+        let xhatf = st.pop()?;
+        debug_assert_eq!(statf.elems(), rows);
+        debug_assert_eq!(xhatf.elems(), rows * c);
+        let mut dh = self.norm_param_bwd(params, &self.normf, &dhn,
+                                         xhatf.as_f32(), statf.as_f32(),
+                                         rows, &mut grads);
+        // ---- blocks in reverse ----
+        for blk in self.blocks.iter().rev() {
+            dh = self.block_bwd(params, blk, dh, &mut st, &mut grads)?;
+        }
+        ensure!(st.top == 0, "residual stack not fully consumed: {} left",
+                st.top);
+        // ---- embedding ----
+        match cfg.arch {
+            Arch::Vit => {
+                if self.infos[self.embed_w.unwrap()].trainable {
+                    self.acc(&mut grads, self.embed_w.unwrap(),
+                             matmul_tn(&dh, x.as_f32(), c, rows,
+                                       cfg.patch_dim));
+                    self.acc(&mut grads, self.embed_b.unwrap(),
+                             colsum(&dh, rows, c));
+                }
+            }
+            _ => {
+                let ei = self.tok_e.unwrap();
+                if self.infos[ei].trainable {
+                    let mut de = vec![0f32; cfg.vocab * c];
+                    for (r, &t) in x.as_i32().iter().enumerate() {
+                        let t = t as usize;
+                        add_inplace(&mut de[t * c..(t + 1) * c],
+                                    &dh[r * c..(r + 1) * c]);
+                    }
+                    self.acc(&mut grads, ei, de);
+                }
+            }
+        }
+        if self.infos[self.pos].trainable {
+            let mut dpos = vec![0f32; n * c];
+            for r in 0..rows {
+                let i = r % n;
+                add_inplace(&mut dpos[i * c..(i + 1) * c],
+                            &dh[r * c..(r + 1) * c]);
+            }
+            self.acc(&mut grads, self.pos, dpos);
+        }
+        // ---- collect trainable grads in manifest order ----
+        let mut out = Vec::new();
+        for (i, info) in self.infos.iter().enumerate() {
+            if info.trainable {
+                let g = grads[i]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "missing gradient for {}", info.name))?;
+                out.push(Tensor::from_f32(&info.shape, &g));
+            }
+        }
+        Ok(out)
+    }
+
+    fn block_bwd(&self, params: &[Tensor], blk: &BlockDef, dh: Vec<f32>,
+                 st: &mut Stack<'_>,
+                 grads: &mut [Option<Vec<f32>>]) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let c = cfg.dim;
+        let m = cfg.hidden();
+        let rows = self.rows();
+        // ---- mlp half (reverse of push order) ----
+        let u_fc2 = if blk.fc2.la.is_some() { Some(st.pop()?) } else { None };
+        let hact = if blk.fc2.need_x() { Some(st.pop()?) } else { None };
+        let act_save = st.pop()?;
+        let u_fc1 = if blk.fc1.la.is_some() { Some(st.pop()?) } else { None };
+        let xn2s = if !cfg.is_ms() && blk.fc1.need_x() {
+            Some(st.pop()?)
+        } else {
+            None
+        };
+        let stat2 = st.pop()?;
+        let xhat2 = st.pop()?;
+        debug_assert_eq!(stat2.elems(), rows);
+        debug_assert_eq!(xhat2.elems(), rows * c);
+        let xn2: Option<&[f32]> = if cfg.is_ms() {
+            Some(xhat2.as_f32())
+        } else {
+            xn2s.map(|t| t.as_f32())
+        };
+        let dhact = self.lin_bwd(params, &blk.fc2, &dh,
+                                 hact.map(|t| t.as_f32()),
+                                 u_fc2.map(|t| t.as_f32()), rows, grads);
+        let du = if cfg.act_exact_bwd() {
+            ensure!(act_save.dtype == DType::F32
+                        && act_save.elems() == rows * m,
+                    "bad act_full residual");
+            super::kernels::act_bwd_exact(act_save.as_f32(), &dhact,
+                                          cfg.is_gelu())
+        } else {
+            ensure!(act_save.dtype == DType::U8
+                        && act_save.nbytes() == rows * m / 4,
+                    "bad act_codes residual");
+            packing::apply_slopes(&act_save.data, &dhact,
+                                  cfg.comb().slopes())
+        };
+        let dxn2 = self.lin_bwd(params, &blk.fc1, &du, xn2,
+                                u_fc1.map(|t| t.as_f32()), rows, grads);
+        let dnorm2 = self.norm_param_bwd(params, &blk.norm2, &dxn2,
+                                         xhat2.as_f32(), stat2.as_f32(),
+                                         rows, grads);
+        let mut dh1 = dh;
+        add_inplace(&mut dh1, &dnorm2);
+        // ---- attention half ----
+        let u_proj =
+            if blk.proj.la.is_some() { Some(st.pop()?) } else { None };
+        let o = if blk.proj.need_x() { Some(st.pop()?) } else { None };
+        let v = st.pop()?;
+        let k = st.pop()?;
+        let q = st.pop()?;
+        debug_assert_eq!(q.elems(), rows * c);
+        let u_v = if blk.v.la.is_some() { Some(st.pop()?) } else { None };
+        let u_k = if blk.k.la.is_some() { Some(st.pop()?) } else { None };
+        let u_q = if blk.q.la.is_some() { Some(st.pop()?) } else { None };
+        let need_qkv_x =
+            blk.q.need_x() || blk.k.need_x() || blk.v.need_x();
+        let xn1s = if !cfg.is_ms() && need_qkv_x {
+            Some(st.pop()?)
+        } else {
+            None
+        };
+        let stat1 = st.pop()?;
+        let xhat1 = st.pop()?;
+        debug_assert_eq!(stat1.elems(), rows);
+        debug_assert_eq!(xhat1.elems(), rows * c);
+        let xn1: Option<&[f32]> = if cfg.is_ms() {
+            Some(xhat1.as_f32())
+        } else {
+            xn1s.map(|t| t.as_f32())
+        };
+        let do_ = self.lin_bwd(params, &blk.proj, &dh1,
+                               o.map(|t| t.as_f32()),
+                               u_proj.map(|t| t.as_f32()), rows, grads);
+        let (dq, dk, dv) = attn_bwd(&do_, q.as_f32(), k.as_f32(),
+                                    v.as_f32(), &self.attn_dims(),
+                                    cfg.causal());
+        let mut dxn1 = self.lin_bwd(params, &blk.q, &dq, xn1,
+                                    u_q.map(|t| t.as_f32()), rows, grads);
+        let dk_in = self.lin_bwd(params, &blk.k, &dk, xn1,
+                                 u_k.map(|t| t.as_f32()), rows, grads);
+        add_inplace(&mut dxn1, &dk_in);
+        let dv_in = self.lin_bwd(params, &blk.v, &dv, xn1,
+                                 u_v.map(|t| t.as_f32()), rows, grads);
+        add_inplace(&mut dxn1, &dv_in);
+        let dnorm1 = self.norm_param_bwd(params, &blk.norm1, &dxn1,
+                                         xhat1.as_f32(), stat1.as_f32(),
+                                         rows, grads);
+        add_inplace(&mut dh1, &dnorm1);
+        Ok(dh1)
+    }
+}
+
+struct Stack<'a> {
+    res: &'a [Tensor],
+    top: usize,
+}
+
+impl<'a> Stack<'a> {
+    fn pop(&mut self) -> Result<&'a Tensor> {
+        ensure!(self.top > 0, "residual stack underflow");
+        self.top -= 1;
+        Ok(&self.res[self.top])
+    }
+}

@@ -1,0 +1,123 @@
+//! Chunked worker pool for the native backend's hot loops.
+//!
+//! Work is split into contiguous row chunks and fanned out over scoped
+//! threads, so the matmul / attention / activation kernels scale with
+//! cores while staying deterministic: every output element is reduced
+//! sequentially by exactly one worker, so results are bit-identical for
+//! any thread count.
+//!
+//! Thread count: `min(available_parallelism, 16)`, overridable with the
+//! `AMBP_THREADS` environment variable (useful for benchmarking scaling).
+
+use std::sync::OnceLock;
+
+/// Number of worker threads the pool fans out to.
+pub fn threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("AMBP_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.clamp(1, 64);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 16)
+    })
+}
+
+/// Split the rows of `out` (`out.len() = rows * row_len`) into contiguous
+/// chunks of at least `grain` rows and run `f(first_row, chunk)` on each,
+/// in parallel. `f` must fully define the chunk's contents from its own
+/// row range — chunks are disjoint `&mut` slices.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, grain: usize,
+                        f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let nt = threads()
+        .min(rows.div_ceil(grain.max(1)))
+        .max(1);
+    if nt <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let fr = &f;
+        for (t, chunk) in out.chunks_mut(chunk_rows * row_len).enumerate() {
+            s.spawn(move || fr(t * chunk_rows, chunk));
+        }
+    });
+}
+
+/// Run `f(task)` for every task index in `0..n_tasks`, in parallel, each
+/// task writing its results into the matching `slot_len`-sized slot of
+/// `out` (`out.len() = n_tasks * slot_len`). Used for per-(batch, head)
+/// attention work.
+pub fn parallel_tasks<F>(out: &mut [f32], slot_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(slot_len > 0 && out.len() % slot_len == 0);
+    parallel_rows(out, slot_len, 1, |first, chunk| {
+        for (i, slot) in chunk.chunks_mut(slot_len).enumerate() {
+            f(first + i, slot);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_everything_once() {
+        let rows = 37;
+        let cols = 5;
+        let mut out = vec![0f32; rows * cols];
+        parallel_rows(&mut out, cols, 1, |first, chunk| {
+            for (i, row) in chunk.chunks_mut(cols).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v += ((first + i) * cols + j) as f32;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn tasks_fill_slots() {
+        let mut out = vec![0f32; 6 * 4];
+        parallel_tasks(&mut out, 4, |t, slot| {
+            for v in slot.iter_mut() {
+                *v = t as f32;
+            }
+        });
+        for t in 0..6 {
+            assert!(out[t * 4..(t + 1) * 4].iter().all(|v| *v == t as f32));
+        }
+    }
+
+    #[test]
+    fn serial_fallback_small_work() {
+        let mut out = vec![0f32; 3];
+        parallel_rows(&mut out, 1, 1000, |first, chunk| {
+            assert_eq!(first, 0);
+            for v in chunk.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        assert_eq!(out, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn threads_positive() {
+        assert!(threads() >= 1);
+    }
+}

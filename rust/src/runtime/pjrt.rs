@@ -1,0 +1,192 @@
+//! PJRT/XLA backend (feature `pjrt`, off by default).
+//!
+//! Loads `artifacts/<preset>/{fwd,bwd}.hlo.txt`, compiles them on the
+//! PJRT CPU client, and executes from the training hot path. Wiring
+//! follows the HLO *text* interchange path (the text parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits that xla_extension 0.5.1 would
+//! reject), `return_tuple=True` on the python side, `to_tuple()` here.
+//!
+//! NOTE: building with `--features pjrt` additionally requires adding the
+//! external `xla` crate to Cargo.toml — it is not available offline and
+//! is deliberately kept out of the default dependency graph. See
+//! DESIGN.md §2.4.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::runtime::{Artifact, Backend, Executor, FwdOut};
+
+fn primitive(dtype: DType) -> xla::PrimitiveType {
+    match dtype {
+        DType::F32 => xla::PrimitiveType::F32,
+        DType::I32 => xla::PrimitiveType::S32,
+        DType::U8 => xla::PrimitiveType::U8,
+        DType::I8 => xla::PrimitiveType::S8,
+    }
+}
+
+/// Convert a host tensor to a PJRT literal (copies).
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let mut lit =
+        xla::Literal::create_from_shape(primitive(t.dtype), &t.shape);
+    match t.dtype {
+        DType::F32 => lit.copy_raw_from::<f32>(t.as_f32())?,
+        DType::I32 => lit.copy_raw_from::<i32>(t.as_i32())?,
+        DType::U8 => lit.copy_raw_from::<u8>(&t.data)?,
+        DType::I8 => lit.copy_raw_from::<i8>(unsafe {
+            std::slice::from_raw_parts(
+                t.data.as_ptr() as *const i8,
+                t.data.len(),
+            )
+        })?,
+    }
+    Ok(lit)
+}
+
+/// Read a PJRT literal back into a host tensor.
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let dtype = match shape.primitive_type() {
+        xla::PrimitiveType::F32 => DType::F32,
+        xla::PrimitiveType::S32 => DType::I32,
+        xla::PrimitiveType::U8 => DType::U8,
+        xla::PrimitiveType::S8 => DType::I8,
+        t => bail!("unsupported literal type {t:?}"),
+    };
+    let mut t = Tensor::zeros(&dims, dtype);
+    match dtype {
+        DType::F32 => lit.copy_raw_to::<f32>(t.as_f32_mut())?,
+        DType::I32 => {
+            let n = t.data.len() / 4;
+            let sl = unsafe {
+                std::slice::from_raw_parts_mut(
+                    t.data.as_mut_ptr() as *mut i32,
+                    n,
+                )
+            };
+            lit.copy_raw_to::<i32>(sl)?;
+        }
+        DType::U8 => lit.copy_raw_to::<u8>(&mut t.data)?,
+        DType::I8 => {
+            let sl = unsafe {
+                std::slice::from_raw_parts_mut(
+                    t.data.as_mut_ptr() as *mut i8,
+                    t.data.len(),
+                )
+            };
+            lit.copy_raw_to::<i8>(sl)?;
+        }
+    }
+    Ok(t)
+}
+
+/// PJRT CPU client wrapper.
+pub struct PjrtBackend {
+    client: std::rc::Rc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            client: std::rc::Rc::new(xla::PjRtClient::cpu()?),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, dir: &Path) -> Result<Artifact> {
+        let manifest = Manifest::load(dir)?;
+        let fwd = compile(&self.client, &dir.join("fwd.hlo.txt"))
+            .with_context(|| format!("compiling fwd for {dir:?}"))?;
+        let bwd = compile(&self.client, &dir.join("bwd.hlo.txt"))
+            .with_context(|| format!("compiling bwd for {dir:?}"))?;
+        let params0 = manifest.load_params(dir)?;
+        let exec = PjrtExec {
+            fwd,
+            bwd,
+            n_residuals: manifest.residuals.len(),
+            n_train: manifest.trainable_indices().len(),
+        };
+        Ok(Artifact::from_parts(dir.to_path_buf(), manifest, params0,
+                                Box::new(exec)))
+    }
+}
+
+fn compile(client: &xla::PjRtClient,
+           path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 path")?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+struct PjrtExec {
+    fwd: xla::PjRtLoadedExecutable,
+    bwd: xla::PjRtLoadedExecutable,
+    n_residuals: usize,
+    n_train: usize,
+}
+
+impl Executor for PjrtExec {
+    fn run_fwd(&self, params: &[Tensor], x: &Tensor,
+               y: &Tensor) -> Result<FwdOut> {
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + 2);
+        for p in params {
+            args.push(to_literal(p)?);
+        }
+        args.push(to_literal(x)?);
+        args.push(to_literal(y)?);
+        let bufs = self.fwd.execute::<xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let mut outs = tuple.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == 2 + self.n_residuals,
+            "fwd arity mismatch: got {}, manifest says {}",
+            outs.len(),
+            2 + self.n_residuals
+        );
+        let residuals = outs
+            .split_off(2)
+            .iter()
+            .map(from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let metric = outs[1].to_vec::<f32>()?[0];
+        Ok(FwdOut { loss, metric, residuals })
+    }
+
+    fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
+               y: &Tensor) -> Result<Vec<Tensor>> {
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + residuals.len() + 2);
+        for p in params {
+            args.push(to_literal(p)?);
+        }
+        for r in residuals {
+            args.push(to_literal(r)?);
+        }
+        args.push(to_literal(x)?);
+        args.push(to_literal(y)?);
+        let bufs = self.bwd.execute::<xla::Literal>(&args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == self.n_train,
+            "bwd arity mismatch: got {}, expected {}",
+            outs.len(),
+            self.n_train
+        );
+        outs.iter().map(from_literal).collect()
+    }
+}

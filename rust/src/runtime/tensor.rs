@@ -1,17 +1,27 @@
-//! Host tensors: dtype-tagged byte buffers bridging manifests, PJRT
-//! literals, and the optimizer's f32 views.
+//! Host tensors: dtype-tagged byte buffers bridging manifests, backends,
+//! and the optimizer's f32 views.
+//!
+//! The buffer is a plain `Vec<u8>`; typed access goes through the
+//! `as_f32`/`as_i32` views. Backend-specific conversions (e.g. PJRT
+//! literals) live with the backend, not here.
 
 use anyhow::{bail, Result};
 
+/// Element type of a [`Tensor`], matching the manifest dtype strings.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float (`"float32"`).
     F32,
+    /// 32-bit signed integer (`"int32"`).
     I32,
+    /// 8-bit unsigned integer (`"uint8"`) — packed activation codes.
     U8,
+    /// 8-bit signed integer (`"int8"`) — quantized baselines.
     I8,
 }
 
 impl DType {
+    /// Parse a manifest dtype string (`"float32"`, `"int32"`, …).
     pub fn from_manifest(s: &str) -> Result<DType> {
         Ok(match s {
             "float32" => DType::F32,
@@ -22,36 +32,34 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::U8 | DType::I8 => 1,
         }
     }
-
-    pub fn primitive(self) -> xla::PrimitiveType {
-        match self {
-            DType::F32 => xla::PrimitiveType::F32,
-            DType::I32 => xla::PrimitiveType::S32,
-            DType::U8 => xla::PrimitiveType::U8,
-            DType::I8 => xla::PrimitiveType::S8,
-        }
-    }
 }
 
+/// A host tensor: shape + dtype + row-major byte buffer.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element type of `data`.
     pub dtype: DType,
+    /// Raw little-endian element bytes, `elems() * dtype.size()` long.
     pub data: Vec<u8>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape and dtype.
     pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), dtype, data: vec![0; n * dtype.size()] }
     }
 
+    /// f32 tensor from a flat slice (length must match the shape).
     pub fn from_f32(shape: &[usize], v: &[f32]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
         let mut data = Vec::with_capacity(v.len() * 4);
@@ -61,6 +69,7 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), dtype: DType::F32, data }
     }
 
+    /// i32 tensor from a flat slice (length must match the shape).
     pub fn from_i32(shape: &[usize], v: &[i32]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
         let mut data = Vec::with_capacity(v.len() * 4);
@@ -70,16 +79,26 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), dtype: DType::I32, data }
     }
 
+    /// u8 tensor from a flat slice (length must match the shape).
+    pub fn from_u8(shape: &[usize], v: &[u8]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        Tensor { shape: shape.to_vec(), dtype: DType::U8, data: v.to_vec() }
+    }
+
+    /// Number of logical elements.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Size of the backing buffer in bytes.
     pub fn nbytes(&self) -> usize {
         self.data.len()
     }
 
+    /// View the buffer as `&[f32]`. Panics if the dtype is not `F32`.
     pub fn as_f32(&self) -> &[f32] {
         assert_eq!(self.dtype, DType::F32);
+        debug_assert_eq!(self.data.as_ptr() as usize % 4, 0);
         unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const f32,
@@ -88,8 +107,10 @@ impl Tensor {
         }
     }
 
+    /// Mutable f32 view. Panics if the dtype is not `F32`.
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         assert_eq!(self.dtype, DType::F32);
+        debug_assert_eq!(self.data.as_ptr() as usize % 4, 0);
         unsafe {
             std::slice::from_raw_parts_mut(
                 self.data.as_mut_ptr() as *mut f32,
@@ -98,8 +119,10 @@ impl Tensor {
         }
     }
 
+    /// View the buffer as `&[i32]`. Panics if the dtype is not `I32`.
     pub fn as_i32(&self) -> &[i32] {
         assert_eq!(self.dtype, DType::I32);
+        debug_assert_eq!(self.data.as_ptr() as usize % 4, 0);
         unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const i32,
@@ -108,65 +131,7 @@ impl Tensor {
         }
     }
 
-    /// Convert to a PJRT literal (copies).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let mut lit = xla::Literal::create_from_shape(
-            self.dtype.primitive(),
-            &self.shape,
-        );
-        match self.dtype {
-            DType::F32 => lit.copy_raw_from::<f32>(self.as_f32())?,
-            DType::I32 => lit.copy_raw_from::<i32>(self.as_i32())?,
-            DType::U8 => lit.copy_raw_from::<u8>(&self.data)?,
-            DType::I8 => lit.copy_raw_from::<i8>(unsafe {
-                std::slice::from_raw_parts(
-                    self.data.as_ptr() as *const i8,
-                    self.data.len(),
-                )
-            })?,
-        }
-        Ok(lit)
-    }
-
-    /// Read a PJRT literal back into a host tensor.
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|d| *d as usize).collect();
-        let dtype = match shape.primitive_type() {
-            xla::PrimitiveType::F32 => DType::F32,
-            xla::PrimitiveType::S32 => DType::I32,
-            xla::PrimitiveType::U8 => DType::U8,
-            xla::PrimitiveType::S8 => DType::I8,
-            t => bail!("unsupported literal type {t:?}"),
-        };
-        let mut t = Tensor::zeros(&dims, dtype);
-        match dtype {
-            DType::F32 => lit.copy_raw_to::<f32>(t.as_f32_mut())?,
-            DType::I32 => {
-                let n = t.data.len() / 4;
-                let sl = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        t.data.as_mut_ptr() as *mut i32,
-                        n,
-                    )
-                };
-                lit.copy_raw_to::<i32>(sl)?;
-            }
-            DType::U8 => lit.copy_raw_to::<u8>(&mut t.data)?,
-            DType::I8 => {
-                let sl = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        t.data.as_mut_ptr() as *mut i8,
-                        t.data.len(),
-                    )
-                };
-                lit.copy_raw_to::<i8>(sl)?;
-            }
-        }
-        Ok(t)
-    }
-
+    /// Euclidean norm of an f32 tensor (accumulated in f64).
     pub fn l2(&self) -> f64 {
         self.as_f32().iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
     }
@@ -203,5 +168,12 @@ mod tests {
     fn l2_norm() {
         let t = Tensor::from_f32(&[2], &[3.0, 4.0]);
         assert!((t.l2() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn u8_tensor() {
+        let t = Tensor::from_u8(&[3], &[1, 2, 3]);
+        assert_eq!(t.nbytes(), 3);
+        assert_eq!(t.dtype, DType::U8);
     }
 }

@@ -73,6 +73,33 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write bench results as a flat `{name: mean_ns_per_iter}` JSON object
+/// (the `BENCH_*.json` files future PRs diff to track the perf
+/// trajectory).
+pub fn write_json(results: &[BenchResult],
+                  path: &std::path::Path) -> std::io::Result<()> {
+    use crate::util::json::{num, Json};
+    let obj = Json::Obj(
+        results
+            .iter()
+            .map(|r| (r.name.clone(), num(r.mean_ns)))
+            .collect(),
+    );
+    std::fs::write(path, obj.to_string() + "\n")
+}
+
+/// The repository root seen from wherever cargo runs the bench (package
+/// dir or repo root) — the canonical place for `BENCH_*.json`.
+pub fn repo_root() -> std::path::PathBuf {
+    for base in [".", ".."] {
+        let p = std::path::Path::new(base).join("ROADMAP.md");
+        if p.is_file() {
+            return std::path::PathBuf::from(base);
+        }
+    }
+    std::path::PathBuf::from(".")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +112,19 @@ mod tests {
         });
         assert_eq!(r.iters, 50);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let r = bench("noop2", 5, || {});
+        let dir = std::env::temp_dir().join("ambp_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_test.json");
+        write_json(std::slice::from_ref(&r), &p).unwrap();
+        let j = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert!(j.get("noop2").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

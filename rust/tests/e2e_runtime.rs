@@ -14,10 +14,11 @@ use ambp::coordinator::{TrainCfg, Trainer};
 use ambp::runtime::{Artifact, DType, Runtime, Tensor};
 
 fn rt() -> &'static Runtime {
-    // PjRtClient is Rc-based (not Sync): one client per test thread.
+    // Backends may be !Send (the PJRT client is Rc-based): one runtime
+    // per test thread.
     thread_local! {
         static RT: &'static Runtime =
-            Box::leak(Box::new(Runtime::cpu().expect("PJRT CPU client")));
+            Box::leak(Box::new(Runtime::cpu().expect("CPU runtime")));
     }
     RT.with(|rt| *rt)
 }
@@ -34,6 +35,22 @@ fn have(preset: &str) -> bool {
     ok
 }
 
+/// Load a built artifact, or skip when the active backend cannot execute
+/// it (the default native backend rejects ckpt/mesa presets and any
+/// param layout it cannot reproduce; those run under --features pjrt).
+fn try_load(preset: &str) -> Option<Artifact> {
+    if !have(preset) {
+        return None;
+    }
+    match Artifact::load(rt(), &adir().join(preset)) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP: {preset} not loadable on this backend: {e}");
+            None
+        }
+    }
+}
+
 fn load_selfcheck_batch(art: &Artifact) -> (Tensor, Tensor) {
     let m = &art.manifest;
     let xb = std::fs::read(art.dir.join("selfcheck_x.bin")).unwrap();
@@ -46,10 +63,9 @@ fn load_selfcheck_batch(art: &Artifact) -> (Tensor, Tensor) {
 }
 
 fn selfcheck_preset(preset: &str) {
-    if !have(preset) {
+    let Some(art) = try_load(preset) else {
         return;
-    }
-    let art = Artifact::load(rt(), &adir().join(preset)).unwrap();
+    };
     let params = art.load_params().unwrap();
     let (x, y) = load_selfcheck_batch(&art);
 
@@ -131,12 +147,9 @@ fn selfcheck_pallas_lowered() {
 
 #[test]
 fn training_reduces_loss_and_tracks_memory() {
-    if !have("vitt_loraqv_regelu2_msln") {
+    let Some(art) = try_load("vitt_loraqv_regelu2_msln") else {
         return;
-    }
-    let art =
-        Artifact::load(rt(), &adir().join("vitt_loraqv_regelu2_msln"))
-            .unwrap();
+    };
     let mut t = Trainer::new(
         &art,
         TrainCfg { steps: 12, lr: 2e-3, log_every: 0,
@@ -157,6 +170,8 @@ fn training_reduces_loss_and_tracks_memory() {
 #[test]
 fn measured_memory_ordering_matches_paper() {
     // ours < mesa < baseline, and ckpt < ours (Figure 1 / Table 1 shape)
+    // mesa/ckpt only load under the pjrt backend; read their manifests
+    // directly so the ordering check runs wherever artifacts exist
     for p in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln",
               "vitt_loraqv_mesa_mesaln", "vitt_loraqv_gelu_ln_ckpt"] {
         if !have(p) {
@@ -164,9 +179,8 @@ fn measured_memory_ordering_matches_paper() {
         }
     }
     let bytes = |p: &str| {
-        Artifact::load(rt(), &adir().join(p))
+        ambp::runtime::Manifest::load(&adir().join(p))
             .unwrap()
-            .manifest
             .residual_bytes_total
     };
     let base = bytes("vitt_loraqv_gelu_ln");
@@ -181,11 +195,9 @@ fn measured_memory_ordering_matches_paper() {
 #[test]
 fn grad_accumulation_equivalence() {
     // 1 step × accum 2 must equal averaging two single-microbatch grads
-    if !have("vitt_loraqv_gelu_ln") {
+    let Some(art) = try_load("vitt_loraqv_gelu_ln") else {
         return;
-    }
-    let art = Artifact::load(rt(), &adir().join("vitt_loraqv_gelu_ln"))
-        .unwrap();
+    };
     let params = art.load_params().unwrap();
     let (x, y) = load_selfcheck_batch(&art);
     let out = art.run_fwd(&params, &x, &y).unwrap();
@@ -211,15 +223,11 @@ fn affine_merge_roundtrip_across_presets() {
     // eq. 16→18 at the whole-model level: restore an LN checkpoint into
     // the MS-LN preset via merge_affine; the fine-tuned starting loss
     // must match the LN model's loss on the same batch (identical fwd).
-    for p in ["vitt_loraqv_gelu_ln", "vitt_loraqv_gelu_msln"] {
-        if !have(p) {
-            return;
-        }
-    }
-    let ln = Artifact::load(rt(), &adir().join("vitt_loraqv_gelu_ln"))
-        .unwrap();
-    let ms = Artifact::load(rt(), &adir().join("vitt_loraqv_gelu_msln"))
-        .unwrap();
+    let (Some(ln), Some(ms)) = (try_load("vitt_loraqv_gelu_ln"),
+                                try_load("vitt_loraqv_gelu_msln"))
+    else {
+        return;
+    };
     let ln_params = ln.load_params().unwrap();
     let (x, y) = load_selfcheck_batch(&ln);
     let ln_loss = ln.run_fwd(&ln_params, &x, &y).unwrap().loss;
@@ -242,12 +250,9 @@ fn affine_merge_roundtrip_across_presets() {
 
 #[test]
 fn residual_dtype_checks() {
-    if !have("vitt_loraqv_regelu2_msln") {
+    let Some(art) = try_load("vitt_loraqv_regelu2_msln") else {
         return;
-    }
-    let art =
-        Artifact::load(rt(), &adir().join("vitt_loraqv_regelu2_msln"))
-            .unwrap();
+    };
     // 2-bit code tensors surface as uint8 with C/4 trailing dim
     let codes: Vec<_> = art
         .manifest
