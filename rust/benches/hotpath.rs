@@ -1,46 +1,132 @@
 //! End-to-end hot-path benchmarks (in-tree harness; criterion is
 //! unavailable offline). One section per paper table's cost driver:
-//! fwd/bwd step latency per variant (Tables 1–4 throughput columns),
-//! packing/codec microbenches, optimizer step, data synthesis.
+//! GEMM kernel throughput (naive-reference vs blocked, with a
+//! thread-scaling sweep), fwd/bwd step latency per variant (Tables 1–4
+//! throughput columns), packing/codec microbenches, optimizer step, data
+//! synthesis.
 //!
-//! Emits `BENCH_hotpath.json` (`name → mean ns/iter`) at the repo root
-//! so the perf trajectory is diffable across PRs.
+//! Emits `BENCH_hotpath.json` (`name → mean ns/iter`) at the repo root,
+//! printing a `name → old/new/Δ%` diff against the previous run first,
+//! so the perf trajectory is visible across PRs.
 //!
 //!   cargo bench --bench hotpath
+//!
+//! `AMBP_BENCH_SAMPLES=n` caps every section's sample count (the CI
+//! smoke run uses 2 so the harness cannot bit-rot without burning CI
+//! minutes).
 
 use ambp::coordinator::optimizer::{AdamW, Optimizer};
 use ambp::data::synth_images::ImageTask;
 use ambp::packing;
 use ambp::quant::{int8, nf4};
+use ambp::runtime::native::kernels::matmul_nt;
+use ambp::runtime::native::pool::{threads, with_threads};
 use ambp::runtime::{load_or_synth, Runtime, Tensor};
-use ambp::util::bench::{bench, black_box, repo_root, write_json,
-                        BenchResult};
+use ambp::util::bench::{bench, black_box, repo_root,
+                        write_json_with_diff, BenchResult};
 use ambp::util::rng::Rng;
+
+/// Per-section sample count, capped by `AMBP_BENCH_SAMPLES`.
+fn samples(default: usize) -> usize {
+    match std::env::var("AMBP_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(cap) => default.min(cap.max(1)),
+        None => default,
+    }
+}
+
+/// The pre-PR `matmul_nt` inner loop (per-element sequential dot), kept
+/// here as the fixed reference the blocked kernel is measured against.
+fn naive_matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize,
+                   n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, cv) in c[i * n..(i + 1) * n].iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+fn gflops(flops: usize, mean_ns: f64) -> f64 {
+    flops as f64 / mean_ns
+}
 
 fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
-    println!("== packing / codec microbenches (1M elements) ==");
+    println!("== GEMM kernel (m,k,n) = (512,768,768), f32 ==");
+    let (m, k, n) = (512usize, 768usize, 768usize);
+    let flops = 2 * m * k * n;
+    let mut rng = Rng::new(7);
+    let ga: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let gb: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
+    let r = with_threads(1, || {
+        bench("matmul_nt 512x768x768 naive 1t (pre-PR)", samples(5),
+              || {
+                  black_box(naive_matmul_nt(black_box(&ga), &gb, m, k, n));
+              })
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops, r.mean_ns));
+    results.push(r);
+    let r = with_threads(1, || {
+        bench("matmul_nt 512x768x768 blocked 1t", samples(10), || {
+            black_box(matmul_nt(black_box(&ga), &gb, m, k, n));
+        })
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops, r.mean_ns));
+    results.push(r);
+    println!("-- thread scaling (logical partition; {} resident \
+              workers + the caller) --",
+             threads().saturating_sub(1));
+    for nt in [2usize, 4, 8] {
+        let r = with_threads(nt, || {
+            bench(&format!("matmul_nt 512x768x768 blocked {nt}t"),
+                  samples(10), || {
+                      black_box(matmul_nt(black_box(&ga), &gb, m, k, n));
+                  })
+        });
+        println!("    -> {:.2} GFLOP/s at nt={nt}",
+                 gflops(flops, r.mean_ns));
+        results.push(r);
+    }
+
+    println!("\n== packing / codec microbenches (1M elements) ==");
     let mut rng = Rng::new(0);
     let xs: Vec<f32> = (0..1 << 20).map(|_| rng.normal_f32() * 3.0).collect();
     let gy: Vec<f32> = (0..1 << 20).map(|_| rng.normal_f32()).collect();
     let comb = ambp::coeffs::funcs::PAPER_GELU;
     let codes = packing::bucketize2(&xs, comb.c);
     let packed = packing::pack2(&codes);
-    results.push(bench("bucketize2 (encode)", 20, || {
+    results.push(bench("bucketize2 (encode)", samples(20), || {
         black_box(packing::bucketize2(black_box(&xs), comb.c));
     }));
-    results.push(bench("pack2", 20, || {
+    results.push(bench("pack2", samples(20), || {
         black_box(packing::pack2(black_box(&codes)));
     }));
-    results.push(bench("apply_slopes (decode-bwd)", 20, || {
+    results.push(bench("encode2 (fused bucketize+pack)", samples(20),
+                       || {
+                           black_box(packing::encode2(black_box(&xs),
+                                                      comb.c));
+                       }));
+    results.push(bench("apply_slopes (decode-bwd)", samples(20), || {
         black_box(packing::apply_slopes(black_box(&packed), &gy,
                                         comb.slopes()));
     }));
-    results.push(bench("int8 quant_rows (Mesa baseline)", 20, || {
-        black_box(int8::quant_rows(black_box(&xs), 1024));
-    }));
-    results.push(bench("nf4 quantize (QLoRA weights)", 5, || {
+    results.push(bench("int8 quant_rows (Mesa baseline)", samples(20),
+                       || {
+                           black_box(int8::quant_rows(black_box(&xs),
+                                                      1024));
+                       }));
+    results.push(bench("nf4 quantize (QLoRA weights)", samples(5), || {
         black_box(nf4::quantize(black_box(&xs), 64));
     }));
 
@@ -48,13 +134,13 @@ fn main() {
     let mut p = Tensor::from_f32(&[1 << 20], &xs);
     let g = Tensor::from_f32(&[1 << 20], &gy);
     let mut opt = AdamW::new(0.01);
-    results.push(bench("adamw step 1M", 20, || {
+    results.push(bench("adamw step 1M", samples(20), || {
         opt.step(&mut [&mut p], std::slice::from_ref(&g), 1e-3);
     }));
 
     println!("\n== data pipeline ==");
     let task = ImageTask::new(10, 64, 48, 0.5, 0);
-    results.push(bench("synth image batch b=16", 50, || {
+    results.push(bench("synth image batch b=16", samples(50), || {
         black_box(task.batch(0, 16));
     }));
 
@@ -77,19 +163,24 @@ fn main() {
         };
         let params = art.load_params().expect("params");
         let (x, y) = make_batch(&art.manifest);
-        results.push(bench(&format!("{preset} fwd"), 10, || {
-            black_box(art.run_fwd(&params, &x, &y).expect("fwd"));
+        // recycling between iterations keeps the executor's arena in
+        // its steady state, which is what a real train loop measures
+        results.push(bench(&format!("{preset} fwd"), samples(10), || {
+            let out = art.run_fwd(&params, &x, &y).expect("fwd");
+            art.recycle(black_box(out).residuals);
         }));
         let out = art.run_fwd(&params, &x, &y).expect("fwd");
-        results.push(bench(&format!("{preset} bwd"), 10, || {
-            black_box(
-                art.run_bwd(&params, &out.residuals, &x, &y).expect("bwd"),
-            );
+        results.push(bench(&format!("{preset} bwd"), samples(10), || {
+            let grads =
+                art.run_bwd(&params, &out.residuals, &x, &y).expect("bwd");
+            art.recycle(black_box(grads));
         }));
+        art.recycle(out.residuals);
     }
 
     let out_path = repo_root().join("BENCH_hotpath.json");
-    write_json(&results, &out_path).expect("write BENCH_hotpath.json");
+    write_json_with_diff(&results, &out_path)
+        .expect("write BENCH_hotpath.json");
     println!("\nwrote {} entries to {:?}", results.len(), out_path);
 }
 

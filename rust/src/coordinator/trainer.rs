@@ -189,8 +189,10 @@ impl<'a> Trainer<'a> {
             // that `step * batch` cannot overflow inside the producer
             let (x, y) = to_tensors(self.art, producer2(u32::MAX as usize));
             let out = self.art.run_fwd(&self.params, &x, &y)?;
-            let _ = self.art.run_bwd(&self.params, &out.residuals,
+            let g = self.art.run_bwd(&self.params, &out.residuals,
                                      &x, &y)?;
+            self.art.recycle(out.residuals);
+            self.art.recycle(g);
         }
         let mut metrics = Metrics::new(cfg.metrics_jsonl.as_deref())?;
 
@@ -213,6 +215,9 @@ impl<'a> Trainer<'a> {
                     grads.iter().map(|g| g.nbytes() as u64).sum();
                 self.memory.observe_extra(gbytes);
                 self.memory.release();
+                // the residuals are dead past this point — hand their
+                // buffers back to the executor's arena for the next step
+                self.art.recycle(out.residuals);
                 match &mut accum {
                     None => {
                         accum = Some(grads);
@@ -225,6 +230,7 @@ impl<'a> Trainer<'a> {
                                 *ai += gi;
                             }
                         }
+                        self.art.recycle(grads);
                     }
                 }
             }
@@ -250,6 +256,9 @@ impl<'a> Trainer<'a> {
                 }
                 self.opt.step(&mut refs, &grads, lr);
             }
+            // the gradient tensors' buffers came from the executor's
+            // arena (native backend); hand them back for the next step
+            self.art.recycle(grads);
             metrics.log_step(
                 StepRow {
                     step,
@@ -302,6 +311,7 @@ impl<'a> Trainer<'a> {
             let out = self.art.run_fwd(&self.params, &x, &y)?;
             loss += out.loss / n_batches as f32;
             metric += out.metric / n_batches as f32;
+            self.art.recycle(out.residuals);
         }
         Ok((loss, metric))
     }

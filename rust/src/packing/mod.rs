@@ -71,11 +71,50 @@ pub fn bucketize2(xs: &[f32], c: [f64; 3]) -> Vec<u8> {
         .collect()
 }
 
-/// Apply the 4-entry slope table to packed codes (ReGELU2 decode-bwd):
-/// `gx[i] = gy[i] · slopes[code(i)]`.
+/// Fused single-pass encode: bucketize against the 3 thresholds *and*
+/// pack 4 codes/byte straight into `out` — no intermediate code vector.
+/// Byte-identical to `pack2(&bucketize2(xs, c))` (the tail of a partial
+/// final quad is zero-padded the same way); that identity is what the
+/// property tests pin.
 ///
-/// Contract: `gy.len() ≤ 4 · packed.len()`; panics otherwise.
-pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
+/// `out.len()` must be exactly `xs.len().div_ceil(4)`; every byte of
+/// `out` is overwritten.
+pub fn encode2_into(xs: &[f32], c: [f64; 3], out: &mut [u8]) {
+    assert_eq!(
+        out.len(),
+        xs.len().div_ceil(4),
+        "encode2_into: output must hold exactly {} packed bytes",
+        xs.len().div_ceil(4)
+    );
+    for (byte, quad) in out.iter_mut().zip(xs.chunks(4)) {
+        let mut b = 0u8;
+        for (s, &x) in quad.iter().enumerate() {
+            let x = x as f64;
+            let code =
+                (x >= c[0]) as u8 + (x >= c[1]) as u8 + (x >= c[2]) as u8;
+            b |= code << (2 * s);
+        }
+        *byte = b;
+    }
+}
+
+/// Allocating wrapper over [`encode2_into`] — the fused form of
+/// `pack2(&bucketize2(xs, c))`.
+pub fn encode2(xs: &[f32], c: [f64; 3]) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len().div_ceil(4)];
+    encode2_into(xs, c, &mut out);
+    out
+}
+
+/// Apply the 4-entry slope table to packed codes (ReGELU2 decode-bwd)
+/// into a caller buffer: `gx[i] = gy[i] · slopes[code(i)]`.
+///
+/// Contract: `out.len() == gy.len() ≤ 4 · packed.len()`; panics
+/// otherwise.
+pub fn apply_slopes_into(out: &mut [f32], packed: &[u8], gy: &[f32],
+                         slopes: [f64; 4]) {
+    assert_eq!(out.len(), gy.len(),
+               "apply_slopes_into: out/gy length mismatch");
     assert!(
         gy.len() <= packed.len() * 4,
         "apply_slopes: gy length {} exceeds packed capacity {}",
@@ -84,10 +123,16 @@ pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
     );
     let s: [f32; 4] = [slopes[0] as f32, slopes[1] as f32,
                        slopes[2] as f32, slopes[3] as f32];
-    gy.iter()
-        .enumerate()
-        .map(|(i, &g)| g * s[((packed[i / 4] >> (2 * (i % 4))) & 3) as usize])
-        .collect()
+    for (i, (o, &g)) in out.iter_mut().zip(gy).enumerate() {
+        *o = g * s[((packed[i / 4] >> (2 * (i % 4))) & 3) as usize];
+    }
+}
+
+/// Allocating wrapper over [`apply_slopes_into`].
+pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
+    let mut out = vec![0f32; gy.len()];
+    apply_slopes_into(&mut out, packed, gy, slopes);
+    out
 }
 
 #[cfg(test)]
@@ -168,6 +213,37 @@ mod tests {
     fn unpack1_beyond_capacity_panics() {
         let packed = pack1(&[1]); // 1 byte, capacity 8
         let _ = unpack1(&packed, 9);
+    }
+
+    #[test]
+    fn encode2_matches_bucketize_then_pack() {
+        let comb = crate::coeffs::funcs::PAPER_GELU;
+        let mut rng = Rng::new(7);
+        // odd lengths exercise the zero-padded partial final quad
+        for n in [1usize, 3, 4, 5, 17, 64, 1001] {
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32() * 3.0).collect();
+            let want = pack2(&bucketize2(&xs, comb.c));
+            assert_eq!(encode2(&xs, comb.c), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn encode2_threshold_boundaries() {
+        // the fused pass must keep the >= boundary semantics
+        let c = [-1.0f64, 0.0, 1.0];
+        let xs = [-1.0f32, 0.0, 1.0];
+        assert_eq!(encode2(&xs, c), pack2(&[1, 2, 3]));
+        let eps = 1e-4f32;
+        let xs = [-1.0 - eps, 0.0 - eps, 1.0 - eps];
+        assert_eq!(encode2(&xs, c), pack2(&[0, 1, 2]));
+    }
+
+    #[test]
+    #[should_panic(expected = "packed bytes")]
+    fn encode2_into_wrong_len_panics() {
+        let mut out = vec![0u8; 2];
+        encode2_into(&[1.0f32; 4], [0.0, 1.0, 2.0], &mut out);
     }
 
     #[test]

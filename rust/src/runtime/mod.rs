@@ -6,11 +6,13 @@
 //! fine-tuning step. Two implementations exist:
 //!
 //! * [`native`] (default feature `native`): an in-tree pure-Rust CPU
-//!   backend that executes the step directly from the manifest — blocked
-//!   matmuls, multi-head attention, LN/RMS/MS-LN/MS-RMSNorm, and the
-//!   ReGELU2/ReSiLU2 forward + 2-bit packed backward — parallelized with
-//!   a chunked worker pool. It can also *synthesize* artifacts for the
-//!   small named presets, so nothing outside this crate is needed.
+//!   backend that executes the step directly from the manifest —
+//!   cache-blocked panel-packed matmuls, multi-head attention,
+//!   LN/RMS/MS-LN/MS-RMSNorm, and the ReGELU2/ReSiLU2 forward + 2-bit
+//!   packed backward — parallelized with a persistent worker pool, with
+//!   a step-scoped buffer arena so steady-state steps allocate nothing.
+//!   It can also *synthesize* artifacts for the small named presets, so
+//!   nothing outside this crate is needed.
 //! * `pjrt` (feature `pjrt`, off by default): loads
 //!   `artifacts/<preset>/{fwd,bwd}.hlo.txt` and compiles them through an
 //!   external PJRT/XLA client. Enabling the feature requires adding the
@@ -57,6 +59,14 @@ pub trait Executor {
     /// trainable parameters, in `Manifest::trainable_indices` order.
     fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<Vec<Tensor>>;
+
+    /// Hand step-scoped tensors (the residual list, once the backward
+    /// pass has consumed it) back to the executor so their buffers can
+    /// be reused next step. Purely an optimization hook — the default
+    /// simply drops them, which is always correct.
+    fn recycle(&self, residuals: Vec<Tensor>) {
+        drop(residuals);
+    }
 }
 
 /// An execution backend: loads (or synthesizes) artifacts.
@@ -178,6 +188,13 @@ impl Artifact {
             grads.len()
         );
         Ok(grads)
+    }
+
+    /// Return a finished step's residual tensors to the executor's
+    /// buffer pool (no-op for backends without one). Callers that drop
+    /// the residuals instead merely lose the reuse.
+    pub fn recycle(&self, residuals: Vec<Tensor>) {
+        self.exec.recycle(residuals);
     }
 }
 

@@ -1,0 +1,192 @@
+//! Step-scoped buffer arena: a free-list of `Vec<f32>` / `Vec<u8>`
+//! buffers keyed by exact length, owned by the executor and threaded
+//! through the model's forward/backward passes.
+//!
+//! This is the systems-level twin of the paper's activation-memory
+//! *sharing* idea: because a train step's activation/gradient shapes are
+//! identical every step, every buffer taken during step *s* and put back
+//! (directly, or via [`Arena::recycle_tensor`] after the trainer is done
+//! with the residuals) is a free-list **hit** in step *s+1* — so the
+//! steady-state step performs no activation allocations at all. The
+//! hit/miss counters make that claim testable
+//! (`tests/native_backend.rs::arena_reuse_steady_state`).
+//!
+//! `take_f32`/`take_u8` return buffers with **unspecified contents** —
+//! the overwhelmingly common consumers (`*_into` kernels) fully
+//! overwrite them, so reused buffers skip the memset. The few
+//! accumulating consumers (pooled head input, norm-scale/embedding/
+//! position gradients) use `take_f32_zeroed` instead.
+
+use std::collections::HashMap;
+
+use crate::runtime::tensor::{DType, Tensor};
+
+/// Free-list hit/miss counters (see [`Arena::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaStats {
+    /// Takes served from the free list.
+    pub hits: u64,
+    /// Takes that had to allocate a fresh buffer.
+    pub misses: u64,
+    /// Buffers currently parked in the free lists.
+    pub pooled: usize,
+    /// Bytes currently parked in the free lists.
+    pub pooled_bytes: usize,
+}
+
+/// The arena. One per executor; not thread-safe by itself (the executor
+/// wraps it in a mutex).
+#[derive(Default)]
+pub struct Arena {
+    f32s: HashMap<usize, Vec<Vec<f32>>>,
+    u8s: HashMap<usize, Vec<Vec<u8>>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Arena {
+    /// An empty arena.
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// A `len`-element f32 buffer with **unspecified contents** (the
+    /// caller must fully overwrite it), reused when one of exactly this
+    /// length was previously [`put_f32`](Arena::put_f32).
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        if let Some(v) = self.f32s.get_mut(&len).and_then(|l| l.pop()) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        vec![0f32; len]
+    }
+
+    /// Like [`take_f32`](Arena::take_f32) but guaranteed zeroed — for
+    /// consumers that accumulate (`+=`) into the buffer.
+    pub fn take_f32_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Return an f32 buffer to the free list.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.f32s.entry(v.len()).or_default().push(v);
+    }
+
+    /// A `len`-byte buffer with **unspecified contents** (callers fully
+    /// overwrite it — residual payloads and 2-bit code planes).
+    pub fn take_u8(&mut self, len: usize) -> Vec<u8> {
+        if let Some(v) = self.u8s.get_mut(&len).and_then(|l| l.pop()) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        vec![0u8; len]
+    }
+
+    /// Return a byte buffer to the free list.
+    pub fn put_u8(&mut self, v: Vec<u8>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.u8s.entry(v.len()).or_default().push(v);
+    }
+
+    /// Build an f32 tensor whose backing bytes come from the arena (the
+    /// copy remains; the *allocation* is pooled).
+    pub fn tensor_from_f32(&mut self, shape: &[usize],
+                           v: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = self.take_u8(v.len() * 4);
+        // SAFETY: plain byte view of an f32 slice.
+        let src = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8,
+                                       v.len() * 4)
+        };
+        data.copy_from_slice(src);
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    /// Reclaim a tensor's backing buffer (any dtype — the pool is keyed
+    /// by byte length).
+    pub fn recycle_tensor(&mut self, t: Tensor) {
+        self.put_u8(t.data);
+    }
+
+    /// Current hit/miss/pool counters.
+    pub fn stats(&self) -> ArenaStats {
+        let mut pooled = 0usize;
+        let mut pooled_bytes = 0usize;
+        for (len, l) in &self.f32s {
+            pooled += l.len();
+            pooled_bytes += len * 4 * l.len();
+        }
+        for (len, l) in &self.u8s {
+            pooled += l.len();
+            pooled_bytes += len * l.len();
+        }
+        ArenaStats {
+            hits: self.hits,
+            misses: self.misses,
+            pooled,
+            pooled_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_roundtrip_hits() {
+        let mut a = Arena::new();
+        let v = a.take_f32(16);
+        assert_eq!(v.len(), 16);
+        assert_eq!(a.stats().misses, 1);
+        a.put_f32(v);
+        assert_eq!(a.stats().pooled, 1);
+        let mut v = a.take_f32(16);
+        assert_eq!(a.stats().hits, 1);
+        v[3] = 5.0;
+        a.put_f32(v);
+        // the zeroed take clears reused (dirty) buffers
+        let v = a.take_f32_zeroed(16);
+        assert!(v.iter().all(|x| *x == 0.0));
+        a.put_f32(v);
+    }
+
+    #[test]
+    fn length_keys_are_exact() {
+        let mut a = Arena::new();
+        a.put_f32(vec![0f32; 8]);
+        let _ = a.take_f32(9);
+        assert_eq!(a.stats().misses, 1);
+        assert_eq!(a.stats().hits, 0);
+    }
+
+    #[test]
+    fn tensor_roundtrip_through_arena() {
+        let mut a = Arena::new();
+        let t = a.tensor_from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_f32(), &[1.0, 2.0, 3.0, 4.0]);
+        let misses = a.stats().misses;
+        a.recycle_tensor(t);
+        let t2 = a.tensor_from_f32(&[4], &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(t2.as_f32(), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.stats().misses, misses, "recycled buffer must hit");
+    }
+
+    #[test]
+    fn zero_len_buffers_are_not_pooled() {
+        let mut a = Arena::new();
+        a.put_f32(Vec::new());
+        a.put_u8(Vec::new());
+        assert_eq!(a.stats().pooled, 0);
+    }
+}

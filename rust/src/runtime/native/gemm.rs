@@ -1,0 +1,355 @@
+//! Cache-blocked f32 GEMM for the native backend.
+//!
+//! BLIS-style structure: the k dimension is split into `KC` blocks, B is
+//! packed **once per call** into `NR`-column micro-panels (reused across
+//! every row block and every worker — the packing cost is `O(k·n)`
+//! against `O(m·k·n)` compute), and each worker packs its own `MC`-row ×
+//! `KC` slice of A into `MR`-row micro-panels. The inner microkernel
+//! holds an `MR × NR` f32 accumulator tile in registers and walks the
+//! packed panels contiguously — plain unrolled array code that the
+//! autovectorizer turns into SIMD FMAs (`MR=4, NR=8` keeps the tile
+//! within the 16 baseline x86-64 vector registers without mandating
+//! AVX).
+//!
+//! Edge tiles are handled by zero-padding the packed panels to full
+//! `MR`/`NR` width, so the microkernel has a single shape; only the
+//! writeback masks to the valid `C` region.
+//!
+//! ## Determinism
+//!
+//! For every output element the k-axis is reduced strictly in ascending
+//! order — sequentially inside a `KC` block and block-by-block across
+//! them — by exactly one worker. Chunk partition and worker count are
+//! therefore invisible in the result bits (the pool's determinism
+//! contract). Relative to a naive `Σ_t a[i,t]·b[t,j]` loop the result is
+//! bit-identical for `k ≤ KC`; for larger `k` the per-block register
+//! tile introduces one reassociation point per `KC` rows (documented in
+//! DESIGN.md — all gradcheck tolerances are unaffected).
+//!
+//! Pack buffers are thread-local and grow-only, so steady-state GEMM
+//! dispatch performs no heap allocation.
+
+use std::cell::RefCell;
+
+use super::pool::parallel_rows;
+
+/// Microkernel rows (register-tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register-tile width).
+pub const NR: usize = 8;
+/// k-axis cache block (shared by A and B panels).
+pub const KC: usize = 256;
+/// Row cache block packed per worker (`MC × KC` f32 ≈ 64 KiB, L2-sized).
+pub const MC: usize = 64;
+
+thread_local! {
+    // Packed A (per worker: its own MC×KC slice).
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    // Packed B (caller thread: the whole k×n operand, shared read-only
+    // with the workers for the duration of the dispatch).
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Same work-per-row heuristic the elementwise kernels use: target
+/// ≳32 Ki flops per parallel chunk.
+fn grain(work_per_row: usize) -> usize {
+    (1 << 15) / work_per_row.max(1) + 1
+}
+
+/// `C[m,n] {=, +=} op_a(A) · op_b(B)` where `op_a(A)` is `A[m,k]`
+/// (`a_trans = false`) or `A[k,m]ᵀ` (`a_trans = true`), and `op_b(B)` is
+/// `B[k,n]` (`b_trans = false`) or `B[n,k]ᵀ` (`b_trans = true`).
+/// `acc = false` overwrites `C`, `acc = true` accumulates into it.
+pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize, a_trans: bool, b_trans: bool, acc: bool) {
+    assert_eq!(a.len(), m * k, "gemm: bad A length");
+    assert_eq!(b.len(), k * n, "gemm: bad B length");
+    assert_eq!(c.len(), m * n, "gemm: bad C length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let n_panels = n.div_ceil(NR);
+    let pcols = n_panels * NR;
+    PACK_B.with(|cell| {
+        let mut pbuf = cell.borrow_mut();
+        let need = k * pcols;
+        if pbuf.len() < need {
+            pbuf.resize(need, 0.0);
+        }
+        let pb = &mut pbuf[..need];
+        let mut kz = 0;
+        while kz < k {
+            let kcl = KC.min(k - kz);
+            pack_b(&mut pb[kz * pcols..(kz + kcl) * pcols], b, k, n, kz,
+                   kcl, b_trans);
+            kz += KC;
+        }
+        let pb: &[f32] = pb;
+        parallel_rows(c, n, grain(2 * k * n), |i0, chunk| {
+            gemm_rows(chunk, i0, a, pb, m, k, n, a_trans, acc);
+        });
+    });
+}
+
+/// Pack the `[kz, kz+kcl)` k-rows of B into NR-column micro-panels:
+/// panel `jp` holds `b(kz+t, jp·NR + j)` at `[t·NR + j]`, zero-padded in
+/// `j` past the matrix edge.
+fn pack_b(dst: &mut [f32], b: &[f32], k: usize, n: usize, kz: usize,
+          kcl: usize, b_trans: bool) {
+    let n_panels = n.div_ceil(NR);
+    for jp in 0..n_panels {
+        let j0 = jp * NR;
+        let nr_eff = NR.min(n - j0);
+        let panel = &mut dst[jp * kcl * NR..(jp + 1) * kcl * NR];
+        if !b_trans {
+            // B row-major [k, n]: contiguous row segments
+            for t in 0..kcl {
+                let src = &b[(kz + t) * n + j0..(kz + t) * n + j0 + nr_eff];
+                let drow = &mut panel[t * NR..(t + 1) * NR];
+                drow[..nr_eff].copy_from_slice(src);
+                for v in &mut drow[nr_eff..] {
+                    *v = 0.0;
+                }
+            }
+        } else {
+            // B is [n, k]: b(t, j) = B[j·k + t] — transposing gather
+            for j in 0..NR {
+                if j < nr_eff {
+                    let src = &b[(j0 + j) * k..(j0 + j + 1) * k];
+                    for t in 0..kcl {
+                        panel[t * NR + j] = src[kz + t];
+                    }
+                } else {
+                    for t in 0..kcl {
+                        panel[t * NR + j] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `mcl` rows of A starting at global row `i0` (k-range
+/// `[kz, kz+kcl)`) into MR-row micro-panels: panel `ip` holds
+/// `a(i0 + ip·MR + i, kz + t)` at `[t·MR + i]`, zero-padded in `i`.
+fn pack_a(dst: &mut [f32], a: &[f32], m: usize, k: usize, i0: usize,
+          mcl: usize, kz: usize, kcl: usize, a_trans: bool) {
+    let mpanels = mcl.div_ceil(MR);
+    for ip in 0..mpanels {
+        let r0 = ip * MR;
+        let mr_eff = MR.min(mcl - r0);
+        let panel = &mut dst[ip * kcl * MR..(ip + 1) * kcl * MR];
+        if !a_trans {
+            // A row-major [m, k]: a(i, t) = A[i·k + t]
+            for i in 0..MR {
+                if i < mr_eff {
+                    let src = &a[(i0 + r0 + i) * k..(i0 + r0 + i + 1) * k];
+                    for t in 0..kcl {
+                        panel[t * MR + i] = src[kz + t];
+                    }
+                } else {
+                    for t in 0..kcl {
+                        panel[t * MR + i] = 0.0;
+                    }
+                }
+            }
+        } else {
+            // A is [k, m]: a(i, t) = A[t·m + i] — contiguous row pieces
+            for t in 0..kcl {
+                let src = &a[(kz + t) * m + i0 + r0..];
+                let drow = &mut panel[t * MR..(t + 1) * MR];
+                for (d, &s) in drow[..mr_eff].iter_mut().zip(src) {
+                    *d = s;
+                }
+                for v in &mut drow[mr_eff..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// One worker's row chunk: `chunk` covers global C rows
+/// `[i0, i0 + chunk.len()/n)`.
+fn gemm_rows(chunk: &mut [f32], i0: usize, a: &[f32], pb: &[f32],
+             m: usize, k: usize, n: usize, a_trans: bool, acc: bool) {
+    let rows = chunk.len() / n;
+    if !acc {
+        chunk.fill(0.0);
+    }
+    let n_panels = n.div_ceil(NR);
+    let pcols = n_panels * NR;
+    PACK_A.with(|cell| {
+        let mut pa = cell.borrow_mut();
+        if pa.len() < MC * KC {
+            pa.resize(MC * KC, 0.0);
+        }
+        let mut kz = 0;
+        while kz < k {
+            let kcl = KC.min(k - kz);
+            let bblock = &pb[kz * pcols..(kz + kcl) * pcols];
+            let mut ib = 0;
+            while ib < rows {
+                let mcl = MC.min(rows - ib);
+                let mpanels = mcl.div_ceil(MR);
+                pack_a(&mut pa[..mpanels * kcl * MR], a, m, k, i0 + ib,
+                       mcl, kz, kcl, a_trans);
+                for jp in 0..n_panels {
+                    let bpanel =
+                        &bblock[jp * kcl * NR..(jp + 1) * kcl * NR];
+                    let j0 = jp * NR;
+                    let nr_eff = NR.min(n - j0);
+                    for ip in 0..mpanels {
+                        let apanel =
+                            &pa[ip * kcl * MR..(ip + 1) * kcl * MR];
+                        let mr_eff = MR.min(mcl - ip * MR);
+                        let coff = (ib + ip * MR) * n + j0;
+                        micro(apanel, bpanel, &mut chunk[coff..], n,
+                              mr_eff, nr_eff);
+                    }
+                }
+                ib += MC;
+            }
+            kz += KC;
+        }
+    });
+}
+
+/// The register-tiled microkernel: `C[mr_eff, nr_eff] += Ap · Bp` over
+/// one KC block, with the full `MR × NR` accumulator tile kept local so
+/// the inner loop is a broadcast-multiply-accumulate the compiler can
+/// vectorize. `ldc` is the C row stride.
+#[inline]
+fn micro(apanel: &[f32], bpanel: &[f32], c: &mut [f32], ldc: usize,
+         mr_eff: usize, nr_eff: usize) {
+    let mut acc = [[0f32; NR]; MR];
+    for (ar, br) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for i in 0..MR {
+            let ai = ar[i];
+            let row = &mut acc[i];
+            for (rv, &bv) in row.iter_mut().zip(br) {
+                *rv += ai * bv;
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr_eff) {
+        let crow = &mut c[i * ldc..i * ldc + nr_eff];
+        for (cv, &av) in crow.iter_mut().zip(&arow[..nr_eff]) {
+            *cv += av;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+             at: bool, bt: bool) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for t in 0..k {
+                    let av = if at { a[t * m + i] } else { a[i * k + t] };
+                    let bv = if bt { b[j * k + t] } else { b[t * n + j] };
+                    s += (av * bv) as f64;
+                }
+                c[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn check(m: usize, k: usize, n: usize, at: bool, bt: bool,
+             seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let want = naive(&a, &b, m, k, n, at, bt);
+        let mut c = vec![0f32; m * n];
+        gemm_into(&mut c, &a, &b, m, k, n, at, bt, false);
+        for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3 * y.abs().max(1.0),
+                "m={m} k={k} n={n} at={at} bt={bt} i={i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_across_shapes_and_layouts() {
+        // edge-heavy shapes: non-multiples of MR/NR/KC/MC, tiny dims
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 9, 17),
+            (65, 37, 23),
+            (70, 300, 33), // k > KC: two k-blocks
+            (130, 16, 9),  // rows > MC
+        ] {
+            for (at, bt) in
+                [(false, false), (false, true), (true, false)]
+            {
+                check(m, k, n, at, bt, (m * 31 + k * 7 + n) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn acc_accumulates_instead_of_overwriting() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (6, 10, 11);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let want = naive(&a, &b, m, k, n, false, false);
+        let mut c = vec![1.5f32; m * n];
+        gemm_into(&mut c, &a, &b, m, k, n, false, false, true);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - (y + 1.5)).abs() < 1e-3 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn k_zero_zeroes_or_preserves() {
+        let a: [f32; 0] = [];
+        let b: [f32; 0] = [];
+        let mut c = vec![2.0f32; 4];
+        gemm_into(&mut c, &a, &b, 2, 0, 2, false, false, true);
+        assert_eq!(c, vec![2.0; 4]);
+        gemm_into(&mut c, &a, &b, 2, 0, 2, false, false, false);
+        assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn thread_partition_is_bit_invisible() {
+        use crate::runtime::native::pool::with_threads;
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (97, 130, 41);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut want = vec![0f32; m * n];
+        with_threads(1, || {
+            gemm_into(&mut want, &a, &b, m, k, n, false, false, false)
+        });
+        for nt in [2usize, 3, 8] {
+            let mut c = vec![0f32; m * n];
+            with_threads(nt, || {
+                gemm_into(&mut c, &a, &b, m, k, n, false, false, false)
+            });
+            assert_eq!(c, want, "nt={nt}");
+        }
+    }
+}

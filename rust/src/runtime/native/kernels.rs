@@ -1,80 +1,82 @@
-//! CPU kernels for the native backend: blocked matmuls, layer norms,
-//! softmax cross-entropy, multi-head attention, and activation
-//! forward/backward — all parallelized over contiguous row chunks via
-//! [`super::pool`], all deterministic (each output element is reduced
-//! sequentially by one worker).
+//! CPU kernels for the native backend: cache-blocked panel-packed
+//! matmuls (see [`super::gemm`]), layer norms, softmax cross-entropy,
+//! multi-head attention, and activation forward/backward — parallelized
+//! over contiguous row chunks via [`super::pool`], all deterministic
+//! (each output element is reduced sequentially, in a fixed k order, by
+//! one worker).
 //!
 //! Matrix layout is row-major. Linear weights follow the `[dout, din]`
 //! convention (`y = x · Wᵀ`), which is what the checkpoint affine-merge
 //! (eq. 17) assumes.
+//!
+//! Every allocating kernel has an `_into` twin that writes a
+//! caller-provided buffer — the model threads its step-scoped
+//! [`super::arena::Arena`] buffers through those, so the hot path does
+//! not touch the allocator in steady state. The attention kernels'
+//! per-head gather/score scratch lives in grow-only thread-locals for
+//! the same reason.
 
+use std::cell::RefCell;
+
+use super::gemm::gemm_into;
 use super::pool::parallel_rows;
 use crate::coeffs::funcs;
 
 /// Epsilon used by every normalization variant.
 pub const NORM_EPS: f32 = 1e-5;
 
-fn grain(work_per_row: usize) -> usize {
-    (1 << 15) / work_per_row.max(1) + 1
-}
-
 /// `c[m,n] = a[m,k] · b[k,n]`.
-pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize,
-                 n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    let mut c = vec![0f32; m * n];
-    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
-        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
-            let arow = &a[(i0 + ci) * k..(i0 + ci + 1) * k];
-            for (t, &av) in arow.iter().enumerate() {
-                let brow = &b[t * n..(t + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
-    });
-    c
+pub fn matmul_nn_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                      k: usize, n: usize) {
+    gemm_into(c, a, b, m, k, n, false, false, false);
 }
 
-/// `c[m,n] = a[m,k] · b[n,k]ᵀ` — both operands walked contiguously.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize,
-                 n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    let mut c = vec![0f32; m * n];
-    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
-        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
-            let arow = &a[(i0 + ci) * k..(i0 + ci + 1) * k];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                *cv = dot(arow, brow);
-            }
-        }
-    });
-    c
+/// `c[m,n] += a[m,k] · b[k,n]`.
+pub fn matmul_nn_acc_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                          k: usize, n: usize) {
+    gemm_into(c, a, b, m, k, n, false, false, true);
+}
+
+/// `c[m,n] = a[m,k] · b[n,k]ᵀ`.
+pub fn matmul_nt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                      k: usize, n: usize) {
+    gemm_into(c, a, b, m, k, n, false, true, false);
+}
+
+/// `c[m,n] += a[m,k] · b[n,k]ᵀ`.
+pub fn matmul_nt_acc_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                          k: usize, n: usize) {
+    gemm_into(c, a, b, m, k, n, false, true, true);
 }
 
 /// `c[m,n] = a[k,m]ᵀ · b[k,n]` — the weight-gradient product
 /// (`dW = dyᵀ · x`).
+pub fn matmul_tn_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                      k: usize, n: usize) {
+    gemm_into(c, a, b, m, k, n, true, false, false);
+}
+
+/// Allocating wrapper over [`matmul_nn_into`].
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    matmul_nn_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// Allocating wrapper over [`matmul_nt_into`].
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    matmul_nt_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// Allocating wrapper over [`matmul_tn_into`].
 pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize,
                  n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), k * m);
-    assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * n];
-    parallel_rows(&mut c, n, grain(k * n), |i0, chunk| {
-        for (ci, crow) in chunk.chunks_mut(n).enumerate() {
-            let i = i0 + ci;
-            for t in 0..k {
-                let av = a[t * m + i];
-                let brow = &b[t * n..(t + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
-    });
+    matmul_tn_into(&mut c, a, b, m, k, n);
     c
 }
 
@@ -84,16 +86,23 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// Column sums of `a[rows, cols]` (bias gradients).
-pub fn colsum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+/// Column sums of `a[rows, cols]` into `out[cols]` (bias gradients).
+pub fn colsum_into(out: &mut [f32], a: &[f32], rows: usize, cols: usize) {
     assert_eq!(a.len(), rows * cols);
-    let mut out = vec![0f32; cols];
+    assert_eq!(out.len(), cols);
+    out.fill(0.0);
     for r in 0..rows {
         let arow = &a[r * cols..(r + 1) * cols];
         for (o, &v) in out.iter_mut().zip(arow) {
             *o += v;
         }
     }
+}
+
+/// Allocating wrapper over [`colsum_into`].
+pub fn colsum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; cols];
+    colsum_into(&mut out, a, rows, cols);
     out
 }
 
@@ -114,14 +123,15 @@ pub fn add_bias(a: &mut [f32], bias: &[f32]) {
     }
 }
 
-/// Normalization forward. Returns `(xhat, stat)` where `stat` is the
-/// per-row reciprocal std (LN) or reciprocal RMS (RMSNorm); the affine
-/// transform, if any, is applied by the caller.
-pub fn norm_fwd(x: &[f32], rows: usize, c: usize,
-                rms: bool) -> (Vec<f32>, Vec<f32>) {
+/// Normalization forward into caller buffers: `xhat[rows·c]` gets the
+/// normalized rows, `stat[rows]` the per-row reciprocal std (LN) or
+/// reciprocal RMS (RMSNorm); the affine transform, if any, is applied by
+/// the caller.
+pub fn norm_fwd_into(xhat: &mut [f32], stat: &mut [f32], x: &[f32],
+                     rows: usize, c: usize, rms: bool) {
     assert_eq!(x.len(), rows * c);
-    let mut xhat = vec![0f32; rows * c];
-    let mut stat = vec![0f32; rows];
+    assert_eq!(xhat.len(), rows * c);
+    assert_eq!(stat.len(), rows);
     for r in 0..rows {
         let xr = &x[r * c..(r + 1) * c];
         let hr = &mut xhat[r * c..(r + 1) * c];
@@ -144,6 +154,14 @@ pub fn norm_fwd(x: &[f32], rows: usize, c: usize,
             }
         }
     }
+}
+
+/// Allocating wrapper over [`norm_fwd_into`].
+pub fn norm_fwd(x: &[f32], rows: usize, c: usize,
+                rms: bool) -> (Vec<f32>, Vec<f32>) {
+    let mut xhat = vec![0f32; rows * c];
+    let mut stat = vec![0f32; rows];
+    norm_fwd_into(&mut xhat, &mut stat, x, rows, c, rms);
     (xhat, stat)
 }
 
@@ -152,9 +170,9 @@ pub fn norm_fwd(x: &[f32], rows: usize, c: usize,
 ///
 /// * LN:  `dx = rstd · (dyh − mean(dyh) − x̂ · mean(dyh·x̂))`
 /// * RMS: `dx = ρ · (dyh − x̂ · mean(dyh·x̂))`
-pub fn norm_bwd(dyh: &[f32], xhat: &[f32], stat: &[f32], rows: usize,
-                c: usize, rms: bool) -> Vec<f32> {
-    let mut dx = vec![0f32; rows * c];
+pub fn norm_bwd_into(dx: &mut [f32], dyh: &[f32], xhat: &[f32],
+                     stat: &[f32], rows: usize, c: usize, rms: bool) {
+    assert_eq!(dx.len(), rows * c);
     for r in 0..rows {
         let dyr = &dyh[r * c..(r + 1) * c];
         let xr = &xhat[r * c..(r + 1) * c];
@@ -171,6 +189,13 @@ pub fn norm_bwd(dyh: &[f32], xhat: &[f32], stat: &[f32], rows: usize,
             }
         }
     }
+}
+
+/// Allocating wrapper over [`norm_bwd_into`].
+pub fn norm_bwd(dyh: &[f32], xhat: &[f32], stat: &[f32], rows: usize,
+                c: usize, rms: bool) -> Vec<f32> {
+    let mut dx = vec![0f32; rows * c];
+    norm_bwd_into(&mut dx, dyh, xhat, stat, rows, c, rms);
     dx
 }
 
@@ -200,11 +225,11 @@ pub fn softmax_ce(z: &[f32], rows: usize, k: usize,
     ((loss / rows as f64) as f32, hits as f32 / rows as f32)
 }
 
-/// Gradient of [`softmax_ce`] w.r.t. the logits:
+/// Gradient of [`softmax_ce`] w.r.t. the logits, into `dz`:
 /// `dz = (softmax(z) − onehot(y)) / rows`.
-pub fn softmax_ce_grad(z: &[f32], rows: usize, k: usize,
-                       y: &[i32]) -> Vec<f32> {
-    let mut dz = vec![0f32; rows * k];
+pub fn softmax_ce_grad_into(dz: &mut [f32], z: &[f32], rows: usize,
+                            k: usize, y: &[i32]) {
+    assert_eq!(dz.len(), rows * k);
     let inv = 1.0 / rows as f32;
     for r in 0..rows {
         let zr = &z[r * k..(r + 1) * k];
@@ -220,6 +245,13 @@ pub fn softmax_ce_grad(z: &[f32], rows: usize, k: usize,
         }
         out[y[r] as usize] -= inv;
     }
+}
+
+/// Allocating wrapper over [`softmax_ce_grad_into`].
+pub fn softmax_ce_grad(z: &[f32], rows: usize, k: usize,
+                       y: &[i32]) -> Vec<f32> {
+    let mut dz = vec![0f32; rows * k];
+    softmax_ce_grad_into(&mut dz, z, rows, k, y);
     dz
 }
 
@@ -242,6 +274,22 @@ impl AttnDims {
     }
 }
 
+thread_local! {
+    // Per-head gather/score scratch (qs|ks|vs|[dos]|p|[ds]); grow-only,
+    // reused across every attention dispatch on this thread.
+    static HEAD_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn head_scratch<R>(need: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    HEAD_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < need {
+            buf.resize(need, 0.0);
+        }
+        f(&mut buf[..need])
+    })
+}
+
 fn gather_head(src: &[f32], d: &AttnDims, bi: usize, hi: usize,
                out: &mut [f32]) {
     let c = d.c();
@@ -252,178 +300,209 @@ fn gather_head(src: &[f32], d: &AttnDims, bi: usize, hi: usize,
     }
 }
 
-/// Row-softmax of the scaled score matrix `q·kᵀ/√dh` for one head.
-/// `lim(i)` = number of valid key positions for query `i`.
-fn head_probs(qs: &[f32], ks: &[f32], d: &AttnDims, causal: bool)
-              -> Vec<f32> {
+/// Row-softmax of the scaled score matrix `q·kᵀ/√dh` for one head, into
+/// `p[n·n]`. The scores come from the blocked GEMM (`QKᵀ` computed as a
+/// full matrix even under causal masking — the SIMD matmul beats
+/// triangle-skipping at these head sizes); rows past the causal limit
+/// are written as exact zeros so the `P·V` product can also run as a
+/// full GEMM.
+fn head_probs_into(p: &mut [f32], qs: &[f32], ks: &[f32], d: &AttnDims,
+                   causal: bool) {
     let n = d.n;
     let scale = 1.0 / (d.dh as f32).sqrt();
-    let mut p = vec![0f32; n * n];
+    matmul_nt_into(p, qs, ks, n, d.dh, n);
     for i in 0..n {
         let lim = if causal { i + 1 } else { n };
-        let prow = &mut p[i * n..i * n + lim];
-        let qrow = &qs[i * d.dh..(i + 1) * d.dh];
-        for (j, pv) in prow.iter_mut().enumerate() {
-            *pv = dot(qrow, &ks[j * d.dh..(j + 1) * d.dh]) * scale;
+        let prow = &mut p[i * n..(i + 1) * n];
+        let mut mx = f32::NEG_INFINITY;
+        for pv in &mut prow[..lim] {
+            *pv *= scale;
+            if *pv > mx {
+                mx = *pv;
+            }
         }
-        let mx = prow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0f32;
-        for pv in prow.iter_mut() {
+        for pv in &mut prow[..lim] {
             *pv = (*pv - mx).exp();
             sum += *pv;
         }
-        for pv in prow.iter_mut() {
+        for pv in &mut prow[..lim] {
             *pv /= sum;
         }
+        for pv in &mut prow[lim..] {
+            *pv = 0.0;
+        }
     }
-    p
 }
 
-/// Multi-head attention forward: `o = softmax(q·kᵀ/√dh)·v`, computed per
-/// `(batch, head)` task in parallel. Probabilities are **not** retained —
-/// the backward pass recomputes them from the saved q/k (the FlashAttn
-/// residual policy the measured tape assumes).
-pub fn attn_fwd(q: &[f32], k: &[f32], v: &[f32], d: &AttnDims,
-                causal: bool) -> Vec<f32> {
+/// Multi-head attention forward into `o` (`[B·N, C]` row-major), using
+/// `hm` (`[B·H·N·dh]`) as the head-major staging buffer:
+/// `o = softmax(q·kᵀ/√dh)·v`, one `(batch, head)` task per pool slot.
+/// Probabilities are **not** retained — the backward pass recomputes
+/// them from the saved q/k (the FlashAttn residual policy the measured
+/// tape assumes). Both score and value products run through the blocked
+/// GEMM.
+pub fn attn_fwd_into(o: &mut [f32], hm: &mut [f32], q: &[f32], k: &[f32],
+                     v: &[f32], d: &AttnDims, causal: bool) {
     let (n, dh, c) = (d.n, d.dh, d.c());
     let tasks = d.b * d.h;
-    let mut o_hm = vec![0f32; tasks * n * dh];
-    super::pool::parallel_tasks(&mut o_hm, n * dh, |t, slot| {
+    assert_eq!(o.len(), d.b * n * c);
+    assert_eq!(hm.len(), tasks * n * dh);
+    super::pool::parallel_tasks(hm, n * dh, |t, slot| {
         let (bi, hi) = (t / d.h, t % d.h);
-        let mut qs = vec![0f32; n * dh];
-        let mut ks = vec![0f32; n * dh];
-        let mut vs = vec![0f32; n * dh];
-        gather_head(q, d, bi, hi, &mut qs);
-        gather_head(k, d, bi, hi, &mut ks);
-        gather_head(v, d, bi, hi, &mut vs);
-        let p = head_probs(&qs, &ks, d, causal);
-        for i in 0..n {
-            let orow = &mut slot[i * dh..(i + 1) * dh];
-            let lim = if causal { i + 1 } else { n };
-            for (j, &pv) in p[i * n..i * n + lim].iter().enumerate() {
-                let vrow = &vs[j * dh..(j + 1) * dh];
-                for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                    *ov += pv * vv;
-                }
-            }
-        }
+        head_scratch(3 * n * dh + n * n, |buf| {
+            let (qs, rest) = buf.split_at_mut(n * dh);
+            let (ks, rest) = rest.split_at_mut(n * dh);
+            let (vs, p) = rest.split_at_mut(n * dh);
+            gather_head(q, d, bi, hi, qs);
+            gather_head(k, d, bi, hi, ks);
+            gather_head(v, d, bi, hi, vs);
+            head_probs_into(p, qs, ks, d, causal);
+            matmul_nn_into(slot, p, vs, n, n, dh);
+        });
     });
     // head-major [B,H,N,dh] → row-major [B·N, C]
-    let mut o = vec![0f32; d.b * n * c];
     for t in 0..tasks {
         let (bi, hi) = (t / d.h, t % d.h);
         for i in 0..n {
-            let src = &o_hm[(t * n + i) * dh..(t * n + i + 1) * dh];
+            let src = &hm[(t * n + i) * dh..(t * n + i + 1) * dh];
             let row = (bi * n + i) * c + hi * dh;
             o[row..row + dh].copy_from_slice(src);
         }
     }
+}
+
+/// Allocating wrapper over [`attn_fwd_into`].
+pub fn attn_fwd(q: &[f32], k: &[f32], v: &[f32], d: &AttnDims,
+                causal: bool) -> Vec<f32> {
+    let (n, dh, c) = (d.n, d.dh, d.c());
+    let mut o = vec![0f32; d.b * n * c];
+    let mut hm = vec![0f32; d.b * d.h * n * dh];
+    attn_fwd_into(&mut o, &mut hm, q, k, v, d, causal);
     o
 }
 
-/// Multi-head attention backward. Recomputes the probabilities from the
-/// saved `q`/`k`, then returns `(dq, dk, dv)` in `[B·N, C]` layout.
-pub fn attn_bwd(dout: &[f32], q: &[f32], k: &[f32], v: &[f32],
-                d: &AttnDims, causal: bool)
-                -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+/// Multi-head attention backward into `dq`/`dk`/`dv` (`[B·N, C]`
+/// layout), using `scr` (`[B·H · 3·n·dh]`) as the head-major staging
+/// buffer. Recomputes the probabilities from the saved `q`/`k`; the
+/// `do·Vᵀ`, `dS·K`, `dSᵀ·Q`, and `Pᵀ·do` products all run through the
+/// blocked GEMM (with the causal mask applied by zeroing the `P`/`dS`
+/// tails).
+pub fn attn_bwd_into(dq: &mut [f32], dk: &mut [f32], dv: &mut [f32],
+                     scr: &mut [f32], dout: &[f32], q: &[f32], k: &[f32],
+                     v: &[f32], d: &AttnDims, causal: bool) {
     let (n, dh, c) = (d.n, d.dh, d.c());
     let scale = 1.0 / (dh as f32).sqrt();
     let tasks = d.b * d.h;
-    // one slot per task holding [dq | dk | dv] head-major
-    let mut dqkv = vec![0f32; tasks * 3 * n * dh];
-    super::pool::parallel_tasks(&mut dqkv, 3 * n * dh, |t, slot| {
+    assert_eq!(scr.len(), tasks * 3 * n * dh);
+    assert_eq!(dq.len(), d.b * n * c);
+    super::pool::parallel_tasks(scr, 3 * n * dh, |t, slot| {
         let (bi, hi) = (t / d.h, t % d.h);
-        let mut qs = vec![0f32; n * dh];
-        let mut ks = vec![0f32; n * dh];
-        let mut vs = vec![0f32; n * dh];
-        let mut dos = vec![0f32; n * dh];
-        gather_head(q, d, bi, hi, &mut qs);
-        gather_head(k, d, bi, hi, &mut ks);
-        gather_head(v, d, bi, hi, &mut vs);
-        gather_head(dout, d, bi, hi, &mut dos);
-        let p = head_probs(&qs, &ks, d, causal);
-        let (dq_s, rest) = slot.split_at_mut(n * dh);
-        let (dk_s, dv_s) = rest.split_at_mut(n * dh);
-        let mut ds = vec![0f32; n * n];
-        for i in 0..n {
-            let lim = if causal { i + 1 } else { n };
-            let prow = &p[i * n..i * n + lim];
-            let dorow = &dos[i * dh..(i + 1) * dh];
-            // dp row, then ds = p ∘ (dp − Σ dp∘p)
-            let dsrow = &mut ds[i * n..i * n + lim];
-            let mut inner = 0f32;
-            for (j, dsv) in dsrow.iter_mut().enumerate() {
-                *dsv = dot(dorow, &vs[j * dh..(j + 1) * dh]); // dp
-                inner += *dsv * prow[j];
-            }
-            for (dsv, &pv) in dsrow.iter_mut().zip(prow) {
-                *dsv = pv * (*dsv - inner);
-            }
-            // dv += pᵀ·do ; dq = ds·k·scale ; dk += dsᵀ·q·scale
-            let qrow = &qs[i * dh..(i + 1) * dh];
-            let dqrow = &mut dq_s[i * dh..(i + 1) * dh];
-            for j in 0..lim {
-                let pv = prow[j];
-                let dsv = ds[i * n + j];
-                let krow = &ks[j * dh..(j + 1) * dh];
-                let vrow_d = &mut dv_s[j * dh..(j + 1) * dh];
-                for (x, &dv_) in vrow_d.iter_mut().zip(dorow) {
-                    *x += pv * dv_;
+        head_scratch(4 * n * dh + 2 * n * n, |buf| {
+            let (qs, rest) = buf.split_at_mut(n * dh);
+            let (ks, rest) = rest.split_at_mut(n * dh);
+            let (vs, rest) = rest.split_at_mut(n * dh);
+            let (dos, rest) = rest.split_at_mut(n * dh);
+            let (p, ds) = rest.split_at_mut(n * n);
+            gather_head(q, d, bi, hi, qs);
+            gather_head(k, d, bi, hi, ks);
+            gather_head(v, d, bi, hi, vs);
+            gather_head(dout, d, bi, hi, dos);
+            head_probs_into(p, qs, ks, d, causal);
+            // dp = do · vᵀ (full matrix; only the causal prefix is used)
+            matmul_nt_into(ds, dos, vs, n, dh, n);
+            // ds = p ∘ (dp − Σ_j dp∘p) · scale, masked tail zeroed
+            for i in 0..n {
+                let lim = if causal { i + 1 } else { n };
+                let prow = &p[i * n..i * n + lim];
+                let dsrow = &mut ds[i * n..(i + 1) * n];
+                let mut inner = 0f32;
+                for (dsv, &pv) in dsrow[..lim].iter().zip(prow) {
+                    inner += *dsv * pv;
                 }
-                for (x, &kv) in dqrow.iter_mut().zip(krow) {
-                    *x += dsv * kv * scale;
+                for (dsv, &pv) in dsrow[..lim].iter_mut().zip(prow) {
+                    *dsv = pv * (*dsv - inner) * scale;
                 }
-                let krow_d = &mut dk_s[j * dh..(j + 1) * dh];
-                for (x, &qv) in krow_d.iter_mut().zip(qrow) {
-                    *x += dsv * qv * scale;
+                for dsv in &mut dsrow[lim..] {
+                    *dsv = 0.0;
                 }
             }
-        }
+            let (dq_s, rest) = slot.split_at_mut(n * dh);
+            let (dk_s, dv_s) = rest.split_at_mut(n * dh);
+            // dq = ds·k ; dk = dsᵀ·q ; dv = pᵀ·do
+            matmul_nn_into(dq_s, ds, ks, n, n, dh);
+            matmul_tn_into(dk_s, ds, qs, n, n, dh);
+            matmul_tn_into(dv_s, p, dos, n, n, dh);
+        });
     });
-    let mut dq = vec![0f32; d.b * n * c];
-    let mut dk = vec![0f32; d.b * n * c];
-    let mut dv = vec![0f32; d.b * n * c];
     for t in 0..tasks {
         let (bi, hi) = (t / d.h, t % d.h);
         let base = t * 3 * n * dh;
         for i in 0..n {
             let row = (bi * n + i) * c + hi * dh;
             let off = base + i * dh;
-            dq[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+            dq[row..row + dh].copy_from_slice(&scr[off..off + dh]);
             let off = base + (n + i) * dh;
-            dk[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+            dk[row..row + dh].copy_from_slice(&scr[off..off + dh]);
             let off = base + (2 * n + i) * dh;
-            dv[row..row + dh].copy_from_slice(&dqkv[off..off + dh]);
+            dv[row..row + dh].copy_from_slice(&scr[off..off + dh]);
         }
     }
+}
+
+/// Allocating wrapper over [`attn_bwd_into`].
+pub fn attn_bwd(dout: &[f32], q: &[f32], k: &[f32], v: &[f32],
+                d: &AttnDims, causal: bool)
+                -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (n, c) = (d.n, d.c());
+    let sz = d.b * n * c;
+    let mut dq = vec![0f32; sz];
+    let mut dk = vec![0f32; sz];
+    let mut dv = vec![0f32; sz];
+    let mut scr = vec![0f32; 3 * sz];
+    attn_bwd_into(&mut dq, &mut dk, &mut dv, &mut scr, dout, q, k, v, d,
+                  causal);
     (dq, dk, dv)
 }
 
-/// Exact activation forward (`GELU` per eq. 40 / `SiLU` per eq. 47); the
-/// same forward is used by the ReGELU2/ReSiLU2 variants — only the saved
-/// residual and the backward differ.
-pub fn act_fwd(u: &[f32], gelu: bool) -> Vec<f32> {
-    let mut out = vec![0f32; u.len()];
-    parallel_rows(&mut out, 1, 4096, |i0, chunk| {
+/// Exact activation forward (`GELU` per eq. 40 / `SiLU` per eq. 47) into
+/// `out`; the same forward is used by the ReGELU2/ReSiLU2 variants —
+/// only the saved residual and the backward differ.
+pub fn act_fwd_into(out: &mut [f32], u: &[f32], gelu: bool) {
+    assert_eq!(out.len(), u.len());
+    parallel_rows(out, 1, 4096, |i0, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             let x = u[i0 + i] as f64;
             *o = if gelu { funcs::gelu(x) } else { funcs::silu(x) } as f32;
         }
     });
+}
+
+/// Allocating wrapper over [`act_fwd_into`].
+pub fn act_fwd(u: &[f32], gelu: bool) -> Vec<f32> {
+    let mut out = vec![0f32; u.len()];
+    act_fwd_into(&mut out, u, gelu);
     out
 }
 
-/// Exact activation backward: `du = dy ∘ h'(u)` from the full-precision
-/// saved pre-activation.
-pub fn act_bwd_exact(u: &[f32], dy: &[f32], gelu: bool) -> Vec<f32> {
-    let mut out = vec![0f32; u.len()];
-    parallel_rows(&mut out, 1, 4096, |i0, chunk| {
+/// Exact activation backward into `out`: `du = dy ∘ h'(u)` from the
+/// full-precision saved pre-activation.
+pub fn act_bwd_exact_into(out: &mut [f32], u: &[f32], dy: &[f32],
+                          gelu: bool) {
+    assert_eq!(out.len(), u.len());
+    parallel_rows(out, 1, 4096, |i0, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             let x = u[i0 + i] as f64;
             let d = if gelu { funcs::dgelu(x) } else { funcs::dsilu(x) };
             *o = dy[i0 + i] * d as f32;
         }
     });
+}
+
+/// Allocating wrapper over [`act_bwd_exact_into`].
+pub fn act_bwd_exact(u: &[f32], dy: &[f32], gelu: bool) -> Vec<f32> {
+    let mut out = vec![0f32; u.len()];
+    act_bwd_exact_into(&mut out, u, dy, gelu);
     out
 }
 
@@ -483,6 +562,20 @@ mod tests {
         let got = matmul_tn(&at, &b, m, k, n);
         for (x, y) in got.iter().zip(&want) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn acc_variants_accumulate() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (6, 9, 10);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let base = matmul_nn(&a, &b, m, k, n);
+        let mut c = base.clone();
+        matmul_nn_acc_into(&mut c, &a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&base) {
+            assert!((x - 2.0 * y).abs() < 1e-4);
         }
     }
 
@@ -560,6 +653,48 @@ mod tests {
         for (buf, grad, which) in [(&q, &dq, 0), (&k, &dk, 1), (&v, &dv, 2)]
         {
             for i in [0usize, 5, sz - 1] {
+                let mut plus = buf.to_vec();
+                plus[i] += eps;
+                let mut minus = buf.to_vec();
+                minus[i] -= eps;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    1 => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad[i]).abs() < 2e-2 * fd.abs().max(1.0),
+                    "which={which} i={i}: fd={fd} an={}", grad[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attn_causal_bwd_matches_finite_difference() {
+        // the masked-tail-zeroing path (causal GEMM attention) must also
+        // be exactly the gradient of the causal forward
+        let d = AttnDims { b: 1, n: 5, h: 2, dh: 3 };
+        let c = d.h * d.dh;
+        let sz = d.b * d.n * c;
+        let mut rng = Rng::new(16);
+        let q = randv(&mut rng, sz);
+        let k = randv(&mut rng, sz);
+        let v = randv(&mut rng, sz);
+        let w = randv(&mut rng, sz);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            attn_fwd(q, k, v, &d, true)
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| (a * b) as f64)
+                .sum()
+        };
+        let (dq, dk, dv) = attn_bwd(&w, &q, &k, &v, &d, true);
+        let eps = 1e-3f32;
+        for (buf, grad, which) in [(&q, &dq, 0), (&k, &dk, 1), (&v, &dv, 2)]
+        {
+            for i in [0usize, 7, sz - 1] {
                 let mut plus = buf.to_vec();
                 plus[i] += eps;
                 let mut minus = buf.to_vec();

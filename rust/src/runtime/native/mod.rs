@@ -2,23 +2,29 @@
 //!
 //! Executes the fine-tuning step directly from the manifest: the
 //! [`model`] module builds the transformer and runs the decoupled
-//! forward/backward passes, [`kernels`] provides the blocked matmul /
-//! attention / norm / activation primitives, [`pool`] fans the hot loops
-//! out over cores, and [`spec`] parses preset names and synthesizes
-//! manifests by dry-running the model — so `ambp train --preset
+//! forward/backward passes, [`kernels`] provides the matmul / attention
+//! / norm / activation primitives on top of the cache-blocked
+//! panel-packed [`gemm`] engine, [`pool`] fans the hot loops out over a
+//! persistent worker pool, [`arena`] pools the step-scoped activation
+//! buffers, and [`spec`] parses preset names and synthesizes manifests
+//! by dry-running the model — so `ambp train --preset
 //! vitt_loraqv_regelu2_msln` works with zero build-time artifacts.
 
+pub mod arena;
+pub mod gemm;
 pub mod kernels;
 pub mod model;
 pub mod pool;
 pub mod spec;
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::runtime::{Artifact, Backend, Executor, FwdOut, Tensor};
 
+pub use arena::{Arena, ArenaStats};
 pub use model::{Act, Arch, Model, NetCfg, Norm, Tuning};
 
 /// The native CPU backend (unit struct — all state lives in artifacts).
@@ -38,16 +44,39 @@ impl Backend for NativeBackend {
     }
 }
 
-/// [`Executor`] over a built native [`Model`].
+/// [`Executor`] over a built native [`Model`], owning the step-scoped
+/// buffer [`Arena`]: activations and residual payloads are taken from
+/// (and, via [`Executor::recycle`], returned to) its free lists, so the
+/// steady-state train step allocates nothing.
 pub struct NativeExec {
     /// The model whose layout matches the artifact manifest.
     pub model: Model,
+    arena: Mutex<Arena>,
+}
+
+impl NativeExec {
+    /// Wrap a built model with a fresh arena.
+    pub fn new(model: Model) -> NativeExec {
+        NativeExec { model, arena: Mutex::new(Arena::new()) }
+    }
+
+    /// Free-list hit/miss counters of the owned arena (the steady-state
+    /// zero-allocation claim is asserted against these in the tests).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .stats()
+    }
 }
 
 impl Executor for NativeExec {
     fn run_fwd(&self, params: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<FwdOut> {
-        let (loss, metric, saves) = self.model.forward(params, x, y)?;
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        let (loss, metric, saves) =
+            self.model.forward_in(&mut arena, params, x, y)?;
         Ok(FwdOut {
             loss,
             metric,
@@ -57,6 +86,16 @@ impl Executor for NativeExec {
 
     fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<Vec<Tensor>> {
-        self.model.backward(params, residuals, x, y)
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        self.model.backward_in(&mut arena, params, residuals, x, y)
+    }
+
+    fn recycle(&self, residuals: Vec<Tensor>) {
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        for t in residuals {
+            arena.recycle_tensor(t);
+        }
     }
 }

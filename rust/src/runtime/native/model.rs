@@ -13,13 +13,20 @@
 //! The backward pass consumes the residual list in exact reverse push
 //! order; the gradient math was cross-checked against finite differences
 //! for every (arch × tuning × norm) combination.
+//!
+//! Every intermediate activation, backward scratch buffer, and residual
+//! payload is taken from (and returned to) the step-scoped
+//! [`Arena`] the executor owns, so a steady-state train step performs no
+//! activation allocations — see `arena.rs`.
 
 use anyhow::{bail, ensure, Result};
 
+use super::arena::Arena;
 use super::kernels::{
-    add_bias, add_inplace, attn_bwd, attn_fwd, colsum, matmul_nn,
-    matmul_nt, matmul_tn, norm_bwd, norm_fwd, softmax_ce, softmax_ce_grad,
-    AttnDims,
+    add_bias, add_inplace, attn_bwd_into, attn_fwd_into, colsum_into,
+    matmul_nn_acc_into, matmul_nn_into, matmul_nt_acc_into,
+    matmul_nt_into, matmul_tn_into, norm_bwd_into, norm_fwd_into,
+    softmax_ce, softmax_ce_grad_into, AttnDims,
 };
 use crate::coeffs::funcs::{ReluComb, PAPER_GELU, PAPER_SILU};
 use crate::packing;
@@ -285,8 +292,10 @@ struct NormDef {
 }
 
 struct BlockDef {
-    attn_name: String,
-    mlp_name: String,
+    // precomputed residual module names ("block{i}.attn.qkv",
+    // "block{i}.mlp.act") so the per-step save path does not format!
+    qkv_name: String,
+    act_name: String,
     norm1: NormDef,
     q: LinDef,
     k: LinDef,
@@ -408,8 +417,8 @@ impl Model {
             let fc1 = add_lin(&mut reg, &format!("{mn}.fc1"), "fc1", c, m);
             let fc2 = add_lin(&mut reg, &format!("{mn}.fc2"), "fc2", m, c);
             blocks.push(BlockDef {
-                attn_name: an,
-                mlp_name: mn,
+                qkv_name: format!("{an}.qkv"),
+                act_name: format!("{mn}.act"),
                 norm1,
                 q,
                 k,
@@ -554,35 +563,30 @@ impl Model {
         Ok(())
     }
 
-    fn embed_fwd(&self, params: &[Tensor], x: &Tensor) -> Result<Vec<f32>> {
+    fn embed_fwd(&self, arena: &mut Arena, params: &[Tensor],
+                 x: &Tensor) -> Result<Vec<f32>> {
         let c = self.cfg.dim;
         let rows = self.rows();
-        let mut h = match self.cfg.arch {
+        let mut h = arena.take_f32(rows * c);
+        match self.cfg.arch {
             Arch::Vit => {
-                let mut e = matmul_nt(
-                    x.as_f32(),
-                    params[self.embed_w.unwrap()].as_f32(),
-                    rows,
-                    self.cfg.patch_dim,
-                    c,
-                );
-                add_bias(&mut e, params[self.embed_b.unwrap()].as_f32());
-                e
+                matmul_nt_into(&mut h, x.as_f32(),
+                               params[self.embed_w.unwrap()].as_f32(),
+                               rows, self.cfg.patch_dim, c);
+                add_bias(&mut h, params[self.embed_b.unwrap()].as_f32());
             }
             _ => {
                 let emb = params[self.tok_e.unwrap()].as_f32();
                 let toks = x.as_i32();
-                let mut e = vec![0f32; rows * c];
                 for (r, &t) in toks.iter().enumerate() {
                     ensure!((t as usize) < self.cfg.vocab,
                             "token {t} out of range");
                     let t = t as usize;
-                    e[r * c..(r + 1) * c]
+                    h[r * c..(r + 1) * c]
                         .copy_from_slice(&emb[t * c..(t + 1) * c]);
                 }
-                e
             }
-        };
+        }
         let pos = params[self.pos].as_f32();
         let n = self.cfg.n_tokens;
         for r in 0..rows {
@@ -592,12 +596,12 @@ impl Model {
         Ok(h)
     }
 
-    fn norm_affine(&self, params: &[Tensor], nd: &NormDef,
-                   xhat: &[f32]) -> Option<Vec<f32>> {
+    fn norm_affine(&self, arena: &mut Arena, params: &[Tensor],
+                   nd: &NormDef, xhat: &[f32]) -> Option<Vec<f32>> {
         let gi = nd.g?;
         let g = params[gi].as_f32();
         let c = g.len();
-        let mut y = vec![0f32; xhat.len()];
+        let mut y = arena.take_f32(xhat.len());
         for (yrow, xrow) in y.chunks_mut(c).zip(xhat.chunks(c)) {
             for ((o, &xh), &gv) in yrow.iter_mut().zip(xrow).zip(g) {
                 *o = xh * gv;
@@ -609,105 +613,149 @@ impl Model {
         Some(y)
     }
 
-    fn acc(&self, grads: &mut [Option<Vec<f32>>], idx: usize,
-           g: Vec<f32>) {
+    /// Accumulate a gradient buffer into the staging slot for `idx`,
+    /// returning the buffer to the arena when it is merged (or when the
+    /// parameter is frozen).
+    fn acc(&self, arena: &mut Arena, grads: &mut [Option<Vec<f32>>],
+           idx: usize, g: Vec<f32>) {
         if !self.infos[idx].trainable {
+            arena.put_f32(g);
             return;
         }
         match &mut grads[idx] {
-            Some(a) => add_inplace(a, &g),
+            Some(a) => {
+                add_inplace(a, &g);
+                arena.put_f32(g);
+            }
             slot @ None => *slot = Some(g),
         }
     }
 
-    fn lin_fwd(&self, params: &[Tensor], lin: &LinDef, x: &[f32],
-               rows: usize, lead: &[usize],
+    fn save(&self, arena: &mut Arena, saves: &mut Vec<SavedRes>,
+            module: String, kind: &'static str, shape: &[usize],
+            v: &[f32]) {
+        saves.push(SavedRes {
+            module,
+            kind,
+            tensor: arena.tensor_from_f32(shape, v),
+        });
+    }
+
+    fn lin_fwd(&self, arena: &mut Arena, params: &[Tensor], lin: &LinDef,
+               x: &[f32], rows: usize, lead: &[usize],
                saves: &mut Vec<SavedRes>) -> Vec<f32> {
-        let mut y = matmul_nt(x, params[lin.w].as_f32(), rows, lin.din,
-                              lin.dout);
+        let mut y = arena.take_f32(rows * lin.dout);
+        matmul_nt_into(&mut y, x, params[lin.w].as_f32(), rows, lin.din,
+                       lin.dout);
         if let Some(bi) = lin.b {
             add_bias(&mut y, params[bi].as_f32());
         }
         if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
             let r = self.cfg.lora_rank;
-            let u = matmul_nt(x, params[lai].as_f32(), rows, lin.din, r);
+            let mut u = arena.take_f32(rows * r);
+            matmul_nt_into(&mut u, x, params[lai].as_f32(), rows, lin.din,
+                           r);
             let mut shape = lead.to_vec();
             shape.push(r);
-            saves.push(SavedRes {
-                module: lin.name.clone(),
-                kind: "lora_u",
-                tensor: Tensor::from_f32(&shape, &u),
-            });
-            let up = matmul_nt(&u, params[lbi].as_f32(), rows, r,
+            self.save(arena, saves, lin.name.clone(), "lora_u", &shape,
+                      &u);
+            matmul_nt_acc_into(&mut y, &u, params[lbi].as_f32(), rows, r,
                                lin.dout);
-            add_inplace(&mut y, &up);
+            arena.put_f32(u);
         }
         y
     }
 
-    fn lin_bwd(&self, params: &[Tensor], lin: &LinDef, dy: &[f32],
-               x: Option<&[f32]>, u: Option<&[f32]>, rows: usize,
+    fn lin_bwd(&self, arena: &mut Arena, params: &[Tensor], lin: &LinDef,
+               dy: &[f32], x: Option<&[f32]>, u: Option<&[f32]>,
+               rows: usize,
                grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
         if lin.base_train {
             let xx = x.expect("linear input residual missing");
-            self.acc(grads, lin.w,
-                     matmul_tn(dy, xx, lin.dout, rows, lin.din));
+            let mut dw = arena.take_f32(lin.dout * lin.din);
+            matmul_tn_into(&mut dw, dy, xx, lin.dout, rows, lin.din);
+            self.acc(arena, grads, lin.w, dw);
             if let Some(bi) = lin.b {
-                self.acc(grads, bi, colsum(dy, rows, lin.dout));
+                let mut db = arena.take_f32(lin.dout);
+                colsum_into(&mut db, dy, rows, lin.dout);
+                self.acc(arena, grads, bi, db);
             }
         }
-        let mut dx =
-            matmul_nn(dy, params[lin.w].as_f32(), rows, lin.dout, lin.din);
+        let mut dx = arena.take_f32(rows * lin.din);
+        matmul_nn_into(&mut dx, dy, params[lin.w].as_f32(), rows,
+                       lin.dout, lin.din);
         if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
             let r = self.cfg.lora_rank;
             let uu = u.expect("lora_u residual missing");
-            let du =
-                matmul_nn(dy, params[lbi].as_f32(), rows, lin.dout, r);
-            self.acc(grads, lbi, matmul_tn(dy, uu, lin.dout, rows, r));
+            let mut du = arena.take_f32(rows * r);
+            matmul_nn_into(&mut du, dy, params[lbi].as_f32(), rows,
+                           lin.dout, r);
+            let mut dlb = arena.take_f32(lin.dout * r);
+            matmul_tn_into(&mut dlb, dy, uu, lin.dout, rows, r);
+            self.acc(arena, grads, lbi, dlb);
             if !lin.fa {
                 let xx = x.expect("linear input residual missing (lora)");
-                self.acc(grads, lai,
-                         matmul_tn(&du, xx, r, rows, lin.din));
+                let mut dla = arena.take_f32(r * lin.din);
+                matmul_tn_into(&mut dla, &du, xx, r, rows, lin.din);
+                self.acc(arena, grads, lai, dla);
             }
-            let dxl =
-                matmul_nn(&du, params[lai].as_f32(), rows, r, lin.din);
-            add_inplace(&mut dx, &dxl);
+            matmul_nn_acc_into(&mut dx, &du, params[lai].as_f32(), rows,
+                               r, lin.din);
+            arena.put_f32(du);
         }
         dx
     }
 
-    fn norm_param_bwd(&self, params: &[Tensor], nd: &NormDef, dy: &[f32],
-                      xhat: &[f32], stat: &[f32], rows: usize,
+    fn norm_param_bwd(&self, arena: &mut Arena, params: &[Tensor],
+                      nd: &NormDef, dy: &[f32], xhat: &[f32],
+                      stat: &[f32], rows: usize,
                       grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
         let c = self.cfg.dim;
+        let mut dx = arena.take_f32(rows * c);
         if let Some(gi) = nd.g {
-            let mut dg = vec![0f32; c];
+            let mut dg = arena.take_f32_zeroed(c);
             for (dyrow, xrow) in dy.chunks(c).zip(xhat.chunks(c)) {
                 for ((o, &d), &xh) in dg.iter_mut().zip(dyrow).zip(xrow) {
                     *o += d * xh;
                 }
             }
-            self.acc(grads, gi, dg);
+            self.acc(arena, grads, gi, dg);
             if let Some(bi) = nd.b {
-                self.acc(grads, bi, colsum(dy, rows, c));
+                let mut db = arena.take_f32(c);
+                colsum_into(&mut db, dy, rows, c);
+                self.acc(arena, grads, bi, db);
             }
             let g = params[gi].as_f32();
-            let mut dyh = vec![0f32; dy.len()];
+            let mut dyh = arena.take_f32(dy.len());
             for (orow, dyrow) in dyh.chunks_mut(c).zip(dy.chunks(c)) {
                 for ((o, &d), &gv) in orow.iter_mut().zip(dyrow).zip(g) {
                     *o = d * gv;
                 }
             }
-            norm_bwd(&dyh, xhat, stat, rows, c, self.cfg.is_rms())
+            norm_bwd_into(&mut dx, &dyh, xhat, stat, rows, c,
+                          self.cfg.is_rms());
+            arena.put_f32(dyh);
         } else {
-            norm_bwd(dy, xhat, stat, rows, c, self.cfg.is_rms())
+            norm_bwd_into(&mut dx, dy, xhat, stat, rows, c,
+                          self.cfg.is_rms());
         }
+        dx
+    }
+
+    /// Forward pass with a throwaway arena (tests / one-shot callers).
+    /// The executor path uses [`Model::forward_in`] with its persistent
+    /// arena.
+    pub fn forward(&self, params: &[Tensor], x: &Tensor,
+                   y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
+        self.forward_in(&mut Arena::new(), params, x, y)
     }
 
     /// Forward pass. Returns `(loss, metric, residuals)` with residuals
-    /// in the canonical push order (the manifest order).
-    pub fn forward(&self, params: &[Tensor], x: &Tensor,
-                   y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
+    /// in the canonical push order (the manifest order). Activations and
+    /// residual payloads are drawn from `arena`.
+    pub fn forward_in(&self, arena: &mut Arena, params: &[Tensor],
+                      x: &Tensor,
+                      y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
         ensure!(params.len() == self.infos.len(),
                 "param arity: got {}, expected {}", params.len(),
                 self.infos.len());
@@ -716,44 +764,37 @@ impl Model {
         let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
         let rows = self.rows();
         let mut saves: Vec<SavedRes> = Vec::new();
-        let mut h = self.embed_fwd(params, x)?;
+        let mut h = self.embed_fwd(arena, params, x)?;
         for blk in &self.blocks {
-            h = self.block_fwd(params, blk, h, &mut saves);
+            h = self.block_fwd(arena, params, blk, h, &mut saves);
         }
-        let (xhatf, statf) = norm_fwd(&h, rows, c, cfg.is_rms());
-        saves.push(SavedRes {
-            module: self.normf.name.clone(),
-            kind: self.norm_kind(),
-            tensor: Tensor::from_f32(&[bsz, n, c], &xhatf),
-        });
-        saves.push(SavedRes {
-            module: self.normf.name.clone(),
-            kind: "norm_stat",
-            tensor: Tensor::from_f32(&[bsz, n], &statf),
-        });
-        let afff = self.norm_affine(params, &self.normf, &xhatf);
-        let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
+        let mut xhatf = arena.take_f32(rows * c);
+        let mut statf = arena.take_f32(rows);
+        norm_fwd_into(&mut xhatf, &mut statf, &h, rows, c, cfg.is_rms());
+        arena.put_f32(h);
+        self.save(arena, &mut saves, self.normf.name.clone(),
+                  self.norm_kind(), &[bsz, n, c], &xhatf);
+        self.save(arena, &mut saves, self.normf.name.clone(), "norm_stat",
+                  &[bsz, n], &statf);
+        let afff = self.norm_affine(arena, params, &self.normf, &xhatf);
         let (loss, metric) = match cfg.arch {
             Arch::Llama => {
+                let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
                 if self.head.need_x() {
-                    saves.push(SavedRes {
-                        module: self.head.name.clone(),
-                        kind: "head_input",
-                        tensor: Tensor::from_f32(&[bsz, n, c], hn),
-                    });
+                    self.save(arena, &mut saves, self.head.name.clone(),
+                              "head_input", &[bsz, n, c], hn);
                 }
-                let z = self.lin_fwd(params, &self.head, hn, rows,
+                let z = self.lin_fwd(arena, params, &self.head, hn, rows,
                                      &[bsz, n], &mut saves);
                 let out = softmax_ce(&z, rows, cfg.vocab, y.as_i32());
-                saves.push(SavedRes {
-                    module: "head".into(),
-                    kind: "logits",
-                    tensor: Tensor::from_f32(&[bsz, n, cfg.vocab], &z),
-                });
+                self.save(arena, &mut saves, "head".into(), "logits",
+                          &[bsz, n, cfg.vocab], &z);
+                arena.put_f32(z);
                 out
             }
             _ => {
-                let mut pooled = vec![0f32; bsz * c];
+                let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
+                let mut pooled = arena.take_f32_zeroed(bsz * c);
                 for b in 0..bsz {
                     let prow = &mut pooled[b * c..(b + 1) * c];
                     for i in 0..n {
@@ -764,130 +805,149 @@ impl Model {
                         *v /= n as f32;
                     }
                 }
-                saves.push(SavedRes {
-                    module: self.head.name.clone(),
-                    kind: "head_input",
-                    tensor: Tensor::from_f32(&[bsz, c], &pooled),
-                });
-                let z = self.lin_fwd(params, &self.head, &pooled, bsz,
-                                     &[bsz], &mut saves);
+                self.save(arena, &mut saves, self.head.name.clone(),
+                          "head_input", &[bsz, c], &pooled);
+                let z = self.lin_fwd(arena, params, &self.head, &pooled,
+                                     bsz, &[bsz], &mut saves);
+                arena.put_f32(pooled);
                 let out = softmax_ce(&z, bsz, cfg.n_classes, y.as_i32());
-                saves.push(SavedRes {
-                    module: "head".into(),
-                    kind: "logits",
-                    tensor: Tensor::from_f32(&[bsz, cfg.n_classes], &z),
-                });
+                self.save(arena, &mut saves, "head".into(), "logits",
+                          &[bsz, cfg.n_classes], &z);
+                arena.put_f32(z);
                 out
             }
         };
+        if let Some(aff) = afff {
+            arena.put_f32(aff);
+        }
+        arena.put_f32(xhatf);
+        arena.put_f32(statf);
         Ok((loss, metric, saves))
     }
 
-    fn block_fwd(&self, params: &[Tensor], blk: &BlockDef, mut h: Vec<f32>,
+    fn block_fwd(&self, arena: &mut Arena, params: &[Tensor],
+                 blk: &BlockDef, mut h: Vec<f32>,
                  saves: &mut Vec<SavedRes>) -> Vec<f32> {
         let cfg = &self.cfg;
         let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
         let rows = self.rows();
         let lead = [bsz, n];
         // ---- attention half ----
-        let (xhat1, stat1) = norm_fwd(&h, rows, c, cfg.is_rms());
-        saves.push(SavedRes {
-            module: blk.norm1.name.clone(),
-            kind: self.norm_kind(),
-            tensor: Tensor::from_f32(&[bsz, n, c], &xhat1),
-        });
-        saves.push(SavedRes {
-            module: blk.norm1.name.clone(),
-            kind: "norm_stat",
-            tensor: Tensor::from_f32(&[bsz, n], &stat1),
-        });
-        let aff1 = self.norm_affine(params, &blk.norm1, &xhat1);
+        let mut xhat1 = arena.take_f32(rows * c);
+        let mut stat1 = arena.take_f32(rows);
+        norm_fwd_into(&mut xhat1, &mut stat1, &h, rows, c, cfg.is_rms());
+        self.save(arena, saves, blk.norm1.name.clone(), self.norm_kind(),
+                  &[bsz, n, c], &xhat1);
+        self.save(arena, saves, blk.norm1.name.clone(), "norm_stat",
+                  &[bsz, n], &stat1);
+        let aff1 = self.norm_affine(arena, params, &blk.norm1, &xhat1);
         let xn1: &[f32] = aff1.as_deref().unwrap_or(&xhat1);
         let need_qkv_x =
             blk.q.need_x() || blk.k.need_x() || blk.v.need_x();
         if !cfg.is_ms() && need_qkv_x {
-            saves.push(SavedRes {
-                module: format!("{}.qkv", blk.attn_name),
-                kind: "linear_input",
-                tensor: Tensor::from_f32(&[bsz, n, c], xn1),
-            });
+            self.save(arena, saves, blk.qkv_name.clone(),
+                      "linear_input", &[bsz, n, c], xn1);
         }
-        let q = self.lin_fwd(params, &blk.q, xn1, rows, &lead, saves);
-        let k = self.lin_fwd(params, &blk.k, xn1, rows, &lead, saves);
-        let v = self.lin_fwd(params, &blk.v, xn1, rows, &lead, saves);
+        let q = self.lin_fwd(arena, params, &blk.q, xn1, rows, &lead,
+                             saves);
+        let k = self.lin_fwd(arena, params, &blk.k, xn1, rows, &lead,
+                             saves);
+        let v = self.lin_fwd(arena, params, &blk.v, xn1, rows, &lead,
+                             saves);
         for (name, t) in [(&blk.q.name, &q), (&blk.k.name, &k),
                           (&blk.v.name, &v)] {
-            saves.push(SavedRes {
-                module: name.clone(),
-                kind: "attn_qkv",
-                tensor: Tensor::from_f32(&[bsz, n, c], t),
-            });
+            self.save(arena, saves, name.clone(), "attn_qkv",
+                      &[bsz, n, c], t);
         }
-        let o = attn_fwd(&q, &k, &v, &self.attn_dims(), cfg.causal());
+        let mut o = arena.take_f32(rows * c);
+        let mut hm = arena.take_f32(rows * c);
+        attn_fwd_into(&mut o, &mut hm, &q, &k, &v, &self.attn_dims(),
+                      cfg.causal());
+        arena.put_f32(hm);
+        arena.put_f32(q);
+        arena.put_f32(k);
+        arena.put_f32(v);
+        if let Some(aff) = aff1 {
+            arena.put_f32(aff);
+        }
+        arena.put_f32(xhat1);
+        arena.put_f32(stat1);
         if blk.proj.need_x() {
-            saves.push(SavedRes {
-                module: blk.proj.name.clone(),
-                kind: "linear_input",
-                tensor: Tensor::from_f32(&[bsz, n, c], &o),
-            });
+            self.save(arena, saves, blk.proj.name.clone(), "linear_input",
+                      &[bsz, n, c], &o);
         }
-        let po = self.lin_fwd(params, &blk.proj, &o, rows, &lead, saves);
+        let po = self.lin_fwd(arena, params, &blk.proj, &o, rows, &lead,
+                              saves);
+        arena.put_f32(o);
         add_inplace(&mut h, &po);
+        arena.put_f32(po);
         // ---- mlp half ----
         let m = cfg.hidden();
-        let (xhat2, stat2) = norm_fwd(&h, rows, c, cfg.is_rms());
-        saves.push(SavedRes {
-            module: blk.norm2.name.clone(),
-            kind: self.norm_kind(),
-            tensor: Tensor::from_f32(&[bsz, n, c], &xhat2),
-        });
-        saves.push(SavedRes {
-            module: blk.norm2.name.clone(),
-            kind: "norm_stat",
-            tensor: Tensor::from_f32(&[bsz, n], &stat2),
-        });
-        let aff2 = self.norm_affine(params, &blk.norm2, &xhat2);
+        let mut xhat2 = arena.take_f32(rows * c);
+        let mut stat2 = arena.take_f32(rows);
+        norm_fwd_into(&mut xhat2, &mut stat2, &h, rows, c, cfg.is_rms());
+        self.save(arena, saves, blk.norm2.name.clone(), self.norm_kind(),
+                  &[bsz, n, c], &xhat2);
+        self.save(arena, saves, blk.norm2.name.clone(), "norm_stat",
+                  &[bsz, n], &stat2);
+        let aff2 = self.norm_affine(arena, params, &blk.norm2, &xhat2);
         let xn2: &[f32] = aff2.as_deref().unwrap_or(&xhat2);
         if !cfg.is_ms() && blk.fc1.need_x() {
-            saves.push(SavedRes {
-                module: blk.fc1.name.clone(),
-                kind: "linear_input",
-                tensor: Tensor::from_f32(&[bsz, n, c], xn2),
-            });
+            self.save(arena, saves, blk.fc1.name.clone(), "linear_input",
+                      &[bsz, n, c], xn2);
         }
-        let u = self.lin_fwd(params, &blk.fc1, xn2, rows, &lead, saves);
-        let hact = super::kernels::act_fwd(&u, cfg.is_gelu());
+        let u = self.lin_fwd(arena, params, &blk.fc1, xn2, rows, &lead,
+                             saves);
+        if let Some(aff) = aff2 {
+            arena.put_f32(aff);
+        }
+        arena.put_f32(xhat2);
+        arena.put_f32(stat2);
+        let mut hact = arena.take_f32(rows * m);
+        super::kernels::act_fwd_into(&mut hact, &u, cfg.is_gelu());
         if cfg.act_exact_bwd() {
-            saves.push(SavedRes {
-                module: format!("{}.act", blk.mlp_name),
-                kind: "act_full",
-                tensor: Tensor::from_f32(&[bsz, n, m], &u),
-            });
+            self.save(arena, saves, blk.act_name.clone(), "act_full",
+                      &[bsz, n, m], &u);
         } else {
-            let codes = packing::bucketize2(&u, cfg.comb().c);
-            let packed = packing::pack2(&codes);
+            // fused bucketize+pack straight into the residual payload:
+            // no intermediate code vector, no fresh allocation
+            let mut codes = arena.take_u8(rows * m / 4);
+            packing::encode2_into(&u, cfg.comb().c, &mut codes);
             saves.push(SavedRes {
-                module: format!("{}.act", blk.mlp_name),
+                module: blk.act_name.clone(),
                 kind: "act_codes",
-                tensor: Tensor::from_u8(&[bsz, n, m / 4], &packed),
+                tensor: Tensor {
+                    shape: vec![bsz, n, m / 4],
+                    dtype: DType::U8,
+                    data: codes,
+                },
             });
         }
+        arena.put_f32(u);
         if blk.fc2.need_x() {
-            saves.push(SavedRes {
-                module: blk.fc2.name.clone(),
-                kind: "linear_input",
-                tensor: Tensor::from_f32(&[bsz, n, m], &hact),
-            });
+            self.save(arena, saves, blk.fc2.name.clone(), "linear_input",
+                      &[bsz, n, m], &hact);
         }
-        let mo = self.lin_fwd(params, &blk.fc2, &hact, rows, &lead, saves);
+        let mo = self.lin_fwd(arena, params, &blk.fc2, &hact, rows,
+                              &lead, saves);
+        arena.put_f32(hact);
         add_inplace(&mut h, &mo);
+        arena.put_f32(mo);
         h
+    }
+
+    /// Backward pass with a throwaway arena (tests / one-shot callers).
+    pub fn backward(&self, params: &[Tensor], residuals: &[Tensor],
+                    x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
+        self.backward_in(&mut Arena::new(), params, residuals, x, y)
     }
 
     /// Backward pass from the residual list `forward` produced. Returns
     /// gradients for the trainable parameters, in manifest order.
-    pub fn backward(&self, params: &[Tensor], residuals: &[Tensor],
-                    x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
+    /// Scratch buffers are drawn from `arena`.
+    pub fn backward_in(&self, arena: &mut Arena, params: &[Tensor],
+                       residuals: &[Tensor], x: &Tensor,
+                       y: &Tensor) -> Result<Vec<Tensor>> {
         ensure!(params.len() == self.infos.len(), "param arity");
         self.check_batch(x, y)?;
         let cfg = &self.cfg;
@@ -902,28 +962,32 @@ impl Model {
         let dhn: Vec<f32> = match cfg.arch {
             Arch::Llama => {
                 ensure!(z.elems() == rows * cfg.vocab, "bad z residual");
-                let dz =
-                    softmax_ce_grad(z.as_f32(), rows, cfg.vocab,
-                                    y.as_i32());
+                let mut dz = arena.take_f32(rows * cfg.vocab);
+                softmax_ce_grad_into(&mut dz, z.as_f32(), rows, cfg.vocab,
+                                     y.as_i32());
                 let hn = if self.head.need_x() {
                     Some(st.pop()?)
                 } else {
                     None
                 };
-                self.lin_bwd(params, &self.head, &dz,
-                             hn.map(|t| t.as_f32()), None, rows,
-                             &mut grads)
+                let d = self.lin_bwd(arena, params, &self.head, &dz,
+                                     hn.map(|t| t.as_f32()), None, rows,
+                                     &mut grads);
+                arena.put_f32(dz);
+                d
             }
             _ => {
                 ensure!(z.elems() == bsz * cfg.n_classes,
                         "bad z residual");
-                let dz = softmax_ce_grad(z.as_f32(), bsz, cfg.n_classes,
-                                         y.as_i32());
+                let mut dz = arena.take_f32(bsz * cfg.n_classes);
+                softmax_ce_grad_into(&mut dz, z.as_f32(), bsz,
+                                     cfg.n_classes, y.as_i32());
                 let pooled = st.pop()?;
-                let dpooled = self.lin_bwd(params, &self.head, &dz,
-                                           Some(pooled.as_f32()), None,
-                                           bsz, &mut grads);
-                let mut dhn = vec![0f32; rows * c];
+                let dpooled = self.lin_bwd(arena, params, &self.head,
+                                           &dz, Some(pooled.as_f32()),
+                                           None, bsz, &mut grads);
+                arena.put_f32(dz);
+                let mut dhn = arena.take_f32(rows * c);
                 let inv = 1.0 / n as f32;
                 for b in 0..bsz {
                     let src = &dpooled[b * c..(b + 1) * c];
@@ -935,6 +999,7 @@ impl Model {
                         }
                     }
                 }
+                arena.put_f32(dpooled);
                 dhn
             }
         };
@@ -942,12 +1007,14 @@ impl Model {
         let xhatf = st.pop()?;
         debug_assert_eq!(statf.elems(), rows);
         debug_assert_eq!(xhatf.elems(), rows * c);
-        let mut dh = self.norm_param_bwd(params, &self.normf, &dhn,
+        let mut dh = self.norm_param_bwd(arena, params, &self.normf, &dhn,
                                          xhatf.as_f32(), statf.as_f32(),
                                          rows, &mut grads);
+        arena.put_f32(dhn);
         // ---- blocks in reverse ----
         for blk in self.blocks.iter().rev() {
-            dh = self.block_bwd(params, blk, dh, &mut st, &mut grads)?;
+            dh = self.block_bwd(arena, params, blk, dh, &mut st,
+                                &mut grads)?;
         }
         ensure!(st.top == 0, "residual stack not fully consumed: {} left",
                 st.top);
@@ -955,35 +1022,41 @@ impl Model {
         match cfg.arch {
             Arch::Vit => {
                 if self.infos[self.embed_w.unwrap()].trainable {
-                    self.acc(&mut grads, self.embed_w.unwrap(),
-                             matmul_tn(&dh, x.as_f32(), c, rows,
-                                       cfg.patch_dim));
-                    self.acc(&mut grads, self.embed_b.unwrap(),
-                             colsum(&dh, rows, c));
+                    let mut dw =
+                        arena.take_f32(c * cfg.patch_dim);
+                    matmul_tn_into(&mut dw, &dh, x.as_f32(), c, rows,
+                                   cfg.patch_dim);
+                    self.acc(arena, &mut grads, self.embed_w.unwrap(),
+                             dw);
+                    let mut db = arena.take_f32(c);
+                    colsum_into(&mut db, &dh, rows, c);
+                    self.acc(arena, &mut grads, self.embed_b.unwrap(),
+                             db);
                 }
             }
             _ => {
                 let ei = self.tok_e.unwrap();
                 if self.infos[ei].trainable {
-                    let mut de = vec![0f32; cfg.vocab * c];
+                    let mut de = arena.take_f32_zeroed(cfg.vocab * c);
                     for (r, &t) in x.as_i32().iter().enumerate() {
                         let t = t as usize;
                         add_inplace(&mut de[t * c..(t + 1) * c],
                                     &dh[r * c..(r + 1) * c]);
                     }
-                    self.acc(&mut grads, ei, de);
+                    self.acc(arena, &mut grads, ei, de);
                 }
             }
         }
         if self.infos[self.pos].trainable {
-            let mut dpos = vec![0f32; n * c];
+            let mut dpos = arena.take_f32_zeroed(n * c);
             for r in 0..rows {
                 let i = r % n;
                 add_inplace(&mut dpos[i * c..(i + 1) * c],
                             &dh[r * c..(r + 1) * c]);
             }
-            self.acc(&mut grads, self.pos, dpos);
+            self.acc(arena, &mut grads, self.pos, dpos);
         }
+        arena.put_f32(dh);
         // ---- collect trainable grads in manifest order ----
         let mut out = Vec::new();
         for (i, info) in self.infos.iter().enumerate() {
@@ -992,14 +1065,18 @@ impl Model {
                     .take()
                     .ok_or_else(|| anyhow::anyhow!(
                         "missing gradient for {}", info.name))?;
-                out.push(Tensor::from_f32(&info.shape, &g));
+                // gradient tensors draw their payloads from the arena
+                // too; the trainer recycles them after the optimizer
+                // step, so steady-state steps allocate nothing here
+                out.push(arena.tensor_from_f32(&info.shape, &g));
+                arena.put_f32(g);
             }
         }
         Ok(out)
     }
 
-    fn block_bwd(&self, params: &[Tensor], blk: &BlockDef, dh: Vec<f32>,
-                 st: &mut Stack<'_>,
+    fn block_bwd(&self, arena: &mut Arena, params: &[Tensor],
+                 blk: &BlockDef, dh: Vec<f32>, st: &mut Stack<'_>,
                  grads: &mut [Option<Vec<f32>>]) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let c = cfg.dim;
@@ -1024,29 +1101,34 @@ impl Model {
         } else {
             xn2s.map(|t| t.as_f32())
         };
-        let dhact = self.lin_bwd(params, &blk.fc2, &dh,
+        let dhact = self.lin_bwd(arena, params, &blk.fc2, &dh,
                                  hact.map(|t| t.as_f32()),
                                  u_fc2.map(|t| t.as_f32()), rows, grads);
-        let du = if cfg.act_exact_bwd() {
+        let mut du = arena.take_f32(rows * m);
+        if cfg.act_exact_bwd() {
             ensure!(act_save.dtype == DType::F32
                         && act_save.elems() == rows * m,
                     "bad act_full residual");
-            super::kernels::act_bwd_exact(act_save.as_f32(), &dhact,
-                                          cfg.is_gelu())
+            super::kernels::act_bwd_exact_into(&mut du, act_save.as_f32(),
+                                               &dhact, cfg.is_gelu());
         } else {
             ensure!(act_save.dtype == DType::U8
                         && act_save.nbytes() == rows * m / 4,
                     "bad act_codes residual");
-            packing::apply_slopes(&act_save.data, &dhact,
-                                  cfg.comb().slopes())
-        };
-        let dxn2 = self.lin_bwd(params, &blk.fc1, &du, xn2,
+            packing::apply_slopes_into(&mut du, &act_save.data, &dhact,
+                                       cfg.comb().slopes());
+        }
+        arena.put_f32(dhact);
+        let dxn2 = self.lin_bwd(arena, params, &blk.fc1, &du, xn2,
                                 u_fc1.map(|t| t.as_f32()), rows, grads);
-        let dnorm2 = self.norm_param_bwd(params, &blk.norm2, &dxn2,
-                                         xhat2.as_f32(), stat2.as_f32(),
-                                         rows, grads);
+        arena.put_f32(du);
+        let dnorm2 = self.norm_param_bwd(arena, params, &blk.norm2,
+                                         &dxn2, xhat2.as_f32(),
+                                         stat2.as_f32(), rows, grads);
+        arena.put_f32(dxn2);
         let mut dh1 = dh;
         add_inplace(&mut dh1, &dnorm2);
+        arena.put_f32(dnorm2);
         // ---- attention half ----
         let u_proj =
             if blk.proj.la.is_some() { Some(st.pop()?) } else { None };
@@ -1074,24 +1156,37 @@ impl Model {
         } else {
             xn1s.map(|t| t.as_f32())
         };
-        let do_ = self.lin_bwd(params, &blk.proj, &dh1,
+        let do_ = self.lin_bwd(arena, params, &blk.proj, &dh1,
                                o.map(|t| t.as_f32()),
                                u_proj.map(|t| t.as_f32()), rows, grads);
-        let (dq, dk, dv) = attn_bwd(&do_, q.as_f32(), k.as_f32(),
-                                    v.as_f32(), &self.attn_dims(),
-                                    cfg.causal());
-        let mut dxn1 = self.lin_bwd(params, &blk.q, &dq, xn1,
+        let mut dq = arena.take_f32(rows * c);
+        let mut dk = arena.take_f32(rows * c);
+        let mut dv = arena.take_f32(rows * c);
+        let mut scr = arena.take_f32(3 * rows * c);
+        attn_bwd_into(&mut dq, &mut dk, &mut dv, &mut scr, &do_,
+                      q.as_f32(), k.as_f32(), v.as_f32(),
+                      &self.attn_dims(), cfg.causal());
+        arena.put_f32(scr);
+        arena.put_f32(do_);
+        let mut dxn1 = self.lin_bwd(arena, params, &blk.q, &dq, xn1,
                                     u_q.map(|t| t.as_f32()), rows, grads);
-        let dk_in = self.lin_bwd(params, &blk.k, &dk, xn1,
+        arena.put_f32(dq);
+        let dk_in = self.lin_bwd(arena, params, &blk.k, &dk, xn1,
                                  u_k.map(|t| t.as_f32()), rows, grads);
+        arena.put_f32(dk);
         add_inplace(&mut dxn1, &dk_in);
-        let dv_in = self.lin_bwd(params, &blk.v, &dv, xn1,
+        arena.put_f32(dk_in);
+        let dv_in = self.lin_bwd(arena, params, &blk.v, &dv, xn1,
                                  u_v.map(|t| t.as_f32()), rows, grads);
+        arena.put_f32(dv);
         add_inplace(&mut dxn1, &dv_in);
-        let dnorm1 = self.norm_param_bwd(params, &blk.norm1, &dxn1,
-                                         xhat1.as_f32(), stat1.as_f32(),
-                                         rows, grads);
+        arena.put_f32(dv_in);
+        let dnorm1 = self.norm_param_bwd(arena, params, &blk.norm1,
+                                         &dxn1, xhat1.as_f32(),
+                                         stat1.as_f32(), rows, grads);
+        arena.put_f32(dxn1);
         add_inplace(&mut dh1, &dnorm1);
+        arena.put_f32(dnorm1);
         Ok(dh1)
     }
 }

@@ -275,7 +275,7 @@ pub fn synth_artifact(preset: &str) -> Result<Artifact> {
         format!("<synthetic>/{preset}").into(),
         manifest,
         params,
-        Box::new(NativeExec { model }),
+        Box::new(NativeExec::new(model)),
     ))
 }
 
@@ -329,7 +329,7 @@ pub fn load_artifact(dir: &Path) -> Result<Artifact> {
         dir.to_path_buf(),
         manifest,
         params,
-        Box::new(NativeExec { model }),
+        Box::new(NativeExec::new(model)),
     ))
 }
 

@@ -88,6 +88,53 @@ pub fn write_json(results: &[BenchResult],
     std::fs::write(path, obj.to_string() + "\n")
 }
 
+/// Like [`write_json`], but first diffs the fresh results against the
+/// previous `BENCH_*.json` at `path` (if any) and prints a
+/// `name → old/new/Δ%` table, so perf regressions are visible directly
+/// in the run log before the file is overwritten. (On a fresh checkout
+/// there is no previous file and the table is skipped.)
+pub fn write_json_with_diff(results: &[BenchResult],
+                            path: &std::path::Path)
+                            -> std::io::Result<()> {
+    if let Ok(prev) = std::fs::read_to_string(path) {
+        match crate::util::json::Json::parse(&prev) {
+            Ok(j) => {
+                println!("\n== diff vs previous {} ==", path.display());
+                let mut overlap = 0usize;
+                for r in results {
+                    let Some(old) =
+                        j.opt(&r.name).and_then(|v| v.as_f64().ok())
+                    else {
+                        println!("{:<44} {:>12} (new entry)", r.name,
+                                 fmt_ns(r.mean_ns));
+                        continue;
+                    };
+                    let delta = if old > 0.0 {
+                        (r.mean_ns - old) / old * 100.0
+                    } else {
+                        0.0
+                    };
+                    println!(
+                        "{:<44} {:>12} -> {:>12}  {:+8.1}%",
+                        r.name,
+                        fmt_ns(old),
+                        fmt_ns(r.mean_ns),
+                        delta
+                    );
+                    overlap += 1;
+                }
+                if overlap == 0 {
+                    println!("(no overlapping entries)");
+                }
+            }
+            Err(e) => {
+                println!("(previous {} unparsable: {e})", path.display());
+            }
+        }
+    }
+    write_json(results, path)
+}
+
 /// The repository root seen from wherever cargo runs the bench (package
 /// dir or repo root) — the canonical place for `BENCH_*.json`.
 pub fn repo_root() -> std::path::PathBuf {
@@ -124,6 +171,28 @@ mod tests {
         let j = crate::util::json::Json::parse(
             &std::fs::read_to_string(&p).unwrap()).unwrap();
         assert!(j.get("noop2").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn diff_write_updates_file() {
+        let r1 = bench("entry_a", 3, || {});
+        let dir = std::env::temp_dir().join("ambp_bench_diff");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_diff.json");
+        let _ = std::fs::remove_file(&p);
+        // first write: no previous file → plain write
+        write_json_with_diff(std::slice::from_ref(&r1), &p).unwrap();
+        // second write: diffs against the first, then overwrites
+        let r2 = bench("entry_a", 3, || {});
+        write_json_with_diff(std::slice::from_ref(&r2), &p).unwrap();
+        let j = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert!(
+            (j.get("entry_a").unwrap().as_f64().unwrap() - r2.mean_ns)
+                .abs()
+                < 1e-9
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -336,7 +336,7 @@ fn executor_direct_use() {
     let cfg = tiny_cfg(Arch::Vit, Tuning::Frozen, Act::Gelu, Norm::Ln);
     let model = Model::build(cfg.clone()).unwrap();
     let params = model.init_params(1);
-    let exec = NativeExec { model };
+    let exec = NativeExec::new(model);
     let (x, y) = sample_batch(&cfg, 0, 0);
     use ambp::runtime::Executor;
     let out = exec.run_fwd(&params, &x, &y).unwrap();
@@ -344,6 +344,79 @@ fn executor_direct_use() {
     let grads = exec.run_bwd(&params, &out.residuals, &x, &y).unwrap();
     // frozen vit: only the head trains (W + b)
     assert_eq!(grads.len(), 2);
+}
+
+/// One full train-step gradient set (fwd + bwd) for a preset-sized
+/// model, used by the thread-count determinism test.
+fn full_step_grads(model: &Model, params: &[Tensor], x: &Tensor,
+                   y: &Tensor) -> Vec<Tensor> {
+    let (_loss, _metric, saves) =
+        model.forward(params, x, y).expect("fwd");
+    let res: Vec<Tensor> = saves.into_iter().map(|s| s.tensor).collect();
+    model.backward(params, &res, x, y).expect("bwd")
+}
+
+#[test]
+fn train_step_grads_bit_identical_across_thread_counts() {
+    // The pool's determinism contract, end to end: the full train-step
+    // gradient set must be BIT-identical whether the kernels partition
+    // for 1 worker or for 8 (`with_threads` forces the same logical
+    // partition `AMBP_THREADS=1` / `AMBP_THREADS=8` would produce — the
+    // env var itself is process-global, so the override is how one
+    // process can compare both).
+    use ambp::runtime::native::pool::with_threads;
+    // preset-sized dims (rows=512, hidden=256) so the partition really
+    // differs between 1 and 8 logical threads
+    let cfg = ambp::runtime::native::spec::parse_preset(
+        "vitt_full_gelu_ln").unwrap();
+    let model = Model::build(cfg.clone()).unwrap();
+    let params = model.init_params(11);
+    let (x, y) = sample_batch(&cfg, 0, 2);
+    let g1 = with_threads(1, || full_step_grads(&model, &params, &x, &y));
+    let g8 = with_threads(8, || full_step_grads(&model, &params, &x, &y));
+    assert_eq!(g1.len(), g8.len());
+    for (a, b) in g1.iter().zip(&g8) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data,
+                   "gradient bits differ between thread counts");
+    }
+}
+
+#[test]
+fn arena_reuse_steady_state() {
+    // The step-scoped arena acceptance criterion: after warmup, a train
+    // step takes every activation/residual buffer from the free list —
+    // the miss counter must not move, and hits must keep accruing.
+    use ambp::runtime::Executor;
+    let cfg = tiny_cfg(Arch::Vit, Tuning::LoraQv, Act::ReGelu2,
+                       Norm::MsLn);
+    let model = Model::build(cfg.clone()).unwrap();
+    let params = model.init_params(5);
+    let exec = NativeExec::new(model);
+    let (x, y) = sample_batch(&cfg, 0, 3);
+    let step = |exec: &NativeExec| {
+        let out = exec.run_fwd(&params, &x, &y).unwrap();
+        let grads =
+            exec.run_bwd(&params, &out.residuals, &x, &y).unwrap();
+        // the trainer returns both residuals AND gradient tensors
+        exec.recycle(out.residuals);
+        exec.recycle(grads);
+    };
+    for _ in 0..2 {
+        step(&exec); // warmup: populate the free lists
+    }
+    let warm = exec.arena_stats();
+    assert!(warm.misses > 0, "warmup must have allocated something");
+    for _ in 0..3 {
+        step(&exec);
+    }
+    let steady = exec.arena_stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state step allocated fresh activation buffers"
+    );
+    assert!(steady.hits > warm.hits,
+            "steady-state step did not reuse arena buffers");
 }
 
 #[cfg(not(feature = "pjrt"))]
