@@ -21,8 +21,10 @@ use ambp::packing;
 use ambp::quant::{int8, nf4};
 use ambp::runtime::native::kernels::matmul_nt;
 use ambp::runtime::native::pool::{threads, with_threads};
+use ambp::runtime::native::spec::{parse_preset, sample_batch};
+use ambp::runtime::native::{Arena, Model, Profiler};
 use ambp::runtime::{load_or_synth, Runtime, Tensor};
-use ambp::util::bench::{bench, black_box, repo_root,
+use ambp::util::bench::{bench, black_box, fmt_ns, repo_root,
                         write_json_with_diff, BenchResult};
 use ambp::util::rng::Rng;
 
@@ -153,6 +155,8 @@ fn main() {
         "vitt_full_regelu2_msln",
         "llama_loraall_silu_rms",
         "llama_loraall_resilu2_msrms",
+        "llama_loraall_silu_rms_swiglu",
+        "vitt_loraqv_gelu_ln_ckpt",
     ] {
         let art = match load_or_synth(&rt, preset) {
             Ok(a) => a,
@@ -178,10 +182,113 @@ fn main() {
         art.recycle(out.residuals);
     }
 
+    println!("\n== per-layer fwd/bwd latency (Layer/Tape dispatch) ==");
+    // one profiled preset per Layer-impl family: the vitt shape covers
+    // Embed/Norm/Linear/Attention/Activation/Head, the ckpt preset adds
+    // CkptBlock, the swiglu llama adds SwiGlu (+RoPE inside Attention)
+    for preset in ["vitt_loraqv_regelu2_msln", "vitt_loraqv_gelu_ln_ckpt",
+                   "llama_loraall_silu_rms_swiglu"] {
+        for r in profile_layers(preset, samples(10)) {
+            r.report();
+            results.push(r);
+        }
+    }
+
     let out_path = repo_root().join("BENCH_hotpath.json");
+    // snapshot the previous entries before the overwrite, for the
+    // optional end-to-end regression gate below
+    let prev = std::fs::read_to_string(&out_path)
+        .ok()
+        .and_then(|t| ambp::util::json::Json::parse(&t).ok());
     write_json_with_diff(&results, &out_path)
         .expect("write BENCH_hotpath.json");
     println!("\nwrote {} entries to {:?}", results.len(), out_path);
+
+    // AMBP_BENCH_ASSERT=<pct>: fail when the end-to-end refactor
+    // canaries regressed by more than <pct>% vs the previous run (off
+    // by default — cross-machine BENCH files are not comparable).
+    if let Some(tol) = std::env::var("AMBP_BENCH_ASSERT")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+    {
+        let Some(prev) = prev else {
+            println!("(no previous BENCH_hotpath.json; assert skipped)");
+            return;
+        };
+        let mut failed = false;
+        for name in ["vitt_loraqv_regelu2_msln fwd",
+                     "vitt_loraqv_regelu2_msln bwd"] {
+            let Some(old) = prev.opt(name).and_then(|v| v.as_f64().ok())
+            else {
+                continue;
+            };
+            let Some(new) = results
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.mean_ns)
+            else {
+                continue;
+            };
+            let delta = (new - old) / old * 100.0;
+            println!("assert {name}: {} -> {} ({delta:+.1}%, tol \
+                      {tol}%)",
+                     fmt_ns(old), fmt_ns(new));
+            if delta > tol {
+                failed = true;
+            }
+        }
+        assert!(!failed,
+                "end-to-end step regressed beyond AMBP_BENCH_ASSERT \
+                 tolerance");
+    }
+}
+
+/// Run `iters` profiled fwd+bwd steps of `preset` and aggregate
+/// per-layer wall-clock into one bench row per `(layer, pass)`.
+fn profile_layers(preset: &str, iters: usize) -> Vec<BenchResult> {
+    let cfg = parse_preset(preset).expect("preset");
+    let model = Model::build(cfg.clone()).expect("build");
+    let params = model.init_params(42);
+    let (x, y) = sample_batch(&cfg, 0, 0);
+    let mut arena = Arena::new();
+    let step = |arena: &mut Arena, fp: &mut Profiler,
+                bp: &mut Profiler| {
+        let (_l, _m, res) = model
+            .forward_profiled(arena, &params, &x, &y, fp)
+            .expect("fwd");
+        let grads = model
+            .backward_profiled(arena, &params, &res, &x, &y, bp)
+            .expect("bwd");
+        for t in res {
+            arena.recycle_tensor(t);
+        }
+        for t in grads {
+            arena.recycle_tensor(t);
+        }
+    };
+    // warmup (arena fill + page faults), profiled into a discard sink
+    let (mut d1, mut d2) = (Profiler::new(), Profiler::new());
+    step(&mut arena, &mut d1, &mut d2);
+    let mut fwd_prof = Profiler::new();
+    let mut bwd_prof = Profiler::new();
+    for _ in 0..iters {
+        step(&mut arena, &mut fwd_prof, &mut bwd_prof);
+    }
+    let mut out = Vec::new();
+    for (prof, pass) in [(&fwd_prof, "fwd"), (&bwd_prof, "bwd")] {
+        for &(name, total_ns, calls) in prof.rows() {
+            let mean = total_ns / calls as f64;
+            out.push(BenchResult {
+                name: format!("layer {name} {pass} @{preset}"),
+                iters: calls as usize,
+                mean_ns: mean,
+                p50_ns: mean,
+                p95_ns: mean,
+                min_ns: mean,
+            });
+        }
+    }
+    out
 }
 
 fn make_batch(m: &ambp::runtime::Manifest) -> (Tensor, Tensor) {

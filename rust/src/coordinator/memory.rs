@@ -5,6 +5,14 @@
 //! activation state (everything else is recomputed or fused inside the
 //! executables), so their byte sum is exactly the "activation memory" of
 //! §3.2, and `peak_bytes` is the per-step peak the Tables report.
+//!
+//! Attribution follows the manifest residual section, which since the
+//! Layer/Tape refactor is derived from the model composition — so new
+//! residual kinds (`ckpt_input` for gradient-checkpointed blocks,
+//! `gate_operand` for SwiGLU) show up in the `by_kind` breakdown with
+//! no tracker changes. For checkpointed presets the measured number is
+//! the held set (block inputs + head tail); the recompute scratch in
+//! bwd lives in the executor's arena and is not residual state.
 
 use crate::runtime::{Manifest, Tensor};
 
@@ -63,6 +71,17 @@ impl MemoryTracker {
     pub fn mib(&self) -> f64 {
         self.peak_bytes as f64 / (1024.0 * 1024.0)
     }
+
+    /// Bytes attributed to one residual kind at the last observation
+    /// (0 when the kind was absent) — e.g. `"ckpt_input"` for the
+    /// checkpointing dominance assertions.
+    pub fn bytes_of_kind(&self, kind: &str) -> u64 {
+        self.by_kind
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, b)| *b)
+            .unwrap_or(0)
+    }
 }
 
 fn bump(v: &mut Vec<(String, u64)>, k: &str, b: u64) {
@@ -86,6 +105,15 @@ mod tests {
         m.release();
         assert_eq!(m.current_bytes, 0);
         assert_eq!(m.peak_bytes, 150);
+    }
+
+    #[test]
+    fn bytes_of_kind_lookup() {
+        let mut m = MemoryTracker::new();
+        m.by_kind = vec![("ckpt_input".to_string(), 64),
+                         ("logits".to_string(), 8)];
+        assert_eq!(m.bytes_of_kind("ckpt_input"), 64);
+        assert_eq!(m.bytes_of_kind("act_codes"), 0);
     }
 
     #[test]

@@ -92,12 +92,14 @@ pub struct TrainReport {
     pub by_module: Vec<(String, u64)>,
 }
 
-/// Build the task-appropriate batch producer for an artifact.
+/// Build the task-appropriate batch producer for an artifact. Errors on
+/// an arch tag this trainer has no generator for (same contract as the
+/// other manifest parse paths — never panics on input data).
 fn make_producer(art: &Artifact, cfg: &TrainCfg)
-                 -> Box<dyn Fn(usize) -> Batch + Send> {
+                 -> Result<Box<dyn Fn(usize) -> Batch + Send>> {
     let m = &art.manifest;
     let b = m.batch;
-    match m.arch.as_str() {
+    Ok(match m.arch.as_str() {
         "vit" => {
             let task = ImageTask::new(m.n_classes, m.n_tokens, m.patch_dim,
                                       cfg.data_noise, cfg.seed);
@@ -122,8 +124,11 @@ fn make_producer(art: &Artifact, cfg: &TrainCfg)
                 Batch::Tokens { x, y }
             })
         }
-        other => panic!("unknown arch {other}"),
-    }
+        other => anyhow::bail!(
+            "unknown arch {other:?} (trainer has batch generators for \
+             vit|llama|roberta)"
+        ),
+    })
 }
 
 fn to_tensors(art: &Artifact, batch: Batch) -> (Tensor, Tensor) {
@@ -173,7 +178,7 @@ impl<'a> Trainer<'a> {
     /// Run the configured number of steps; returns the report.
     pub fn train(&mut self) -> Result<TrainReport> {
         let cfg = self.cfg.clone();
-        let producer = make_producer(self.art, &cfg);
+        let producer = make_producer(self.art, &cfg)?;
         let n_micro = cfg.steps * cfg.grad_accum;
         let prefetch = Prefetcher::spawn(n_micro, 2, producer);
         let tidx = self.art.manifest.trainable_indices();
@@ -184,7 +189,7 @@ impl<'a> Trainer<'a> {
         // is not charged to the throughput meter — it systematically
         // penalized whichever variant ran first.
         {
-            let producer2 = make_producer(self.art, &cfg);
+            let producer2 = make_producer(self.art, &cfg)?;
             // far outside any train/eval index range, but small enough
             // that `step * batch` cannot overflow inside the producer
             let (x, y) = to_tensors(self.art, producer2(u32::MAX as usize));
@@ -303,7 +308,7 @@ impl<'a> Trainer<'a> {
     /// Evaluate on held-out batches (forward only).
     pub fn evaluate(&mut self, start: usize,
                     n_batches: usize) -> Result<(f32, f32)> {
-        let producer = make_producer(self.art, &self.cfg);
+        let producer = make_producer(self.art, &self.cfg)?;
         let mut loss = 0f32;
         let mut metric = 0f32;
         for i in 0..n_batches {

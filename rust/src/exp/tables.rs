@@ -280,10 +280,25 @@ pub fn tab7(args: &Args) -> Result<()> {
     ] {
         let mut accs = Vec::new();
         let mut mem = 0.0;
+        let mut err = None;
         for t in 0..n_tasks {
-            let rep = train_preset(preset, steps, 1.25e-3, t as u64)?;
-            accs.push(rep.eval_metric);
-            mem = rep.peak_activation_bytes as f64 / 1048576.0;
+            // per-row resilience: the ReLU row synthesizes natively
+            // since the Layer/Tape refactor; Mesa still needs compiled
+            // artifacts and must not sink the whole table
+            match train_preset(preset, steps, 1.25e-3, t as u64) {
+                Ok(rep) => {
+                    accs.push(rep.eval_metric);
+                    mem = rep.peak_activation_bytes as f64 / 1048576.0;
+                }
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = err {
+            println!("{label:<16} [unavailable: {e}]");
+            continue;
         }
         let mean: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
         print!("{label:<16}");

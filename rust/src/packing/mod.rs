@@ -135,6 +135,63 @@ pub fn apply_slopes(packed: &[u8], gy: &[f32], slopes: [f64; 4]) -> Vec<f32> {
     out
 }
 
+/// Fused single-pass 1-bit encode: the sign bit `x > 0` packed 8 per
+/// byte straight into `out` — the ReLU backward residual (its
+/// derivative is exactly 0/1, so one bit is lossless). Byte-identical
+/// to `pack1(&signs)` with `signs[i] = (xs[i] > 0) as u8`.
+///
+/// `out.len()` must be exactly `xs.len().div_ceil(8)`; every byte of
+/// `out` is overwritten.
+pub fn encode1_into(xs: &[f32], out: &mut [u8]) {
+    assert_eq!(
+        out.len(),
+        xs.len().div_ceil(8),
+        "encode1_into: output must hold exactly {} packed bytes",
+        xs.len().div_ceil(8)
+    );
+    for (byte, oct) in out.iter_mut().zip(xs.chunks(8)) {
+        let mut b = 0u8;
+        for (s, &x) in oct.iter().enumerate() {
+            b |= u8::from(x > 0.0) << s;
+        }
+        *byte = b;
+    }
+}
+
+/// Allocating wrapper over [`encode1_into`].
+pub fn encode1(xs: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len().div_ceil(8)];
+    encode1_into(xs, &mut out);
+    out
+}
+
+/// Apply packed 1-bit sign codes to an upstream gradient into a caller
+/// buffer: `gx[i] = gy[i]` where the bit is set, `0` otherwise — the
+/// exact ReLU backward.
+///
+/// Contract: `out.len() == gy.len() ≤ 8 · packed.len()`; panics
+/// otherwise.
+pub fn apply_signs_into(out: &mut [f32], packed: &[u8], gy: &[f32]) {
+    assert_eq!(out.len(), gy.len(),
+               "apply_signs_into: out/gy length mismatch");
+    assert!(
+        gy.len() <= packed.len() * 8,
+        "apply_signs: gy length {} exceeds packed capacity {}",
+        gy.len(),
+        packed.len() * 8
+    );
+    for (i, (o, &g)) in out.iter_mut().zip(gy).enumerate() {
+        *o = g * ((packed[i / 8] >> (i % 8)) & 1) as f32;
+    }
+}
+
+/// Allocating wrapper over [`apply_signs_into`].
+pub fn apply_signs(packed: &[u8], gy: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; gy.len()];
+    apply_signs_into(&mut out, packed, gy);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +270,25 @@ mod tests {
     fn unpack1_beyond_capacity_panics() {
         let packed = pack1(&[1]); // 1 byte, capacity 8
         let _ = unpack1(&packed, 9);
+    }
+
+    #[test]
+    fn encode1_matches_pack1_and_signs_gate_gradients() {
+        let mut rng = Rng::new(21);
+        for n in [1usize, 7, 8, 9, 64, 1001] {
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32()).collect();
+            let signs: Vec<u8> =
+                xs.iter().map(|&x| u8::from(x > 0.0)).collect();
+            let packed = encode1(&xs);
+            assert_eq!(packed, pack1(&signs), "n={n}");
+            let gy: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let gx = apply_signs(&packed, &gy);
+            for i in 0..n {
+                let want = if xs[i] > 0.0 { gy[i] } else { 0.0 };
+                assert_eq!(gx[i], want, "n={n} i={i}");
+            }
+        }
     }
 
     #[test]

@@ -105,6 +105,9 @@ pub struct Manifest {
     pub patch_dim: usize,
     /// Whether the artifact uses gradient checkpointing.
     pub ckpt: bool,
+    /// Whether the MLP is the SwiGLU gated form (with RoPE attention).
+    /// Optional in `manifest.json` for backward compatibility.
+    pub swiglu: bool,
     /// Parameter layout, in `params.bin` order.
     pub params: Vec<ParamInfo>,
     /// Input batch contract.
@@ -215,6 +218,11 @@ impl Manifest {
             lora_rank: cfg.get("lora_rank")?.as_usize()?,
             patch_dim: cfg.get("patch_dim")?.as_usize()?,
             ckpt: cfg.get("ckpt")?.as_bool()?,
+            swiglu: cfg
+                .opt("swiglu")
+                .map(|v| v.as_bool())
+                .transpose()?
+                .unwrap_or(false),
             params,
             x: binfo("x")?,
             y: binfo("y")?,

@@ -114,6 +114,18 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
     }
 }
 
+/// `out = a ∘ b`, elementwise (SwiGLU gate multiply), parallelized over
+/// contiguous chunks.
+pub fn mul_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    parallel_rows(out, 1, 4096, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = a[i0 + i] * b[i0 + i];
+        }
+    });
+}
+
 /// Broadcast-add a `[cols]` bias onto every row of `a[rows, cols]`.
 pub fn add_bias(a: &mut [f32], bias: &[f32]) {
     for row in a.chunks_mut(bias.len()) {
@@ -485,6 +497,49 @@ pub fn act_fwd(u: &[f32], gelu: bool) -> Vec<f32> {
     out
 }
 
+/// ReLU forward into `out` (`y = max(x, 0)`; the backward multiplies by
+/// packed 1-bit sign codes — see `packing::apply_signs_into`).
+pub fn relu_fwd_into(out: &mut [f32], u: &[f32]) {
+    assert_eq!(out.len(), u.len());
+    parallel_rows(out, 1, 4096, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = u[i0 + i].max(0.0);
+        }
+    });
+}
+
+/// Rotary position embedding (RoPE, adjacent-pair convention) applied
+/// in place to a `[B·N, C]` q/k tensor: within each head, the pair
+/// `(x₂ⱼ, x₂ⱼ₊₁)` of token `pos` is rotated by
+/// `θ = pos · 10000^{−2j/dh}`. `cos`/`sin` are the `[N, dh/2]` tables;
+/// `inverse` rotates by `−θ` (the transpose — RoPE is orthogonal, so
+/// this is exactly the backward of the forward rotation).
+pub fn rope_into(x: &mut [f32], cos: &[f32], sin: &[f32], d: &AttnDims,
+                 inverse: bool) {
+    let (n, dh, c) = (d.n, d.dh, d.c());
+    let half = dh / 2;
+    assert_eq!(x.len(), d.b * n * c);
+    assert_eq!(cos.len(), n * half);
+    assert_eq!(sin.len(), n * half);
+    let sign = if inverse { -1.0f32 } else { 1.0 };
+    parallel_rows(x, c, 64, |r0, chunk| {
+        for (i, row) in chunk.chunks_mut(c).enumerate() {
+            let pos = (r0 + i) % n;
+            let tc = &cos[pos * half..(pos + 1) * half];
+            let ts = &sin[pos * half..(pos + 1) * half];
+            for head in row.chunks_mut(dh) {
+                for j in 0..half {
+                    let (c0, s0) = (tc[j], sign * ts[j]);
+                    let x0 = head[2 * j];
+                    let x1 = head[2 * j + 1];
+                    head[2 * j] = x0 * c0 - x1 * s0;
+                    head[2 * j + 1] = x0 * s0 + x1 * c0;
+                }
+            }
+        }
+    });
+}
+
 /// Exact activation backward into `out`: `du = dy ∘ h'(u)` from the
 /// full-precision saved pre-activation.
 pub fn act_bwd_exact_into(out: &mut [f32], u: &[f32], dy: &[f32],
@@ -723,6 +778,57 @@ mod tests {
             assert!((y[i] as f64 - funcs::gelu(u[i] as f64)).abs() < 1e-6);
             assert!((du[i] as f64 - funcs::dgelu(u[i] as f64)).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn rope_inverse_roundtrip_and_norm_preserving() {
+        let d = AttnDims { b: 2, n: 5, h: 2, dh: 6 };
+        let c = d.h * d.dh;
+        let half = d.dh / 2;
+        let mut cos = Vec::new();
+        let mut sin = Vec::new();
+        for pos in 0..d.n {
+            for j in 0..half {
+                let th = pos as f64
+                    * 10000f64.powf(-2.0 * j as f64 / d.dh as f64);
+                cos.push(th.cos() as f32);
+                sin.push(th.sin() as f32);
+            }
+        }
+        let mut rng = Rng::new(9);
+        let x0 = randv(&mut rng, d.b * d.n * c);
+        let mut x = x0.clone();
+        rope_into(&mut x, &cos, &sin, &d, false);
+        // rotation preserves the per-pair norm
+        for (a, b) in x0.chunks(2).zip(x.chunks(2)) {
+            let na = a[0] * a[0] + a[1] * a[1];
+            let nb = b[0] * b[0] + b[1] * b[1];
+            assert!((na - nb).abs() < 1e-4);
+        }
+        // token 0 is unrotated
+        assert_eq!(&x[..c], &x0[..c]);
+        // inverse rotation restores the input
+        rope_into(&mut x, &cos, &sin, &d, true);
+        for (a, b) in x0.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_fwd_matches_scalar() {
+        let u = [-2.0f32, -0.5, 0.0, 0.7, 3.0];
+        let mut y = [0f32; 5];
+        relu_fwd_into(&mut y, &u);
+        assert_eq!(y, [0.0, 0.0, 0.0, 0.7, 3.0]);
+    }
+
+    #[test]
+    fn mul_into_elementwise() {
+        let a = [1f32, 2., 3., 4.];
+        let b = [5f32, 6., 7., 8.];
+        let mut o = [0f32; 4];
+        mul_into(&mut o, &a, &b);
+        assert_eq!(o, [5.0, 12.0, 21.0, 32.0]);
     }
 
     #[test]

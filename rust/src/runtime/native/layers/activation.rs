@@ -1,0 +1,177 @@
+//! Elementwise activation layer. The forward is always exact; variants
+//! differ only in what they save for the backward:
+//!
+//! * `Gelu`/`Silu` — full-precision pre-activation (`act_full`), exact
+//!   backward.
+//! * `ReGelu2`/`ReSilu2` — 2-bit segment codes (`act_codes`, Prop 4.3:
+//!   the backward slope is one of 4 values), approximate backward at
+//!   16× less residual memory.
+//! * `Relu` — 1-bit sign codes (`act_codes`): ReLU's derivative is
+//!   exactly 0/1, so the packed backward is *exact* at 32× less
+//!   residual memory.
+//!
+//! The save/restore policy is factored into [`ActResidual`] so that
+//! [`SwiGlu`](super::SwiGlu), which applies the activation to its gate
+//! branch rather than to the running activation, shares it verbatim.
+
+use anyhow::Result;
+
+use super::super::arena::Arena;
+use super::super::kernels::{act_bwd_exact_into, act_fwd_into,
+                            relu_fwd_into};
+use super::super::model::{Act, NetCfg};
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer};
+use crate::coeffs::funcs::ReluComb;
+use crate::packing;
+use crate::runtime::tensor::{DType, Tensor};
+
+/// How an [`Act`] saves its backward residual.
+enum Save {
+    /// Full-precision pre-activation.
+    Full,
+    /// 2-bit segment codes against the combination's thresholds.
+    Codes2(&'static ReluComb),
+    /// 1-bit sign codes (ReLU).
+    Signs,
+}
+
+fn save_policy(act: Act) -> Save {
+    match act {
+        Act::Gelu | Act::Silu => Save::Full,
+        Act::ReGelu2 | Act::ReSilu2 => Save::Codes2(act.comb()),
+        Act::Relu => Save::Signs,
+    }
+}
+
+/// The activation residual contract: one tape slot minted at build,
+/// pushed from the pre-activation in fwd, applied to an upstream
+/// gradient in bwd.
+pub(crate) struct ActResidual {
+    act: Act,
+    slot: SlotId,
+    n: usize,
+}
+
+impl ActResidual {
+    /// Mint the residual slot for `cfg.act` over a `lead × m` tensor.
+    pub(crate) fn mint(cfg: &NetCfg, comp: &mut Composer, module: &str,
+                       lead: &[usize], m: usize) -> ActResidual {
+        let mut shape = lead.to_vec();
+        let slot = match save_policy(cfg.act) {
+            Save::Full => {
+                shape.push(m);
+                comp.slot(module, Kind::ActFull, &shape, DType::F32, 32.0)
+            }
+            Save::Codes2(_) => {
+                shape.push(m / 4);
+                comp.slot(module, Kind::ActCodes, &shape, DType::U8, 2.0)
+            }
+            Save::Signs => {
+                shape.push(m / 8);
+                comp.slot(module, Kind::ActCodes, &shape, DType::U8, 1.0)
+            }
+        };
+        ActResidual {
+            act: cfg.act,
+            slot,
+            n: lead.iter().product::<usize>() * m,
+        }
+    }
+
+    /// Exact forward `y = h(u)` into `out`.
+    pub(crate) fn fwd_into(&self, out: &mut [f32], u: &[f32]) {
+        match self.act {
+            Act::Relu => relu_fwd_into(out, u),
+            _ => act_fwd_into(out, u, self.act.is_gelu()),
+        }
+    }
+
+    /// Push the backward residual derived from the pre-activation `u`.
+    pub(crate) fn push(&self, arena: &mut Arena, tape: &mut TapeWriter,
+                       u: &[f32]) -> Result<()> {
+        match save_policy(self.act) {
+            Save::Full => tape.push_f32(arena, self.slot, u),
+            Save::Codes2(comb) => {
+                // fused bucketize+pack straight into the residual
+                // payload: no intermediate code vector
+                let mut codes = arena.take_u8(self.n / 4);
+                packing::encode2_into(u, comb.c, &mut codes);
+                tape.push_u8(self.slot, codes)
+            }
+            Save::Signs => {
+                let mut bits = arena.take_u8(self.n / 8);
+                packing::encode1_into(u, &mut bits);
+                tape.push_u8(self.slot, bits)
+            }
+        }
+    }
+
+    /// Pop the residual.
+    pub(crate) fn pop<'a>(&self, tape: &mut TapeReader<'a>)
+                          -> Result<&'a Tensor> {
+        tape.pop(self.slot)
+    }
+
+    /// `du = dy ∘ h'(u)` into `du`, from the popped residual.
+    pub(crate) fn bwd_into(&self, du: &mut [f32], saved: &Tensor,
+                           dy: &[f32]) {
+        match save_policy(self.act) {
+            Save::Full => {
+                act_bwd_exact_into(du, saved.as_f32(), dy,
+                                   self.act.is_gelu());
+            }
+            Save::Codes2(comb) => {
+                packing::apply_slopes_into(du, &saved.data, dy,
+                                           comb.slopes());
+            }
+            Save::Signs => {
+                packing::apply_signs_into(du, &saved.data, dy);
+            }
+        }
+    }
+}
+
+/// Activation layer over a `[rows, m]` running activation.
+pub struct Activation {
+    res: ActResidual,
+    n: usize,
+}
+
+impl Activation {
+    /// Mint the residual slot for activation `cfg.act` applied to a
+    /// `lead × m` tensor produced by `module`.
+    pub fn new(cfg: &NetCfg, comp: &mut Composer, module: &str,
+               lead: &[usize], m: usize) -> Activation {
+        Activation {
+            res: ActResidual::mint(cfg, comp, module, lead, m),
+            n: lead.iter().product::<usize>() * m,
+        }
+    }
+}
+
+impl Layer for Activation {
+    fn name(&self) -> &'static str {
+        "Activation"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let u = std::mem::take(&mut ctx.h);
+        let mut y = ctx.arena.take_f32(self.n);
+        self.res.fwd_into(&mut y, &u);
+        self.res.push(ctx.arena, tape, &u)?;
+        ctx.arena.put_f32(u);
+        ctx.h = y;
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let saved = self.res.pop(tape)?;
+        let dy = std::mem::take(&mut ctx.dh);
+        let mut du = ctx.arena.take_f32(self.n);
+        self.res.bwd_into(&mut du, saved, &dy);
+        ctx.arena.put_f32(dy);
+        ctx.dh = du;
+        Ok(())
+    }
+}

@@ -1,0 +1,207 @@
+//! Multi-head self-attention layer: q/k/v projections (each an embedded
+//! [`LinOp`] with its own LoRA policy), optional rotary position
+//! embedding (RoPE, adjacent-pair convention) applied to q/k, the
+//! attention core with backward probability *recomputation* (only q/k/v
+//! are saved — the FlashAttention residual policy the measured tape
+//! assumes), and the output projection.
+//!
+//! The q/k/v linears read the same input, so when any of them needs its
+//! input residual the layer stores it **once**: under a plain norm as a
+//! joint `linear_input` slot owned here, under an MS norm as the norm's
+//! shared x̂ (wired in as [`XSrc::Ext`](super::XSrc) at build time).
+//! RoPE is applied *before* the q/k saves, so the backward recompute
+//! uses the rotated tensors unchanged and only the q/k gradients need
+//! the inverse rotation (RoPE is orthogonal: `dx = R(−θ)·dy`).
+
+use anyhow::Result;
+
+use super::super::kernels::{add_inplace, attn_bwd_into, attn_fwd_into,
+                            rope_into, AttnDims};
+use super::super::model::NetCfg;
+use super::linear::{need_x, LinOp};
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+
+/// Precomputed RoPE rotation tables (`[n_tokens, dh/2]` each).
+struct Rope {
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Rope {
+    fn new(n: usize, dh: usize) -> Rope {
+        let half = dh / 2;
+        let mut cos = Vec::with_capacity(n * half);
+        let mut sin = Vec::with_capacity(n * half);
+        for pos in 0..n {
+            for j in 0..half {
+                let theta = pos as f64
+                    * 10000f64.powf(-2.0 * j as f64 / dh as f64);
+                cos.push(theta.cos() as f32);
+                sin.push(theta.sin() as f32);
+            }
+        }
+        Rope { cos, sin }
+    }
+}
+
+/// Self-attention over a `[B·N, C]` running activation.
+pub struct Attention {
+    q: LinOp,
+    k: LinOp,
+    v: LinOp,
+    proj: LinOp,
+    q_slot: SlotId,
+    k_slot: SlotId,
+    v_slot: SlotId,
+    /// Joint input save owned by this layer (plain norm + some of q/k/v
+    /// needs its input); `None` when unneeded or shared with an MS norm.
+    x_slot: Option<SlotId>,
+    dims: AttnDims,
+    causal: bool,
+    rope: Option<Rope>,
+}
+
+impl Attention {
+    /// Build the attention layer for module path `an` (e.g.
+    /// `block0.attn`). `shared_x` is the MS norm's x̂ slot, when one
+    /// exists.
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg, comp: &mut Composer,
+               an: &str, lead: &[usize],
+               shared_x: Option<SlotId>) -> Attention {
+        let c = cfg.dim;
+        let needed =
+            need_x(cfg, "q") || need_x(cfg, "k") || need_x(cfg, "v");
+        let mut xshape = lead.to_vec();
+        xshape.push(c);
+        let (x_slot, x_ext) = match shared_x {
+            Some(s) => (None, Some(s)),
+            None if needed => {
+                let s = comp.slot_f32(&format!("{an}.qkv"),
+                                      Kind::LinearInput, &xshape);
+                (Some(s), Some(s))
+            }
+            None => (None, None),
+        };
+        let q = LinOp::new(cfg, reg, comp, &format!("{an}.q"), "q", c, c,
+                           lead, x_ext);
+        let k = LinOp::new(cfg, reg, comp, &format!("{an}.k"), "k", c, c,
+                           lead, x_ext);
+        let v = LinOp::new(cfg, reg, comp, &format!("{an}.v"), "v", c, c,
+                           lead, x_ext);
+        let q_slot =
+            comp.slot_f32(&format!("{an}.q"), Kind::AttnQkv, &xshape);
+        let k_slot =
+            comp.slot_f32(&format!("{an}.k"), Kind::AttnQkv, &xshape);
+        let v_slot =
+            comp.slot_f32(&format!("{an}.v"), Kind::AttnQkv, &xshape);
+        let proj = LinOp::new(cfg, reg, comp, &format!("{an}.proj"),
+                              "proj", c, c, lead, None);
+        let dims = AttnDims {
+            b: cfg.batch,
+            n: cfg.n_tokens,
+            h: cfg.n_heads,
+            dh: c / cfg.n_heads,
+        };
+        Attention {
+            q,
+            k,
+            v,
+            proj,
+            q_slot,
+            k_slot,
+            v_slot,
+            x_slot,
+            dims,
+            causal: cfg.causal(),
+            rope: if cfg.rope() {
+                Some(Rope::new(cfg.n_tokens, dims.dh))
+            } else {
+                None
+            },
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.dims.b * self.dims.n
+    }
+}
+
+impl Layer for Attention {
+    fn name(&self) -> &'static str {
+        "Attention"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let rows = self.rows();
+        let c = self.dims.h * self.dims.dh;
+        if let Some(slot) = self.x_slot {
+            tape.push_f32(ctx.arena, slot, &ctx.h)?;
+        }
+        let mut q =
+            self.q.fwd(ctx.arena, ctx.params, tape, &ctx.h, rows)?;
+        let mut k =
+            self.k.fwd(ctx.arena, ctx.params, tape, &ctx.h, rows)?;
+        let v = self.v.fwd(ctx.arena, ctx.params, tape, &ctx.h, rows)?;
+        if let Some(r) = &self.rope {
+            rope_into(&mut q, &r.cos, &r.sin, &self.dims, false);
+            rope_into(&mut k, &r.cos, &r.sin, &self.dims, false);
+        }
+        tape.push_f32(ctx.arena, self.q_slot, &q)?;
+        tape.push_f32(ctx.arena, self.k_slot, &k)?;
+        tape.push_f32(ctx.arena, self.v_slot, &v)?;
+        let mut o = ctx.arena.take_f32(rows * c);
+        let mut hm = ctx.arena.take_f32(rows * c);
+        attn_fwd_into(&mut o, &mut hm, &q, &k, &v, &self.dims,
+                      self.causal);
+        ctx.arena.put_f32(hm);
+        ctx.arena.put_f32(q);
+        ctx.arena.put_f32(k);
+        ctx.arena.put_f32(v);
+        let po = self.proj.fwd(ctx.arena, ctx.params, tape, &o, rows)?;
+        ctx.arena.put_f32(o);
+        ctx.set_h(po);
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let rows = self.rows();
+        let c = self.dims.h * self.dims.dh;
+        let dy = std::mem::take(&mut ctx.dh);
+        let do_ = self.proj.bwd(ctx, tape, &dy, rows)?;
+        ctx.arena.put_f32(dy);
+        let v = tape.pop(self.v_slot)?;
+        let k = tape.pop(self.k_slot)?;
+        let q = tape.pop(self.q_slot)?;
+        let mut dq = ctx.arena.take_f32(rows * c);
+        let mut dk = ctx.arena.take_f32(rows * c);
+        let mut dv = ctx.arena.take_f32(rows * c);
+        let mut scr = ctx.arena.take_f32(3 * rows * c);
+        attn_bwd_into(&mut dq, &mut dk, &mut dv, &mut scr, &do_,
+                      q.as_f32(), k.as_f32(), v.as_f32(), &self.dims,
+                      self.causal);
+        ctx.arena.put_f32(scr);
+        ctx.arena.put_f32(do_);
+        if let Some(r) = &self.rope {
+            // gradient w.r.t. the pre-rotation q/k: rotate by −θ
+            rope_into(&mut dq, &r.cos, &r.sin, &self.dims, true);
+            rope_into(&mut dk, &r.cos, &r.sin, &self.dims, true);
+        }
+        // reverse push order: v's slots unwind before k's before q's
+        let mut dxn = self.v.bwd(ctx, tape, &dv, rows)?;
+        ctx.arena.put_f32(dv);
+        let dk_in = self.k.bwd(ctx, tape, &dk, rows)?;
+        ctx.arena.put_f32(dk);
+        add_inplace(&mut dxn, &dk_in);
+        ctx.arena.put_f32(dk_in);
+        let dq_in = self.q.bwd(ctx, tape, &dq, rows)?;
+        ctx.arena.put_f32(dq);
+        add_inplace(&mut dxn, &dq_in);
+        ctx.arena.put_f32(dq_in);
+        if let Some(slot) = self.x_slot {
+            tape.pop(slot)?;
+        }
+        ctx.dh = dxn;
+        Ok(())
+    }
+}

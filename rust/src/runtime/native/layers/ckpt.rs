@@ -1,0 +1,98 @@
+//! Gradient checkpointing as a *wrapper layer*: [`CkptBlock`] owns an
+//! inner composition whose residual slots live on a **private tape**
+//! (minted from the block's own [`Composer`]). On the model-level tape
+//! the block contributes exactly one slot — its input — so the
+//! measured activation memory between fwd and bwd drops to one
+//! `[B,N,C]` tensor per wrapped block. The backward pass re-runs the
+//! inner forward from the saved input to regenerate the private tape,
+//! then runs the inner backward against it; recomputation uses the
+//! same deterministic kernels, so gradients (and the bit-identical
+//! across-thread-counts contract) are unchanged.
+
+use anyhow::Result;
+
+use super::tape::{Composer, Kind, SlotId, SlotInfo, TapeReader,
+                  TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer};
+
+/// Store-input/recompute wrapper around an inner layer stack.
+pub struct CkptBlock {
+    inner: Box<dyn Layer>,
+    slot: SlotId,
+    inner_schema: Vec<SlotInfo>,
+}
+
+impl CkptBlock {
+    /// Wrap `inner` (built against its own composer, whose finished
+    /// schema is `inner_schema`); mints the single `ckpt_input` slot on
+    /// the model-level composer.
+    pub fn new(comp: &mut Composer, module: &str, shape: &[usize],
+               inner: Box<dyn Layer>,
+               inner_schema: Vec<SlotInfo>) -> CkptBlock {
+        let slot = comp.slot_f32(module, Kind::CkptInput, shape);
+        CkptBlock { inner, slot, inner_schema }
+    }
+
+    /// The wrapped block's private residual schema (what bwd
+    /// recomputes instead of storing).
+    pub fn inner_schema(&self) -> &[SlotInfo] {
+        &self.inner_schema
+    }
+}
+
+impl Layer for CkptBlock {
+    fn name(&self) -> &'static str {
+        "CkptBlock"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        tape.push_f32(ctx.arena, self.slot, &ctx.h)?;
+        // run the inner forward against a throwaway private tape; its
+        // residuals go straight back to the arena
+        let mut w = TapeWriter::new(&self.inner_schema);
+        let prof = ctx.profiler.take();
+        let r = self.inner.fwd(ctx, &mut w);
+        ctx.profiler = prof;
+        r?;
+        for t in w.finish()? {
+            ctx.arena.recycle_tensor(t);
+        }
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let h0 = tape.pop(self.slot)?;
+        // recompute the private tape from the saved block input
+        let mut w = TapeWriter::new(&self.inner_schema);
+        {
+            let mut h = ctx.arena.take_f32(h0.elems());
+            h.copy_from_slice(h0.as_f32());
+            let mut fctx = FwdCtx {
+                params: ctx.params,
+                arena: &mut *ctx.arena,
+                x: ctx.x,
+                y: ctx.y,
+                h,
+                loss: 0.0,
+                metric: 0.0,
+                profiler: None,
+            };
+            self.inner.fwd(&mut fctx, &mut w)?;
+            // the recomputed block output is not needed — only the tape
+            fctx.set_h(Vec::new());
+        }
+        let scratch = w.finish()?;
+        {
+            let mut r = TapeReader::new(&self.inner_schema, &scratch)?;
+            let prof = ctx.profiler.take();
+            let res = self.inner.bwd(ctx, &mut r);
+            ctx.profiler = prof;
+            res?;
+            r.finish()?;
+        }
+        for t in scratch {
+            ctx.arena.recycle_tensor(t);
+        }
+        Ok(())
+    }
+}

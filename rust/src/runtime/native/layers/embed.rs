@@ -1,0 +1,146 @@
+//! Embedding layer: patch projection (ViT) or token-embedding gather
+//! (LLaMA/RoBERTa), plus learned absolute positions — except under
+//! RoPE, where positions are rotary inside [`Attention`](super::
+//! Attention) and no position table exists. Saves nothing on the tape:
+//! the weight gradients only need the batch input, which the trainer
+//! still owns in bwd.
+
+use anyhow::{ensure, Result};
+
+use super::super::kernels::{add_inplace, colsum_into, matmul_nt_into,
+                            matmul_tn_into};
+use super::super::model::{Arch, NetCfg};
+use super::tape::{TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+
+enum Table {
+    /// ViT: `embed.proj.{W,b}` over `[B,N,P]` patches.
+    Patch { w: usize, b: usize, patch_dim: usize },
+    /// Token gather from `embed.tok.E`.
+    Token { e: usize, vocab: usize },
+}
+
+/// Input embedding over the batch `x`.
+pub struct Embed {
+    table: Table,
+    pos: Option<usize>,
+    c: usize,
+    rows: usize,
+    n: usize,
+}
+
+impl Embed {
+    /// Register the embedding parameters (manifest order: table, then
+    /// the position table unless RoPE replaces it).
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg) -> Embed {
+        let c = cfg.dim;
+        let full = cfg.tuning_full();
+        let table = match cfg.arch {
+            Arch::Vit => Table::Patch {
+                w: reg.add("embed.proj.W".into(),
+                           vec![c, cfg.patch_dim], full),
+                b: reg.add("embed.proj.b".into(), vec![c], full),
+                patch_dim: cfg.patch_dim,
+            },
+            _ => Table::Token {
+                e: reg.add("embed.tok.E".into(), vec![cfg.vocab, c],
+                           full),
+                vocab: cfg.vocab,
+            },
+        };
+        let pos = if cfg.rope() {
+            None
+        } else {
+            Some(reg.add("embed.pos".into(), vec![cfg.n_tokens, c], full))
+        };
+        Embed {
+            table,
+            pos,
+            c,
+            rows: cfg.batch * cfg.n_tokens,
+            n: cfg.n_tokens,
+        }
+    }
+}
+
+impl Layer for Embed {
+    fn name(&self) -> &'static str {
+        "Embed"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, _tape: &mut TapeWriter) -> Result<()> {
+        let (rows, c) = (self.rows, self.c);
+        let mut h = ctx.arena.take_f32(rows * c);
+        match &self.table {
+            Table::Patch { w, b, patch_dim } => {
+                matmul_nt_into(&mut h, ctx.x.as_f32(),
+                               ctx.params[*w].as_f32(), rows, *patch_dim,
+                               c);
+                super::super::kernels::add_bias(
+                    &mut h, ctx.params[*b].as_f32());
+            }
+            Table::Token { e, vocab } => {
+                let emb = ctx.params[*e].as_f32();
+                for (r, &t) in ctx.x.as_i32().iter().enumerate() {
+                    ensure!((t as usize) < *vocab,
+                            "token {t} out of range");
+                    let t = t as usize;
+                    h[r * c..(r + 1) * c]
+                        .copy_from_slice(&emb[t * c..(t + 1) * c]);
+                }
+            }
+        }
+        if let Some(pi) = self.pos {
+            let pos = ctx.params[pi].as_f32();
+            let n = self.n;
+            for r in 0..rows {
+                let prow = &pos[(r % n) * c..(r % n + 1) * c];
+                add_inplace(&mut h[r * c..(r + 1) * c], prow);
+            }
+        }
+        ctx.set_h(h);
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, _tape: &mut TapeReader) -> Result<()> {
+        let (rows, c) = (self.rows, self.c);
+        let dh = std::mem::take(&mut ctx.dh);
+        match &self.table {
+            Table::Patch { w, b, patch_dim } => {
+                if ctx.infos[*w].trainable {
+                    let mut dw = ctx.arena.take_f32(c * patch_dim);
+                    matmul_tn_into(&mut dw, &dh, ctx.x.as_f32(), c, rows,
+                                   *patch_dim);
+                    ctx.acc(*w, dw);
+                    let mut db = ctx.arena.take_f32(c);
+                    colsum_into(&mut db, &dh, rows, c);
+                    ctx.acc(*b, db);
+                }
+            }
+            Table::Token { e, vocab } => {
+                if ctx.infos[*e].trainable {
+                    let mut de = ctx.arena.take_f32_zeroed(vocab * c);
+                    for (r, &t) in ctx.x.as_i32().iter().enumerate() {
+                        let t = t as usize;
+                        add_inplace(&mut de[t * c..(t + 1) * c],
+                                    &dh[r * c..(r + 1) * c]);
+                    }
+                    ctx.acc(*e, de);
+                }
+            }
+        }
+        if let Some(pi) = self.pos {
+            if ctx.infos[pi].trainable {
+                let mut dpos = ctx.arena.take_f32_zeroed(self.n * c);
+                for r in 0..rows {
+                    let i = r % self.n;
+                    add_inplace(&mut dpos[i * c..(i + 1) * c],
+                                &dh[r * c..(r + 1) * c]);
+                }
+                ctx.acc(pi, dpos);
+            }
+        }
+        ctx.arena.put_f32(dh);
+        Ok(())
+    }
+}

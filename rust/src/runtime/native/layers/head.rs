@@ -1,0 +1,144 @@
+//! Task head + loss: mean-pool → classifier (ViT/RoBERTa) or per-token
+//! LM head (LLaMA), followed by softmax cross-entropy. `fwd` consumes
+//! the running activation into `(loss, metric)`; `bwd` seeds the
+//! gradient chain from the saved logits. Sits after the final [`Norm`]
+//! layer in the composition.
+//!
+//! [`Norm`]: super::Norm
+
+use anyhow::Result;
+
+use super::super::kernels::{add_inplace, softmax_ce,
+                            softmax_ce_grad_into};
+use super::super::model::{Arch, NetCfg};
+use super::linear::{LinOp, XSrc};
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+
+/// Head layer: pooling (non-LLaMA), `head.fc`, and the CE loss.
+pub struct Head {
+    lin: LinOp,
+    input_slot: Option<SlotId>,
+    logits_slot: SlotId,
+    per_token: bool,
+    bsz: usize,
+    n: usize,
+    c: usize,
+    k: usize,
+}
+
+impl Head {
+    /// Register `head.fc` and mint the head-input/logits slots.
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg,
+               comp: &mut Composer) -> Head {
+        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
+        let per_token = cfg.arch == Arch::Llama;
+        let k = if per_token { cfg.vocab } else { cfg.n_classes };
+        let trainable = cfg.head_trainable();
+        let (input_slot, x_src, logits_shape) = if per_token {
+            let slot = if trainable {
+                Some(comp.slot_f32("head.fc", Kind::HeadInput,
+                                   &[bsz, n, c]))
+            } else {
+                None
+            };
+            (slot, slot.map_or(XSrc::None, XSrc::Ext), vec![bsz, n, k])
+        } else {
+            let slot =
+                comp.slot_f32("head.fc", Kind::HeadInput, &[bsz, c]);
+            (Some(slot), XSrc::Ext(slot), vec![bsz, k])
+        };
+        let lin = LinOp::new_plain(reg, "head.fc", c, k, trainable,
+                                   cfg.use_bias(), x_src);
+        let logits_slot =
+            comp.slot_f32("head", Kind::Logits, &logits_shape);
+        Head { lin, input_slot, logits_slot, per_token, bsz, n, c, k }
+    }
+}
+
+impl Layer for Head {
+    fn name(&self) -> &'static str {
+        "Head"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let (bsz, n, c) = (self.bsz, self.n, self.c);
+        let (loss, metric) = if self.per_token {
+            let rows = bsz * n;
+            if let Some(slot) = self.input_slot {
+                tape.push_f32(ctx.arena, slot, &ctx.h)?;
+            }
+            let z =
+                self.lin.fwd(ctx.arena, ctx.params, tape, &ctx.h, rows)?;
+            let out = softmax_ce(&z, rows, self.k, ctx.y.as_i32());
+            tape.push_f32(ctx.arena, self.logits_slot, &z)?;
+            ctx.arena.put_f32(z);
+            out
+        } else {
+            let mut pooled = ctx.arena.take_f32_zeroed(bsz * c);
+            for b in 0..bsz {
+                let prow = &mut pooled[b * c..(b + 1) * c];
+                for i in 0..n {
+                    let hrow =
+                        &ctx.h[(b * n + i) * c..(b * n + i + 1) * c];
+                    add_inplace(prow, hrow);
+                }
+                for v in prow.iter_mut() {
+                    *v /= n as f32;
+                }
+            }
+            tape.push_f32(ctx.arena, self.input_slot.unwrap(), &pooled)?;
+            let z =
+                self.lin.fwd(ctx.arena, ctx.params, tape, &pooled, bsz)?;
+            ctx.arena.put_f32(pooled);
+            let out = softmax_ce(&z, bsz, self.k, ctx.y.as_i32());
+            tape.push_f32(ctx.arena, self.logits_slot, &z)?;
+            ctx.arena.put_f32(z);
+            out
+        };
+        ctx.loss = loss;
+        ctx.metric = metric;
+        ctx.set_h(Vec::new());
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let (bsz, n, c) = (self.bsz, self.n, self.c);
+        let z = tape.pop(self.logits_slot)?;
+        let dhn = if self.per_token {
+            let rows = bsz * n;
+            let mut dz = ctx.arena.take_f32(rows * self.k);
+            softmax_ce_grad_into(&mut dz, z.as_f32(), rows, self.k,
+                                 ctx.y.as_i32());
+            let d = self.lin.bwd(ctx, tape, &dz, rows)?;
+            ctx.arena.put_f32(dz);
+            if let Some(slot) = self.input_slot {
+                tape.pop(slot)?;
+            }
+            d
+        } else {
+            let mut dz = ctx.arena.take_f32(bsz * self.k);
+            softmax_ce_grad_into(&mut dz, z.as_f32(), bsz, self.k,
+                                 ctx.y.as_i32());
+            let dpooled = self.lin.bwd(ctx, tape, &dz, bsz)?;
+            ctx.arena.put_f32(dz);
+            tape.pop(self.input_slot.unwrap())?;
+            let mut dhn = ctx.arena.take_f32(bsz * n * c);
+            let inv = 1.0 / n as f32;
+            for b in 0..bsz {
+                let src = &dpooled[b * c..(b + 1) * c];
+                for i in 0..n {
+                    let dst =
+                        &mut dhn[(b * n + i) * c..(b * n + i + 1) * c];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d = s * inv;
+                    }
+                }
+            }
+            ctx.arena.put_f32(dpooled);
+            dhn
+        };
+        ctx.set_dh(dhn);
+        Ok(())
+    }
+}

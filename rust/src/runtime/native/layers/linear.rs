@@ -1,0 +1,274 @@
+//! Linear projection with optional bias and optional LoRA adapter
+//! (`y = x·Wᵀ [+ b] [+ (x·Aᵀ)·Bᵀ]`), plus the input-residual policy of
+//! the paper: the input is saved only when some gradient needs it (base
+//! weight trains, or a non-FA LoRA adapter needs `x` for
+//! `dA = (dy·Bᵀ)ᵀ·x`), and it can be *shared* — with an MS norm's x̂ or
+//! with sibling linears reading the same tensor — instead of stored
+//! again (eq. 16–18).
+
+use anyhow::Result;
+
+use super::super::arena::Arena;
+use super::super::kernels::{
+    add_bias, colsum_into, matmul_nn_acc_into, matmul_nn_into,
+    matmul_nt_acc_into, matmul_nt_into, matmul_tn_into,
+};
+use super::super::model::NetCfg;
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+use crate::runtime::tensor::Tensor;
+
+/// Where a linear finds its input residual in the backward pass.
+#[derive(Debug, Clone, Copy)]
+pub enum XSrc {
+    /// This linear saves (and pops) its own `linear_input` slot.
+    Own(SlotId),
+    /// The input lives in a slot another layer owns (an MS norm's
+    /// shared x̂, or a joint save for sibling linears): read without
+    /// consuming.
+    Ext(SlotId),
+    /// No gradient needs the input (frozen base, LoRA-FA).
+    None,
+}
+
+/// The projection op: used standalone via the [`Linear`] layer and
+/// embedded inside [`Attention`](super::Attention),
+/// [`SwiGlu`](super::SwiGlu), and [`Head`](super::Head).
+pub struct LinOp {
+    /// Module path, e.g. `block0.mlp.fc1`.
+    pub name: String,
+    din: usize,
+    dout: usize,
+    w: usize,
+    b: Option<usize>,
+    la: Option<usize>,
+    lb: Option<usize>,
+    fa: bool,
+    base_train: bool,
+    rank: usize,
+    x_src: XSrc,
+    u_slot: Option<SlotId>,
+}
+
+/// Whether a linear must see its input in bwd under `cfg` — base weight
+/// trains, or a non-FA LoRA adapter is attached.
+pub fn need_x(cfg: &NetCfg, which: &str) -> bool {
+    cfg.tuning_full() || (cfg.lora_on(which) && !cfg.lora_fa())
+}
+
+impl LinOp {
+    /// Register parameters and mint slots for one linear.
+    ///
+    /// `x_ext`: a slot that already holds the input this linear reads
+    /// (shared save) — when the input is needed and no external slot is
+    /// given, the op mints its own `linear_input` slot, *before* the
+    /// LoRA `u` slot, matching the canonical push order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg, comp: &mut Composer,
+               name: &str, which: &str, din: usize, dout: usize,
+               lead: &[usize], x_ext: Option<SlotId>) -> LinOp {
+        let full = cfg.tuning_full();
+        let w = reg.add(format!("{name}.W"), vec![dout, din], full);
+        let b = if cfg.use_bias() {
+            Some(reg.add(format!("{name}.b"), vec![dout], full))
+        } else {
+            None
+        };
+        let lora = cfg.lora_on(which);
+        let x_src = if need_x(cfg, which) {
+            match x_ext {
+                Some(s) => XSrc::Ext(s),
+                None => {
+                    let mut shape = lead.to_vec();
+                    shape.push(din);
+                    XSrc::Own(comp.slot_f32(name, Kind::LinearInput,
+                                            &shape))
+                }
+            }
+        } else {
+            XSrc::None
+        };
+        let (la, lb, u_slot) = if lora {
+            let r = cfg.lora_rank;
+            let la = reg.add(format!("{name}.lora_a"), vec![r, din],
+                             !cfg.lora_fa());
+            let lb =
+                reg.add(format!("{name}.lora_b"), vec![dout, r], true);
+            let mut shape = lead.to_vec();
+            shape.push(r);
+            let u = comp.slot_f32(name, Kind::LoraU, &shape);
+            (Some(la), Some(lb), Some(u))
+        } else {
+            (None, None, None)
+        };
+        LinOp {
+            name: name.to_string(),
+            din,
+            dout,
+            w,
+            b,
+            la,
+            lb,
+            fa: cfg.lora_fa(),
+            base_train: full,
+            rank: cfg.lora_rank,
+            x_src,
+            u_slot,
+        }
+    }
+
+    /// A LoRA-free linear with explicit trainability and input source —
+    /// the classifier/LM head, which is never adapted even under
+    /// `lora_all`.
+    pub fn new_plain(reg: &mut ParamReg, name: &str, din: usize,
+                     dout: usize, trainable: bool, bias: bool,
+                     x_src: XSrc) -> LinOp {
+        let w = reg.add(format!("{name}.W"), vec![dout, din], trainable);
+        let b = if bias {
+            Some(reg.add(format!("{name}.b"), vec![dout], trainable))
+        } else {
+            None
+        };
+        LinOp {
+            name: name.to_string(),
+            din,
+            dout,
+            w,
+            b,
+            la: None,
+            lb: None,
+            fa: false,
+            base_train: trainable,
+            rank: 0,
+            x_src,
+            u_slot: None,
+        }
+    }
+
+    /// Output width.
+    pub fn dout(&self) -> usize {
+        self.dout
+    }
+
+    /// `y = x·Wᵀ [+ b] [+ uBᵀ]`; pushes the own input slot (if any) and
+    /// the LoRA `u` slot.
+    pub fn fwd(&self, arena: &mut Arena, params: &[Tensor],
+               tape: &mut TapeWriter, x: &[f32],
+               rows: usize) -> Result<Vec<f32>> {
+        if let XSrc::Own(slot) = self.x_src {
+            tape.push_f32(arena, slot, x)?;
+        }
+        let mut y = arena.take_f32(rows * self.dout);
+        matmul_nt_into(&mut y, x, params[self.w].as_f32(), rows, self.din,
+                       self.dout);
+        if let Some(bi) = self.b {
+            add_bias(&mut y, params[bi].as_f32());
+        }
+        if let (Some(lai), Some(lbi), Some(us)) =
+            (self.la, self.lb, self.u_slot)
+        {
+            let r = self.rank;
+            let mut u = arena.take_f32(rows * r);
+            matmul_nt_into(&mut u, x, params[lai].as_f32(), rows,
+                           self.din, r);
+            tape.push_f32(arena, us, &u)?;
+            matmul_nt_acc_into(&mut y, &u, params[lbi].as_f32(), rows, r,
+                               self.dout);
+            arena.put_f32(u);
+        }
+        Ok(y)
+    }
+
+    /// Backward: pops the LoRA `u` and own-input slots (in reverse push
+    /// order), accumulates `dW`/`db`/`dA`/`dB`, returns `dx`.
+    pub fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader,
+               dy: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let u = match self.u_slot {
+            Some(s) => Some(tape.pop(s)?),
+            None => None,
+        };
+        let x: Option<&Tensor> = match self.x_src {
+            XSrc::Own(s) => Some(tape.pop(s)?),
+            XSrc::Ext(s) => Some(tape.get(s)?),
+            XSrc::None => None,
+        };
+        if self.base_train {
+            let xx = x.expect("linear input residual missing").as_f32();
+            let mut dw = ctx.arena.take_f32(self.dout * self.din);
+            matmul_tn_into(&mut dw, dy, xx, self.dout, rows, self.din);
+            ctx.acc(self.w, dw);
+            if let Some(bi) = self.b {
+                let mut db = ctx.arena.take_f32(self.dout);
+                colsum_into(&mut db, dy, rows, self.dout);
+                ctx.acc(bi, db);
+            }
+        }
+        let mut dx = ctx.arena.take_f32(rows * self.din);
+        matmul_nn_into(&mut dx, dy, ctx.params[self.w].as_f32(), rows,
+                       self.dout, self.din);
+        if let (Some(lai), Some(lbi)) = (self.la, self.lb) {
+            let r = self.rank;
+            let uu = u.expect("lora_u residual missing").as_f32();
+            let mut du = ctx.arena.take_f32(rows * r);
+            matmul_nn_into(&mut du, dy, ctx.params[lbi].as_f32(), rows,
+                           self.dout, r);
+            let mut dlb = ctx.arena.take_f32(self.dout * r);
+            matmul_tn_into(&mut dlb, dy, uu, self.dout, rows, r);
+            ctx.acc(lbi, dlb);
+            if !self.fa {
+                let xx = x
+                    .expect("linear input residual missing (lora)")
+                    .as_f32();
+                let mut dla = ctx.arena.take_f32(r * self.din);
+                matmul_tn_into(&mut dla, &du, xx, r, rows, self.din);
+                ctx.acc(lai, dla);
+            }
+            matmul_nn_acc_into(&mut dx, &du, ctx.params[lai].as_f32(),
+                               rows, r, self.din);
+            ctx.arena.put_f32(du);
+        }
+        Ok(dx)
+    }
+}
+
+/// Standalone linear layer over the running activation.
+pub struct Linear {
+    op: LinOp,
+    rows: usize,
+}
+
+impl Linear {
+    /// Build a linear layer (`lead` = leading activation dims, e.g.
+    /// `[batch, n_tokens]`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg, comp: &mut Composer,
+               name: &str, which: &str, din: usize, dout: usize,
+               lead: &[usize], x_ext: Option<SlotId>) -> Linear {
+        Linear {
+            op: LinOp::new(cfg, reg, comp, name, which, din, dout, lead,
+                           x_ext),
+            rows: lead.iter().product(),
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn name(&self) -> &'static str {
+        "Linear"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let y =
+            self.op.fwd(ctx.arena, ctx.params, tape, &ctx.h, self.rows)?;
+        ctx.set_h(y);
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let dy = std::mem::take(&mut ctx.dh);
+        let dx = self.op.bwd(ctx, tape, &dy, self.rows)?;
+        ctx.arena.put_f32(dy);
+        ctx.dh = dx;
+        Ok(())
+    }
+}

@@ -1,0 +1,314 @@
+//! Composable layer API for the native model.
+//!
+//! A native model is a [`Seq`] of boxed [`Layer`]s. Each layer
+//! implements a decoupled forward/backward pair against the typed
+//! residual tape of [`tape`]: `fwd` transforms the activation carried by
+//! [`FwdCtx`] and pushes the residuals *it* declared at build time;
+//! `bwd` transforms the gradient carried by [`BwdCtx`] and pops exactly
+//! those slots in reverse. Because the same [`SlotId`] fields drive both
+//! passes, the fwd/bwd residual contract cannot drift — and the flat
+//! slot list doubles as the manifest residual section, so the ABI is
+//! *derived* from the composition rather than maintained by hand
+//! (DESIGN.md §2.2).
+//!
+//! Layer inventory: [`Embed`], [`Norm`] (plain + memory-sharing),
+//! [`Linear`] (with optional LoRA adapter), [`Attention`] (optional
+//! RoPE), [`Activation`] (GELU/SiLU/ReLU exact + ReGELU2/ReSiLU2 2-bit),
+//! [`SwiGlu`], [`Head`], and the combinators [`Seq`], [`Residual`]
+//! (pre-norm skip connection) and [`CkptBlock`] (gradient
+//! checkpointing: store the block input, recompute the inner tape in
+//! bwd). Adding a scenario means adding a `Layer` impl, not editing a
+//! monolithic fwd/bwd pair.
+
+pub mod activation;
+pub mod attention;
+pub mod ckpt;
+pub mod embed;
+pub mod head;
+pub mod linear;
+pub mod norm;
+pub mod swiglu;
+pub mod tape;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::arena::Arena;
+use crate::runtime::manifest::ParamInfo;
+use crate::runtime::tensor::Tensor;
+
+pub use activation::Activation;
+pub use attention::Attention;
+pub use ckpt::CkptBlock;
+pub use embed::Embed;
+pub use head::Head;
+pub use linear::{LinOp, Linear, XSrc};
+pub use norm::Norm;
+pub use swiglu::SwiGlu;
+pub use tape::{Composer, Kind, SlotId, SlotInfo, TapeReader, TapeWriter};
+
+/// Parameter registry used while composing a model: mints manifest
+/// parameter indices in layout order.
+#[derive(Default)]
+pub struct ParamReg {
+    /// Parameter layout in manifest order.
+    pub infos: Vec<ParamInfo>,
+}
+
+impl ParamReg {
+    /// An empty registry.
+    pub fn new() -> ParamReg {
+        ParamReg::default()
+    }
+
+    /// Register a parameter; returns its manifest index.
+    pub fn add(&mut self, name: String, shape: Vec<usize>,
+               trainable: bool) -> usize {
+        self.infos.push(ParamInfo { name, shape, trainable });
+        self.infos.len() - 1
+    }
+}
+
+/// Per-layer wall-clock accumulator (used by the hotpath bench's
+/// per-layer section; populated only when a profiler is attached to the
+/// context, so the train path pays nothing).
+#[derive(Default)]
+pub struct Profiler {
+    entries: Vec<(&'static str, f64, u64)>,
+}
+
+impl Profiler {
+    /// An empty profiler.
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Accumulate `ns` nanoseconds against `name`.
+    pub fn add(&mut self, name: &'static str, ns: f64) {
+        match self.entries.iter_mut().find(|(n, _, _)| *n == name) {
+            Some((_, t, c)) => {
+                *t += ns;
+                *c += 1;
+            }
+            None => self.entries.push((name, ns, 1)),
+        }
+    }
+
+    /// `(layer name, total ns, calls)` rows in first-seen order.
+    pub fn rows(&self) -> &[(&'static str, f64, u64)] {
+        &self.entries
+    }
+}
+
+/// Forward-pass context threaded through the layer stack. `h` is the
+/// running activation (`[rows, cols]` row-major, cols layer-defined);
+/// [`Embed`] initializes it from `x`, [`Head`] consumes it into
+/// `loss`/`metric`.
+pub struct FwdCtx<'a> {
+    /// Model parameters, manifest order.
+    pub params: &'a [Tensor],
+    /// Step-scoped buffer arena (all activations come from here).
+    pub arena: &'a mut Arena,
+    /// Input batch.
+    pub x: &'a Tensor,
+    /// Target batch.
+    pub y: &'a Tensor,
+    /// Running activation (empty before [`Embed`] / after [`Head`]).
+    pub h: Vec<f32>,
+    /// Loss, set by [`Head`].
+    pub loss: f32,
+    /// Task metric, set by [`Head`].
+    pub metric: f32,
+    /// Optional per-layer latency sink (bench only).
+    pub profiler: Option<&'a mut Profiler>,
+}
+
+impl FwdCtx<'_> {
+    /// Replace the running activation, returning the old buffer to the
+    /// arena.
+    pub fn set_h(&mut self, new: Vec<f32>) {
+        let old = std::mem::replace(&mut self.h, new);
+        self.arena.put_f32(old);
+    }
+}
+
+/// Backward-pass context. `dh` is the running gradient w.r.t. the
+/// activation [`FwdCtx::h`] carried at the same point of the stack;
+/// [`Head`] initializes it from the loss, [`Embed`] consumes it into
+/// the embedding gradients.
+pub struct BwdCtx<'a> {
+    /// Model parameters, manifest order.
+    pub params: &'a [Tensor],
+    /// Parameter layout (trainability gates gradient work).
+    pub infos: &'a [ParamInfo],
+    /// Step-scoped buffer arena.
+    pub arena: &'a mut Arena,
+    /// Input batch.
+    pub x: &'a Tensor,
+    /// Target batch.
+    pub y: &'a Tensor,
+    /// Running gradient (empty before [`Head`] / after [`Embed`]).
+    pub dh: Vec<f32>,
+    /// Gradient staging slots, one per parameter (manifest order).
+    pub grads: &'a mut [Option<Vec<f32>>],
+    /// Optional per-layer latency sink (bench only).
+    pub profiler: Option<&'a mut Profiler>,
+}
+
+impl BwdCtx<'_> {
+    /// Replace the running gradient, returning the old buffer to the
+    /// arena.
+    pub fn set_dh(&mut self, new: Vec<f32>) {
+        let old = std::mem::replace(&mut self.dh, new);
+        self.arena.put_f32(old);
+    }
+
+    /// Accumulate gradient buffer `g` into the staging slot for
+    /// parameter `idx` (dropped to the arena when the parameter is
+    /// frozen).
+    pub fn acc(&mut self, idx: usize, g: Vec<f32>) {
+        if !self.infos[idx].trainable {
+            self.arena.put_f32(g);
+            return;
+        }
+        match &mut self.grads[idx] {
+            Some(a) => {
+                super::kernels::add_inplace(a, &g);
+                self.arena.put_f32(g);
+            }
+            slot @ None => *slot = Some(g),
+        }
+    }
+}
+
+/// One composable model stage. Implementations push, in `fwd`, exactly
+/// the slots they minted at construction, in mint order — and pop them
+/// in reverse in `bwd`. The tape cursors verify both.
+pub trait Layer {
+    /// Stable display name (profiling, errors).
+    fn name(&self) -> &'static str;
+
+    /// Whether this is a leaf layer (profiled individually) rather than
+    /// a combinator whose children profile themselves.
+    fn is_leaf(&self) -> bool {
+        true
+    }
+
+    /// Forward: transform `ctx.h`, push declared residuals.
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()>;
+
+    /// Backward: transform `ctx.dh`, pop declared residuals in reverse,
+    /// accumulate parameter gradients via [`BwdCtx::acc`].
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()>;
+}
+
+/// Sequential composition; `bwd` walks the children in reverse.
+pub struct Seq {
+    /// Child layers, forward order.
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Seq {
+    /// Compose `layers` sequentially.
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Seq {
+        Seq { layers }
+    }
+}
+
+fn timed_fwd(l: &dyn Layer, ctx: &mut FwdCtx,
+             tape: &mut TapeWriter) -> Result<()> {
+    if ctx.profiler.is_some() && l.is_leaf() {
+        let t0 = Instant::now();
+        l.fwd(ctx, tape)?;
+        let ns = t0.elapsed().as_nanos() as f64;
+        if let Some(p) = ctx.profiler.as_deref_mut() {
+            p.add(l.name(), ns);
+        }
+        Ok(())
+    } else {
+        l.fwd(ctx, tape)
+    }
+}
+
+fn timed_bwd(l: &dyn Layer, ctx: &mut BwdCtx,
+             tape: &mut TapeReader) -> Result<()> {
+    if ctx.profiler.is_some() && l.is_leaf() {
+        let t0 = Instant::now();
+        l.bwd(ctx, tape)?;
+        let ns = t0.elapsed().as_nanos() as f64;
+        if let Some(p) = ctx.profiler.as_deref_mut() {
+            p.add(l.name(), ns);
+        }
+        Ok(())
+    } else {
+        l.bwd(ctx, tape)
+    }
+}
+
+impl Layer for Seq {
+    fn name(&self) -> &'static str {
+        "Seq"
+    }
+
+    fn is_leaf(&self) -> bool {
+        false
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        for l in &self.layers {
+            timed_fwd(l.as_ref(), ctx, tape)?;
+        }
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        for l in self.layers.iter().rev() {
+            timed_bwd(l.as_ref(), ctx, tape)?;
+        }
+        Ok(())
+    }
+}
+
+/// Pre-norm residual branch: `h ← h + inner(h)`. The backward pass adds
+/// the skip gradient back after the branch backward — exactly the
+/// decoupled form the old monolithic `block_fwd`/`block_bwd` hard-coded
+/// twice per block.
+pub struct Residual {
+    inner: Seq,
+}
+
+impl Residual {
+    /// Wrap `inner` in a skip connection.
+    pub fn new(inner: Seq) -> Residual {
+        Residual { inner }
+    }
+}
+
+impl Layer for Residual {
+    fn name(&self) -> &'static str {
+        "Residual"
+    }
+
+    fn is_leaf(&self) -> bool {
+        false
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let mut keep = ctx.arena.take_f32(ctx.h.len());
+        keep.copy_from_slice(&ctx.h);
+        self.inner.fwd(ctx, tape)?;
+        super::kernels::add_inplace(&mut ctx.h, &keep);
+        ctx.arena.put_f32(keep);
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let mut dkeep = ctx.arena.take_f32(ctx.dh.len());
+        dkeep.copy_from_slice(&ctx.dh);
+        self.inner.bwd(ctx, tape)?;
+        super::kernels::add_inplace(&mut ctx.dh, &dkeep);
+        ctx.arena.put_f32(dkeep);
+        Ok(())
+    }
+}

@@ -1,0 +1,150 @@
+//! Normalization layer: LayerNorm / RMSNorm, in plain (affine) or
+//! memory-sharing form. The MS variants have no affine of their own —
+//! the checkpoint merge (eq. 17) folds it into the following linears —
+//! so the single saved x̂ serves both the norm backward *and* those
+//! linears' input residual: the layer exposes its x̂ slot via
+//! [`Norm::shared_slot`] and consumers wire it in as
+//! [`XSrc::Ext`](super::XSrc) at build time.
+
+use anyhow::Result;
+
+use super::super::kernels::{add_bias, colsum_into, norm_bwd_into,
+                            norm_fwd_into};
+use super::super::model::NetCfg;
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+
+/// LN / RMS / MS-LN / MS-RMS normalization over the running activation.
+pub struct Norm {
+    g: Option<usize>,
+    b: Option<usize>,
+    rms: bool,
+    ms: bool,
+    c: usize,
+    rows: usize,
+    xhat_slot: SlotId,
+    stat_slot: SlotId,
+}
+
+impl Norm {
+    /// Register affine parameters (plain variants only) and mint the
+    /// x̂ + stat slots.
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg, comp: &mut Composer,
+               name: &str, lead: &[usize]) -> Norm {
+        let c = cfg.dim;
+        let full = cfg.tuning_full();
+        let (g, b) = if cfg.has_affine() {
+            let g = reg.add(format!("{name}.w"), vec![c], full);
+            let b = if cfg.is_rms() {
+                None
+            } else {
+                Some(reg.add(format!("{name}.b"), vec![c], full))
+            };
+            (Some(g), b)
+        } else {
+            (None, None)
+        };
+        let kind = if cfg.is_ms() {
+            Kind::NormShared
+        } else {
+            Kind::NormInput
+        };
+        let mut xshape = lead.to_vec();
+        xshape.push(c);
+        let xhat_slot = comp.slot_f32(name, kind, &xshape);
+        let stat_slot = comp.slot_f32(name, Kind::NormStat, lead);
+        Norm {
+            g,
+            b,
+            rms: cfg.is_rms(),
+            ms: cfg.is_ms(),
+            c,
+            rows: lead.iter().product(),
+            xhat_slot,
+            stat_slot,
+        }
+    }
+
+    /// The x̂ slot, when it is shareable with following linears (MS
+    /// variants only).
+    pub fn shared_slot(&self) -> Option<SlotId> {
+        if self.ms { Some(self.xhat_slot) } else { None }
+    }
+}
+
+impl Layer for Norm {
+    fn name(&self) -> &'static str {
+        "Norm"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let (rows, c) = (self.rows, self.c);
+        let mut xhat = ctx.arena.take_f32(rows * c);
+        let mut stat = ctx.arena.take_f32(rows);
+        norm_fwd_into(&mut xhat, &mut stat, &ctx.h, rows, c, self.rms);
+        tape.push_f32(ctx.arena, self.xhat_slot, &xhat)?;
+        tape.push_f32(ctx.arena, self.stat_slot, &stat)?;
+        ctx.arena.put_f32(stat);
+        if let Some(gi) = self.g {
+            let g = ctx.params[gi].as_f32();
+            let mut y = ctx.arena.take_f32(rows * c);
+            for (yrow, xrow) in y.chunks_mut(c).zip(xhat.chunks(c)) {
+                for ((o, &xh), &gv) in
+                    yrow.iter_mut().zip(xrow).zip(g)
+                {
+                    *o = xh * gv;
+                }
+            }
+            if let Some(bi) = self.b {
+                add_bias(&mut y, ctx.params[bi].as_f32());
+            }
+            ctx.arena.put_f32(xhat);
+            ctx.set_h(y);
+        } else {
+            ctx.set_h(xhat);
+        }
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let (rows, c) = (self.rows, self.c);
+        let stat = tape.pop(self.stat_slot)?;
+        let xhat = tape.pop(self.xhat_slot)?;
+        let dy = std::mem::take(&mut ctx.dh);
+        let mut dx = ctx.arena.take_f32(rows * c);
+        if let Some(gi) = self.g {
+            let mut dg = ctx.arena.take_f32_zeroed(c);
+            for (dyrow, xrow) in dy.chunks(c).zip(xhat.as_f32().chunks(c))
+            {
+                for ((o, &d), &xh) in dg.iter_mut().zip(dyrow).zip(xrow)
+                {
+                    *o += d * xh;
+                }
+            }
+            ctx.acc(gi, dg);
+            if let Some(bi) = self.b {
+                let mut db = ctx.arena.take_f32(c);
+                colsum_into(&mut db, &dy, rows, c);
+                ctx.acc(bi, db);
+            }
+            let g = ctx.params[gi].as_f32();
+            let mut dyh = ctx.arena.take_f32(dy.len());
+            for (orow, dyrow) in dyh.chunks_mut(c).zip(dy.chunks(c)) {
+                for ((o, &d), &gv) in
+                    orow.iter_mut().zip(dyrow).zip(g)
+                {
+                    *o = d * gv;
+                }
+            }
+            norm_bwd_into(&mut dx, &dyh, xhat.as_f32(), stat.as_f32(),
+                          rows, c, self.rms);
+            ctx.arena.put_f32(dyh);
+        } else {
+            norm_bwd_into(&mut dx, &dy, xhat.as_f32(), stat.as_f32(),
+                          rows, c, self.rms);
+        }
+        ctx.arena.put_f32(dy);
+        ctx.dh = dx;
+        Ok(())
+    }
+}

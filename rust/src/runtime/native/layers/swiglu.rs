@@ -1,0 +1,143 @@
+//! SwiGLU MLP layer (LLaMA-style gated feed-forward):
+//! `y = W₃ᵀ·(h(W₁ᵀx) ⊙ W₂ᵀx)` with `h` the configured activation
+//! (SiLU in the real architecture; the gate reuses the full
+//! [`ActResidual`] policy, so ReSiLU2's 2-bit codes work here too).
+//!
+//! Residuals, in push order: the shared input `x` (saved once for
+//! W₁/W₂, or shared with an MS norm's x̂), the two LoRA `u`s, the gate
+//! activation residual, both gate-multiply operands (`s = h(u₁)` and
+//! `u₃` — the paper's Figure 6 "+2·R·M" term), and the down
+//! projection's input `p = s ⊙ u₃`. Module names follow the memmodel's
+//! llama block (`fc1` = gate, `fc2` = up, `fc3` = down), which is what
+//! lets the analytical cross-check match byte-for-byte.
+
+use anyhow::Result;
+
+use super::super::kernels::{add_inplace, mul_into};
+use super::super::model::NetCfg;
+use super::activation::ActResidual;
+use super::linear::{need_x, LinOp};
+use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+
+/// Gated MLP over a `[B·N, C]` running activation.
+pub struct SwiGlu {
+    gate: LinOp,
+    up: LinOp,
+    down: LinOp,
+    act: ActResidual,
+    s_slot: SlotId,
+    u3_slot: SlotId,
+    x_slot: Option<SlotId>,
+    rows: usize,
+    m: usize,
+}
+
+impl SwiGlu {
+    /// Build the gated MLP for module path `mn` (e.g. `block0.mlp`).
+    /// `shared_x` is the MS norm's x̂ slot, when one exists.
+    pub fn new(cfg: &NetCfg, reg: &mut ParamReg, comp: &mut Composer,
+               mn: &str, lead: &[usize],
+               shared_x: Option<SlotId>) -> SwiGlu {
+        let c = cfg.dim;
+        let m = cfg.hidden();
+        let needed = need_x(cfg, "fc1") || need_x(cfg, "fc2");
+        let mut xshape = lead.to_vec();
+        xshape.push(c);
+        let (x_slot, x_ext) = match shared_x {
+            Some(s) => (None, Some(s)),
+            None if needed => {
+                let s = comp.slot_f32(&format!("{mn}.fc1"),
+                                      Kind::LinearInput, &xshape);
+                (Some(s), Some(s))
+            }
+            None => (None, None),
+        };
+        let gate = LinOp::new(cfg, reg, comp, &format!("{mn}.fc1"),
+                              "fc1", c, m, lead, x_ext);
+        let up = LinOp::new(cfg, reg, comp, &format!("{mn}.fc2"), "fc2",
+                            c, m, lead, x_ext);
+        let act =
+            ActResidual::mint(cfg, comp, &format!("{mn}.act"), lead, m);
+        let mut mshape = lead.to_vec();
+        mshape.push(m);
+        let s_slot = comp.slot_f32(mn, Kind::GateOperand, &mshape);
+        let u3_slot = comp.slot_f32(mn, Kind::GateOperand, &mshape);
+        let down = LinOp::new(cfg, reg, comp, &format!("{mn}.fc3"),
+                              "fc3", m, c, lead, None);
+        SwiGlu {
+            gate,
+            up,
+            down,
+            act,
+            s_slot,
+            u3_slot,
+            x_slot,
+            rows: lead.iter().product(),
+            m,
+        }
+    }
+}
+
+impl Layer for SwiGlu {
+    fn name(&self) -> &'static str {
+        "SwiGlu"
+    }
+
+    fn fwd(&self, ctx: &mut FwdCtx, tape: &mut TapeWriter) -> Result<()> {
+        let n = self.rows * self.m;
+        if let Some(slot) = self.x_slot {
+            tape.push_f32(ctx.arena, slot, &ctx.h)?;
+        }
+        let u1 =
+            self.gate.fwd(ctx.arena, ctx.params, tape, &ctx.h, self.rows)?;
+        let u3 =
+            self.up.fwd(ctx.arena, ctx.params, tape, &ctx.h, self.rows)?;
+        let mut s = ctx.arena.take_f32(n);
+        self.act.fwd_into(&mut s, &u1);
+        self.act.push(ctx.arena, tape, &u1)?;
+        tape.push_f32(ctx.arena, self.s_slot, &s)?;
+        tape.push_f32(ctx.arena, self.u3_slot, &u3)?;
+        ctx.arena.put_f32(u1);
+        let mut p = ctx.arena.take_f32(n);
+        mul_into(&mut p, &s, &u3);
+        ctx.arena.put_f32(s);
+        ctx.arena.put_f32(u3);
+        let y =
+            self.down.fwd(ctx.arena, ctx.params, tape, &p, self.rows)?;
+        ctx.arena.put_f32(p);
+        ctx.set_h(y);
+        Ok(())
+    }
+
+    fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
+        let n = self.rows * self.m;
+        let dy = std::mem::take(&mut ctx.dh);
+        let dp = self.down.bwd(ctx, tape, &dy, self.rows)?;
+        ctx.arena.put_f32(dy);
+        let u3 = tape.pop(self.u3_slot)?;
+        let s = tape.pop(self.s_slot)?;
+        let saved = self.act.pop(tape)?;
+        // product rule: ds = dp ⊙ u₃, du₃ = dp ⊙ s, du₁ = ds ∘ h'(u₁)
+        let mut ds = ctx.arena.take_f32(n);
+        mul_into(&mut ds, &dp, u3.as_f32());
+        let mut du3 = ctx.arena.take_f32(n);
+        mul_into(&mut du3, &dp, s.as_f32());
+        ctx.arena.put_f32(dp);
+        let mut du1 = ctx.arena.take_f32(n);
+        self.act.bwd_into(&mut du1, saved, &ds);
+        ctx.arena.put_f32(ds);
+        // reverse push order: up's slots unwind before gate's
+        let mut dx = self.up.bwd(ctx, tape, &du3, self.rows)?;
+        ctx.arena.put_f32(du3);
+        let dgx = self.gate.bwd(ctx, tape, &du1, self.rows)?;
+        ctx.arena.put_f32(du1);
+        add_inplace(&mut dx, &dgx);
+        ctx.arena.put_f32(dgx);
+        if let Some(slot) = self.x_slot {
+            tape.pop(slot)?;
+        }
+        ctx.dh = dx;
+        Ok(())
+    }
+}

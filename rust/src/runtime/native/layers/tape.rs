@@ -1,0 +1,360 @@
+//! The typed residual tape: slots are **minted at model build time**
+//! (one [`SlotId`] per residual the composition will save), the forward
+//! pass pushes them strictly in mint order through a [`TapeWriter`], and
+//! the backward pass consumes them strictly in reverse through a
+//! [`TapeReader`].
+//!
+//! Because a layer stores the *same* `SlotId` fields that drive both its
+//! `fwd` pushes and its `bwd` pops, push/pop symmetry is enforced by
+//! construction: a desynchronized layer cannot silently mis-slice the
+//! residual stream — the writer/reader cursors reject any out-of-order
+//! slot with a named error. The flattened slot list (the *tape schema*)
+//! is therefore the single source of truth for the residual ABI: the
+//! manifest residual section, the measured-memory accounting, and the
+//! fwd output arity are all derived from it (see `spec::build_manifest`).
+
+use anyhow::{ensure, Result};
+
+use super::super::arena::Arena;
+use crate::runtime::tensor::{DType, Tensor};
+
+/// Residual category — the Figure 2 breakdown axis. String forms match
+/// the manifest `kind` field emitted by the Python exporter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Normalized input x̂ of a plain LN/RMS norm.
+    NormInput,
+    /// Shared x̂ of an MS-LN/MS-RMS norm (also serves the next linears).
+    NormShared,
+    /// Per-row 1/σ (LN) or 1/rms (RMSNorm).
+    NormStat,
+    /// Input a linear needs for its weight/LoRA-A gradient.
+    LinearInput,
+    /// LoRA intermediate `u = x·Aᵀ`.
+    LoraU,
+    /// Saved q/k/v (attention probabilities are recomputed in bwd).
+    AttnQkv,
+    /// Full-precision pre-activation (exact GELU/SiLU backward).
+    ActFull,
+    /// Packed activation codes (2-bit ReGELU2/ReSiLU2, 1-bit ReLU).
+    ActCodes,
+    /// SwiGLU gate-multiply operand (`act(u₁)` or `u₃` — both factors
+    /// are needed by the product rule).
+    GateOperand,
+    /// Classifier/LM head input (pooled or per-token).
+    HeadInput,
+    /// Logits kept for the CE backward.
+    Logits,
+    /// Gradient-checkpointing block input (everything else recomputed).
+    CkptInput,
+}
+
+impl Kind {
+    /// Manifest string form.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::NormInput => "norm_input",
+            Kind::NormShared => "norm_shared",
+            Kind::NormStat => "norm_stat",
+            Kind::LinearInput => "linear_input",
+            Kind::LoraU => "lora_u",
+            Kind::AttnQkv => "attn_qkv",
+            Kind::ActFull => "act_full",
+            Kind::ActCodes => "act_codes",
+            Kind::GateOperand => "gate_operand",
+            Kind::HeadInput => "head_input",
+            Kind::Logits => "logits",
+            Kind::CkptInput => "ckpt_input",
+        }
+    }
+}
+
+/// A tape slot token. Minted by [`Composer::slot`] in forward push
+/// order; its index doubles as the residual's position in the fwd
+/// output list, so `reader.get(slot)` is O(1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId(pub(crate) usize);
+
+impl SlotId {
+    /// Position of this slot's tensor in the residual list.
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Static description of one residual: everything the manifest needs,
+/// known at build time (shapes are fixed by the config).
+#[derive(Debug, Clone)]
+pub struct SlotInfo {
+    /// Producing module path (e.g. `block0.attn.q`).
+    pub module: String,
+    /// Residual category.
+    pub kind: Kind,
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Storage dtype.
+    pub dtype: DType,
+    /// Effective bits per *logical* element (2.0 for 2-bit codes, 1.0
+    /// for 1-bit sign codes, 8·dtype size otherwise).
+    pub bits_per_elem: f64,
+}
+
+impl SlotInfo {
+    /// Stored bytes of this residual.
+    pub fn bytes(&self) -> u64 {
+        (self.shape.iter().product::<usize>() * self.dtype.size()) as u64
+    }
+}
+
+/// Mints [`SlotId`]s at build time. One composer per tape: the model has
+/// one for its top-level schema, and every [`CkptBlock`] has a private
+/// one for the inner residuals it recomputes instead of storing.
+///
+/// [`CkptBlock`]: super::CkptBlock
+#[derive(Default)]
+pub struct Composer {
+    slots: Vec<SlotInfo>,
+}
+
+impl Composer {
+    /// An empty composer.
+    pub fn new() -> Composer {
+        Composer::default()
+    }
+
+    /// Mint the next slot. Layers must later push slots in exactly the
+    /// mint order — the writer enforces it.
+    pub fn slot(&mut self, module: &str, kind: Kind, shape: &[usize],
+                dtype: DType, bits_per_elem: f64) -> SlotId {
+        self.slots.push(SlotInfo {
+            module: module.to_string(),
+            kind,
+            shape: shape.to_vec(),
+            dtype,
+            bits_per_elem,
+        });
+        SlotId(self.slots.len() - 1)
+    }
+
+    /// f32 slot with the default 32 bits/elem.
+    pub fn slot_f32(&mut self, module: &str, kind: Kind,
+                    shape: &[usize]) -> SlotId {
+        self.slot(module, kind, shape, DType::F32, 32.0)
+    }
+
+    /// The finished schema, in push order.
+    pub fn finish(self) -> Vec<SlotInfo> {
+        self.slots
+    }
+}
+
+/// Forward-pass tape: collects residual tensors, checking every push
+/// against the schema (order, shape, dtype).
+pub struct TapeWriter<'a> {
+    schema: &'a [SlotInfo],
+    out: Vec<Tensor>,
+}
+
+impl<'a> TapeWriter<'a> {
+    /// A writer expecting exactly the slots of `schema`, in order.
+    pub fn new(schema: &'a [SlotInfo]) -> TapeWriter<'a> {
+        TapeWriter { schema, out: Vec::with_capacity(schema.len()) }
+    }
+
+    fn expect(&self, slot: SlotId) -> Result<&'a SlotInfo> {
+        ensure!(
+            slot.0 == self.out.len() && slot.0 < self.schema.len(),
+            "tape push out of order: slot #{} ({}) pushed at position \
+             {} of {}",
+            slot.0,
+            self.schema
+                .get(slot.0)
+                .map(|s| s.module.as_str())
+                .unwrap_or("<foreign slot>"),
+            self.out.len(),
+            self.schema.len()
+        );
+        Ok(&self.schema[slot.0])
+    }
+
+    /// Push an f32 residual; the payload is copied into an arena-backed
+    /// tensor.
+    pub fn push_f32(&mut self, arena: &mut Arena, slot: SlotId,
+                    v: &[f32]) -> Result<()> {
+        let info = self.expect(slot)?;
+        ensure!(info.dtype == DType::F32
+                    && info.shape.iter().product::<usize>() == v.len(),
+                "slot {}.{} expects f32 shape {:?}, got {} elems",
+                info.module, info.kind.as_str(), info.shape, v.len());
+        self.out.push(arena.tensor_from_f32(&info.shape, v));
+        Ok(())
+    }
+
+    /// Push a u8 residual, taking ownership of an arena byte buffer
+    /// (packed code planes are encoded straight into their payload).
+    pub fn push_u8(&mut self, slot: SlotId, data: Vec<u8>) -> Result<()> {
+        let info = self.expect(slot)?;
+        ensure!(info.dtype == DType::U8
+                    && info.shape.iter().product::<usize>() == data.len(),
+                "slot {}.{} expects u8 shape {:?}, got {} bytes",
+                info.module, info.kind.as_str(), info.shape, data.len());
+        self.out.push(Tensor {
+            shape: info.shape.clone(),
+            dtype: DType::U8,
+            data,
+        });
+        Ok(())
+    }
+
+    /// Finish the pass; errors unless every slot was pushed.
+    pub fn finish(self) -> Result<Vec<Tensor>> {
+        ensure!(
+            self.out.len() == self.schema.len(),
+            "forward pushed {} of {} tape slots",
+            self.out.len(),
+            self.schema.len()
+        );
+        Ok(self.out)
+    }
+}
+
+/// Backward-pass tape over the residual list `fwd` produced: pops in
+/// exact reverse push order (checked), with random-access [`get`] for
+/// slots another layer owns (MS-norm sharing, attention's shared
+/// linear input).
+///
+/// [`get`]: TapeReader::get
+pub struct TapeReader<'a> {
+    schema: &'a [SlotInfo],
+    res: &'a [Tensor],
+    top: usize,
+}
+
+impl<'a> TapeReader<'a> {
+    /// A reader over `res`, which must match `schema` in arity.
+    pub fn new(schema: &'a [SlotInfo],
+               res: &'a [Tensor]) -> Result<TapeReader<'a>> {
+        ensure!(
+            res.len() == schema.len(),
+            "residual list has {} tensors, tape schema has {}",
+            res.len(),
+            schema.len()
+        );
+        Ok(TapeReader { schema, res, top: res.len() })
+    }
+
+    /// Consume `slot`, which must be the next one in reverse order.
+    pub fn pop(&mut self, slot: SlotId) -> Result<&'a Tensor> {
+        ensure!(self.top > 0, "residual tape underflow");
+        ensure!(
+            slot.0 == self.top - 1,
+            "tape pop out of order: slot #{} ({}) popped at top {}",
+            slot.0,
+            self.schema
+                .get(slot.0)
+                .map(|s| s.module.as_str())
+                .unwrap_or("<foreign slot>"),
+            self.top
+        );
+        let info = &self.schema[slot.0];
+        self.top -= 1;
+        let t = &self.res[slot.0];
+        ensure!(t.dtype == info.dtype && t.shape == info.shape,
+                "residual {}.{} does not match its slot: {:?} vs {:?}",
+                info.module, info.kind.as_str(), t.shape, info.shape);
+        Ok(t)
+    }
+
+    /// Read a not-yet-popped slot without consuming it (shared
+    /// residuals: the owner pops it later, in its own reverse position).
+    pub fn get(&self, slot: SlotId) -> Result<&'a Tensor> {
+        ensure!(
+            slot.0 < self.top,
+            "tape get of popped or foreign slot #{} ({})",
+            slot.0,
+            self.schema
+                .get(slot.0)
+                .map(|s| s.module.as_str())
+                .unwrap_or("<foreign slot>")
+        );
+        Ok(&self.res[slot.0])
+    }
+
+    /// Finish the pass; errors unless every slot was consumed.
+    pub fn finish(self) -> Result<()> {
+        ensure!(self.top == 0,
+                "residual tape not fully consumed: {} slots left",
+                self.top);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema2() -> Vec<SlotInfo> {
+        let mut c = Composer::new();
+        c.slot_f32("a", Kind::NormInput, &[2, 2]);
+        c.slot("b", Kind::ActCodes, &[4], DType::U8, 2.0);
+        c.finish()
+    }
+
+    #[test]
+    fn push_pop_roundtrip_in_order() {
+        let schema = schema2();
+        let mut arena = Arena::new();
+        let mut w = TapeWriter::new(&schema);
+        w.push_f32(&mut arena, SlotId(0), &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        w.push_u8(SlotId(1), vec![9, 8, 7, 6]).unwrap();
+        let res = w.finish().unwrap();
+        let mut r = TapeReader::new(&schema, &res).unwrap();
+        assert_eq!(r.get(SlotId(0)).unwrap().as_f32()[3], 4.0);
+        assert_eq!(r.pop(SlotId(1)).unwrap().data, vec![9, 8, 7, 6]);
+        assert_eq!(r.pop(SlotId(0)).unwrap().shape, vec![2, 2]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_push_is_rejected() {
+        let schema = schema2();
+        let mut w = TapeWriter::new(&schema);
+        assert!(w.push_u8(SlotId(1), vec![0; 4]).is_err());
+    }
+
+    #[test]
+    fn out_of_order_pop_and_stale_get_are_rejected() {
+        let schema = schema2();
+        let mut arena = Arena::new();
+        let mut w = TapeWriter::new(&schema);
+        w.push_f32(&mut arena, SlotId(0), &[0.0; 4]).unwrap();
+        w.push_u8(SlotId(1), vec![0; 4]).unwrap();
+        let res = w.finish().unwrap();
+        let mut r = TapeReader::new(&schema, &res).unwrap();
+        assert!(r.pop(SlotId(0)).is_err(), "must pop slot 1 first");
+        r.pop(SlotId(1)).unwrap();
+        assert!(r.get(SlotId(1)).is_err(), "slot 1 is consumed");
+        r.pop(SlotId(0)).unwrap();
+    }
+
+    #[test]
+    fn unfinished_passes_are_rejected() {
+        let schema = schema2();
+        let w = TapeWriter::new(&schema);
+        assert!(w.finish().is_err());
+        let res = vec![
+            Tensor::from_f32(&[2, 2], &[0.0; 4]),
+            Tensor::from_u8(&[4], &[0; 4]),
+        ];
+        let r = TapeReader::new(&schema, &res).unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let schema = schema2();
+        let mut arena = Arena::new();
+        let mut w = TapeWriter::new(&schema);
+        assert!(w.push_f32(&mut arena, SlotId(0), &[0.0; 3]).is_err());
+    }
+}

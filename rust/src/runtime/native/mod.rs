@@ -1,18 +1,21 @@
 //! The in-tree pure-Rust CPU backend (default).
 //!
 //! Executes the fine-tuning step directly from the manifest: the
-//! [`model`] module builds the transformer and runs the decoupled
-//! forward/backward passes, [`kernels`] provides the matmul / attention
-//! / norm / activation primitives on top of the cache-blocked
-//! panel-packed [`gemm`] engine, [`pool`] fans the hot loops out over a
-//! persistent worker pool, [`arena`] pools the step-scoped activation
-//! buffers, and [`spec`] parses preset names and synthesizes manifests
-//! by dry-running the model — so `ambp train --preset
-//! vitt_loraqv_regelu2_msln` works with zero build-time artifacts.
+//! [`model`] module assembles the transformer as a composition of
+//! [`layers`] (each a decoupled fwd/bwd pair against the typed residual
+//! tape, whose slot list *is* the residual ABI), [`kernels`] provides
+//! the matmul / attention / norm / activation primitives on top of the
+//! cache-blocked panel-packed [`gemm`] engine, [`pool`] fans the hot
+//! loops out over a persistent worker pool, [`arena`] pools the
+//! step-scoped activation buffers, and [`spec`] parses preset names and
+//! synthesizes manifests from the derived tape schema — so `ambp train
+//! --preset vitt_loraqv_regelu2_msln` works with zero build-time
+//! artifacts.
 
 pub mod arena;
 pub mod gemm;
 pub mod kernels;
+pub mod layers;
 pub mod model;
 pub mod pool;
 pub mod spec;
@@ -25,6 +28,7 @@ use anyhow::Result;
 use crate::runtime::{Artifact, Backend, Executor, FwdOut, Tensor};
 
 pub use arena::{Arena, ArenaStats};
+pub use layers::Profiler;
 pub use model::{Act, Arch, Model, NetCfg, Norm, Tuning};
 
 /// The native CPU backend (unit struct — all state lives in artifacts).
@@ -75,13 +79,9 @@ impl Executor for NativeExec {
                y: &Tensor) -> Result<FwdOut> {
         let mut arena =
             self.arena.lock().unwrap_or_else(|e| e.into_inner());
-        let (loss, metric, saves) =
+        let (loss, metric, residuals) =
             self.model.forward_in(&mut arena, params, x, y)?;
-        Ok(FwdOut {
-            loss,
-            metric,
-            residuals: saves.into_iter().map(|s| s.tensor).collect(),
-        })
+        Ok(FwdOut { loss, metric, residuals })
     }
 
     fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,

@@ -1,35 +1,32 @@
-//! The native backend's transformer: built directly from a manifest
-//! config, with *manually decoupled* forward/backward passes.
+//! The native backend's transformer, assembled from the composable
+//! [`layers`](super::layers) API: `Model::build` registers parameters
+//! and mints residual-tape slots while composing a [`Seq`] of `Layer`
+//! objects per block, so the residual ABI (DESIGN.md §2.2) is *derived*
+//! from the composition — the manifest residual section, the measured
+//! memory accounting, and the fwd/bwd push/pop symmetry all come from
+//! the same slot list, enforced by the tape cursors.
 //!
-//! The forward pass saves exactly the residual set the paper's tape
-//! stores (see DESIGN.md §2.2): per block, the normalized input (shared
-//! with the following linears under MS-LN/MS-RMSNorm), the per-row norm
-//! statistic, q/k/v (attention probabilities are recomputed in backward),
-//! the linear inputs that weight/LoRA gradients need, and the activation
-//! residual — a full-precision pre-activation for GELU/SiLU, or a 2-bit
-//! packed code tensor for ReGELU2/ReSiLU2 (Prop 4.3: the backward slope
-//! is one of 4 values, so 2 bits suffice).
+//! Block structure (pre-norm): `h += Attention(Norm(h))` then
+//! `h += Mlp(Norm(h))`, where the MLP is `fc1 → act → fc2` or, with
+//! `swiglu`, the gated LLaMA form (plus RoPE inside the attention and
+//! no learned positions). With `ckpt`, each half is wrapped in a
+//! [`CkptBlock`] that stores only the half's input and recomputes the
+//! inner residuals in backward.
 //!
-//! The backward pass consumes the residual list in exact reverse push
-//! order; the gradient math was cross-checked against finite differences
-//! for every (arch × tuning × norm) combination.
-//!
-//! Every intermediate activation, backward scratch buffer, and residual
-//! payload is taken from (and returned to) the step-scoped
-//! [`Arena`] the executor owns, so a steady-state train step performs no
-//! activation allocations — see `arena.rs`.
+//! The gradient math is cross-checked against finite differences for
+//! every (arch × tuning × act × norm [× swiglu × ckpt]) combination;
+//! the full grid is pinned by `tests/tape_grid.rs`.
 
 use anyhow::{bail, ensure, Result};
 
 use super::arena::Arena;
-use super::kernels::{
-    add_bias, add_inplace, attn_bwd_into, attn_fwd_into, colsum_into,
-    matmul_nn_acc_into, matmul_nn_into, matmul_nt_acc_into,
-    matmul_nt_into, matmul_tn_into, norm_bwd_into, norm_fwd_into,
-    softmax_ce, softmax_ce_grad_into, AttnDims,
+use super::layers::{
+    Activation, Attention, CkptBlock, Composer, Embed, Head, Layer,
+    Linear, Norm as NormLayer, ParamReg, Profiler, Residual, Seq,
+    SlotInfo, SwiGlu, TapeReader, TapeWriter,
 };
+use super::layers::{BwdCtx, FwdCtx};
 use crate::coeffs::funcs::{ReluComb, PAPER_GELU, PAPER_SILU};
-use crate::packing;
 use crate::runtime::manifest::ParamInfo;
 use crate::runtime::tensor::{DType, Tensor};
 use crate::util::rng::Rng;
@@ -75,6 +72,26 @@ pub enum Act {
     Silu,
     /// Exact SiLU fwd, approximate bwd from 2-bit codes (ReSiLU2).
     ReSilu2,
+    /// ReLU: exact bwd from 1-bit sign codes (Table 7's ReLU column).
+    Relu,
+}
+
+impl Act {
+    /// Whether the exact forward/backward uses the GELU primitives.
+    pub fn is_gelu(self) -> bool {
+        matches!(self, Act::Gelu | Act::ReGelu2)
+    }
+
+    /// The 3-ReLU combination whose thresholds/slopes the 2-bit codecs
+    /// use. Panics for [`Act::Relu`], which has no combination (its
+    /// 1-bit codes need only the sign).
+    pub fn comb(self) -> &'static ReluComb {
+        match self {
+            Act::Gelu | Act::ReGelu2 => &PAPER_GELU,
+            Act::Silu | Act::ReSilu2 => &PAPER_SILU,
+            Act::Relu => panic!("relu has no 3-ReLU combination"),
+        }
+    }
 }
 
 /// Normalization variant.
@@ -123,6 +140,12 @@ pub struct NetCfg {
     pub act: Act,
     /// Normalization variant.
     pub norm: Norm,
+    /// SwiGLU gated MLP + RoPE attention (the real LLaMA block shape;
+    /// LLaMA arch only). Replaces the learned position table.
+    pub swiglu: bool,
+    /// Gradient checkpointing: store one input per block half,
+    /// recompute the rest in bwd.
+    pub ckpt: bool,
 }
 
 impl NetCfg {
@@ -131,43 +154,50 @@ impl NetCfg {
         (self.dim as f64 * self.mlp_ratio) as usize
     }
 
-    fn is_ms(&self) -> bool {
+    /// Memory-sharing norm variant?
+    pub fn is_ms(&self) -> bool {
         matches!(self.norm, Norm::MsLn | Norm::MsRms)
     }
 
-    fn is_rms(&self) -> bool {
+    /// RMS-family norm (single stat, no mean subtraction)?
+    pub fn is_rms(&self) -> bool {
         matches!(self.norm, Norm::Rms | Norm::MsRms)
     }
 
-    fn has_affine(&self) -> bool {
+    /// Does the norm own an affine transform (plain variants)?
+    pub fn has_affine(&self) -> bool {
         matches!(self.norm, Norm::Ln | Norm::Rms)
     }
 
-    fn use_bias(&self) -> bool {
+    /// Linears carry biases (everything but LLaMA).
+    pub fn use_bias(&self) -> bool {
         self.arch != Arch::Llama
     }
 
-    fn causal(&self) -> bool {
+    /// Causal attention mask (LLaMA).
+    pub fn causal(&self) -> bool {
         self.arch == Arch::Llama
     }
 
-    fn act_exact_bwd(&self) -> bool {
-        matches!(self.act, Act::Gelu | Act::Silu)
+    /// Rotary position embedding (tied to the `swiglu` axis: the real
+    /// LLaMA block shape).
+    pub fn rope(&self) -> bool {
+        self.swiglu
     }
 
-    fn is_gelu(&self) -> bool {
-        matches!(self.act, Act::Gelu | Act::ReGelu2)
+    /// Full fine-tuning?
+    pub fn tuning_full(&self) -> bool {
+        self.tuning == Tuning::Full
     }
 
-    fn comb(&self) -> &'static ReluComb {
-        if self.is_gelu() { &PAPER_GELU } else { &PAPER_SILU }
-    }
-
-    fn lora_fa(&self) -> bool {
+    /// LoRA-FA (A frozen) variant?
+    pub fn lora_fa(&self) -> bool {
         matches!(self.tuning, Tuning::LoraFaQv | Tuning::LoraFaAll)
     }
 
-    fn lora_on(&self, which: &str) -> bool {
+    /// Does linear `which` (`"q"`, `"v"`, `"fc1"`, …) carry a LoRA
+    /// adapter under this tuning?
+    pub fn lora_on(&self, which: &str) -> bool {
         match self.tuning {
             Tuning::LoraQv | Tuning::LoraFaQv => which == "q" || which == "v",
             Tuning::LoraAll | Tuning::LoraFaAll => true,
@@ -175,7 +205,8 @@ impl NetCfg {
         }
     }
 
-    fn head_trainable(&self) -> bool {
+    /// Does the head train?
+    pub fn head_trainable(&self) -> bool {
         match self.arch {
             Arch::Llama => self.tuning == Tuning::Full,
             _ => true,
@@ -193,6 +224,19 @@ impl NetCfg {
         ensure!(self.hidden() % 4 == 0,
                 "mlp hidden {} must be a multiple of 4 (2-bit packing)",
                 self.hidden());
+        if self.act == Act::Relu {
+            ensure!(self.hidden() % 8 == 0,
+                    "mlp hidden {} must be a multiple of 8 (1-bit relu \
+                     packing)",
+                    self.hidden());
+        }
+        if self.swiglu {
+            ensure!(self.arch == Arch::Llama,
+                    "swiglu/rope is a llama-family axis");
+            ensure!((self.dim / self.n_heads) % 2 == 0,
+                    "rope needs an even head dim, got {}",
+                    self.dim / self.n_heads);
+        }
         match self.arch {
             Arch::Vit => ensure!(self.patch_dim > 0 && self.n_classes > 1,
                                  "vit needs patch_dim and n_classes"),
@@ -228,8 +272,10 @@ impl NetCfg {
             "regelu2" => Act::ReGelu2,
             "silu" => Act::Silu,
             "resilu2" => Act::ReSilu2,
+            "relu" => Act::Relu,
             other => bail!("unsupported activation {other:?} (native \
-                            backend supports gelu|regelu2|silu|resilu2)"),
+                            backend supports \
+                            gelu|regelu2|silu|resilu2|relu)"),
         })
     }
 
@@ -256,213 +302,109 @@ impl NetCfg {
     }
 }
 
-/// One residual pushed by the forward pass (a manifest `ResInfo` minus
-/// the derived byte counts).
-pub struct SavedRes {
-    /// Producing module path (e.g. `block0.attn.q`).
-    pub module: String,
-    /// Residual kind (`norm_input`, `attn_qkv`, `act_codes`, …).
-    pub kind: &'static str,
-    /// The saved tensor.
-    pub tensor: Tensor,
-}
-
-struct LinDef {
-    name: String,
-    din: usize,
-    dout: usize,
-    w: usize,
-    b: Option<usize>,
-    la: Option<usize>,
-    lb: Option<usize>,
-    fa: bool,
-    base_train: bool,
-}
-
-impl LinDef {
-    fn need_x(&self) -> bool {
-        self.base_train || (self.la.is_some() && !self.fa)
-    }
-}
-
-struct NormDef {
-    name: String,
-    g: Option<usize>,
-    b: Option<usize>,
-}
-
-struct BlockDef {
-    // precomputed residual module names ("block{i}.attn.qkv",
-    // "block{i}.mlp.act") so the per-step save path does not format!
-    qkv_name: String,
-    act_name: String,
-    norm1: NormDef,
-    q: LinDef,
-    k: LinDef,
-    v: LinDef,
-    proj: LinDef,
-    norm2: NormDef,
-    fc1: LinDef,
-    fc2: LinDef,
-}
-
-/// A built native model: the parameter layout plus fwd/bwd execution.
+/// A built native model: the parameter layout, the derived residual
+/// tape schema, and the layer composition that executes fwd/bwd.
 pub struct Model {
     /// The configuration the layout was derived from.
     pub cfg: NetCfg,
     /// Parameter layout in manifest order.
     pub infos: Vec<ParamInfo>,
-    embed_w: Option<usize>,
-    embed_b: Option<usize>,
-    tok_e: Option<usize>,
-    pos: usize,
-    blocks: Vec<BlockDef>,
-    normf: NormDef,
-    head: LinDef,
-}
-
-struct Reg {
-    infos: Vec<ParamInfo>,
-}
-
-impl Reg {
-    fn add(&mut self, name: String, shape: Vec<usize>,
-           trainable: bool) -> usize {
-        self.infos.push(ParamInfo { name, shape, trainable });
-        self.infos.len() - 1
-    }
+    seq: Seq,
+    schema: Vec<SlotInfo>,
 }
 
 impl Model {
-    /// Derive the parameter layout from a config.
+    /// Compose the layer stack for a config, deriving the parameter
+    /// layout and the residual tape schema as a side effect of the
+    /// composition.
     pub fn build(cfg: NetCfg) -> Result<Model> {
         cfg.validate()?;
-        let c = cfg.dim;
+        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
         let m = cfg.hidden();
-        let r = cfg.lora_rank;
-        let full = cfg.tuning == Tuning::Full;
-        let mut reg = Reg { infos: Vec::new() };
-
-        let (embed_w, embed_b, tok_e) = match cfg.arch {
-            Arch::Vit => (
-                Some(reg.add("embed.proj.W".into(),
-                             vec![c, cfg.patch_dim], full)),
-                Some(reg.add("embed.proj.b".into(), vec![c], full)),
-                None,
-            ),
-            _ => (
-                None,
-                None,
-                Some(reg.add("embed.tok.E".into(), vec![cfg.vocab, c],
-                             full)),
-            ),
-        };
-        let pos = reg.add("embed.pos".into(), vec![cfg.n_tokens, c], full);
-
-        let add_norm = |reg: &mut Reg, name: &str| -> NormDef {
-            if cfg.has_affine() {
-                let g = reg.add(format!("{name}.w"), vec![c], full);
-                let b = if cfg.is_rms() {
-                    None
-                } else {
-                    Some(reg.add(format!("{name}.b"), vec![c], full))
-                };
-                NormDef { name: name.to_string(), g: Some(g), b }
-            } else {
-                NormDef { name: name.to_string(), g: None, b: None }
-            }
-        };
-        let add_lin = |reg: &mut Reg, name: &str, which: &str, din: usize,
-                       dout: usize| -> LinDef {
-            let w = reg.add(format!("{name}.W"), vec![dout, din], full);
-            let b = if cfg.use_bias() {
-                Some(reg.add(format!("{name}.b"), vec![dout], full))
-            } else {
-                None
-            };
-            let (la, lb) = if cfg.lora_on(which) {
-                (
-                    Some(reg.add(format!("{name}.lora_a"), vec![r, din],
-                                 !cfg.lora_fa())),
-                    Some(reg.add(format!("{name}.lora_b"), vec![dout, r],
-                                 true)),
-                )
-            } else {
-                (None, None)
-            };
-            LinDef {
-                name: name.to_string(),
-                din,
-                dout,
-                w,
-                b,
-                la,
-                lb,
-                fa: cfg.lora_fa(),
-                base_train: full,
-            }
-        };
-
-        let mut blocks = Vec::with_capacity(cfg.depth);
+        let lead = [bsz, n];
+        let mut reg = ParamReg::new();
+        let mut comp = Composer::new();
+        let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+        layers.push(Box::new(Embed::new(&cfg, &mut reg)));
         for i in 0..cfg.depth {
             let an = format!("block{i}.attn");
             let mn = format!("block{i}.mlp");
-            let norm1 = add_norm(&mut reg, &format!("{an}.norm"));
-            let q = add_lin(&mut reg, &format!("{an}.q"), "q", c, c);
-            let k = add_lin(&mut reg, &format!("{an}.k"), "k", c, c);
-            let v = add_lin(&mut reg, &format!("{an}.v"), "v", c, c);
-            let proj =
-                add_lin(&mut reg, &format!("{an}.proj"), "proj", c, c);
-            let norm2 = add_norm(&mut reg, &format!("{mn}.norm"));
-            let fc1 = add_lin(&mut reg, &format!("{mn}.fc1"), "fc1", c, m);
-            let fc2 = add_lin(&mut reg, &format!("{mn}.fc2"), "fc2", m, c);
-            blocks.push(BlockDef {
-                qkv_name: format!("{an}.qkv"),
-                act_name: format!("{mn}.act"),
-                norm1,
-                q,
-                k,
-                v,
-                proj,
-                norm2,
-                fc1,
-                fc2,
-            });
+            // ---- attention half: h += Attn(Norm(h)) ----
+            {
+                let half = |reg: &mut ParamReg, comp: &mut Composer| {
+                    let norm = NormLayer::new(&cfg, reg, comp,
+                                              &format!("{an}.norm"),
+                                              &lead);
+                    let shared = norm.shared_slot();
+                    let attn = Attention::new(&cfg, reg, comp, &an,
+                                              &lead, shared);
+                    Seq::new(vec![Box::new(norm), Box::new(attn)])
+                };
+                if cfg.ckpt {
+                    let mut inner = Composer::new();
+                    let seq = half(&mut reg, &mut inner);
+                    layers.push(Box::new(CkptBlock::new(
+                        &mut comp, &an, &[bsz, n, c],
+                        Box::new(Residual::new(seq)), inner.finish())));
+                } else {
+                    layers.push(Box::new(Residual::new(
+                        half(&mut reg, &mut comp))));
+                }
+            }
+            // ---- mlp half: h += Mlp(Norm(h)) ----
+            {
+                let half = |reg: &mut ParamReg, comp: &mut Composer| {
+                    let norm = NormLayer::new(&cfg, reg, comp,
+                                              &format!("{mn}.norm"),
+                                              &lead);
+                    let shared = norm.shared_slot();
+                    let mut inner: Vec<Box<dyn Layer>> =
+                        vec![Box::new(norm)];
+                    if cfg.swiglu {
+                        inner.push(Box::new(SwiGlu::new(&cfg, reg, comp,
+                                                        &mn, &lead,
+                                                        shared)));
+                    } else {
+                        inner.push(Box::new(Linear::new(
+                            &cfg, reg, comp, &format!("{mn}.fc1"), "fc1",
+                            c, m, &lead, shared)));
+                        inner.push(Box::new(Activation::new(
+                            &cfg, comp, &format!("{mn}.act"), &lead, m)));
+                        inner.push(Box::new(Linear::new(
+                            &cfg, reg, comp, &format!("{mn}.fc2"), "fc2",
+                            m, c, &lead, None)));
+                    }
+                    Seq::new(inner)
+                };
+                if cfg.ckpt {
+                    let mut inner = Composer::new();
+                    let seq = half(&mut reg, &mut inner);
+                    layers.push(Box::new(CkptBlock::new(
+                        &mut comp, &mn, &[bsz, n, c],
+                        Box::new(Residual::new(seq)), inner.finish())));
+                } else {
+                    layers.push(Box::new(Residual::new(
+                        half(&mut reg, &mut comp))));
+                }
+            }
         }
-        let normf = add_norm(&mut reg, "head.norm");
-        let head_out = match cfg.arch {
-            Arch::Llama => cfg.vocab,
-            _ => cfg.n_classes,
-        };
-        let ht = cfg.head_trainable();
-        let hw = reg.add("head.fc.W".into(), vec![head_out, c], ht);
-        let hb = if cfg.use_bias() {
-            Some(reg.add("head.fc.b".into(), vec![head_out], ht))
-        } else {
-            None
-        };
-        let head = LinDef {
-            name: "head.fc".into(),
-            din: c,
-            dout: head_out,
-            w: hw,
-            b: hb,
-            la: None,
-            lb: None,
-            fa: false,
-            base_train: ht,
-        };
+        layers.push(Box::new(NormLayer::new(&cfg, &mut reg, &mut comp,
+                                            "head.norm", &lead)));
+        layers.push(Box::new(Head::new(&cfg, &mut reg, &mut comp)));
         Ok(Model {
             cfg,
             infos: reg.infos,
-            embed_w,
-            embed_b,
-            tok_e,
-            pos,
-            blocks,
-            normf,
-            head,
+            seq: Seq::new(layers),
+            schema: comp.finish(),
         })
+    }
+
+    /// The derived residual tape schema (push order) — the single
+    /// source of the residual ABI: `forward` emits exactly these
+    /// tensors, and the manifest residual section is synthesized from
+    /// this list (`spec::build_manifest`).
+    pub fn schema(&self) -> &[SlotInfo] {
+        &self.schema
     }
 
     /// Deterministic parameter init (He-scaled weights, identity norms,
@@ -510,23 +452,6 @@ impl Model {
             .collect()
     }
 
-    fn norm_kind(&self) -> &'static str {
-        if self.cfg.is_ms() { "norm_shared" } else { "norm_input" }
-    }
-
-    fn rows(&self) -> usize {
-        self.cfg.batch * self.cfg.n_tokens
-    }
-
-    fn attn_dims(&self) -> AttnDims {
-        AttnDims {
-            b: self.cfg.batch,
-            n: self.cfg.n_tokens,
-            h: self.cfg.n_heads,
-            dh: self.cfg.dim / self.cfg.n_heads,
-        }
-    }
-
     fn check_batch(&self, x: &Tensor, y: &Tensor) -> Result<()> {
         let (b, n) = (self.cfg.batch, self.cfg.n_tokens);
         match self.cfg.arch {
@@ -551,7 +476,7 @@ impl Model {
             }
         }
         // labels index the logits in softmax_ce: range-check them like
-        // embed_fwd does for input token ids
+        // the embedding gather does for input token ids
         let hi = match self.cfg.arch {
             Arch::Llama => self.cfg.vocab,
             _ => self.cfg.n_classes,
@@ -563,377 +488,55 @@ impl Model {
         Ok(())
     }
 
-    fn embed_fwd(&self, arena: &mut Arena, params: &[Tensor],
-                 x: &Tensor) -> Result<Vec<f32>> {
-        let c = self.cfg.dim;
-        let rows = self.rows();
-        let mut h = arena.take_f32(rows * c);
-        match self.cfg.arch {
-            Arch::Vit => {
-                matmul_nt_into(&mut h, x.as_f32(),
-                               params[self.embed_w.unwrap()].as_f32(),
-                               rows, self.cfg.patch_dim, c);
-                add_bias(&mut h, params[self.embed_b.unwrap()].as_f32());
-            }
-            _ => {
-                let emb = params[self.tok_e.unwrap()].as_f32();
-                let toks = x.as_i32();
-                for (r, &t) in toks.iter().enumerate() {
-                    ensure!((t as usize) < self.cfg.vocab,
-                            "token {t} out of range");
-                    let t = t as usize;
-                    h[r * c..(r + 1) * c]
-                        .copy_from_slice(&emb[t * c..(t + 1) * c]);
-                }
-            }
-        }
-        let pos = params[self.pos].as_f32();
-        let n = self.cfg.n_tokens;
-        for r in 0..rows {
-            let prow = &pos[(r % n) * c..(r % n + 1) * c];
-            add_inplace(&mut h[r * c..(r + 1) * c], prow);
-        }
-        Ok(h)
-    }
-
-    fn norm_affine(&self, arena: &mut Arena, params: &[Tensor],
-                   nd: &NormDef, xhat: &[f32]) -> Option<Vec<f32>> {
-        let gi = nd.g?;
-        let g = params[gi].as_f32();
-        let c = g.len();
-        let mut y = arena.take_f32(xhat.len());
-        for (yrow, xrow) in y.chunks_mut(c).zip(xhat.chunks(c)) {
-            for ((o, &xh), &gv) in yrow.iter_mut().zip(xrow).zip(g) {
-                *o = xh * gv;
-            }
-        }
-        if let Some(bi) = nd.b {
-            add_bias(&mut y, params[bi].as_f32());
-        }
-        Some(y)
-    }
-
-    /// Accumulate a gradient buffer into the staging slot for `idx`,
-    /// returning the buffer to the arena when it is merged (or when the
-    /// parameter is frozen).
-    fn acc(&self, arena: &mut Arena, grads: &mut [Option<Vec<f32>>],
-           idx: usize, g: Vec<f32>) {
-        if !self.infos[idx].trainable {
-            arena.put_f32(g);
-            return;
-        }
-        match &mut grads[idx] {
-            Some(a) => {
-                add_inplace(a, &g);
-                arena.put_f32(g);
-            }
-            slot @ None => *slot = Some(g),
-        }
-    }
-
-    fn save(&self, arena: &mut Arena, saves: &mut Vec<SavedRes>,
-            module: String, kind: &'static str, shape: &[usize],
-            v: &[f32]) {
-        saves.push(SavedRes {
-            module,
-            kind,
-            tensor: arena.tensor_from_f32(shape, v),
-        });
-    }
-
-    fn lin_fwd(&self, arena: &mut Arena, params: &[Tensor], lin: &LinDef,
-               x: &[f32], rows: usize, lead: &[usize],
-               saves: &mut Vec<SavedRes>) -> Vec<f32> {
-        let mut y = arena.take_f32(rows * lin.dout);
-        matmul_nt_into(&mut y, x, params[lin.w].as_f32(), rows, lin.din,
-                       lin.dout);
-        if let Some(bi) = lin.b {
-            add_bias(&mut y, params[bi].as_f32());
-        }
-        if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
-            let r = self.cfg.lora_rank;
-            let mut u = arena.take_f32(rows * r);
-            matmul_nt_into(&mut u, x, params[lai].as_f32(), rows, lin.din,
-                           r);
-            let mut shape = lead.to_vec();
-            shape.push(r);
-            self.save(arena, saves, lin.name.clone(), "lora_u", &shape,
-                      &u);
-            matmul_nt_acc_into(&mut y, &u, params[lbi].as_f32(), rows, r,
-                               lin.dout);
-            arena.put_f32(u);
-        }
-        y
-    }
-
-    fn lin_bwd(&self, arena: &mut Arena, params: &[Tensor], lin: &LinDef,
-               dy: &[f32], x: Option<&[f32]>, u: Option<&[f32]>,
-               rows: usize,
-               grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
-        if lin.base_train {
-            let xx = x.expect("linear input residual missing");
-            let mut dw = arena.take_f32(lin.dout * lin.din);
-            matmul_tn_into(&mut dw, dy, xx, lin.dout, rows, lin.din);
-            self.acc(arena, grads, lin.w, dw);
-            if let Some(bi) = lin.b {
-                let mut db = arena.take_f32(lin.dout);
-                colsum_into(&mut db, dy, rows, lin.dout);
-                self.acc(arena, grads, bi, db);
-            }
-        }
-        let mut dx = arena.take_f32(rows * lin.din);
-        matmul_nn_into(&mut dx, dy, params[lin.w].as_f32(), rows,
-                       lin.dout, lin.din);
-        if let (Some(lai), Some(lbi)) = (lin.la, lin.lb) {
-            let r = self.cfg.lora_rank;
-            let uu = u.expect("lora_u residual missing");
-            let mut du = arena.take_f32(rows * r);
-            matmul_nn_into(&mut du, dy, params[lbi].as_f32(), rows,
-                           lin.dout, r);
-            let mut dlb = arena.take_f32(lin.dout * r);
-            matmul_tn_into(&mut dlb, dy, uu, lin.dout, rows, r);
-            self.acc(arena, grads, lbi, dlb);
-            if !lin.fa {
-                let xx = x.expect("linear input residual missing (lora)");
-                let mut dla = arena.take_f32(r * lin.din);
-                matmul_tn_into(&mut dla, &du, xx, r, rows, lin.din);
-                self.acc(arena, grads, lai, dla);
-            }
-            matmul_nn_acc_into(&mut dx, &du, params[lai].as_f32(), rows,
-                               r, lin.din);
-            arena.put_f32(du);
-        }
-        dx
-    }
-
-    fn norm_param_bwd(&self, arena: &mut Arena, params: &[Tensor],
-                      nd: &NormDef, dy: &[f32], xhat: &[f32],
-                      stat: &[f32], rows: usize,
-                      grads: &mut [Option<Vec<f32>>]) -> Vec<f32> {
-        let c = self.cfg.dim;
-        let mut dx = arena.take_f32(rows * c);
-        if let Some(gi) = nd.g {
-            let mut dg = arena.take_f32_zeroed(c);
-            for (dyrow, xrow) in dy.chunks(c).zip(xhat.chunks(c)) {
-                for ((o, &d), &xh) in dg.iter_mut().zip(dyrow).zip(xrow) {
-                    *o += d * xh;
-                }
-            }
-            self.acc(arena, grads, gi, dg);
-            if let Some(bi) = nd.b {
-                let mut db = arena.take_f32(c);
-                colsum_into(&mut db, dy, rows, c);
-                self.acc(arena, grads, bi, db);
-            }
-            let g = params[gi].as_f32();
-            let mut dyh = arena.take_f32(dy.len());
-            for (orow, dyrow) in dyh.chunks_mut(c).zip(dy.chunks(c)) {
-                for ((o, &d), &gv) in orow.iter_mut().zip(dyrow).zip(g) {
-                    *o = d * gv;
-                }
-            }
-            norm_bwd_into(&mut dx, &dyh, xhat, stat, rows, c,
-                          self.cfg.is_rms());
-            arena.put_f32(dyh);
-        } else {
-            norm_bwd_into(&mut dx, dy, xhat, stat, rows, c,
-                          self.cfg.is_rms());
-        }
-        dx
-    }
-
     /// Forward pass with a throwaway arena (tests / one-shot callers).
     /// The executor path uses [`Model::forward_in`] with its persistent
     /// arena.
     pub fn forward(&self, params: &[Tensor], x: &Tensor,
-                   y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
+                   y: &Tensor) -> Result<(f32, f32, Vec<Tensor>)> {
         self.forward_in(&mut Arena::new(), params, x, y)
     }
 
     /// Forward pass. Returns `(loss, metric, residuals)` with residuals
-    /// in the canonical push order (the manifest order). Activations and
-    /// residual payloads are drawn from `arena`.
+    /// in tape-schema (= manifest) order. Activations and residual
+    /// payloads are drawn from `arena`.
     pub fn forward_in(&self, arena: &mut Arena, params: &[Tensor],
                       x: &Tensor,
-                      y: &Tensor) -> Result<(f32, f32, Vec<SavedRes>)> {
+                      y: &Tensor) -> Result<(f32, f32, Vec<Tensor>)> {
+        self.forward_impl(arena, params, x, y, None)
+    }
+
+    /// [`Model::forward_in`] with a per-layer latency profiler attached
+    /// (the hotpath bench's per-layer section).
+    pub fn forward_profiled(&self, arena: &mut Arena, params: &[Tensor],
+                            x: &Tensor, y: &Tensor, prof: &mut Profiler)
+                            -> Result<(f32, f32, Vec<Tensor>)> {
+        self.forward_impl(arena, params, x, y, Some(prof))
+    }
+
+    fn forward_impl(&self, arena: &mut Arena, params: &[Tensor],
+                    x: &Tensor, y: &Tensor,
+                    profiler: Option<&mut Profiler>)
+                    -> Result<(f32, f32, Vec<Tensor>)> {
         ensure!(params.len() == self.infos.len(),
                 "param arity: got {}, expected {}", params.len(),
                 self.infos.len());
         self.check_batch(x, y)?;
-        let cfg = &self.cfg;
-        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
-        let rows = self.rows();
-        let mut saves: Vec<SavedRes> = Vec::new();
-        let mut h = self.embed_fwd(arena, params, x)?;
-        for blk in &self.blocks {
-            h = self.block_fwd(arena, params, blk, h, &mut saves);
-        }
-        let mut xhatf = arena.take_f32(rows * c);
-        let mut statf = arena.take_f32(rows);
-        norm_fwd_into(&mut xhatf, &mut statf, &h, rows, c, cfg.is_rms());
-        arena.put_f32(h);
-        self.save(arena, &mut saves, self.normf.name.clone(),
-                  self.norm_kind(), &[bsz, n, c], &xhatf);
-        self.save(arena, &mut saves, self.normf.name.clone(), "norm_stat",
-                  &[bsz, n], &statf);
-        let afff = self.norm_affine(arena, params, &self.normf, &xhatf);
-        let (loss, metric) = match cfg.arch {
-            Arch::Llama => {
-                let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
-                if self.head.need_x() {
-                    self.save(arena, &mut saves, self.head.name.clone(),
-                              "head_input", &[bsz, n, c], hn);
-                }
-                let z = self.lin_fwd(arena, params, &self.head, hn, rows,
-                                     &[bsz, n], &mut saves);
-                let out = softmax_ce(&z, rows, cfg.vocab, y.as_i32());
-                self.save(arena, &mut saves, "head".into(), "logits",
-                          &[bsz, n, cfg.vocab], &z);
-                arena.put_f32(z);
-                out
-            }
-            _ => {
-                let hn: &[f32] = afff.as_deref().unwrap_or(&xhatf);
-                let mut pooled = arena.take_f32_zeroed(bsz * c);
-                for b in 0..bsz {
-                    let prow = &mut pooled[b * c..(b + 1) * c];
-                    for i in 0..n {
-                        let hrow = &hn[(b * n + i) * c..(b * n + i + 1) * c];
-                        add_inplace(prow, hrow);
-                    }
-                    for v in prow.iter_mut() {
-                        *v /= n as f32;
-                    }
-                }
-                self.save(arena, &mut saves, self.head.name.clone(),
-                          "head_input", &[bsz, c], &pooled);
-                let z = self.lin_fwd(arena, params, &self.head, &pooled,
-                                     bsz, &[bsz], &mut saves);
-                arena.put_f32(pooled);
-                let out = softmax_ce(&z, bsz, cfg.n_classes, y.as_i32());
-                self.save(arena, &mut saves, "head".into(), "logits",
-                          &[bsz, cfg.n_classes], &z);
-                arena.put_f32(z);
-                out
-            }
+        let mut ctx = FwdCtx {
+            params,
+            arena,
+            x,
+            y,
+            h: Vec::new(),
+            loss: 0.0,
+            metric: 0.0,
+            profiler,
         };
-        if let Some(aff) = afff {
-            arena.put_f32(aff);
-        }
-        arena.put_f32(xhatf);
-        arena.put_f32(statf);
-        Ok((loss, metric, saves))
-    }
-
-    fn block_fwd(&self, arena: &mut Arena, params: &[Tensor],
-                 blk: &BlockDef, mut h: Vec<f32>,
-                 saves: &mut Vec<SavedRes>) -> Vec<f32> {
-        let cfg = &self.cfg;
-        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
-        let rows = self.rows();
-        let lead = [bsz, n];
-        // ---- attention half ----
-        let mut xhat1 = arena.take_f32(rows * c);
-        let mut stat1 = arena.take_f32(rows);
-        norm_fwd_into(&mut xhat1, &mut stat1, &h, rows, c, cfg.is_rms());
-        self.save(arena, saves, blk.norm1.name.clone(), self.norm_kind(),
-                  &[bsz, n, c], &xhat1);
-        self.save(arena, saves, blk.norm1.name.clone(), "norm_stat",
-                  &[bsz, n], &stat1);
-        let aff1 = self.norm_affine(arena, params, &blk.norm1, &xhat1);
-        let xn1: &[f32] = aff1.as_deref().unwrap_or(&xhat1);
-        let need_qkv_x =
-            blk.q.need_x() || blk.k.need_x() || blk.v.need_x();
-        if !cfg.is_ms() && need_qkv_x {
-            self.save(arena, saves, blk.qkv_name.clone(),
-                      "linear_input", &[bsz, n, c], xn1);
-        }
-        let q = self.lin_fwd(arena, params, &blk.q, xn1, rows, &lead,
-                             saves);
-        let k = self.lin_fwd(arena, params, &blk.k, xn1, rows, &lead,
-                             saves);
-        let v = self.lin_fwd(arena, params, &blk.v, xn1, rows, &lead,
-                             saves);
-        for (name, t) in [(&blk.q.name, &q), (&blk.k.name, &k),
-                          (&blk.v.name, &v)] {
-            self.save(arena, saves, name.clone(), "attn_qkv",
-                      &[bsz, n, c], t);
-        }
-        let mut o = arena.take_f32(rows * c);
-        let mut hm = arena.take_f32(rows * c);
-        attn_fwd_into(&mut o, &mut hm, &q, &k, &v, &self.attn_dims(),
-                      cfg.causal());
-        arena.put_f32(hm);
-        arena.put_f32(q);
-        arena.put_f32(k);
-        arena.put_f32(v);
-        if let Some(aff) = aff1 {
-            arena.put_f32(aff);
-        }
-        arena.put_f32(xhat1);
-        arena.put_f32(stat1);
-        if blk.proj.need_x() {
-            self.save(arena, saves, blk.proj.name.clone(), "linear_input",
-                      &[bsz, n, c], &o);
-        }
-        let po = self.lin_fwd(arena, params, &blk.proj, &o, rows, &lead,
-                              saves);
-        arena.put_f32(o);
-        add_inplace(&mut h, &po);
-        arena.put_f32(po);
-        // ---- mlp half ----
-        let m = cfg.hidden();
-        let mut xhat2 = arena.take_f32(rows * c);
-        let mut stat2 = arena.take_f32(rows);
-        norm_fwd_into(&mut xhat2, &mut stat2, &h, rows, c, cfg.is_rms());
-        self.save(arena, saves, blk.norm2.name.clone(), self.norm_kind(),
-                  &[bsz, n, c], &xhat2);
-        self.save(arena, saves, blk.norm2.name.clone(), "norm_stat",
-                  &[bsz, n], &stat2);
-        let aff2 = self.norm_affine(arena, params, &blk.norm2, &xhat2);
-        let xn2: &[f32] = aff2.as_deref().unwrap_or(&xhat2);
-        if !cfg.is_ms() && blk.fc1.need_x() {
-            self.save(arena, saves, blk.fc1.name.clone(), "linear_input",
-                      &[bsz, n, c], xn2);
-        }
-        let u = self.lin_fwd(arena, params, &blk.fc1, xn2, rows, &lead,
-                             saves);
-        if let Some(aff) = aff2 {
-            arena.put_f32(aff);
-        }
-        arena.put_f32(xhat2);
-        arena.put_f32(stat2);
-        let mut hact = arena.take_f32(rows * m);
-        super::kernels::act_fwd_into(&mut hact, &u, cfg.is_gelu());
-        if cfg.act_exact_bwd() {
-            self.save(arena, saves, blk.act_name.clone(), "act_full",
-                      &[bsz, n, m], &u);
-        } else {
-            // fused bucketize+pack straight into the residual payload:
-            // no intermediate code vector, no fresh allocation
-            let mut codes = arena.take_u8(rows * m / 4);
-            packing::encode2_into(&u, cfg.comb().c, &mut codes);
-            saves.push(SavedRes {
-                module: blk.act_name.clone(),
-                kind: "act_codes",
-                tensor: Tensor {
-                    shape: vec![bsz, n, m / 4],
-                    dtype: DType::U8,
-                    data: codes,
-                },
-            });
-        }
-        arena.put_f32(u);
-        if blk.fc2.need_x() {
-            self.save(arena, saves, blk.fc2.name.clone(), "linear_input",
-                      &[bsz, n, m], &hact);
-        }
-        let mo = self.lin_fwd(arena, params, &blk.fc2, &hact, rows,
-                              &lead, saves);
-        arena.put_f32(hact);
-        add_inplace(&mut h, &mo);
-        arena.put_f32(mo);
-        h
+        let mut tape = TapeWriter::new(&self.schema);
+        self.seq.fwd(&mut ctx, &mut tape)?;
+        let h = std::mem::take(&mut ctx.h);
+        ctx.arena.put_f32(h);
+        let res = tape.finish()?;
+        Ok((ctx.loss, ctx.metric, res))
     }
 
     /// Backward pass with a throwaway arena (tests / one-shot callers).
@@ -948,115 +551,40 @@ impl Model {
     pub fn backward_in(&self, arena: &mut Arena, params: &[Tensor],
                        residuals: &[Tensor], x: &Tensor,
                        y: &Tensor) -> Result<Vec<Tensor>> {
+        self.backward_impl(arena, params, residuals, x, y, None)
+    }
+
+    /// [`Model::backward_in`] with a per-layer latency profiler.
+    pub fn backward_profiled(&self, arena: &mut Arena, params: &[Tensor],
+                             residuals: &[Tensor], x: &Tensor,
+                             y: &Tensor, prof: &mut Profiler)
+                             -> Result<Vec<Tensor>> {
+        self.backward_impl(arena, params, residuals, x, y, Some(prof))
+    }
+
+    fn backward_impl(&self, arena: &mut Arena, params: &[Tensor],
+                     residuals: &[Tensor], x: &Tensor, y: &Tensor,
+                     profiler: Option<&mut Profiler>)
+                     -> Result<Vec<Tensor>> {
         ensure!(params.len() == self.infos.len(), "param arity");
         self.check_batch(x, y)?;
-        let cfg = &self.cfg;
-        let (bsz, n, c) = (cfg.batch, cfg.n_tokens, cfg.dim);
-        let rows = self.rows();
         let mut grads: Vec<Option<Vec<f32>>> = Vec::new();
         grads.resize_with(self.infos.len(), || None);
-        let mut st = Stack { res: residuals, top: residuals.len() };
-
-        // ---- head / loss ----
-        let z = st.pop()?;
-        let dhn: Vec<f32> = match cfg.arch {
-            Arch::Llama => {
-                ensure!(z.elems() == rows * cfg.vocab, "bad z residual");
-                let mut dz = arena.take_f32(rows * cfg.vocab);
-                softmax_ce_grad_into(&mut dz, z.as_f32(), rows, cfg.vocab,
-                                     y.as_i32());
-                let hn = if self.head.need_x() {
-                    Some(st.pop()?)
-                } else {
-                    None
-                };
-                let d = self.lin_bwd(arena, params, &self.head, &dz,
-                                     hn.map(|t| t.as_f32()), None, rows,
-                                     &mut grads);
-                arena.put_f32(dz);
-                d
-            }
-            _ => {
-                ensure!(z.elems() == bsz * cfg.n_classes,
-                        "bad z residual");
-                let mut dz = arena.take_f32(bsz * cfg.n_classes);
-                softmax_ce_grad_into(&mut dz, z.as_f32(), bsz,
-                                     cfg.n_classes, y.as_i32());
-                let pooled = st.pop()?;
-                let dpooled = self.lin_bwd(arena, params, &self.head,
-                                           &dz, Some(pooled.as_f32()),
-                                           None, bsz, &mut grads);
-                arena.put_f32(dz);
-                let mut dhn = arena.take_f32(rows * c);
-                let inv = 1.0 / n as f32;
-                for b in 0..bsz {
-                    let src = &dpooled[b * c..(b + 1) * c];
-                    for i in 0..n {
-                        let dst = &mut dhn
-                            [(b * n + i) * c..(b * n + i + 1) * c];
-                        for (d, &s) in dst.iter_mut().zip(src) {
-                            *d = s * inv;
-                        }
-                    }
-                }
-                arena.put_f32(dpooled);
-                dhn
-            }
-        };
-        let statf = st.pop()?;
-        let xhatf = st.pop()?;
-        debug_assert_eq!(statf.elems(), rows);
-        debug_assert_eq!(xhatf.elems(), rows * c);
-        let mut dh = self.norm_param_bwd(arena, params, &self.normf, &dhn,
-                                         xhatf.as_f32(), statf.as_f32(),
-                                         rows, &mut grads);
-        arena.put_f32(dhn);
-        // ---- blocks in reverse ----
-        for blk in self.blocks.iter().rev() {
-            dh = self.block_bwd(arena, params, blk, dh, &mut st,
-                                &mut grads)?;
+        {
+            let mut ctx = BwdCtx {
+                params,
+                infos: &self.infos,
+                arena,
+                x,
+                y,
+                dh: Vec::new(),
+                grads: &mut grads,
+                profiler,
+            };
+            let mut tape = TapeReader::new(&self.schema, residuals)?;
+            self.seq.bwd(&mut ctx, &mut tape)?;
+            tape.finish()?;
         }
-        ensure!(st.top == 0, "residual stack not fully consumed: {} left",
-                st.top);
-        // ---- embedding ----
-        match cfg.arch {
-            Arch::Vit => {
-                if self.infos[self.embed_w.unwrap()].trainable {
-                    let mut dw =
-                        arena.take_f32(c * cfg.patch_dim);
-                    matmul_tn_into(&mut dw, &dh, x.as_f32(), c, rows,
-                                   cfg.patch_dim);
-                    self.acc(arena, &mut grads, self.embed_w.unwrap(),
-                             dw);
-                    let mut db = arena.take_f32(c);
-                    colsum_into(&mut db, &dh, rows, c);
-                    self.acc(arena, &mut grads, self.embed_b.unwrap(),
-                             db);
-                }
-            }
-            _ => {
-                let ei = self.tok_e.unwrap();
-                if self.infos[ei].trainable {
-                    let mut de = arena.take_f32_zeroed(cfg.vocab * c);
-                    for (r, &t) in x.as_i32().iter().enumerate() {
-                        let t = t as usize;
-                        add_inplace(&mut de[t * c..(t + 1) * c],
-                                    &dh[r * c..(r + 1) * c]);
-                    }
-                    self.acc(arena, &mut grads, ei, de);
-                }
-            }
-        }
-        if self.infos[self.pos].trainable {
-            let mut dpos = arena.take_f32_zeroed(n * c);
-            for r in 0..rows {
-                let i = r % n;
-                add_inplace(&mut dpos[i * c..(i + 1) * c],
-                            &dh[r * c..(r + 1) * c]);
-            }
-            self.acc(arena, &mut grads, self.pos, dpos);
-        }
-        arena.put_f32(dh);
         // ---- collect trainable grads in manifest order ----
         let mut out = Vec::new();
         for (i, info) in self.infos.iter().enumerate() {
@@ -1073,133 +601,5 @@ impl Model {
             }
         }
         Ok(out)
-    }
-
-    fn block_bwd(&self, arena: &mut Arena, params: &[Tensor],
-                 blk: &BlockDef, dh: Vec<f32>, st: &mut Stack<'_>,
-                 grads: &mut [Option<Vec<f32>>]) -> Result<Vec<f32>> {
-        let cfg = &self.cfg;
-        let c = cfg.dim;
-        let m = cfg.hidden();
-        let rows = self.rows();
-        // ---- mlp half (reverse of push order) ----
-        let u_fc2 = if blk.fc2.la.is_some() { Some(st.pop()?) } else { None };
-        let hact = if blk.fc2.need_x() { Some(st.pop()?) } else { None };
-        let act_save = st.pop()?;
-        let u_fc1 = if blk.fc1.la.is_some() { Some(st.pop()?) } else { None };
-        let xn2s = if !cfg.is_ms() && blk.fc1.need_x() {
-            Some(st.pop()?)
-        } else {
-            None
-        };
-        let stat2 = st.pop()?;
-        let xhat2 = st.pop()?;
-        debug_assert_eq!(stat2.elems(), rows);
-        debug_assert_eq!(xhat2.elems(), rows * c);
-        let xn2: Option<&[f32]> = if cfg.is_ms() {
-            Some(xhat2.as_f32())
-        } else {
-            xn2s.map(|t| t.as_f32())
-        };
-        let dhact = self.lin_bwd(arena, params, &blk.fc2, &dh,
-                                 hact.map(|t| t.as_f32()),
-                                 u_fc2.map(|t| t.as_f32()), rows, grads);
-        let mut du = arena.take_f32(rows * m);
-        if cfg.act_exact_bwd() {
-            ensure!(act_save.dtype == DType::F32
-                        && act_save.elems() == rows * m,
-                    "bad act_full residual");
-            super::kernels::act_bwd_exact_into(&mut du, act_save.as_f32(),
-                                               &dhact, cfg.is_gelu());
-        } else {
-            ensure!(act_save.dtype == DType::U8
-                        && act_save.nbytes() == rows * m / 4,
-                    "bad act_codes residual");
-            packing::apply_slopes_into(&mut du, &act_save.data, &dhact,
-                                       cfg.comb().slopes());
-        }
-        arena.put_f32(dhact);
-        let dxn2 = self.lin_bwd(arena, params, &blk.fc1, &du, xn2,
-                                u_fc1.map(|t| t.as_f32()), rows, grads);
-        arena.put_f32(du);
-        let dnorm2 = self.norm_param_bwd(arena, params, &blk.norm2,
-                                         &dxn2, xhat2.as_f32(),
-                                         stat2.as_f32(), rows, grads);
-        arena.put_f32(dxn2);
-        let mut dh1 = dh;
-        add_inplace(&mut dh1, &dnorm2);
-        arena.put_f32(dnorm2);
-        // ---- attention half ----
-        let u_proj =
-            if blk.proj.la.is_some() { Some(st.pop()?) } else { None };
-        let o = if blk.proj.need_x() { Some(st.pop()?) } else { None };
-        let v = st.pop()?;
-        let k = st.pop()?;
-        let q = st.pop()?;
-        debug_assert_eq!(q.elems(), rows * c);
-        let u_v = if blk.v.la.is_some() { Some(st.pop()?) } else { None };
-        let u_k = if blk.k.la.is_some() { Some(st.pop()?) } else { None };
-        let u_q = if blk.q.la.is_some() { Some(st.pop()?) } else { None };
-        let need_qkv_x =
-            blk.q.need_x() || blk.k.need_x() || blk.v.need_x();
-        let xn1s = if !cfg.is_ms() && need_qkv_x {
-            Some(st.pop()?)
-        } else {
-            None
-        };
-        let stat1 = st.pop()?;
-        let xhat1 = st.pop()?;
-        debug_assert_eq!(stat1.elems(), rows);
-        debug_assert_eq!(xhat1.elems(), rows * c);
-        let xn1: Option<&[f32]> = if cfg.is_ms() {
-            Some(xhat1.as_f32())
-        } else {
-            xn1s.map(|t| t.as_f32())
-        };
-        let do_ = self.lin_bwd(arena, params, &blk.proj, &dh1,
-                               o.map(|t| t.as_f32()),
-                               u_proj.map(|t| t.as_f32()), rows, grads);
-        let mut dq = arena.take_f32(rows * c);
-        let mut dk = arena.take_f32(rows * c);
-        let mut dv = arena.take_f32(rows * c);
-        let mut scr = arena.take_f32(3 * rows * c);
-        attn_bwd_into(&mut dq, &mut dk, &mut dv, &mut scr, &do_,
-                      q.as_f32(), k.as_f32(), v.as_f32(),
-                      &self.attn_dims(), cfg.causal());
-        arena.put_f32(scr);
-        arena.put_f32(do_);
-        let mut dxn1 = self.lin_bwd(arena, params, &blk.q, &dq, xn1,
-                                    u_q.map(|t| t.as_f32()), rows, grads);
-        arena.put_f32(dq);
-        let dk_in = self.lin_bwd(arena, params, &blk.k, &dk, xn1,
-                                 u_k.map(|t| t.as_f32()), rows, grads);
-        arena.put_f32(dk);
-        add_inplace(&mut dxn1, &dk_in);
-        arena.put_f32(dk_in);
-        let dv_in = self.lin_bwd(arena, params, &blk.v, &dv, xn1,
-                                 u_v.map(|t| t.as_f32()), rows, grads);
-        arena.put_f32(dv);
-        add_inplace(&mut dxn1, &dv_in);
-        arena.put_f32(dv_in);
-        let dnorm1 = self.norm_param_bwd(arena, params, &blk.norm1,
-                                         &dxn1, xhat1.as_f32(),
-                                         stat1.as_f32(), rows, grads);
-        arena.put_f32(dxn1);
-        add_inplace(&mut dh1, &dnorm1);
-        arena.put_f32(dnorm1);
-        Ok(dh1)
-    }
-}
-
-struct Stack<'a> {
-    res: &'a [Tensor],
-    top: usize,
-}
-
-impl<'a> Stack<'a> {
-    fn pop(&mut self) -> Result<&'a Tensor> {
-        ensure!(self.top > 0, "residual stack underflow");
-        self.top -= 1;
-        Ok(&self.res[self.top])
     }
 }

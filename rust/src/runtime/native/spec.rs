@@ -1,12 +1,16 @@
-//! Preset specs for the native backend: parse `{model}_{tuning}_{act}_
-//! {norm}` preset names, synthesize manifests by dry-running the model,
-//! and load on-disk artifacts (manifest.json + params.bin) without any
-//! compiled HLO.
+//! Preset specs for the native backend: parse
+//! `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt]` preset names,
+//! synthesize manifests, and load on-disk artifacts (manifest.json +
+//! params.bin) without any compiled HLO.
 //!
-//! A synthesized manifest is correct *by construction*: the residual
-//! section is captured from an actual forward pass, and the selfcheck
-//! block records the loss/metric/grad-norms of the same dry run — so the
-//! trainer's measured activation accounting always agrees with the ABI.
+//! The manifest residual section is **derived from the model's tape
+//! schema** — the slot list the layer composition minted at build time
+//! (`Model::schema`) — not captured from a dry run. A dry run still
+//! happens once per synthesis, but only to fill the selfcheck block
+//! (loss/metric/grad-norms of one deterministic batch) and to
+//! cross-check that the executed tape matches the derived schema
+//! byte-for-byte; `tests/tape_grid.rs` pins that identity over the full
+//! preset grid.
 
 use std::path::Path;
 
@@ -19,7 +23,7 @@ use crate::data::synth_text::TextTask;
 use crate::runtime::manifest::{
     BatchInfo, Manifest, MergeOp, ResInfo, SelfCheck,
 };
-use crate::runtime::tensor::{DType, Tensor};
+use crate::runtime::tensor::Tensor;
 use crate::runtime::Artifact;
 
 /// Preset names the native backend can synthesize from nothing.
@@ -43,6 +47,8 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             tuning: Tuning::LoraQv,
             act: Act::Gelu,
             norm: Norm::Ln,
+            swiglu: false,
+            ckpt: false,
         },
         // small causal LM on the Markov-chain corpus
         "llama" => NetCfg {
@@ -60,6 +66,8 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             tuning: Tuning::LoraAll,
             act: Act::Silu,
             norm: Norm::Rms,
+            swiglu: false,
+            ckpt: false,
         },
         // small bidirectional sequence classifier
         "roberta" => NetCfg {
@@ -77,6 +85,8 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             tuning: Tuning::LoraAll,
             act: Act::Gelu,
             norm: Norm::Ln,
+            swiglu: false,
+            ckpt: false,
         },
         other => bail!(
             "unknown synth model {other:?} (supported: {SYNTH_MODELS:?})"
@@ -84,24 +94,31 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
     })
 }
 
-/// Parse a `{model}_{tuning}_{act}_{norm}` preset name into a config.
+/// Parse a `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt]` preset name
+/// into a config. `swiglu` (LLaMA only) selects the gated MLP + RoPE
+/// block shape; `ckpt` enables gradient checkpointing.
 pub fn parse_preset(preset: &str) -> Result<NetCfg> {
     let parts: Vec<&str> = preset.split('_').collect();
+    let mut end = parts.len();
+    let ckpt = end >= 1 && parts[end - 1] == "ckpt";
+    if ckpt {
+        end -= 1;
+    }
+    let swiglu = end >= 1 && parts[end - 1] == "swiglu";
+    if swiglu {
+        end -= 1;
+    }
     ensure!(
-        parts.len() == 4,
-        "preset {preset:?} is not {{model}}_{{tuning}}_{{act}}_{{norm}}\
-         {}",
-        if preset.ends_with("_ckpt") {
-            " (gradient-checkpointing presets are not supported by the \
-             native backend yet)"
-        } else {
-            ""
-        }
+        end == 4,
+        "preset {preset:?} is not \
+         {{model}}_{{tuning}}_{{act}}_{{norm}}[_swiglu][_ckpt]"
     );
     let mut cfg = base_cfg(parts[0])?;
     cfg.tuning = NetCfg::tuning_from_str(parts[1])?;
     cfg.act = NetCfg::act_from_str(parts[2])?;
     cfg.norm = NetCfg::norm_from_str(parts[3])?;
+    cfg.swiglu = swiglu;
+    cfg.ckpt = ckpt;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -131,6 +148,7 @@ fn act_str(a: Act) -> &'static str {
         Act::ReGelu2 => "regelu2",
         Act::Silu => "silu",
         Act::ReSilu2 => "resilu2",
+        Act::Relu => "relu",
     }
 }
 
@@ -190,10 +208,13 @@ fn merge_ops(model: &Model) -> Vec<MergeOp> {
                 format!("block{i}.attn.v"),
             ],
         });
-        out.push(MergeOp {
-            norm: format!("block{i}.mlp.norm"),
-            linears: vec![format!("block{i}.mlp.fc1")],
-        });
+        // the MLP norm feeds fc1 — and, under SwiGLU, the up
+        // projection fc2 as well (both read the shared x̂)
+        let mut linears = vec![format!("block{i}.mlp.fc1")];
+        if cfg.swiglu {
+            linears.push(format!("block{i}.mlp.fc2"));
+        }
+        out.push(MergeOp { norm: format!("block{i}.mlp.norm"), linears });
     }
     out.push(MergeOp {
         norm: "head.norm".into(),
@@ -202,36 +223,43 @@ fn merge_ops(model: &Model) -> Vec<MergeOp> {
     out
 }
 
-fn bits_per_elem(kind: &str, dtype: DType) -> f64 {
-    if kind == "act_codes" {
-        2.0
-    } else {
-        dtype.size() as f64 * 8.0
-    }
+/// Residual section synthesized from the model's derived tape schema —
+/// no execution involved.
+pub fn schema_residuals(model: &Model) -> Vec<ResInfo> {
+    model
+        .schema()
+        .iter()
+        .map(|s| ResInfo {
+            name: format!("{}.{}", s.module, s.kind.as_str()),
+            kind: s.kind.as_str().to_string(),
+            module: s.module.clone(),
+            shape: s.shape.clone(),
+            dtype: s.dtype,
+            bits_per_elem: s.bits_per_elem,
+            bytes: s.bytes(),
+        })
+        .collect()
 }
 
-/// Dry-run the model once to capture the residual section, selfcheck
-/// values, and batch shapes, then assemble the full manifest.
+/// Assemble the full manifest: the residual section comes from the tape
+/// schema; one dry run fills the selfcheck block and cross-checks that
+/// the executed tape matches the schema byte-for-byte.
 fn build_manifest(preset: &str, model: &Model,
                   params: &[Tensor]) -> Result<Manifest> {
     let cfg = &model.cfg;
+    let residuals = schema_residuals(model);
     let (x, y) = sample_batch(cfg, 0, 0);
-    let (loss, metric, saves) = model.forward(params, &x, &y)?;
-    let res_tensors: Vec<Tensor> =
-        saves.iter().map(|s| s.tensor.clone()).collect();
-    let grads = model.backward(params, &res_tensors, &x, &y)?;
-    let residuals: Vec<ResInfo> = saves
-        .iter()
-        .map(|s| ResInfo {
-            name: format!("{}.{}", s.module, s.kind),
-            kind: s.kind.to_string(),
-            module: s.module.clone(),
-            shape: s.tensor.shape.clone(),
-            dtype: s.tensor.dtype,
-            bits_per_elem: bits_per_elem(s.kind, s.tensor.dtype),
-            bytes: s.tensor.nbytes() as u64,
-        })
-        .collect();
+    let (loss, metric, res) = model.forward(params, &x, &y)?;
+    ensure!(res.len() == residuals.len(),
+            "dry run produced {} residuals, schema derives {}",
+            res.len(), residuals.len());
+    for (t, info) in res.iter().zip(&residuals) {
+        ensure!(t.shape == info.shape && t.dtype == info.dtype
+                    && t.nbytes() as u64 == info.bytes,
+                "dry-run residual {} deviates from the derived schema",
+                info.name);
+    }
+    let grads = model.backward(params, &res, &x, &y)?;
     let residual_bytes_total = residuals.iter().map(|r| r.bytes).sum();
     Ok(Manifest {
         preset: preset.to_string(),
@@ -249,7 +277,8 @@ fn build_manifest(preset: &str, model: &Model,
         mlp_ratio: cfg.mlp_ratio,
         lora_rank: cfg.lora_rank,
         patch_dim: cfg.patch_dim,
-        ckpt: false,
+        ckpt: cfg.ckpt,
+        swiglu: cfg.swiglu,
         params: model.infos.clone(),
         x: BatchInfo { shape: x.shape.clone(), dtype: x.dtype },
         y: BatchInfo { shape: y.shape.clone(), dtype: y.dtype },
@@ -280,16 +309,11 @@ pub fn synth_artifact(preset: &str) -> Result<Artifact> {
 }
 
 /// Load an on-disk artifact (manifest.json + params.bin) onto the native
-/// backend. The residual/selfcheck sections are rebuilt from a dry run so
-/// the manifest always matches this backend's ABI exactly.
+/// backend. The residual/selfcheck sections are rebuilt (schema-derived
+/// residuals + a dry run) so the manifest always matches this backend's
+/// ABI exactly.
 pub fn load_artifact(dir: &Path) -> Result<Artifact> {
     let disk = Manifest::load(dir)?;
-    ensure!(
-        !disk.ckpt,
-        "preset {:?} uses gradient checkpointing, which the native \
-         backend does not support yet",
-        disk.preset
-    );
     let cfg = NetCfg {
         arch: NetCfg::arch_from_str(&disk.arch)?,
         dim: disk.dim,
@@ -305,6 +329,8 @@ pub fn load_artifact(dir: &Path) -> Result<Artifact> {
         tuning: NetCfg::tuning_from_str(&disk.tuning)?,
         act: NetCfg::act_from_str(&disk.activation)?,
         norm: NetCfg::norm_from_str(&disk.norm)?,
+        swiglu: disk.swiglu,
+        ckpt: disk.ckpt,
     };
     let model = Model::build(cfg)?;
     ensure!(
@@ -336,6 +362,7 @@ pub fn load_artifact(dir: &Path) -> Result<Artifact> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::tensor::DType;
 
     #[test]
     fn parse_known_presets() {
@@ -343,8 +370,12 @@ mod tests {
             "vitt_loraqv_gelu_ln",
             "vitt_loraqv_regelu2_msln",
             "vitt_full_regelu2_msln",
+            "vitt_loraqv_relu_ln",
+            "vitt_loraqv_gelu_ln_ckpt",
             "llama_loraall_silu_rms",
             "llama_loraall_resilu2_msrms",
+            "llama_loraall_silu_rms_swiglu",
+            "llama_loraall_resilu2_msrms_swiglu_ckpt",
             "roberta_lorafaall_gelu_ln",
         ] {
             let cfg = parse_preset(p).unwrap();
@@ -353,10 +384,27 @@ mod tests {
     }
 
     #[test]
+    fn parse_suffix_axes() {
+        let cfg = parse_preset("llama_loraall_silu_rms_swiglu").unwrap();
+        assert!(cfg.swiglu && !cfg.ckpt);
+        let cfg = parse_preset("vitt_loraqv_gelu_ln_ckpt").unwrap();
+        assert!(cfg.ckpt && !cfg.swiglu);
+        let cfg =
+            parse_preset("llama_full_silu_msrms_swiglu_ckpt").unwrap();
+        assert!(cfg.swiglu && cfg.ckpt);
+    }
+
+    #[test]
     fn reject_unsupported_presets() {
-        assert!(parse_preset("vitt_loraqv_gelu_ln_ckpt").is_err());
+        // Mesa int8 needs compiled artifacts; unknown names stay errors
         assert!(parse_preset("vitt_loraqv_mesa_mesaln").is_err());
         assert!(parse_preset("nope_full_gelu_ln").is_err());
+        // swiglu/rope is a llama-family axis
+        assert!(parse_preset("vitt_loraqv_gelu_ln_swiglu").is_err());
+        // suffixes only in canonical [_swiglu][_ckpt] order
+        assert!(
+            parse_preset("llama_loraall_silu_rms_ckpt_swiglu").is_err()
+        );
     }
 
     #[test]
@@ -384,16 +432,84 @@ mod tests {
     }
 
     #[test]
+    fn relu_manifest_uses_one_bit_codes() {
+        let art = synth_artifact("vitt_loraqv_relu_ln").unwrap();
+        let m = &art.manifest;
+        let codes: Vec<_> = m
+            .residuals
+            .iter()
+            .filter(|r| r.kind == "act_codes")
+            .collect();
+        assert_eq!(codes.len(), m.depth);
+        for c in codes {
+            assert_eq!(c.dtype, DType::U8);
+            assert!((c.bits_per_elem - 1.0).abs() < 1e-9);
+            // 1-bit codes: hidden/8 bytes per row
+            assert_eq!(*c.shape.last().unwrap(),
+                       (m.dim as f64 * m.mlp_ratio) as usize / 8);
+        }
+    }
+
+    #[test]
+    fn ckpt_manifest_stores_only_block_inputs() {
+        let art = synth_artifact("vitt_loraqv_gelu_ln_ckpt").unwrap();
+        let m = &art.manifest;
+        assert!(m.ckpt);
+        let ckpts: Vec<_> = m
+            .residuals
+            .iter()
+            .filter(|r| r.kind == "ckpt_input")
+            .collect();
+        // one per block half
+        assert_eq!(ckpts.len(), 2 * m.depth);
+        // no inner-block residual kinds survive on the model tape
+        assert!(m.residuals.iter().all(|r| {
+            r.kind != "attn_qkv" && r.kind != "act_full"
+                && r.kind != "lora_u"
+        }));
+    }
+
+    #[test]
+    fn swiglu_manifest_has_gate_params_and_operands() {
+        let art =
+            synth_artifact("llama_loraall_silu_rms_swiglu").unwrap();
+        let m = &art.manifest;
+        assert!(m.swiglu);
+        // no learned positions under rope
+        assert!(m.params.iter().all(|p| p.name != "embed.pos"));
+        // gate/up/down per block
+        for which in ["fc1", "fc2", "fc3"] {
+            assert!(m.params.iter().any(|p| {
+                p.name == format!("block0.mlp.{which}.W")
+            }));
+        }
+        let gates = m
+            .residuals
+            .iter()
+            .filter(|r| r.kind == "gate_operand")
+            .count();
+        assert_eq!(gates, 2 * m.depth);
+    }
+
+    #[test]
     fn memory_ordering_matches_paper() {
-        // ours (2-bit codes + shared norm) < baseline, on the same dims
+        // ckpt < ours (2-bit codes + shared norm) < baseline, same dims
         let base = synth_artifact("vitt_loraqv_gelu_ln").unwrap();
         let ours = synth_artifact("vitt_loraqv_regelu2_msln").unwrap();
+        let ckpt = synth_artifact("vitt_loraqv_gelu_ln_ckpt").unwrap();
         assert!(
             ours.manifest.residual_bytes_total
                 < base.manifest.residual_bytes_total,
             "ours {} !< base {}",
             ours.manifest.residual_bytes_total,
             base.manifest.residual_bytes_total
+        );
+        assert!(
+            ckpt.manifest.residual_bytes_total
+                < ours.manifest.residual_bytes_total,
+            "ckpt {} !< ours {}",
+            ckpt.manifest.residual_bytes_total,
+            ours.manifest.residual_bytes_total
         );
         // single changes each save something too
         let only_act = synth_artifact("vitt_loraqv_regelu2_ln").unwrap();

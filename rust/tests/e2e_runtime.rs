@@ -36,8 +36,9 @@ fn have(preset: &str) -> bool {
 }
 
 /// Load a built artifact, or skip when the active backend cannot execute
-/// it (the default native backend rejects ckpt/mesa presets and any
-/// param layout it cannot reproduce; those run under --features pjrt).
+/// it (the default native backend rejects mesa presets and any param
+/// layout it cannot reproduce — ckpt presets load natively since the
+/// Layer/Tape refactor; mesa still runs under --features pjrt).
 fn try_load(preset: &str) -> Option<Artifact> {
     if !have(preset) {
         return None;

@@ -30,6 +30,8 @@ fn tiny_cfg(arch: Arch, tuning: Tuning, act: Act, norm: Norm) -> NetCfg {
         tuning,
         act,
         norm,
+        swiglu: false,
+        ckpt: false,
     }
 }
 
@@ -40,10 +42,9 @@ fn gradcheck(cfg: NetCfg, label: &str) {
     let model = Model::build(cfg.clone()).expect("build");
     let mut params = model.init_params(7);
     let (x, y) = sample_batch(&cfg, 0, 3);
-    let (loss0, _metric, saves) =
+    let (loss0, _metric, res) =
         model.forward(&params, &x, &y).expect("fwd");
     assert!(loss0.is_finite(), "{label}: non-finite loss");
-    let res: Vec<Tensor> = saves.into_iter().map(|s| s.tensor).collect();
     let grads = model.backward(&params, &res, &x, &y).expect("bwd");
     let tidx: Vec<usize> = model
         .infos
@@ -138,6 +139,68 @@ fn gradcheck_roberta_loraall_gelu_ln() {
 }
 
 #[test]
+fn gradcheck_vit_loraqv_relu_ln() {
+    // ReLU's 1-bit-coded backward is exact, so the finite-difference
+    // identity holds like for the full-precision saves
+    gradcheck(tiny_cfg(Arch::Vit, Tuning::LoraQv, Act::Relu, Norm::Ln),
+              "vit loraqv relu ln");
+}
+
+#[test]
+fn gradcheck_llama_swiglu_rope_full() {
+    let mut cfg =
+        tiny_cfg(Arch::Llama, Tuning::Full, Act::Silu, Norm::Rms);
+    cfg.swiglu = true;
+    gradcheck(cfg, "llama full silu rms swiglu+rope");
+}
+
+#[test]
+fn gradcheck_llama_swiglu_rope_loraall_msrms() {
+    let mut cfg =
+        tiny_cfg(Arch::Llama, Tuning::LoraAll, Act::Silu, Norm::MsRms);
+    cfg.swiglu = true;
+    gradcheck(cfg, "llama loraall silu msrms swiglu+rope");
+}
+
+#[test]
+fn gradcheck_ckpt_recompute_path() {
+    // checkpointing must be gradient-invisible: store-input/recompute
+    // reproduces the exact same backward
+    let mut cfg = tiny_cfg(Arch::Vit, Tuning::Full, Act::Gelu, Norm::Ln);
+    cfg.ckpt = true;
+    gradcheck(cfg, "vit full gelu ln ckpt");
+    let mut cfg =
+        tiny_cfg(Arch::Llama, Tuning::LoraAll, Act::Silu, Norm::MsRms);
+    cfg.swiglu = true;
+    cfg.ckpt = true;
+    gradcheck(cfg, "llama loraall swiglu ckpt");
+}
+
+#[test]
+fn ckpt_grads_match_unckpt_bitwise() {
+    // same params, same batch: the checkpointed model's gradients must
+    // be BIT-identical to the plain model's (recompute determinism)
+    let cfg = tiny_cfg(Arch::Vit, Tuning::LoraQv, Act::ReGelu2,
+                       Norm::MsLn);
+    let mut ck = cfg.clone();
+    ck.ckpt = true;
+    let plain = Model::build(cfg.clone()).unwrap();
+    let ckpt = Model::build(ck).unwrap();
+    let params = plain.init_params(3);
+    let (x, y) = sample_batch(&cfg, 0, 1);
+    let (l1, _, r1) = plain.forward(&params, &x, &y).unwrap();
+    let (l2, _, r2) = ckpt.forward(&params, &x, &y).unwrap();
+    assert_eq!(l1, l2, "ckpt changed the forward loss");
+    assert!(r2.len() < r1.len(), "ckpt must store fewer residuals");
+    let g1 = plain.backward(&params, &r1, &x, &y).unwrap();
+    let g2 = ckpt.backward(&params, &r2, &x, &y).unwrap();
+    assert_eq!(g1.len(), g2.len());
+    for (a, b) in g1.iter().zip(&g2) {
+        assert_eq!(a.data, b.data, "ckpt gradients deviate");
+    }
+}
+
+#[test]
 fn approx_bwd_runs_and_is_finite() {
     // ReGELU2/ReSiLU2: bwd is *approximate* (2-bit codes), so no
     // finite-difference identity — check structure and finiteness.
@@ -151,11 +214,9 @@ fn approx_bwd_runs_and_is_finite() {
         let model = Model::build(cfg.clone()).expect("build");
         let params = model.init_params(7);
         let (x, y) = sample_batch(&cfg, 0, 3);
-        let (loss, _m, saves) =
+        let (loss, _m, res) =
             model.forward(&params, &x, &y).expect("fwd");
         assert!(loss.is_finite(), "{label}");
-        let res: Vec<Tensor> =
-            saves.into_iter().map(|s| s.tensor).collect();
         let grads = model.backward(&params, &res, &x, &y).expect("bwd");
         for g in &grads {
             assert!(g.as_f32().iter().all(|v| v.is_finite()), "{label}");
@@ -195,10 +256,66 @@ fn smoke_train_step_acceptance() {
 }
 
 #[test]
+fn measured_memory_ckpt_lt_ours_lt_baseline() {
+    // the Figure 1 ordering, *measured* at the residual ABI on the
+    // native backend (ckpt was previously memmodel-only)
+    use ambp::coordinator::memory::MemoryTracker;
+    let rt = rt();
+    let measured = |preset: &str| -> (u64, u64) {
+        let art = Artifact::synth(&rt, preset).unwrap();
+        let params = art.load_params().unwrap();
+        let cfg =
+            ambp::runtime::native::spec::parse_preset(preset).unwrap();
+        let (x, y) = sample_batch(&cfg, 2, 7);
+        let out = art.run_fwd(&params, &x, &y).unwrap();
+        let mut tracker = MemoryTracker::new();
+        tracker.observe_residuals(&art.manifest, &out.residuals);
+        let ckpt_bytes = tracker.bytes_of_kind("ckpt_input");
+        art.recycle(out.residuals);
+        (tracker.last_residual_bytes, ckpt_bytes)
+    };
+    let (base, _) = measured("vitt_loraqv_gelu_ln");
+    let (ours, _) = measured("vitt_loraqv_regelu2_msln");
+    let (ckpt, ckpt_inputs) = measured("vitt_loraqv_gelu_ln_ckpt");
+    assert!(ckpt < ours, "ckpt {ckpt} !< ours {ours}");
+    assert!(ours < base, "ours {ours} !< base {base}");
+    // and the checkpointed set is dominated by the block inputs
+    assert!(ckpt_inputs * 2 > ckpt,
+            "ckpt_input {ckpt_inputs} not dominant in {ckpt}");
+}
+
+#[test]
+fn ckpt_training_works_end_to_end() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_gelu_ln_ckpt").unwrap();
+    let mut t = Trainer::new(
+        &art,
+        TrainCfg {
+            steps: 3,
+            lr: 1e-3,
+            log_every: 0,
+            eval_batches: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rep = t.train().unwrap();
+    assert!(rep.final_loss.is_finite());
+    assert_eq!(
+        rep.rows[0].activation_bytes,
+        art.manifest.residual_bytes_total
+    );
+    assert!(rep.by_kind.iter().any(|(k, _)| k == "ckpt_input"));
+}
+
+#[test]
 fn residuals_match_manifest_abi() {
     let rt = rt();
     for preset in ["vitt_loraqv_gelu_ln", "vitt_loraqv_regelu2_msln",
+                   "vitt_loraqv_relu_ln", "vitt_loraqv_gelu_ln_ckpt",
                    "llama_loraall_resilu2_msrms",
+                   "llama_loraall_silu_rms_swiglu",
+                   "llama_loraall_resilu2_msrms_swiglu_ckpt",
                    "roberta_loraall_gelu_ln"] {
         let art = Artifact::synth(&rt, preset).unwrap();
         let params = art.load_params().unwrap();
@@ -350,9 +467,8 @@ fn executor_direct_use() {
 /// model, used by the thread-count determinism test.
 fn full_step_grads(model: &Model, params: &[Tensor], x: &Tensor,
                    y: &Tensor) -> Vec<Tensor> {
-    let (_loss, _metric, saves) =
+    let (_loss, _metric, res) =
         model.forward(params, x, y).expect("fwd");
-    let res: Vec<Tensor> = saves.into_iter().map(|s| s.tensor).collect();
     model.backward(params, &res, x, y).expect("bwd")
 }
 
@@ -379,6 +495,24 @@ fn train_step_grads_bit_identical_across_thread_counts() {
         assert_eq!(a.shape, b.shape);
         assert_eq!(a.data, b.data,
                    "gradient bits differ between thread counts");
+    }
+}
+
+#[test]
+fn swiglu_grads_bit_identical_across_thread_counts() {
+    // the determinism contract must survive the new layer dispatch,
+    // RoPE rotation, and the gate-multiply kernels
+    use ambp::runtime::native::pool::with_threads;
+    let cfg = ambp::runtime::native::spec::parse_preset(
+        "llama_loraall_silu_rms_swiglu").unwrap();
+    let model = Model::build(cfg.clone()).unwrap();
+    let params = model.init_params(17);
+    let (x, y) = sample_batch(&cfg, 0, 2);
+    let g1 = with_threads(1, || full_step_grads(&model, &params, &x, &y));
+    let g8 = with_threads(8, || full_step_grads(&model, &params, &x, &y));
+    for (a, b) in g1.iter().zip(&g8) {
+        assert_eq!(a.data, b.data,
+                   "swiglu gradient bits differ between thread counts");
     }
 }
 
@@ -417,6 +551,39 @@ fn arena_reuse_steady_state() {
     );
     assert!(steady.hits > warm.hits,
             "steady-state step did not reuse arena buffers");
+}
+
+#[test]
+fn arena_reuse_steady_state_under_ckpt() {
+    // the recompute path must also draw its regenerated residuals from
+    // the free lists once warm — checkpointing trades time, not allocs
+    use ambp::runtime::Executor;
+    let mut cfg = tiny_cfg(Arch::Llama, Tuning::LoraAll, Act::ReSilu2,
+                           Norm::MsRms);
+    cfg.swiglu = true;
+    cfg.ckpt = true;
+    let model = Model::build(cfg.clone()).unwrap();
+    let params = model.init_params(5);
+    let exec = NativeExec::new(model);
+    let (x, y) = sample_batch(&cfg, 0, 3);
+    let step = |exec: &NativeExec| {
+        let out = exec.run_fwd(&params, &x, &y).unwrap();
+        let grads =
+            exec.run_bwd(&params, &out.residuals, &x, &y).unwrap();
+        exec.recycle(out.residuals);
+        exec.recycle(grads);
+    };
+    for _ in 0..2 {
+        step(&exec);
+    }
+    let warm = exec.arena_stats();
+    for _ in 0..3 {
+        step(&exec);
+    }
+    let steady = exec.arena_stats();
+    assert_eq!(steady.misses, warm.misses,
+               "ckpt recompute allocated fresh buffers in steady state");
+    assert!(steady.hits > warm.hits);
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,208 @@
+//! The tape-schema grid tests: for **every** `{arch} × {tuning} ×
+//! {act} × {norm} [× swiglu][× ckpt]` combination, the residual list an
+//! actual forward pass emits must match the tape schema the composition
+//! derived at build time — byte for byte — and the backward pass must
+//! consume the tape exactly (the reader errors on any leftover or
+//! out-of-order slot). This generalizes the old hand-picked
+//! `residuals_match_manifest_abi` to the full grid, which is what pins
+//! "the ABI is derived from the composition" as an invariant rather
+//! than a convention.
+//!
+//! Also cross-checks the analytical memmodel (Tape mode) against the
+//! derived schema for the SwiGLU LLaMA block — the first point where
+//! the native tape and the paper's llama accounting describe the same
+//! architecture.
+
+use ambp::memmodel::ops::{self, MemCfg, Mode};
+use ambp::runtime::native::spec::{parse_preset, sample_batch,
+                                  schema_residuals};
+use ambp::runtime::native::{Act, Arch, Model, NetCfg, Norm, Tuning};
+
+const ARCHS: [Arch; 3] = [Arch::Vit, Arch::Llama, Arch::Roberta];
+const TUNINGS: [Tuning; 6] = [
+    Tuning::Full,
+    Tuning::Frozen,
+    Tuning::LoraQv,
+    Tuning::LoraAll,
+    Tuning::LoraFaQv,
+    Tuning::LoraFaAll,
+];
+const ACTS: [Act; 5] =
+    [Act::Gelu, Act::ReGelu2, Act::Silu, Act::ReSilu2, Act::Relu];
+const NORMS: [Norm; 4] = [Norm::Ln, Norm::MsLn, Norm::Rms, Norm::MsRms];
+
+fn tiny(arch: Arch, tuning: Tuning, act: Act, norm: Norm, swiglu: bool,
+        ckpt: bool) -> NetCfg {
+    NetCfg {
+        arch,
+        dim: 16,
+        depth: 2,
+        n_heads: 2,
+        n_tokens: 6,
+        batch: 2,
+        n_classes: 3,
+        vocab: 11,
+        mlp_ratio: 2.0,
+        lora_rank: 3,
+        patch_dim: 8,
+        tuning,
+        act,
+        norm,
+        swiglu,
+        ckpt,
+    }
+}
+
+/// One fwd (+ optional bwd), asserting the emitted residuals match the
+/// derived schema byte-for-byte — and, with `bwd`, that the backward
+/// consumes the tape exactly (the reader errors on any leftover or
+/// out-of-order slot).
+fn assert_tape_matches_schema(cfg: &NetCfg, label: &str, bwd: bool) {
+    let model = Model::build(cfg.clone())
+        .unwrap_or_else(|e| panic!("{label}: build: {e}"));
+    let infos = schema_residuals(&model);
+    let params = model.init_params(1);
+    let (x, y) = sample_batch(cfg, 1, 2);
+    let (loss, _metric, res) = model
+        .forward(&params, &x, &y)
+        .unwrap_or_else(|e| panic!("{label}: fwd: {e}"));
+    assert!(loss.is_finite(), "{label}: non-finite loss");
+    assert_eq!(res.len(), infos.len(), "{label}: residual arity");
+    let mut total = 0u64;
+    for (t, info) in res.iter().zip(&infos) {
+        assert_eq!(t.shape, info.shape, "{label}: {}", info.name);
+        assert_eq!(t.dtype, info.dtype, "{label}: {}", info.name);
+        assert_eq!(t.nbytes() as u64, info.bytes, "{label}: {}",
+                   info.name);
+        total += info.bytes;
+    }
+    assert!(total > 0, "{label}: empty tape");
+    if !bwd {
+        return;
+    }
+    let grads = model
+        .backward(&params, &res, &x, &y)
+        .unwrap_or_else(|e| panic!("{label}: bwd: {e}"));
+    let n_train =
+        model.infos.iter().filter(|p| p.trainable).count();
+    assert_eq!(grads.len(), n_train, "{label}: grad arity");
+}
+
+#[test]
+fn tape_matches_schema_full_tiny_grid() {
+    let mut combos = 0usize;
+    for arch in ARCHS {
+        for tuning in TUNINGS {
+            for act in ACTS {
+                for norm in NORMS {
+                    for ckpt in [false, true] {
+                        let swiglus: &[bool] = if arch == Arch::Llama {
+                            &[false, true]
+                        } else {
+                            &[false]
+                        };
+                        for &swiglu in swiglus {
+                            let cfg = tiny(arch, tuning, act, norm,
+                                           swiglu, ckpt);
+                            let label = format!(
+                                "{arch:?}/{tuning:?}/{act:?}/{norm:?}\
+                                 /swiglu={swiglu}/ckpt={ckpt}"
+                            );
+                            assert_tape_matches_schema(&cfg, &label,
+                                                       true);
+                            combos += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // 3 archs × 6 tunings × 5 acts × 4 norms × 2 ckpt, plus the llama
+    // swiglu plane
+    assert_eq!(combos, 3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2);
+}
+
+#[test]
+fn preset_grid_residuals_match_manifest() {
+    // every parseable preset string: the actual fwd output must match
+    // the schema-derived manifest residual section byte-for-byte
+    let models = ["vitt", "llama", "roberta"];
+    let tunings =
+        ["full", "frozen", "loraqv", "loraall", "lorafaqv", "lorafaall"];
+    let acts = ["gelu", "regelu2", "silu", "resilu2", "relu"];
+    let norms = ["ln", "msln", "rms", "msrms"];
+    let mut checked = 0usize;
+    for m in models {
+        for t in tunings {
+            for a in acts {
+                for n in norms {
+                    let mut variants =
+                        vec![format!("{m}_{t}_{a}_{n}"),
+                             format!("{m}_{t}_{a}_{n}_ckpt")];
+                    if m == "llama" {
+                        variants.push(format!("{m}_{t}_{a}_{n}_swiglu"));
+                        variants.push(
+                            format!("{m}_{t}_{a}_{n}_swiglu_ckpt"));
+                    }
+                    for preset in variants {
+                        let cfg = parse_preset(&preset)
+                            .unwrap_or_else(|e| {
+                                panic!("{preset}: parse: {e}")
+                            });
+                        // fwd-only at preset dims: the tiny grid above
+                        // already runs bwd for every combination
+                        assert_tape_matches_schema(&cfg, &preset, false);
+                        checked += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(checked, 3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2);
+}
+
+#[test]
+fn memmodel_tape_mode_matches_swiglu_block_bytes() {
+    // the analytical model's llama block (always gated) vs the native
+    // tape, per block0, at identical dims — Tape mode must agree
+    // exactly now that the native llama can be the real architecture
+    for (preset, act, norm) in [
+        ("llama_loraall_silu_rms_swiglu", ops::ActKind::Silu,
+         ops::NormKind::Rms),
+        ("llama_loraall_resilu2_msrms_swiglu", ops::ActKind::ReSilu2,
+         ops::NormKind::MsRms),
+    ] {
+        let cfg = parse_preset(preset).unwrap();
+        let model = Model::build(cfg.clone()).unwrap();
+        let native_block0: u64 = schema_residuals(&model)
+            .iter()
+            .filter(|r| r.module.starts_with("block0."))
+            .map(|r| r.bytes)
+            .sum();
+        let mem = MemCfg {
+            arch: ops::Arch::Llama,
+            dim: cfg.dim,
+            depth: cfg.depth,
+            n_heads: cfg.n_heads,
+            mlp_ratio: cfg.mlp_ratio,
+            n_tokens: cfg.n_tokens,
+            patch_dim: 0,
+            n_classes: 0,
+            vocab: cfg.vocab,
+            lora_rank: cfg.lora_rank,
+            batch: cfg.batch,
+            tuning: ops::Tuning::LoraAll,
+            act,
+            norm,
+            mode: Mode::Tape,
+            ckpt: false,
+        };
+        let analytic: u64 = ambp::memmodel::ops::block_entries(&mem, 0)
+            .iter()
+            .map(|e| e.bytes)
+            .sum();
+        assert_eq!(native_block0, analytic,
+                   "{preset}: native {native_block0} vs memmodel \
+                    {analytic}");
+    }
+}
