@@ -128,6 +128,19 @@ fn main() {
                            black_box(int8::quant_rows(black_box(&xs),
                                                       1024));
                        }));
+    // the fused pool-parallel group kernels backing the _mesa tape
+    let mut packed = vec![0u8; int8::packed_len(xs.len(), 1024)];
+    results.push(bench("int8 quantize_into g=1024 (mesa tape)",
+                       samples(20), || {
+                           int8::quantize_into(black_box(&xs), 1024,
+                                               &mut packed);
+                       }));
+    let mut dequant = vec![0f32; xs.len()];
+    results.push(bench("int8 dequantize_into g=1024 (mesa tape)",
+                       samples(20), || {
+                           int8::dequantize_into(black_box(&packed),
+                                                 1024, &mut dequant);
+                       }));
     results.push(bench("nf4 quantize (QLoRA weights)", samples(5), || {
         black_box(nf4::quantize(black_box(&xs), 64));
     }));
@@ -157,6 +170,7 @@ fn main() {
         "llama_loraall_resilu2_msrms",
         "llama_loraall_silu_rms_swiglu",
         "vitt_loraqv_gelu_ln_ckpt",
+        "vitt_loraqv_gelu_ln_mesa",
     ] {
         let art = match load_or_synth(&rt, preset) {
             Ok(a) => a,

@@ -70,6 +70,7 @@ fn main() -> Result<()> {
             norm: ambp::exp::helpers::norm_kind(&m.norm),
             mode: Mode::Tape,
             ckpt: m.ckpt,
+            mesa: m.mesa,
         };
         let predicted = total_bytes(&cfg);
         let measured = m.residual_bytes_total;

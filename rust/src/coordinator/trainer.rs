@@ -5,7 +5,12 @@
 //! → gradient accumulation → optimizer step on the host. The loop is
 //! backend-agnostic: it only speaks the residual ABI of
 //! `runtime::Executor`, so the same code drives the native CPU backend
-//! and (with `--features pjrt`) compiled XLA artifacts.
+//! and (with `--features pjrt`) compiled XLA artifacts. Storage-format
+//! axes ride that contract for free: the `_mesa` presets' int8
+//! residual tensors flow through fwd → tracker → bwd → recycle
+//! untouched, and the measured `activation_bytes` shrink because the
+//! tensors themselves are smaller — not because of any trainer-side
+//! accounting rule.
 
 use std::path::PathBuf;
 

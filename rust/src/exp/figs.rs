@@ -22,16 +22,17 @@ pub fn fig1(args: &Args) -> Result<()> {
         ("LoRA", "vitt_loraqv_gelu_ln", ActKind::Gelu, NormKind::Ln, false),
         ("LoRA + CKPT", "vitt_loraqv_gelu_ln_ckpt", ActKind::Gelu,
          NormKind::Ln, true),
-        ("LoRA + Mesa", "vitt_loraqv_mesa_mesaln", ActKind::MesaGelu8,
+        ("LoRA + Mesa", "vitt_loraqv_gelu_ln_mesa", ActKind::MesaGelu8,
          NormKind::MesaLn8, false),
         ("LoRA + Ours", "vitt_loraqv_regelu2_msln", ActKind::ReGelu2,
          NormKind::MsLn, false),
     ];
     let mut base_mem = 0f64;
     for (label, preset, act, norm, ckpt) in variants {
-        // Mesa still needs compiled artifacts + a pjrt build; every
-        // other row (incl. ckpt since the Layer/Tape refactor) runs on
-        // the synthesized native presets
+        // every row — Mesa included, via the `_mesa` int8 tape slots —
+        // runs on the synthesized native presets; a row only degrades
+        // to [unavailable] on a non-default AMBP_BACKEND that cannot
+        // execute it
         let rep = match train_preset(preset, steps, 1.25e-3, 0) {
             Ok(rep) => rep,
             Err(e) => {

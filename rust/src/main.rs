@@ -138,6 +138,7 @@ fn mem_report(args: &Args) -> Result<()> {
         other => bail!("unknown scale {other:?}"),
     };
     cfg.tuning = tuning;
+    cfg.mesa = args.bool("mesa");
     let bits = args.f64_or("weight-bits", 16.0)?;
     let est = peak(&cfg, bits);
     println!("{scale} | act={act:?} norm={norm:?} tuning={tuning:?} \

@@ -80,6 +80,7 @@ mod tests {
             norm,
             mode: Mode::Paper,
             ckpt: false,
+            mesa: false,
         }
     }
 
@@ -101,6 +102,7 @@ mod tests {
             norm,
             mode: Mode::Paper,
             ckpt: false,
+            mesa: false,
         }
     }
 

@@ -95,6 +95,13 @@ pub struct MemCfg {
     pub norm: NormKind,
     pub mode: Mode,
     pub ckpt: bool,
+    /// Mesa int8 axis (the native `_mesa` suffix): nonlinear-layer
+    /// saves — norm x̂ and full-precision pre-activations — store as
+    /// int8 codes + a per-row f32 scale, `rows·(cols+4)` bytes instead
+    /// of `rows·cols·e`. Generalizes the `MesaGelu8`/`MesaLn8` kinds
+    /// (byte-identical where both apply) to every act/norm combination;
+    /// in Tape mode it mirrors the native int8 tape slots exactly.
+    pub mesa: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -162,6 +169,19 @@ impl<'a> Acc<'a> {
         }
     }
 
+    /// Bytes of one saved `[rows, cols]` nonlinear-layer tensor:
+    /// `rows·cols·elem` normally, or int8 codes + per-row f32 scale
+    /// (`rows·(cols+4)`) under the mesa axis — the exact byte count of
+    /// the native backend's int8 tape slots.
+    fn nonlin_saved(&self, cols: usize, elem: f64) -> f64 {
+        let rows = self.cfg.rows() as f64;
+        if self.cfg.mesa {
+            rows * (cols as f64 + 4.0)
+        } else {
+            rows * cols as f64 * elem
+        }
+    }
+
     /// Norm residuals. Returns true when the norm output z is stored and
     /// shareable with the following linears (MS variants).
     fn norm(&mut self, module: &str, cols: usize) -> bool {
@@ -170,13 +190,15 @@ impl<'a> Acc<'a> {
         let stats = rows * 4.0; // per-row fp32 scalar
         match c.norm {
             NormKind::Ln => {
-                // x (fp32 in paper mode), mu, rstd
-                self.push(module, "norm_input", rows * cols as f64 * 4.0);
+                // x (fp32 in paper mode, int8 under mesa), mu, rstd
+                self.push(module, "norm_input",
+                          self.nonlin_saved(cols, 4.0));
                 self.push(module, "norm_stat", 2.0 * stats);
                 false
             }
             NormKind::Rms => {
-                self.push(module, "norm_input", rows * cols as f64 * 4.0);
+                self.push(module, "norm_input",
+                          self.nonlin_saved(cols, 4.0));
                 self.push(module, "norm_stat", stats);
                 false
             }
@@ -188,7 +210,7 @@ impl<'a> Acc<'a> {
             }
             NormKind::MsLn | NormKind::MsRms => {
                 self.push(module, "norm_shared",
-                          rows * cols as f64 * c.act_bytes());
+                          self.nonlin_saved(cols, c.act_bytes()));
                 self.push(module, "norm_stat", stats);
                 true
             }
@@ -221,7 +243,8 @@ impl<'a> Acc<'a> {
         let n = c.rows() as f64 * cols as f64;
         match c.act {
             ActKind::Gelu | ActKind::Silu => {
-                self.push(module, "act_full", n * c.act_bytes());
+                self.push(module, "act_full",
+                          self.nonlin_saved(cols, c.act_bytes()));
             }
             ActKind::Relu => self.push(module, "act_codes", n / 8.0),
             ActKind::ReGelu2 | ActKind::ReGelu2d | ActKind::ReSilu2 => {

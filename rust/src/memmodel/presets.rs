@@ -8,7 +8,7 @@ pub fn vit_base(batch: usize, tuning: Tuning, act: ActKind,
         arch: Arch::Vit, dim: 768, depth: 12, n_heads: 12, mlp_ratio: 4.0,
         n_tokens: 197, patch_dim: 768, n_classes: 100, vocab: 0,
         lora_rank: 4, batch, tuning, act, norm, mode: Mode::Paper,
-        ckpt: false,
+        ckpt: false, mesa: false,
     }
 }
 
@@ -18,7 +18,7 @@ pub fn vit_large(batch: usize, tuning: Tuning, act: ActKind,
         arch: Arch::Vit, dim: 1024, depth: 24, n_heads: 16, mlp_ratio: 4.0,
         n_tokens: 197, patch_dim: 1024, n_classes: 100, vocab: 0,
         lora_rank: 4, batch, tuning, act, norm, mode: Mode::Paper,
-        ckpt: false,
+        ckpt: false, mesa: false,
     }
 }
 
@@ -28,7 +28,8 @@ pub fn llama7b(batch: usize, seq: usize, act: ActKind,
         arch: Arch::Llama, dim: 4096, depth: 32, n_heads: 32,
         mlp_ratio: 11008.0 / 4096.0, n_tokens: seq, patch_dim: 0,
         n_classes: 0, vocab: 32000, lora_rank: 64, batch,
-        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper, ckpt: false,
+        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper,
+        ckpt: false, mesa: false,
     }
 }
 
@@ -38,7 +39,8 @@ pub fn llama13b(batch: usize, seq: usize, act: ActKind,
         arch: Arch::Llama, dim: 5120, depth: 40, n_heads: 40,
         mlp_ratio: 13824.0 / 5120.0, n_tokens: seq, patch_dim: 0,
         n_classes: 0, vocab: 32000, lora_rank: 64, batch,
-        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper, ckpt: false,
+        tuning: Tuning::LoraAll, act, norm, mode: Mode::Paper,
+        ckpt: false, mesa: false,
     }
 }
 
@@ -48,7 +50,7 @@ pub fn roberta_base(batch: usize, seq: usize, act: ActKind,
         arch: Arch::Roberta, dim: 768, depth: 12, n_heads: 12,
         mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
         vocab: 50265, lora_rank: 64, batch, tuning: Tuning::LoraAll, act,
-        norm, mode: Mode::Paper, ckpt: false,
+        norm, mode: Mode::Paper, ckpt: false, mesa: false,
     }
 }
 
@@ -59,7 +61,7 @@ pub fn swin_tiny(batch: usize, act: ActKind, norm: NormKind) -> MemCfg {
         arch: Arch::Vit, dim: 384, depth: 12, n_heads: 12, mlp_ratio: 4.0,
         n_tokens: 392, patch_dim: 384, n_classes: 20, vocab: 0,
         lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
-        mode: Mode::Paper, ckpt: false,
+        mode: Mode::Paper, ckpt: false, mesa: false,
     }
 }
 
@@ -69,7 +71,7 @@ pub fn bert_base(batch: usize, seq: usize, act: ActKind,
         arch: Arch::Roberta, dim: 768, depth: 12, n_heads: 12,
         mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
         vocab: 30522, lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
-        mode: Mode::Paper, ckpt: false,
+        mode: Mode::Paper, ckpt: false, mesa: false,
     }
 }
 
@@ -79,7 +81,7 @@ pub fn bert_large(batch: usize, seq: usize, act: ActKind,
         arch: Arch::Roberta, dim: 1024, depth: 24, n_heads: 16,
         mlp_ratio: 4.0, n_tokens: seq, patch_dim: 0, n_classes: 2,
         vocab: 30522, lora_rank: 4, batch, tuning: Tuning::Full, act, norm,
-        mode: Mode::Paper, ckpt: false,
+        mode: Mode::Paper, ckpt: false, mesa: false,
     }
 }
 

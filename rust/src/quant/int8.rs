@@ -1,5 +1,80 @@
-//! Per-row symmetric int8 activation quantization — rust mirror of the
-//! Mesa-baseline Pallas kernel (`python/compile/kernels/quant8.py`).
+//! Per-group symmetric int8 activation quantization — rust mirror of
+//! the Mesa-baseline Pallas kernel (`python/compile/kernels/quant8.py`).
+//!
+//! Two layers of API:
+//!
+//! * [`quant_rows`]/[`dequant_rows`] — the original split codes/scales
+//!   form (memmodel oracle, benches).
+//! * [`quantize_into`]/[`dequantize_into`] — the fused, pool-parallel
+//!   group kernels the native residual tape stores: each group of `g`
+//!   elements packs as `g` int8 codes followed by its 4-byte f32 scale
+//!   (`g + 4` bytes per group, [`bits_per_elem`]`(g)` bits per logical
+//!   element). Work is partitioned on whole-group boundaries and every
+//!   group is reduced sequentially by exactly one chunk, so the output
+//!   is bit-identical for any `AMBP_THREADS` partition — the same
+//!   determinism contract as the GEMM engine.
+
+use crate::runtime::native::pool::{parallel_rows, parallel_rows_u8};
+
+/// Bytes appended to each packed group (the group's f32 scale).
+pub const GROUP_FOOTER_BYTES: usize = 4;
+
+/// Packed byte length of `n` elements quantized in groups of `group`.
+pub fn packed_len(n: usize, group: usize) -> usize {
+    assert!(group > 0 && n % group == 0,
+            "quantize group {group} must divide {n}");
+    n / group * (group + GROUP_FOOTER_BYTES)
+}
+
+/// Fused group quantizer: for each group of `group` elements of `x`,
+/// write `group` symmetric int8 codes (scale = amax/127, zero maps to
+/// code 0 exactly) followed by the group's f32 scale, straight into the
+/// packed residual payload `out` (`out.len()` must equal
+/// [`packed_len`]). Pool-parallel over groups; bit-identical for any
+/// thread-count partition.
+pub fn quantize_into(x: &[f32], group: usize, out: &mut [u8]) {
+    let row = group + GROUP_FOOTER_BYTES;
+    assert_eq!(out.len(), packed_len(x.len(), group));
+    parallel_rows_u8(out, row, 1, |first, chunk| {
+        for (i, packed) in chunk.chunks_mut(row).enumerate() {
+            let g = first + i;
+            let src = &x[g * group..(g + 1) * group];
+            let amax = src.iter().fold(1e-12f32, |m, v| m.max(v.abs()));
+            let scale = amax / 127.0;
+            let (codes, footer) = packed.split_at_mut(group);
+            for (o, &v) in codes.iter_mut().zip(src) {
+                *o = ((v / scale).round().clamp(-127.0, 127.0) as i8)
+                    as u8;
+            }
+            footer.copy_from_slice(&scale.to_le_bytes());
+        }
+    });
+}
+
+/// Inverse of [`quantize_into`]: expand `packed` (groups of `group`
+/// codes + scale footer) back to f32 in `out`. Pool-parallel,
+/// partition-invariant like the quantizer.
+pub fn dequantize_into(packed: &[u8], group: usize, out: &mut [f32]) {
+    let row = group + GROUP_FOOTER_BYTES;
+    assert!(group > 0 && packed.len() % row == 0,
+            "packed length {} is not a multiple of group+footer {row}",
+            packed.len());
+    assert_eq!(out.len(), packed.len() / row * group);
+    parallel_rows(out, group, 1, |first, chunk| {
+        for (i, dst) in chunk.chunks_mut(group).enumerate() {
+            let src = &packed[(first + i) * row..(first + i + 1) * row];
+            let scale = f32::from_le_bytes([
+                src[group],
+                src[group + 1],
+                src[group + 2],
+                src[group + 3],
+            ]);
+            for (o, &b) in dst.iter_mut().zip(&src[..group]) {
+                *o = (b as i8) as f32 * scale;
+            }
+        }
+    });
+}
 
 /// Quantize rows of length `cols`. Returns (q, per-row scale).
 pub fn quant_rows(x: &[f32], cols: usize) -> (Vec<i8>, Vec<f32>) {
@@ -63,5 +138,34 @@ mod tests {
     fn bits_accounting() {
         assert!((bits_per_elem(64) - 8.5).abs() < 1e-9);
         assert!(bits_per_elem(1024) < 8.04);
+    }
+
+    #[test]
+    fn fused_kernels_match_split_reference() {
+        let mut rng = Rng::new(9);
+        let (rows, cols) = (7, 24);
+        let x: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal_f32() * 3.0).collect();
+        let (q, s) = quant_rows(&x, cols);
+        let mut packed = vec![0u8; packed_len(x.len(), cols)];
+        quantize_into(&x, cols, &mut packed);
+        for r in 0..rows {
+            let row = &packed[r * (cols + 4)..(r + 1) * (cols + 4)];
+            for c in 0..cols {
+                assert_eq!(row[c] as i8, q[r * cols + c]);
+            }
+            let scale = f32::from_le_bytes(
+                row[cols..].try_into().unwrap());
+            assert_eq!(scale, s[r]);
+        }
+        let mut back = vec![0f32; x.len()];
+        dequantize_into(&packed, cols, &mut back);
+        assert_eq!(back, dequant_rows(&q, &s, cols));
+    }
+
+    #[test]
+    fn packed_len_accounting() {
+        assert_eq!(packed_len(128, 64), 2 * 68);
+        assert_eq!(packed_len(12, 4), 3 * 8);
     }
 }

@@ -1,5 +1,7 @@
-//! Quantization substrates: per-row symmetric int8 (Mesa-like activation
-//! compression baseline) and NF4 (QLoRA weight storage simulation).
+//! Quantization substrates: per-group symmetric int8 (the Mesa
+//! activation-compression baseline — the fused group kernels back the
+//! native `_mesa` presets' residual tape) and NF4 (QLoRA weight storage
+//! simulation).
 
 pub mod int8;
 pub mod nf4;

@@ -108,6 +108,10 @@ pub struct Manifest {
     /// Whether the MLP is the SwiGLU gated form (with RoPE attention).
     /// Optional in `manifest.json` for backward compatibility.
     pub swiglu: bool,
+    /// Whether the nonlinear-layer saves are Mesa int8-quantized on
+    /// the residual tape (the `_mesa` preset axis). Optional in
+    /// `manifest.json` for backward compatibility.
+    pub mesa: bool,
     /// Parameter layout, in `params.bin` order.
     pub params: Vec<ParamInfo>,
     /// Input batch contract.
@@ -220,6 +224,11 @@ impl Manifest {
             ckpt: cfg.get("ckpt")?.as_bool()?,
             swiglu: cfg
                 .opt("swiglu")
+                .map(|v| v.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            mesa: cfg
+                .opt("mesa")
                 .map(|v| v.as_bool())
                 .transpose()?
                 .unwrap_or(false),

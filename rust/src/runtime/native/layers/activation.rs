@@ -20,7 +20,8 @@ use super::super::arena::Arena;
 use super::super::kernels::{act_bwd_exact_into, act_fwd_into,
                             relu_fwd_into};
 use super::super::model::{Act, NetCfg};
-use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
+use super::tape::{Composer, Kind, ResF32, SlotId, TapeReader,
+                  TapeWriter};
 use super::{BwdCtx, FwdCtx, Layer};
 use crate::coeffs::funcs::ReluComb;
 use crate::packing;
@@ -44,6 +45,24 @@ fn save_policy(act: Act) -> Save {
     }
 }
 
+/// A popped activation residual: the full-precision save as an f32
+/// view (dequantized from int8 under `_mesa`), or a packed code plane.
+pub(crate) enum ActSaved<'a> {
+    /// Full-precision pre-activation (possibly dequantized).
+    Full(ResF32<'a>),
+    /// Packed 2-bit segment / 1-bit sign codes.
+    Packed(&'a Tensor),
+}
+
+impl ActSaved<'_> {
+    /// Hand any owned dequantized buffer back to the arena.
+    pub(crate) fn release(self, arena: &mut Arena) {
+        if let ActSaved::Full(v) = self {
+            v.release(arena);
+        }
+    }
+}
+
 /// The activation residual contract: one tape slot minted at build,
 /// pushed from the pre-activation in fwd, applied to an upstream
 /// gradient in bwd.
@@ -55,13 +74,17 @@ pub(crate) struct ActResidual {
 
 impl ActResidual {
     /// Mint the residual slot for `cfg.act` over a `lead × m` tensor.
+    /// The full-precision save goes through the mesa-aware `slot_f32`,
+    /// so under `_mesa` it becomes an int8 group slot (Mesa-GELU /
+    /// Mesa-SiLU); the packed code planes are already sub-byte and
+    /// never quantize.
     pub(crate) fn mint(cfg: &NetCfg, comp: &mut Composer, module: &str,
                        lead: &[usize], m: usize) -> ActResidual {
         let mut shape = lead.to_vec();
         let slot = match save_policy(cfg.act) {
             Save::Full => {
                 shape.push(m);
-                comp.slot(module, Kind::ActFull, &shape, DType::F32, 32.0)
+                comp.slot_f32(module, Kind::ActFull, &shape)
             }
             Save::Codes2(_) => {
                 shape.push(m / 4);
@@ -107,27 +130,34 @@ impl ActResidual {
         }
     }
 
-    /// Pop the residual.
-    pub(crate) fn pop<'a>(&self, tape: &mut TapeReader<'a>)
-                          -> Result<&'a Tensor> {
-        tape.pop(self.slot)
+    /// Pop the residual (dequantizing a `_mesa` full save).
+    pub(crate) fn pop<'a>(&self, arena: &mut Arena,
+                          tape: &mut TapeReader<'a>)
+                          -> Result<ActSaved<'a>> {
+        match save_policy(self.act) {
+            Save::Full => {
+                Ok(ActSaved::Full(tape.pop_f32(arena, self.slot)?))
+            }
+            _ => Ok(ActSaved::Packed(tape.pop(self.slot)?)),
+        }
     }
 
     /// `du = dy ∘ h'(u)` into `du`, from the popped residual.
-    pub(crate) fn bwd_into(&self, du: &mut [f32], saved: &Tensor,
+    pub(crate) fn bwd_into(&self, du: &mut [f32], saved: &ActSaved,
                            dy: &[f32]) {
-        match save_policy(self.act) {
-            Save::Full => {
-                act_bwd_exact_into(du, saved.as_f32(), dy,
+        match (save_policy(self.act), saved) {
+            (Save::Full, ActSaved::Full(u)) => {
+                act_bwd_exact_into(du, u.as_f32(), dy,
                                    self.act.is_gelu());
             }
-            Save::Codes2(comb) => {
-                packing::apply_slopes_into(du, &saved.data, dy,
+            (Save::Codes2(comb), ActSaved::Packed(t)) => {
+                packing::apply_slopes_into(du, &t.data, dy,
                                            comb.slopes());
             }
-            Save::Signs => {
-                packing::apply_signs_into(du, &saved.data, dy);
+            (Save::Signs, ActSaved::Packed(t)) => {
+                packing::apply_signs_into(du, &t.data, dy);
             }
+            _ => unreachable!("activation save/policy mismatch"),
         }
     }
 }
@@ -166,10 +196,11 @@ impl Layer for Activation {
     }
 
     fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
-        let saved = self.res.pop(tape)?;
+        let saved = self.res.pop(ctx.arena, tape)?;
         let dy = std::mem::take(&mut ctx.dh);
         let mut du = ctx.arena.take_f32(self.n);
-        self.res.bwd_into(&mut du, saved, &dy);
+        self.res.bwd_into(&mut du, &saved, &dy);
+        saved.release(ctx.arena);
         ctx.arena.put_f32(dy);
         ctx.dh = du;
         Ok(())

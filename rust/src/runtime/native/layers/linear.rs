@@ -181,19 +181,27 @@ impl LinOp {
 
     /// Backward: pops the LoRA `u` and own-input slots (in reverse push
     /// order), accumulates `dW`/`db`/`dA`/`dB`, returns `dx`.
+    ///
+    /// The input residual is read through the tape's f32 view: an MS
+    /// norm's shared x̂ may be a quantized int8 slot under `_mesa`, in
+    /// which case the gradient products run over the dequantized copy
+    /// (the Mesa approximation).
     pub fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader,
                dy: &[f32], rows: usize) -> Result<Vec<f32>> {
         let u = match self.u_slot {
             Some(s) => Some(tape.pop(s)?),
             None => None,
         };
-        let x: Option<&Tensor> = match self.x_src {
-            XSrc::Own(s) => Some(tape.pop(s)?),
-            XSrc::Ext(s) => Some(tape.get(s)?),
+        let x = match self.x_src {
+            XSrc::Own(s) => Some(tape.pop_f32(ctx.arena, s)?),
+            XSrc::Ext(s) => Some(tape.get_f32(ctx.arena, s)?),
             XSrc::None => None,
         };
         if self.base_train {
-            let xx = x.expect("linear input residual missing").as_f32();
+            let xx = x
+                .as_ref()
+                .expect("linear input residual missing")
+                .as_f32();
             let mut dw = ctx.arena.take_f32(self.dout * self.din);
             matmul_tn_into(&mut dw, dy, xx, self.dout, rows, self.din);
             ctx.acc(self.w, dw);
@@ -217,6 +225,7 @@ impl LinOp {
             ctx.acc(lbi, dlb);
             if !self.fa {
                 let xx = x
+                    .as_ref()
                     .expect("linear input residual missing (lora)")
                     .as_f32();
                 let mut dla = ctx.arena.take_f32(r * self.din);
@@ -226,6 +235,9 @@ impl LinOp {
             matmul_nn_acc_into(&mut dx, &du, ctx.params[lai].as_f32(),
                                rows, r, self.din);
             ctx.arena.put_f32(du);
+        }
+        if let Some(x) = x {
+            x.release(ctx.arena);
         }
         Ok(dx)
     }

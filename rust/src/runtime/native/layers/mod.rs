@@ -46,7 +46,8 @@ pub use head::Head;
 pub use linear::{LinOp, Linear, XSrc};
 pub use norm::Norm;
 pub use swiglu::SwiGlu;
-pub use tape::{Composer, Kind, SlotId, SlotInfo, TapeReader, TapeWriter};
+pub use tape::{Composer, Kind, ResF32, SlotId, SlotInfo, TapeReader,
+               TapeWriter};
 
 /// Parameter registry used while composing a model: mints manifest
 /// parameter indices in layout order.

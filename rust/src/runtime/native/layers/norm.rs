@@ -109,7 +109,8 @@ impl Layer for Norm {
     fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()> {
         let (rows, c) = (self.rows, self.c);
         let stat = tape.pop(self.stat_slot)?;
-        let xhat = tape.pop(self.xhat_slot)?;
+        // under `_mesa` the saved x̂ is int8; pop_f32 dequantizes it
+        let xhat = tape.pop_f32(ctx.arena, self.xhat_slot)?;
         let dy = std::mem::take(&mut ctx.dh);
         let mut dx = ctx.arena.take_f32(rows * c);
         if let Some(gi) = self.g {
@@ -143,6 +144,7 @@ impl Layer for Norm {
             norm_bwd_into(&mut dx, &dy, xhat.as_f32(), stat.as_f32(),
                           rows, c, self.rms);
         }
+        xhat.release(ctx.arena);
         ctx.arena.put_f32(dy);
         ctx.dh = dx;
         Ok(())

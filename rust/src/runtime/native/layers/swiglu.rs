@@ -117,7 +117,7 @@ impl Layer for SwiGlu {
         ctx.arena.put_f32(dy);
         let u3 = tape.pop(self.u3_slot)?;
         let s = tape.pop(self.s_slot)?;
-        let saved = self.act.pop(tape)?;
+        let saved = self.act.pop(ctx.arena, tape)?;
         // product rule: ds = dp ⊙ u₃, du₃ = dp ⊙ s, du₁ = ds ∘ h'(u₁)
         let mut ds = ctx.arena.take_f32(n);
         mul_into(&mut ds, &dp, u3.as_f32());
@@ -125,7 +125,8 @@ impl Layer for SwiGlu {
         mul_into(&mut du3, &dp, s.as_f32());
         ctx.arena.put_f32(dp);
         let mut du1 = ctx.arena.take_f32(n);
-        self.act.bwd_into(&mut du1, saved, &ds);
+        self.act.bwd_into(&mut du1, &saved, &ds);
+        saved.release(ctx.arena);
         ctx.arena.put_f32(ds);
         // reverse push order: up's slots unwind before gate's
         let mut dx = self.up.bwd(ctx, tape, &du3, self.rows)?;

@@ -16,6 +16,7 @@
 use anyhow::{ensure, Result};
 
 use super::super::arena::Arena;
+use crate::quant::int8;
 use crate::runtime::tensor::{DType, Tensor};
 
 /// Residual category — the Figure 2 breakdown axis. String forms match
@@ -67,6 +68,20 @@ impl Kind {
             Kind::CkptInput => "ckpt_input",
         }
     }
+
+    /// Whether a Mesa (`_mesa`) composition stores this save as int8
+    /// codes + scales instead of f32. The scope mirrors the paper's
+    /// Mesa baseline decomposition (Mesa-GELU / Mesa-LN, Tables 1/7)
+    /// and the memmodel's accounting: the *nonlinear-layer* saves —
+    /// norm x̂ (plain or shared) and full-precision pre-activations.
+    /// Attention q/k/v, standalone linear inputs, packed code planes,
+    /// per-row stats, and the head stay in their native dtypes, which
+    /// is what preserves the paper's `ours < mesa < baseline` ordering
+    /// on the fp32 tape.
+    pub fn mesa_quantized(self) -> bool {
+        matches!(self,
+                 Kind::NormInput | Kind::NormShared | Kind::ActFull)
+    }
 }
 
 /// A tape slot token. Minted by [`Composer::slot`] in forward push
@@ -90,13 +105,20 @@ pub struct SlotInfo {
     pub module: String,
     /// Residual category.
     pub kind: Kind,
-    /// Tensor shape.
+    /// *Stored* tensor shape. Equal to the logical shape except for
+    /// packed storage: code planes pack their trailing dim, and int8
+    /// slots store `qgroup + 4` bytes per group (codes + f32 scale).
     pub shape: Vec<usize>,
     /// Storage dtype.
     pub dtype: DType,
     /// Effective bits per *logical* element (2.0 for 2-bit codes, 1.0
-    /// for 1-bit sign codes, 8·dtype size otherwise).
+    /// for 1-bit sign codes, `8 + 32/g` for int8 groups of `g`,
+    /// 8·dtype size otherwise).
     pub bits_per_elem: f64,
+    /// Mesa int8 quantization group (`Some(g)`: the slot stores groups
+    /// of `g` int8 codes + a 4-byte f32 scale; pushed/popped as f32 —
+    /// the tape codec quantizes and dequantizes at the boundary).
+    pub qgroup: Option<usize>,
 }
 
 impl SlotInfo {
@@ -114,16 +136,23 @@ impl SlotInfo {
 #[derive(Default)]
 pub struct Composer {
     slots: Vec<SlotInfo>,
+    mesa: bool,
 }
 
 impl Composer {
-    /// An empty composer.
+    /// An empty composer (no Mesa quantization).
     pub fn new() -> Composer {
         Composer::default()
     }
 
-    /// Mint the next slot. Layers must later push slots in exactly the
-    /// mint order — the writer enforces it.
+    /// A composer whose [`Kind::mesa_quantized`] f32 saves mint as
+    /// per-group int8 slots (the `_mesa` preset axis).
+    pub fn with_mesa(mesa: bool) -> Composer {
+        Composer { slots: Vec::new(), mesa }
+    }
+
+    /// Mint the next slot, exactly as described. Layers must later push
+    /// slots in exactly the mint order — the writer enforces it.
     pub fn slot(&mut self, module: &str, kind: Kind, shape: &[usize],
                 dtype: DType, bits_per_elem: f64) -> SlotId {
         self.slots.push(SlotInfo {
@@ -132,13 +161,32 @@ impl Composer {
             shape: shape.to_vec(),
             dtype,
             bits_per_elem,
+            qgroup: None,
         });
         SlotId(self.slots.len() - 1)
     }
 
-    /// f32 slot with the default 32 bits/elem.
+    /// f32 save of logical `shape`. Under a Mesa composer, eligible
+    /// kinds (see [`Kind::mesa_quantized`]) mint as int8 group slots
+    /// instead: group = the trailing dim, stored shape
+    /// `[..., g + 4]` (codes + f32 scale per group), dtype int8,
+    /// `8 + 32/g` bits per logical element.
     pub fn slot_f32(&mut self, module: &str, kind: Kind,
                     shape: &[usize]) -> SlotId {
+        if self.mesa && kind.mesa_quantized() {
+            let g = *shape.last().expect("quantized slot needs a shape");
+            let mut stored = shape.to_vec();
+            *stored.last_mut().unwrap() = g + int8::GROUP_FOOTER_BYTES;
+            self.slots.push(SlotInfo {
+                module: module.to_string(),
+                kind,
+                shape: stored,
+                dtype: DType::I8,
+                bits_per_elem: int8::bits_per_elem(g),
+                qgroup: Some(g),
+            });
+            return SlotId(self.slots.len() - 1);
+        }
         self.slot(module, kind, shape, DType::F32, 32.0)
     }
 
@@ -178,10 +226,29 @@ impl<'a> TapeWriter<'a> {
     }
 
     /// Push an f32 residual; the payload is copied into an arena-backed
-    /// tensor.
+    /// tensor. For an int8 slot (`_mesa`), the fused group quantizer
+    /// encodes straight into the arena-backed packed payload — the
+    /// fp32 tensor is never stored.
     pub fn push_f32(&mut self, arena: &mut Arena, slot: SlotId,
                     v: &[f32]) -> Result<()> {
         let info = self.expect(slot)?;
+        if let Some(g) = info.qgroup {
+            let stored: usize = info.shape.iter().product();
+            let groups = stored / (g + int8::GROUP_FOOTER_BYTES);
+            ensure!(info.dtype == DType::I8 && groups * g == v.len(),
+                    "slot {}.{} expects {} f32 elems ({} int8 groups \
+                     of {g}), got {}",
+                    info.module, info.kind.as_str(), groups * g, groups,
+                    v.len());
+            let mut data = arena.take_u8(stored);
+            int8::quantize_into(v, g, &mut data);
+            self.out.push(Tensor {
+                shape: info.shape.clone(),
+                dtype: DType::I8,
+                data,
+            });
+            return Ok(());
+        }
         ensure!(info.dtype == DType::F32
                     && info.shape.iter().product::<usize>() == v.len(),
                 "slot {}.{} expects f32 shape {:?}, got {} elems",
@@ -215,6 +282,37 @@ impl<'a> TapeWriter<'a> {
             self.schema.len()
         );
         Ok(self.out)
+    }
+}
+
+/// An f32 view of a popped/read residual: borrowed straight from the
+/// tape for f32 slots, or an arena-backed dequantized copy for int8
+/// (`_mesa`) slots. Call [`release`] when done so the owned buffer
+/// returns to the arena free list (dropping it instead only costs the
+/// steady-state zero-allocation property, which the arena tests pin).
+///
+/// [`release`]: ResF32::release
+pub enum ResF32<'a> {
+    /// The slot stores f32; this borrows the tape tensor directly.
+    Borrowed(&'a [f32]),
+    /// The slot stores int8 groups; this owns the dequantized copy.
+    Owned(Vec<f32>),
+}
+
+impl ResF32<'_> {
+    /// The f32 element view.
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            ResF32::Borrowed(s) => s,
+            ResF32::Owned(v) => v,
+        }
+    }
+
+    /// Hand an owned dequantized buffer back to the arena.
+    pub fn release(self, arena: &mut Arena) {
+        if let ResF32::Owned(v) = self {
+            arena.put_f32(v);
+        }
     }
 }
 
@@ -263,6 +361,38 @@ impl<'a> TapeReader<'a> {
                 "residual {}.{} does not match its slot: {:?} vs {:?}",
                 info.module, info.kind.as_str(), t.shape, info.shape);
         Ok(t)
+    }
+
+    /// [`pop`](TapeReader::pop) as an f32 view: borrows the tensor for
+    /// f32 slots, dequantizes int8 slots into an arena buffer.
+    pub fn pop_f32(&mut self, arena: &mut Arena,
+                   slot: SlotId) -> Result<ResF32<'a>> {
+        let t = self.pop(slot)?;
+        self.view_f32(arena, slot, t)
+    }
+
+    /// [`get`](TapeReader::get) as an f32 view. Each call on an int8
+    /// slot dequantizes afresh (shared saves are read by every
+    /// consumer), trading a little bwd time for the residual bytes —
+    /// the Mesa tradeoff.
+    pub fn get_f32(&self, arena: &mut Arena,
+                   slot: SlotId) -> Result<ResF32<'a>> {
+        let t = self.get(slot)?;
+        self.view_f32(arena, slot, t)
+    }
+
+    fn view_f32(&self, arena: &mut Arena, slot: SlotId,
+                t: &'a Tensor) -> Result<ResF32<'a>> {
+        match self.schema[slot.0].qgroup {
+            None => Ok(ResF32::Borrowed(t.as_f32())),
+            Some(g) => {
+                let groups =
+                    t.data.len() / (g + int8::GROUP_FOOTER_BYTES);
+                let mut v = arena.take_f32(groups * g);
+                int8::dequantize_into(&t.data, g, &mut v);
+                Ok(ResF32::Owned(v))
+            }
+        }
     }
 
     /// Read a not-yet-popped slot without consuming it (shared
@@ -356,5 +486,45 @@ mod tests {
         let mut arena = Arena::new();
         let mut w = TapeWriter::new(&schema);
         assert!(w.push_f32(&mut arena, SlotId(0), &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn mesa_composer_quantizes_eligible_slots_transparently() {
+        let mut c = Composer::with_mesa(true);
+        let s0 = c.slot_f32("n", Kind::NormShared, &[2, 8]);
+        let s1 = c.slot_f32("h", Kind::HeadInput, &[2, 8]);
+        let schema = c.finish();
+        // eligible kind: int8 group slot, stored [2, 8+4], 8+32/8 bits
+        assert_eq!(schema[0].dtype, DType::I8);
+        assert_eq!(schema[0].shape, vec![2, 12]);
+        assert_eq!(schema[0].qgroup, Some(8));
+        assert!((schema[0].bits_per_elem - 12.0).abs() < 1e-9);
+        // ineligible kind stays f32 even under mesa
+        assert_eq!(schema[1].dtype, DType::F32);
+        // push f32 → stored int8 → pop_f32 roundtrips within scale/2
+        let x: Vec<f32> =
+            (0..16).map(|i| (i as f32 - 7.5) * 0.25).collect();
+        let mut arena = Arena::new();
+        let mut w = TapeWriter::new(&schema);
+        w.push_f32(&mut arena, s0, &x).unwrap();
+        w.push_f32(&mut arena, s1, &x).unwrap();
+        let res = w.finish().unwrap();
+        assert_eq!(res[0].dtype, DType::I8);
+        assert_eq!(res[0].nbytes(), 2 * 12);
+        let mut r = TapeReader::new(&schema, &res).unwrap();
+        let shared = r.get_f32(&mut arena, s0).unwrap();
+        assert!(matches!(shared, ResF32::Owned(_)));
+        for (a, b) in shared.as_f32().iter().zip(&x) {
+            assert!((a - b).abs() <= 7.5 * 0.25 / 127.0 * 0.5 + 1e-6);
+        }
+        shared.release(&mut arena);
+        let head = r.pop_f32(&mut arena, s1).unwrap();
+        assert!(matches!(head, ResF32::Borrowed(_)));
+        assert_eq!(head.as_f32(), &x[..]);
+        head.release(&mut arena);
+        let xh = r.pop_f32(&mut arena, s0).unwrap();
+        assert_eq!(xh.as_f32().len(), 16);
+        xh.release(&mut arena);
+        r.finish().unwrap();
     }
 }

@@ -14,8 +14,8 @@
 //! inner residuals in backward.
 //!
 //! The gradient math is cross-checked against finite differences for
-//! every (arch × tuning × act × norm [× swiglu × ckpt]) combination;
-//! the full grid is pinned by `tests/tape_grid.rs`.
+//! every (arch × tuning × act × norm [× swiglu × ckpt × mesa])
+//! combination; the full grid is pinned by `tests/tape_grid.rs`.
 
 use anyhow::{bail, ensure, Result};
 
@@ -146,6 +146,14 @@ pub struct NetCfg {
     /// Gradient checkpointing: store one input per block half,
     /// recompute the rest in bwd.
     pub ckpt: bool,
+    /// Mesa-style int8 activation quantization (the `_mesa` preset
+    /// axis): the nonlinear-layer saves — norm x̂ (plain or shared)
+    /// and full-precision pre-activations — are stored on the tape as
+    /// per-group symmetric int8 codes + f32 scales and dequantized on
+    /// pop in bwd. Forward stays exact; backward carries the
+    /// quantization error (the Mesa tradeoff the paper benchmarks
+    /// against).
+    pub mesa: bool,
 }
 
 impl NetCfg {
@@ -323,7 +331,7 @@ impl Model {
         let m = cfg.hidden();
         let lead = [bsz, n];
         let mut reg = ParamReg::new();
-        let mut comp = Composer::new();
+        let mut comp = Composer::with_mesa(cfg.mesa);
         let mut layers: Vec<Box<dyn Layer>> = Vec::new();
         layers.push(Box::new(Embed::new(&cfg, &mut reg)));
         for i in 0..cfg.depth {
@@ -341,7 +349,9 @@ impl Model {
                     Seq::new(vec![Box::new(norm), Box::new(attn)])
                 };
                 if cfg.ckpt {
-                    let mut inner = Composer::new();
+                    // the inner (recomputed) tape quantizes the same
+                    // saves a stored tape would — ckpt and mesa compose
+                    let mut inner = Composer::with_mesa(cfg.mesa);
                     let seq = half(&mut reg, &mut inner);
                     layers.push(Box::new(CkptBlock::new(
                         &mut comp, &an, &[bsz, n, c],
@@ -377,7 +387,7 @@ impl Model {
                     Seq::new(inner)
                 };
                 if cfg.ckpt {
-                    let mut inner = Composer::new();
+                    let mut inner = Composer::with_mesa(cfg.mesa);
                     let seq = half(&mut reg, &mut inner);
                     layers.push(Box::new(CkptBlock::new(
                         &mut comp, &mn, &[bsz, n, c],

@@ -290,19 +290,17 @@ fn dispatch(f: &(dyn Fn(usize) + Sync), total: usize) {
 }
 
 #[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
+struct SendPtr<T>(*mut T);
 // SAFETY: chunks derived from it are disjoint per chunk index.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Split the rows of `out` (`out.len() = rows * row_len`) into contiguous
-/// chunks of at least `grain` rows and run `f(first_row, chunk)` on each,
-/// in parallel. `f` must fully define the chunk's contents from its own
-/// row range — chunks are disjoint `&mut` slices.
-pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, grain: usize,
-                        f: F)
+/// Element-type-generic body of [`parallel_rows`]/[`parallel_rows_u8`].
+fn parallel_rows_of<T, F>(out: &mut [T], row_len: usize, grain: usize,
+                          f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(row_len > 0 && out.len() % row_len == 0);
     let rows = out.len() / row_len;
@@ -333,6 +331,30 @@ where
         f(first, chunk);
     };
     dispatch(&run, n_chunks);
+}
+
+/// Split the rows of `out` (`out.len() = rows * row_len`) into contiguous
+/// chunks of at least `grain` rows and run `f(first_row, chunk)` on each,
+/// in parallel. `f` must fully define the chunk's contents from its own
+/// row range — chunks are disjoint `&mut` slices.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, grain: usize,
+                        f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    parallel_rows_of(out, row_len, grain, f)
+}
+
+/// [`parallel_rows`] over a byte buffer — used by the int8 group
+/// quantizer, whose packed output interleaves codes and scales. The
+/// determinism contract is the same: chunk boundaries fall on whole
+/// rows, so any partition produces bit-identical bytes.
+pub fn parallel_rows_u8<F>(out: &mut [u8], row_len: usize, grain: usize,
+                           f: F)
+where
+    F: Fn(usize, &mut [u8]) + Sync,
+{
+    parallel_rows_of(out, row_len, grain, f)
 }
 
 /// Run `f(task)` for every task index in `0..n_tasks`, in parallel, each

@@ -1,5 +1,5 @@
 //! Preset specs for the native backend: parse
-//! `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt]` preset names,
+//! `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt][_mesa]` preset names,
 //! synthesize manifests, and load on-disk artifacts (manifest.json +
 //! params.bin) without any compiled HLO.
 //!
@@ -49,6 +49,7 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             norm: Norm::Ln,
             swiglu: false,
             ckpt: false,
+            mesa: false,
         },
         // small causal LM on the Markov-chain corpus
         "llama" => NetCfg {
@@ -68,6 +69,7 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             norm: Norm::Rms,
             swiglu: false,
             ckpt: false,
+            mesa: false,
         },
         // small bidirectional sequence classifier
         "roberta" => NetCfg {
@@ -87,6 +89,7 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
             norm: Norm::Ln,
             swiglu: false,
             ckpt: false,
+            mesa: false,
         },
         other => bail!(
             "unknown synth model {other:?} (supported: {SYNTH_MODELS:?})"
@@ -94,12 +97,19 @@ fn base_cfg(model: &str) -> Result<NetCfg> {
     })
 }
 
-/// Parse a `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt]` preset name
-/// into a config. `swiglu` (LLaMA only) selects the gated MLP + RoPE
-/// block shape; `ckpt` enables gradient checkpointing.
+/// Parse a `{model}_{tuning}_{act}_{norm}[_swiglu][_ckpt][_mesa]`
+/// preset name into a config. `swiglu` (LLaMA only) selects the gated
+/// MLP + RoPE block shape; `ckpt` enables gradient checkpointing;
+/// `mesa` stores the nonlinear-layer saves as int8 codes + scales
+/// (the paper's Mesa activation-quantization baseline, native since
+/// the int8 tape slots — no compiled artifacts involved).
 pub fn parse_preset(preset: &str) -> Result<NetCfg> {
     let parts: Vec<&str> = preset.split('_').collect();
     let mut end = parts.len();
+    let mesa = end >= 1 && parts[end - 1] == "mesa";
+    if mesa {
+        end -= 1;
+    }
     let ckpt = end >= 1 && parts[end - 1] == "ckpt";
     if ckpt {
         end -= 1;
@@ -111,7 +121,7 @@ pub fn parse_preset(preset: &str) -> Result<NetCfg> {
     ensure!(
         end == 4,
         "preset {preset:?} is not \
-         {{model}}_{{tuning}}_{{act}}_{{norm}}[_swiglu][_ckpt]"
+         {{model}}_{{tuning}}_{{act}}_{{norm}}[_swiglu][_ckpt][_mesa]"
     );
     let mut cfg = base_cfg(parts[0])?;
     cfg.tuning = NetCfg::tuning_from_str(parts[1])?;
@@ -119,6 +129,7 @@ pub fn parse_preset(preset: &str) -> Result<NetCfg> {
     cfg.norm = NetCfg::norm_from_str(parts[3])?;
     cfg.swiglu = swiglu;
     cfg.ckpt = ckpt;
+    cfg.mesa = mesa;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -279,6 +290,7 @@ fn build_manifest(preset: &str, model: &Model,
         patch_dim: cfg.patch_dim,
         ckpt: cfg.ckpt,
         swiglu: cfg.swiglu,
+        mesa: cfg.mesa,
         params: model.infos.clone(),
         x: BatchInfo { shape: x.shape.clone(), dtype: x.dtype },
         y: BatchInfo { shape: y.shape.clone(), dtype: y.dtype },
@@ -331,6 +343,7 @@ pub fn load_artifact(dir: &Path) -> Result<Artifact> {
         norm: NetCfg::norm_from_str(&disk.norm)?,
         swiglu: disk.swiglu,
         ckpt: disk.ckpt,
+        mesa: disk.mesa,
     };
     let model = Model::build(cfg)?;
     ensure!(
@@ -377,6 +390,9 @@ mod tests {
             "llama_loraall_silu_rms_swiglu",
             "llama_loraall_resilu2_msrms_swiglu_ckpt",
             "roberta_lorafaall_gelu_ln",
+            "vitt_loraqv_gelu_ln_mesa",
+            "llama_loraqv_regelu2_msln_mesa",
+            "llama_loraall_silu_rms_swiglu_ckpt_mesa",
         ] {
             let cfg = parse_preset(p).unwrap();
             cfg.validate().unwrap();
@@ -386,25 +402,82 @@ mod tests {
     #[test]
     fn parse_suffix_axes() {
         let cfg = parse_preset("llama_loraall_silu_rms_swiglu").unwrap();
-        assert!(cfg.swiglu && !cfg.ckpt);
+        assert!(cfg.swiglu && !cfg.ckpt && !cfg.mesa);
         let cfg = parse_preset("vitt_loraqv_gelu_ln_ckpt").unwrap();
-        assert!(cfg.ckpt && !cfg.swiglu);
+        assert!(cfg.ckpt && !cfg.swiglu && !cfg.mesa);
         let cfg =
             parse_preset("llama_full_silu_msrms_swiglu_ckpt").unwrap();
-        assert!(cfg.swiglu && cfg.ckpt);
+        assert!(cfg.swiglu && cfg.ckpt && !cfg.mesa);
+        let cfg = parse_preset("vitt_full_gelu_ln_mesa").unwrap();
+        assert!(cfg.mesa && !cfg.ckpt && !cfg.swiglu);
+        let cfg =
+            parse_preset("llama_full_silu_msrms_swiglu_ckpt_mesa")
+                .unwrap();
+        assert!(cfg.swiglu && cfg.ckpt && cfg.mesa);
     }
 
     #[test]
     fn reject_unsupported_presets() {
-        // Mesa int8 needs compiled artifacts; unknown names stay errors
+        // "mesa" is a suffix axis, not an act/norm spelling
         assert!(parse_preset("vitt_loraqv_mesa_mesaln").is_err());
         assert!(parse_preset("nope_full_gelu_ln").is_err());
         // swiglu/rope is a llama-family axis
         assert!(parse_preset("vitt_loraqv_gelu_ln_swiglu").is_err());
-        // suffixes only in canonical [_swiglu][_ckpt] order
+        // suffixes only in canonical [_swiglu][_ckpt][_mesa] order
         assert!(
             parse_preset("llama_loraall_silu_rms_ckpt_swiglu").is_err()
         );
+        assert!(
+            parse_preset("vitt_loraqv_gelu_ln_mesa_ckpt").is_err()
+        );
+    }
+
+    #[test]
+    fn mesa_manifest_uses_int8_slots() {
+        let art = synth_artifact("vitt_loraqv_gelu_ln_mesa").unwrap();
+        let m = &art.manifest;
+        assert!(m.mesa);
+        // every norm x̂ and full-precision pre-activation stores int8
+        // groups: g codes + 4 scale bytes per row, 8 + 32/g bits/elem
+        let q8: Vec<_> = m
+            .residuals
+            .iter()
+            .filter(|r| r.dtype == DType::I8)
+            .collect();
+        assert!(!q8.is_empty());
+        for r in &q8 {
+            let g = *r.shape.last().unwrap() - 4;
+            assert!(matches!(r.kind.as_str(),
+                             "norm_input" | "norm_shared" | "act_full"),
+                    "{} unexpectedly quantized", r.name);
+            assert!((r.bits_per_elem - (8.0 + 32.0 / g as f64)).abs()
+                        < 1e-9);
+        }
+        // one quantized x̂ per norm (2 per block + head), one act/block
+        let norms =
+            q8.iter().filter(|r| r.kind == "norm_input").count();
+        assert_eq!(norms, 2 * m.depth + 1);
+        let acts = q8.iter().filter(|r| r.kind == "act_full").count();
+        assert_eq!(acts, m.depth);
+        // attention q/k/v and the head stay f32 (the paper's Mesa
+        // decomposition — see Kind::mesa_quantized)
+        assert!(m.residuals.iter()
+                    .filter(|r| r.kind == "attn_qkv" || r.kind == "logits")
+                    .all(|r| r.dtype == DType::F32));
+    }
+
+    #[test]
+    fn mesa_memory_between_ours_and_baseline() {
+        // the Table 1/7 ordering on the synthesized manifests:
+        // ours < mesa < baseline
+        let base = synth_artifact("vitt_loraqv_gelu_ln").unwrap();
+        let mesa = synth_artifact("vitt_loraqv_gelu_ln_mesa").unwrap();
+        let ours = synth_artifact("vitt_loraqv_regelu2_msln").unwrap();
+        let b = base.manifest.residual_bytes_total;
+        let m = mesa.manifest.residual_bytes_total;
+        let o = ours.manifest.residual_bytes_total;
+        assert!(m < b, "mesa {m} !< base {b}");
+        assert!(o < m, "ours {o} !< mesa {m}");
     }
 
     #[test]

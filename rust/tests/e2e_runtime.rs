@@ -36,9 +36,10 @@ fn have(preset: &str) -> bool {
 }
 
 /// Load a built artifact, or skip when the active backend cannot execute
-/// it (the default native backend rejects mesa presets and any param
-/// layout it cannot reproduce — ckpt presets load natively since the
-/// Layer/Tape refactor; mesa still runs under --features pjrt).
+/// it (the native backend now covers every preset axis — ckpt since
+/// the Layer/Tape refactor, Mesa via the `_mesa` int8 tape slots — but
+/// legacy exporter spellings like `mesa_mesaln` and param layouts it
+/// cannot reproduce still only run under --features pjrt).
 fn try_load(preset: &str) -> Option<Artifact> {
     if !have(preset) {
         return None;

@@ -55,6 +55,104 @@ fn prop_decode_matches_scalar_derivative() {
 }
 
 #[test]
+fn prop_int8_fused_group_kernels_match_split_reference() {
+    // the fused packed-layout kernels (what the _mesa tape stores) are
+    // bit-identical to quant_rows/dequant_rows with group = row
+    let mut rng = Rng::new(21);
+    for _ in 0..CASES {
+        let group = 1 + rng.below(96);
+        let groups = 1 + rng.below(12);
+        let x: Vec<f32> = (0..groups * group)
+            .map(|_| rng.normal_f32() * rng.range(0.1, 50.0) as f32)
+            .collect();
+        let (q, s) = int8::quant_rows(&x, group);
+        let mut packed = vec![0u8; int8::packed_len(x.len(), group)];
+        int8::quantize_into(&x, group, &mut packed);
+        let row = group + int8::GROUP_FOOTER_BYTES;
+        for g in 0..groups {
+            let r = &packed[g * row..(g + 1) * row];
+            for c in 0..group {
+                assert_eq!(r[c] as i8, q[g * group + c]);
+            }
+            let scale =
+                f32::from_le_bytes(r[group..].try_into().unwrap());
+            assert_eq!(scale, s[g]);
+        }
+        let mut back = vec![0f32; x.len()];
+        int8::dequantize_into(&packed, group, &mut back);
+        assert_eq!(back, int8::dequant_rows(&q, &s, group));
+    }
+}
+
+#[test]
+fn prop_int8_group_roundtrip_bounded_and_zero_exact() {
+    // quantize→dequantize error ≤ scale/2 per element (scale read back
+    // from the packed footer), and exact zeros survive exactly
+    let mut rng = Rng::new(22);
+    for _ in 0..CASES {
+        let group = 2 + rng.below(64);
+        let groups = 1 + rng.below(8);
+        let mut x: Vec<f32> = (0..groups * group)
+            .map(|_| rng.normal_f32() * rng.range(0.1, 100.0) as f32)
+            .collect();
+        // plant exact zeros
+        for i in (0..x.len()).step_by(5) {
+            x[i] = 0.0;
+        }
+        let mut packed = vec![0u8; int8::packed_len(x.len(), group)];
+        int8::quantize_into(&x, group, &mut packed);
+        let mut back = vec![0f32; x.len()];
+        int8::dequantize_into(&packed, group, &mut back);
+        let row = group + int8::GROUP_FOOTER_BYTES;
+        for g in 0..groups {
+            let scale = f32::from_le_bytes(
+                packed[g * row + group..(g + 1) * row]
+                    .try_into()
+                    .unwrap(),
+            );
+            for c in 0..group {
+                let i = g * group + c;
+                assert!((x[i] - back[i]).abs() <= scale * 0.5 + 1e-7,
+                        "err {} > scale/2 {}", (x[i] - back[i]).abs(),
+                        scale * 0.5);
+                if x[i] == 0.0 {
+                    assert_eq!(back[i], 0.0, "zero not exact at {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_int8_quantize_partition_invariant() {
+    // the pool determinism contract for the fused kernels: any logical
+    // AMBP_THREADS partition produces bit-identical packed bytes and
+    // bit-identical dequantized f32s (groups never straddle chunks)
+    use ambp::runtime::native::pool::with_threads;
+    let mut rng = Rng::new(23);
+    let group = 48;
+    let x: Vec<f32> = (0..group * 101)
+        .map(|_| rng.normal_f32() * 3.0)
+        .collect();
+    let mut want = vec![0u8; int8::packed_len(x.len(), group)];
+    with_threads(1, || int8::quantize_into(&x, group, &mut want));
+    let mut want_f = vec![0f32; x.len()];
+    with_threads(1, || int8::dequantize_into(&want, group, &mut want_f));
+    for nt in [2usize, 3, 7, 16] {
+        let mut got = vec![0u8; want.len()];
+        with_threads(nt, || int8::quantize_into(&x, group, &mut got));
+        assert_eq!(got, want, "quantize differs at nt={nt}");
+        let mut got_f = vec![0f32; x.len()];
+        with_threads(nt, || {
+            int8::dequantize_into(&got, group, &mut got_f)
+        });
+        assert!(got_f.iter().zip(&want_f).all(|(a, b)| {
+            a.to_bits() == b.to_bits()
+        }), "dequantize differs at nt={nt}");
+    }
+}
+
+#[test]
 fn prop_int8_error_bound() {
     let mut rng = Rng::new(14);
     for _ in 0..CASES {

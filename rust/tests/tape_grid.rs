@@ -1,17 +1,21 @@
 //! The tape-schema grid tests: for **every** `{arch} × {tuning} ×
-//! {act} × {norm} [× swiglu][× ckpt]` combination, the residual list an
-//! actual forward pass emits must match the tape schema the composition
-//! derived at build time — byte for byte — and the backward pass must
-//! consume the tape exactly (the reader errors on any leftover or
-//! out-of-order slot). This generalizes the old hand-picked
+//! {act} × {norm} [× swiglu][× ckpt][× mesa]` combination, the residual
+//! list an actual forward pass emits must match the tape schema the
+//! composition derived at build time — byte for byte — and the backward
+//! pass must consume the tape exactly (the reader errors on any
+//! leftover or out-of-order slot). This generalizes the old hand-picked
 //! `residuals_match_manifest_abi` to the full grid, which is what pins
 //! "the ABI is derived from the composition" as an invariant rather
 //! than a convention.
 //!
+//! The mesa plane additionally pins the quantization *saving*: for
+//! every combination, the `_mesa` tape must be strictly smaller than
+//! its fp32 twin (int8 codes + per-group scale < 4 bytes/elem).
+//!
 //! Also cross-checks the analytical memmodel (Tape mode) against the
-//! derived schema for the SwiGLU LLaMA block — the first point where
-//! the native tape and the paper's llama accounting describe the same
-//! architecture.
+//! derived schema for the SwiGLU LLaMA block — including the mesa axis,
+//! where the memmodel's `rows·(cols+4)` int8 accounting must agree with
+//! the native int8 slots byte-for-byte.
 
 use ambp::memmodel::ops::{self, MemCfg, Mode};
 use ambp::runtime::native::spec::{parse_preset, sample_batch,
@@ -32,7 +36,7 @@ const ACTS: [Act; 5] =
 const NORMS: [Norm; 4] = [Norm::Ln, Norm::MsLn, Norm::Rms, Norm::MsRms];
 
 fn tiny(arch: Arch, tuning: Tuning, act: Act, norm: Norm, swiglu: bool,
-        ckpt: bool) -> NetCfg {
+        ckpt: bool, mesa: bool) -> NetCfg {
     NetCfg {
         arch,
         dim: 16,
@@ -50,14 +54,16 @@ fn tiny(arch: Arch, tuning: Tuning, act: Act, norm: Norm, swiglu: bool,
         norm,
         swiglu,
         ckpt,
+        mesa,
     }
 }
 
 /// One fwd (+ optional bwd), asserting the emitted residuals match the
 /// derived schema byte-for-byte — and, with `bwd`, that the backward
 /// consumes the tape exactly (the reader errors on any leftover or
-/// out-of-order slot).
-fn assert_tape_matches_schema(cfg: &NetCfg, label: &str, bwd: bool) {
+/// out-of-order slot). Returns the tape's total stored bytes.
+fn assert_tape_matches_schema(cfg: &NetCfg, label: &str,
+                              bwd: bool) -> u64 {
     let model = Model::build(cfg.clone())
         .unwrap_or_else(|e| panic!("{label}: build: {e}"));
     let infos = schema_residuals(&model);
@@ -78,7 +84,7 @@ fn assert_tape_matches_schema(cfg: &NetCfg, label: &str, bwd: bool) {
     }
     assert!(total > 0, "{label}: empty tape");
     if !bwd {
-        return;
+        return total;
     }
     let grads = model
         .backward(&params, &res, &x, &y)
@@ -86,6 +92,7 @@ fn assert_tape_matches_schema(cfg: &NetCfg, label: &str, bwd: bool) {
     let n_train =
         model.infos.iter().filter(|p| p.trainable).count();
     assert_eq!(grads.len(), n_train, "{label}: grad arity");
+    total
 }
 
 #[test]
@@ -102,15 +109,26 @@ fn tape_matches_schema_full_tiny_grid() {
                             &[false]
                         };
                         for &swiglu in swiglus {
-                            let cfg = tiny(arch, tuning, act, norm,
-                                           swiglu, ckpt);
                             let label = format!(
                                 "{arch:?}/{tuning:?}/{act:?}/{norm:?}\
                                  /swiglu={swiglu}/ckpt={ckpt}"
                             );
-                            assert_tape_matches_schema(&cfg, &label,
-                                                       true);
-                            combos += 1;
+                            let base = tiny(arch, tuning, act, norm,
+                                            swiglu, ckpt, false);
+                            let fp32_bytes = assert_tape_matches_schema(
+                                &base, &label, true);
+                            let mesa = tiny(arch, tuning, act, norm,
+                                            swiglu, ckpt, true);
+                            let mesa_bytes = assert_tape_matches_schema(
+                                &mesa, &format!("{label}/mesa"), true);
+                            // int8 saves must shrink the tape on EVERY
+                            // combination (each has at least its norms)
+                            assert!(
+                                mesa_bytes < fp32_bytes,
+                                "{label}: mesa {mesa_bytes} !< fp32 \
+                                 {fp32_bytes}"
+                            );
+                            combos += 2;
                         }
                     }
                 }
@@ -118,14 +136,15 @@ fn tape_matches_schema_full_tiny_grid() {
         }
     }
     // 3 archs × 6 tunings × 5 acts × 4 norms × 2 ckpt, plus the llama
-    // swiglu plane
-    assert_eq!(combos, 3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2);
+    // swiglu plane — each doubled by the mesa axis
+    assert_eq!(combos, (3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2) * 2);
 }
 
 #[test]
 fn preset_grid_residuals_match_manifest() {
     // every parseable preset string: the actual fwd output must match
-    // the schema-derived manifest residual section byte-for-byte
+    // the schema-derived manifest residual section byte-for-byte, and
+    // the _mesa twin of every preset must store strictly fewer bytes
     let models = ["vitt", "llama", "roberta"];
     let tunings =
         ["full", "frozen", "loraqv", "loraall", "lorafaqv", "lorafaall"];
@@ -151,26 +170,45 @@ fn preset_grid_residuals_match_manifest() {
                             });
                         // fwd-only at preset dims: the tiny grid above
                         // already runs bwd for every combination
-                        assert_tape_matches_schema(&cfg, &preset, false);
-                        checked += 1;
+                        let fp32_bytes = assert_tape_matches_schema(
+                            &cfg, &preset, false);
+                        let mesa_preset = format!("{preset}_mesa");
+                        let mesa_cfg = parse_preset(&mesa_preset)
+                            .unwrap_or_else(|e| {
+                                panic!("{mesa_preset}: parse: {e}")
+                            });
+                        let mesa_bytes = assert_tape_matches_schema(
+                            &mesa_cfg, &mesa_preset, false);
+                        assert!(
+                            mesa_bytes < fp32_bytes,
+                            "{mesa_preset}: {mesa_bytes} !< \
+                             {fp32_bytes}"
+                        );
+                        checked += 2;
                     }
                 }
             }
         }
     }
-    assert_eq!(checked, 3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2);
+    assert_eq!(checked, (3 * 6 * 5 * 4 * 2 + 6 * 5 * 4 * 2) * 2);
 }
 
 #[test]
 fn memmodel_tape_mode_matches_swiglu_block_bytes() {
     // the analytical model's llama block (always gated) vs the native
     // tape, per block0, at identical dims — Tape mode must agree
-    // exactly now that the native llama can be the real architecture
-    for (preset, act, norm) in [
-        ("llama_loraall_silu_rms_swiglu", ops::ActKind::Silu,
-         ops::NormKind::Rms),
-        ("llama_loraall_resilu2_msrms_swiglu", ops::ActKind::ReSilu2,
-         ops::NormKind::MsRms),
+    // exactly, int8 mesa accounting included
+    for (preset, tuning, act, norm, mesa) in [
+        ("llama_loraall_silu_rms_swiglu", ops::Tuning::LoraAll,
+         ops::ActKind::Silu, ops::NormKind::Rms, false),
+        ("llama_loraall_resilu2_msrms_swiglu", ops::Tuning::LoraAll,
+         ops::ActKind::ReSilu2, ops::NormKind::MsRms, false),
+        ("llama_loraall_silu_rms_swiglu_mesa", ops::Tuning::LoraAll,
+         ops::ActKind::Silu, ops::NormKind::Rms, true),
+        // the acceptance combination: our 2-bit act + shared norm,
+        // with the remaining nonlinear saves int8-quantized
+        ("llama_loraqv_regelu2_msln_swiglu_mesa", ops::Tuning::LoraQv,
+         ops::ActKind::ReGelu2, ops::NormKind::MsLn, true),
     ] {
         let cfg = parse_preset(preset).unwrap();
         let model = Model::build(cfg.clone()).unwrap();
@@ -191,11 +229,12 @@ fn memmodel_tape_mode_matches_swiglu_block_bytes() {
             vocab: cfg.vocab,
             lora_rank: cfg.lora_rank,
             batch: cfg.batch,
-            tuning: ops::Tuning::LoraAll,
+            tuning,
             act,
             norm,
             mode: Mode::Tape,
             ckpt: false,
+            mesa,
         };
         let analytic: u64 = ambp::memmodel::ops::block_entries(&mem, 0)
             .iter()
