@@ -208,6 +208,12 @@ fn main() {
         }
     }
 
+    println!("\n== multi-tenant engine: sessions on one shared frozen \
+              base ==");
+    for r in bench_engine(&rt, samples(3)) {
+        results.push(r);
+    }
+
     let out_path = repo_root().join("BENCH_hotpath.json");
     // snapshot the previous entries before the overwrite, for the
     // optional end-to-end regression gate below
@@ -302,6 +308,107 @@ fn profile_layers(preset: &str, iters: usize) -> Vec<BenchResult> {
             });
         }
     }
+    out
+}
+
+/// A flat JSON metric row (the value is *not* nanoseconds — the name
+/// says what it is): used to record the engine's aggregate throughput
+/// and byte peaks next to the latency entries.
+fn metric_row(name: &str, value: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: value,
+        p50_ns: value,
+        p95_ns: value,
+        min_ns: value,
+    }
+}
+
+/// The tenancy benchmark: 1 vs 4 concurrent sessions interleaved on
+/// one shared frozen base, vs 4 serial single-job runs of the same
+/// work. Records wall-clock rows plus aggregate samples/sec, fleet
+/// peak bytes, and resident parameter bytes.
+fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
+    use ambp::coordinator::{Engine, Session, StepOutcome, TrainCfg};
+    let preset = "vitt_loraqv_regelu2_msln";
+    let steps = 4usize;
+    let art = load_or_synth(rt, preset).expect("synth");
+    let cfg = |seed: u64| TrainCfg {
+        steps,
+        lr: 1e-3,
+        log_every: 0,
+        eval_batches: 0,
+        seed,
+        ..TrainCfg::default()
+    };
+    // (secs, fleet peak bytes, resident param bytes) of one engine run;
+    // like `ambp serve`, the clock covers the interleaved steps only —
+    // admission (each session's one-off warmup fwd/bwd) is setup
+    let run_concurrent = |k: usize| -> (f64, u64, u64) {
+        let mut engine = Engine::unbounded();
+        for i in 0..k {
+            engine
+                .admit(&format!("s{i}"), &art, cfg(i as u64))
+                .expect("admit");
+        }
+        let t0 = std::time::Instant::now();
+        while engine.round().expect("round") > 0 {}
+        (t0.elapsed().as_secs_f64(), engine.fleet.peak_bytes,
+         engine.resident_param_bytes())
+    };
+    let run_serial = |k: usize| -> (f64, u64) {
+        let mut sessions: Vec<Session> = (0..k)
+            .map(|i| Session::new(&art, cfg(i as u64)).expect("session"))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut peak = 0u64;
+        for s in &mut sessions {
+            while matches!(s.step().expect("step"),
+                           StepOutcome::Stepped(_)) {}
+            peak = peak.max(s.memory.peak_bytes);
+        }
+        (t0.elapsed().as_secs_f64(), peak)
+    };
+
+    let mut out = Vec::new();
+    let samples_per_run =
+        |k: usize| (k * steps * art.manifest.batch) as f64;
+    let (s1, peak1, res1) = run_concurrent(1);
+    let (s4, peak4, res4) = run_concurrent(4);
+    let (ss, speak) = run_serial(4);
+    println!("1 session : {:.1} samples/s, fleet peak {:.2} MiB, \
+              resident params {:.2} MiB",
+             samples_per_run(1) / s1, peak1 as f64 / 1048576.0,
+             res1 as f64 / 1048576.0);
+    println!("4 sessions: {:.1} samples/s, fleet peak {:.2} MiB, \
+              resident params {:.2} MiB (base stored once)",
+             samples_per_run(4) / s4, peak4 as f64 / 1048576.0,
+             res4 as f64 / 1048576.0);
+    println!("4 serial  : {:.1} samples/s, per-job peak {:.2} MiB",
+             samples_per_run(4) / ss, speak as f64 / 1048576.0);
+    out.push(metric_row("engine 1 session samples_per_s",
+                        samples_per_run(1) / s1));
+    out.push(metric_row("engine 4 sessions shared-base samples_per_s",
+                        samples_per_run(4) / s4));
+    out.push(metric_row("engine 4 serial jobs samples_per_s",
+                        samples_per_run(4) / ss));
+    out.push(metric_row("engine 4 sessions fleet peak bytes",
+                        peak4 as f64));
+    out.push(metric_row("engine 4 sessions resident param bytes",
+                        res4 as f64));
+    out.push(metric_row("engine 4 serial jobs peak bytes",
+                        speak as f64));
+    out.push(bench("engine 1 session e2e (4 steps)", iters, || {
+        black_box(run_concurrent(1));
+    }));
+    out.push(bench("engine 4 sessions shared-base e2e (4 steps)", iters,
+                   || {
+                       black_box(run_concurrent(4));
+                   }));
+    out.push(bench("engine 4 serial jobs e2e (4 steps)", iters, || {
+        black_box(run_serial(4));
+    }));
     out
 }
 

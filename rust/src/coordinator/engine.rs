@@ -1,0 +1,392 @@
+//! The multi-tenant fine-tuning engine: memory-budgeted admission +
+//! fair step interleaving over sessions that share frozen bases.
+//!
+//! The paper's observation — activation memory, not weights, is the
+//! per-job scaling bottleneck — becomes *capacity* here: the frozen
+//! base of an artifact is resident once (`Arc`-shared
+//! [`FrozenBase`]), so the marginal footprint of one more session is
+//! its activation tape + gradients + optimizer state + trainable
+//! slice. Admission control meters exactly that, using the analytical
+//! memmodel prediction ([`MemCfg::from_manifest`], `Mode::Tape`)
+//! cross-checked against the schema-derived manifest total; scheduling
+//! is round-robin at [`Session::step`] granularity over the shared
+//! worker pool; the fleet-wide peak is tracked with the same
+//! [`MemoryTracker`] the single-job path uses. [`fleet_capacity`]
+//! restates the paper's Table-1 savings as sessions-per-budget:
+//! `*_regelu2_msln` / `*_mesa` presets admit strictly more tenants
+//! than their baselines under the same byte budget.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::memory::MemoryTracker;
+use crate::coordinator::session::{Session, StepOutcome};
+use crate::coordinator::trainer::{TrainCfg, TrainReport};
+use crate::memmodel::{total_bytes, MemCfg};
+use crate::runtime::{Artifact, Runtime};
+
+/// One job request: a preset plus its trainer hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Preset name (artifact to load or synthesize).
+    pub preset: String,
+    /// Per-session hyper-parameters.
+    pub cfg: TrainCfg,
+}
+
+impl JobSpec {
+    /// Parse a `preset[:steps[:seed]]` job token (the `--jobs` list
+    /// grammar). Defaults come from `base`; when no seed is given, the
+    /// job index is added to the base seed so identical presets stream
+    /// distinct tenant data.
+    pub fn parse(token: &str, base: &TrainCfg,
+                 job_index: usize) -> Result<JobSpec> {
+        let mut parts = token.split(':');
+        let preset = parts
+            .next()
+            .filter(|p| !p.is_empty())
+            .with_context(|| format!("empty job spec {token:?}"))?
+            .to_string();
+        let mut cfg = base.clone();
+        cfg.seed = base.seed + job_index as u64;
+        if let Some(s) = parts.next() {
+            cfg.steps = s
+                .parse()
+                .with_context(|| format!("bad steps in job {token:?}"))?;
+        }
+        if let Some(s) = parts.next() {
+            cfg.seed = s
+                .parse()
+                .with_context(|| format!("bad seed in job {token:?}"))?;
+        }
+        if let Some(extra) = parts.next() {
+            bail!("job {token:?}: unexpected field {extra:?} \
+                   (grammar: preset[:steps[:seed]])");
+        }
+        Ok(JobSpec { preset, cfg })
+    }
+}
+
+/// The memmodel-backed per-session footprint prediction admission
+/// control gates on. All figures are bytes.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    /// Predicted activation tape held between fwd and bwd —
+    /// `max(memmodel Tape-mode total, manifest residual total)`.
+    pub tape_bytes: u64,
+    /// Gradient sets held at the step peak: one, or two with
+    /// `grad_accum > 1` (the running accumulator is live while the
+    /// next microbatch's fresh gradients materialize).
+    pub grad_bytes: u64,
+    /// Optimizer state (AdamW m+v, SGD velocity).
+    pub opt_bytes: u64,
+    /// The session's private trainable parameter copy.
+    pub trainable_bytes: u64,
+    /// Extra full-parameter copy a session on a *non-forking* backend
+    /// materializes as its flat-ABI fallback (0 on backends with split
+    /// support, i.e. native): without this term, admission would
+    /// undercount real residency by ~one base per session there.
+    pub flat_copy_bytes: u64,
+}
+
+impl Admission {
+    /// The session's marginal footprint on top of the shared base.
+    pub fn marginal(&self) -> u64 {
+        self.tape_bytes + self.grad_bytes + self.opt_bytes
+            + self.trainable_bytes + self.flat_copy_bytes
+    }
+}
+
+/// Predict one session's footprint on `art` under `cfg` — no step has
+/// to run. The tape term is the paper's subject; grads/optimizer/
+/// trainables scale with the tuning mode (tiny under LoRA).
+pub fn predict(art: &Artifact, cfg: &TrainCfg) -> Admission {
+    let m = &art.manifest;
+    let analytic = MemCfg::from_manifest(m)
+        .map(|c| total_bytes(&c))
+        .unwrap_or(0);
+    let tape_bytes = analytic.max(m.residual_bytes_total);
+    let trainable_elems: u64 = m
+        .params
+        .iter()
+        .filter(|p| p.trainable)
+        .map(|p| p.shape.iter().product::<usize>() as u64)
+        .sum();
+    let trainable_bytes = trainable_elems * 4;
+    let grad_bytes =
+        trainable_bytes * if cfg.grad_accum > 1 { 2 } else { 1 };
+    let opt_bytes = match cfg.optimizer.as_str() {
+        "sgd" => trainable_bytes,
+        _ => 2 * trainable_bytes, // AdamW m+v
+    };
+    // a backend without split support gets a per-session flat
+    // fallback vector (see Session): meter that copy too
+    let flat_copy_bytes = if art.supports_split() {
+        0
+    } else {
+        art.frozen_base().nbytes() + trainable_bytes
+    };
+    Admission {
+        tape_bytes,
+        grad_bytes,
+        opt_bytes,
+        trainable_bytes,
+        flat_copy_bytes,
+    }
+}
+
+/// Final engine output for one session.
+pub struct EngineReport {
+    /// Session name (from `admit`).
+    pub name: String,
+    /// Preset the session trained.
+    pub preset: String,
+    /// What admission predicted.
+    pub admission: Admission,
+    /// The session's training report.
+    pub report: TrainReport,
+}
+
+struct Slot<'a> {
+    name: String,
+    session: Session<'a>,
+    admission: Admission,
+    done: bool,
+}
+
+/// Multi-tenant engine: admits sessions against a byte budget and
+/// interleaves their steps round-robin (see module docs).
+pub struct Engine<'a> {
+    budget: u64,
+    /// Unique shared bases: (`Arc` pointer identity, frozen bytes).
+    bases: Vec<(usize, u64)>,
+    slots: Vec<Slot<'a>>,
+    /// Fleet-wide measured accounting: `current_bytes` carries the
+    /// resident set (bases + trainables + optimizer state), the peak
+    /// adds every admitted session's measured tape+grad peak — the
+    /// capacity-planning view where all tenants are mid-step at once
+    /// (exactly what admission budgets for).
+    pub fleet: MemoryTracker,
+}
+
+impl<'a> Engine<'a> {
+    /// Engine with a byte budget (use [`Engine::unbounded`] for tests
+    /// and benches that only want the scheduler).
+    pub fn new(budget_bytes: u64) -> Engine<'a> {
+        Engine {
+            budget: budget_bytes,
+            bases: Vec::new(),
+            slots: Vec::new(),
+            fleet: MemoryTracker::new(),
+        }
+    }
+
+    /// Engine with an effectively infinite budget.
+    pub fn unbounded() -> Engine<'a> {
+        Engine::new(u64::MAX)
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Admitted session count.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether no session was admitted.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Predicted fleet footprint: every unique base once + each
+    /// admitted session's marginal.
+    pub fn predicted_bytes(&self) -> u64 {
+        self.bases.iter().map(|(_, b)| b).sum::<u64>()
+            + self
+                .slots
+                .iter()
+                .map(|s| s.admission.marginal())
+                .sum::<u64>()
+    }
+
+    /// *Actual* resident parameter bytes: each unique frozen base
+    /// exactly once (it is `Arc`-shared storage, not an accounting
+    /// convention) plus every session's private trainable tensors.
+    /// Adding a session on an already-resident base grows this by only
+    /// the trainable slice — the stored-once assertion of the tests.
+    pub fn resident_param_bytes(&self) -> u64 {
+        self.bases.iter().map(|(_, b)| b).sum::<u64>()
+            + self
+                .slots
+                .iter()
+                .map(|s| s.session.resident_param_bytes())
+                .sum::<u64>()
+    }
+
+    /// Measured optimizer-state bytes across sessions.
+    pub fn opt_state_bytes(&self) -> u64 {
+        self.slots.iter().map(|s| s.session.opt_state_bytes()).sum()
+    }
+
+    /// Admit a session for `cfg` on `art`, or reject it when the
+    /// predicted footprint would exceed the budget — the error carries
+    /// the memmodel's predicted bytes. Admission constructs the
+    /// session (which warms up once), so an `Ok` session is ready to
+    /// step.
+    pub fn admit(&mut self, name: &str, art: &'a Artifact,
+                 cfg: TrainCfg) -> Result<usize> {
+        let admission = predict(art, &cfg);
+        let base = art.frozen_base();
+        let key = Arc::as_ptr(&base) as usize;
+        let base_new = !self.bases.iter().any(|(k, _)| *k == key);
+        let base_cost = if base_new { base.nbytes() } else { 0 };
+        let projected =
+            self.predicted_bytes() + base_cost + admission.marginal();
+        if projected > self.budget {
+            bail!(
+                "admission rejected for {name} ({}): predicted session \
+                 footprint {} bytes (tape {} + grads {} + optimizer {} \
+                 + trainable params {}{}){} would put the fleet at {} \
+                 of budget {} bytes",
+                art.manifest.preset,
+                admission.marginal(),
+                admission.tape_bytes,
+                admission.grad_bytes,
+                admission.opt_bytes,
+                admission.trainable_bytes,
+                if admission.flat_copy_bytes > 0 {
+                    format!(" + flat fallback {}",
+                            admission.flat_copy_bytes)
+                } else {
+                    String::new()
+                },
+                if base_new {
+                    format!(" + shared base {base_cost}")
+                } else {
+                    String::new()
+                },
+                projected,
+                self.budget
+            );
+        }
+        let session = Session::new(art, cfg)?;
+        if base_new {
+            self.bases.push((key, base.nbytes()));
+        }
+        self.slots.push(Slot {
+            name: name.to_string(),
+            session,
+            admission,
+            done: false,
+        });
+        Ok(self.slots.len() - 1)
+    }
+
+    /// Direct access to an admitted session (tests: parameter and
+    /// base-identity assertions).
+    pub fn session(&self, id: usize) -> &Session<'a> {
+        &self.slots[id].session
+    }
+
+    /// Advance every unfinished session by one optimizer step, in
+    /// admission order. Returns how many sessions stepped (0 = all
+    /// exhausted). Fleet accounting is refreshed after the sweep.
+    pub fn round(&mut self) -> Result<usize> {
+        let mut stepped = 0usize;
+        for slot in &mut self.slots {
+            if slot.done {
+                continue;
+            }
+            match slot.session.step()? {
+                StepOutcome::Stepped(_) => stepped += 1,
+                StepOutcome::Exhausted => slot.done = true,
+            }
+        }
+        // capacity-planning peak: resident set + every session's
+        // measured tape/grad peak as if all tenants were mid-step
+        self.fleet.current_bytes =
+            self.resident_param_bytes() + self.opt_state_bytes();
+        let tapes: u64 = self
+            .slots
+            .iter()
+            .map(|s| s.session.memory.peak_bytes)
+            .sum();
+        self.fleet.observe_extra(tapes);
+        Ok(stepped)
+    }
+
+    /// Round-robin every session to exhaustion, then finish each
+    /// (held-out evaluation + report), in admission order.
+    pub fn run(&mut self) -> Result<Vec<EngineReport>> {
+        while self.round()? > 0 {}
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &mut self.slots {
+            let report = slot.session.finish()?;
+            out.push(EngineReport {
+                name: slot.name.clone(),
+                preset: slot.session.artifact().manifest.preset.clone(),
+                admission: slot.admission.clone(),
+                report,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// One row of the fleet-capacity report.
+pub struct CapacityRow {
+    /// Preset under consideration.
+    pub preset: String,
+    /// Shared-base bytes (resident once regardless of session count).
+    pub base_bytes: u64,
+    /// Predicted per-session marginal bytes.
+    pub admission: Admission,
+    /// Sessions-per-budget: how many sessions admission control fits.
+    pub admitted: usize,
+    /// Measured per-session tape bytes from a probe step (when run).
+    pub measured_tape: Option<u64>,
+}
+
+/// The paper's Table-1 story restated as tenancy: for each preset,
+/// predict the per-session marginal footprint, derive
+/// sessions-per-budget, and (optionally) run a 1-step probe session to
+/// cross-check the predicted tape against the measured residual bytes.
+pub fn fleet_capacity(rt: &Runtime, budget_bytes: u64,
+                      presets: &[String], cfg: &TrainCfg,
+                      probe: bool) -> Result<Vec<CapacityRow>> {
+    let mut out = Vec::with_capacity(presets.len());
+    for preset in presets {
+        let art = crate::runtime::load_or_synth(rt, preset)?;
+        let admission = predict(&art, cfg);
+        let base_bytes = art.frozen_base().nbytes();
+        let admitted = if budget_bytes <= base_bytes {
+            0
+        } else {
+            ((budget_bytes - base_bytes) / admission.marginal().max(1))
+                as usize
+        };
+        let measured_tape = if probe {
+            let mut probe_cfg = cfg.clone();
+            probe_cfg.steps = 1;
+            probe_cfg.log_every = 0;
+            probe_cfg.eval_batches = 0;
+            let mut s = Session::new(&art, probe_cfg)?;
+            s.step()?;
+            Some(s.memory.last_residual_bytes)
+        } else {
+            None
+        };
+        out.push(CapacityRow {
+            preset: preset.clone(),
+            base_bytes,
+            admission,
+            admitted,
+            measured_tape,
+        });
+    }
+    Ok(out)
+}

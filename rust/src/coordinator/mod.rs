@@ -1,11 +1,16 @@
-//! L3 coordinator: training loop, optimizers, LR schedules, measured
-//! memory accounting, metrics, checkpoints.
+//! L3 coordinator: the step-driven session core, the multi-tenant
+//! engine, optimizers, LR schedules, measured memory accounting,
+//! metrics, checkpoints.
 
 pub mod checkpoint;
+pub mod engine;
 pub mod memory;
 pub mod metrics;
 pub mod optimizer;
 pub mod scheduler;
+pub mod session;
 pub mod trainer;
 
+pub use engine::{Engine, EngineReport, JobSpec};
+pub use session::{Session, StepOutcome, StepStats};
 pub use trainer::{TrainCfg, TrainReport, Trainer};

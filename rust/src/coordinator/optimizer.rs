@@ -10,6 +10,48 @@ pub trait Optimizer {
     /// In-place update of `params[i]` from `grads[i]` (same order).
     fn step(&mut self, params: &mut [&mut Tensor], grads: &[Tensor], lr: f32);
     fn name(&self) -> &'static str;
+
+    /// Resident optimizer-state bytes (AdamW m+v, SGD velocity) — the
+    /// engine's measured per-session accounting; 0 until the first
+    /// step materializes the state.
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// [`Optimizer::step`] over trainables embedded in a *full*
+    /// manifest-ordered vector: `idx` are the trainable indices
+    /// (strictly increasing), `grads` in the same order. This is the
+    /// safe replacement for the old raw-pointer disjoint-borrow dance
+    /// in `Trainer::train` — [`disjoint_mut`] carves the references
+    /// with `split_at_mut` — shared by any full-layout caller (e.g. a
+    /// future fused-update path); `Session` itself keeps its
+    /// trainables dense and calls `step` directly.
+    fn step_indexed(&mut self, params: &mut [Tensor], idx: &[usize],
+                    grads: &[Tensor], lr: f32) {
+        let mut refs = disjoint_mut(params, idx);
+        self.step(&mut refs, grads, lr);
+    }
+}
+
+/// Safe disjoint mutable borrows of `items` at strictly-increasing
+/// indices: an index-sorted `split_at_mut` walker. Panics when the
+/// indices are not strictly increasing or out of range — the same
+/// conditions under which the old `unsafe` pointer version was UB.
+pub fn disjoint_mut<'a, T>(items: &'a mut [T],
+                           sorted_idx: &[usize]) -> Vec<&'a mut T> {
+    let mut out = Vec::with_capacity(sorted_idx.len());
+    let mut rest = items;
+    let mut base = 0usize;
+    for &i in sorted_idx {
+        assert!(i >= base, "indices must be strictly increasing");
+        let tail = rest.split_at_mut(i - base).1;
+        let (head, tail) =
+            tail.split_first_mut().expect("index out of range");
+        out.push(head);
+        rest = tail;
+        base = i + 1;
+    }
+    out
 }
 
 /// AdamW (Loshchilov & Hutter, 2017) — the paper's optimizer.
@@ -75,6 +117,10 @@ impl Optimizer for AdamW {
     fn name(&self) -> &'static str {
         "adamw"
     }
+
+    fn state_bytes(&self) -> usize {
+        AdamW::state_bytes(self)
+    }
 }
 
 /// Plain SGD (with optional momentum) — the convergence-theory baseline
@@ -117,6 +163,10 @@ impl Optimizer for Sgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.vel.iter().map(|v| v.len() * 4).sum()
     }
 }
 
@@ -165,6 +215,63 @@ mod tests {
             opt.step(&mut [&mut p], std::slice::from_ref(&zero), 0.1);
         }
         assert!(p.as_f32()[0] < 1.0);
+    }
+
+    #[test]
+    fn disjoint_mut_returns_requested_slots() {
+        let mut v = vec![0, 10, 20, 30, 40];
+        let refs = disjoint_mut(&mut v, &[1, 2, 4]);
+        assert_eq!(refs.len(), 3);
+        for r in refs {
+            *r += 1;
+        }
+        assert_eq!(v, vec![0, 11, 21, 30, 41]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn disjoint_mut_rejects_unsorted() {
+        let mut v = vec![0, 1, 2];
+        let _ = disjoint_mut(&mut v, &[2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn disjoint_mut_rejects_out_of_range() {
+        let mut v = vec![0, 1, 2];
+        let _ = disjoint_mut(&mut v, &[3]);
+    }
+
+    #[test]
+    fn step_indexed_matches_dense_step() {
+        // a full vector with trainables at {0, 2}: step_indexed must
+        // update exactly those, identically to a dense step
+        let mut full = vec![
+            Tensor::from_f32(&[2], &[1.0, 2.0]),
+            Tensor::from_f32(&[2], &[9.0, 9.0]),
+            Tensor::from_f32(&[2], &[-1.0, 4.0]),
+        ];
+        let grads =
+            vec![quad_grad(&full[0]), quad_grad(&full[2])];
+        let mut dense0 = full[0].clone();
+        let mut dense2 = full[2].clone();
+        let mut a = AdamW::new(0.0);
+        let mut b = AdamW::new(0.0);
+        a.step_indexed(&mut full, &[0, 2], &grads, 0.05);
+        b.step(&mut [&mut dense0, &mut dense2], &grads, 0.05);
+        assert_eq!(full[0].as_f32(), dense0.as_f32());
+        assert_eq!(full[2].as_f32(), dense2.as_f32());
+        assert_eq!(full[1].as_f32(), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn sgd_state_bytes_tracks_velocity() {
+        let mut p = Tensor::from_f32(&[4], &[0.0; 4]);
+        let mut opt = Sgd::new(0.9);
+        assert_eq!(Optimizer::state_bytes(&opt), 0);
+        let g = quad_grad(&p);
+        opt.step(&mut [&mut p], &[g], 0.1);
+        assert_eq!(Optimizer::state_bytes(&opt), 4 * 4);
     }
 
     #[test]

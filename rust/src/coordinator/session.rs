@@ -1,0 +1,519 @@
+//! A reentrant fine-tuning session: the step-driven decomposition of
+//! the old monolithic `Trainer::train` loop.
+//!
+//! A [`Session`] owns everything that is *per-tenant* — the trainable
+//! parameter slice, optimizer state, batch producer + prefetcher,
+//! activation arena (a forked executor), metrics, and the measured
+//! memory tracker — while reading the frozen base through the
+//! artifact's `Arc`-shared [`FrozenBase`]. One call to
+//! [`Session::step`] runs one full optimizer step (all `grad_accum`
+//! microbatches), so an engine can interleave many sessions fairly at
+//! step granularity; `Trainer::train` is now a thin loop over `step`.
+//!
+//! Determinism contract: a session's work depends only on
+//! (artifact, `TrainCfg`) — the data stream is indexed, the optimizer
+//! state is private, and the forked executor runs the same
+//! deterministic kernels — so K sessions interleaved in any order
+//! produce bit-identical losses and parameters to the same K jobs run
+//! serially (pinned by `tests/engine.rs`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::memory::MemoryTracker;
+use crate::coordinator::metrics::{Metrics, StepRow};
+use crate::coordinator::optimizer::{AdamW, Optimizer, Sgd};
+use crate::coordinator::trainer::{TrainCfg, TrainReport};
+use crate::data::loader::{Batch, Prefetcher};
+use crate::data::synth_images::ImageTask;
+use crate::data::synth_text::TextTask;
+use crate::runtime::{Artifact, Executor, FrozenBase, FwdOut, Tensor};
+
+/// Deterministic, index-addressed batch producer shared by the
+/// prefetcher (training stream), the warmup step, and evaluation.
+pub type Producer = Arc<dyn Fn(usize) -> Batch + Send + Sync>;
+
+/// Build the task-appropriate batch producer for an artifact. Errors on
+/// an arch tag this coordinator has no generator for (same contract as
+/// the other manifest parse paths — never panics on input data).
+pub(crate) fn make_producer(art: &Artifact,
+                            cfg: &TrainCfg) -> Result<Producer> {
+    let m = &art.manifest;
+    let b = m.batch;
+    let p: Producer = match m.arch.as_str() {
+        "vit" => {
+            let task = ImageTask::new(m.n_classes, m.n_tokens, m.patch_dim,
+                                      cfg.data_noise, cfg.seed);
+            Arc::new(move |step| {
+                let (x, y) = task.batch(step as u64 * b as u64, b);
+                Batch::Images { x, y }
+            })
+        }
+        "llama" => {
+            let task = TextTask::new(m.vocab, m.n_tokens, 4, 0.85,
+                                     cfg.seed);
+            Arc::new(move |step| {
+                let (x, y) = task.batch_lm(step as u64 * b as u64, b);
+                Batch::Tokens { x, y }
+            })
+        }
+        "roberta" => {
+            let task = TextTask::new(m.vocab, m.n_tokens, m.n_classes,
+                                     0.85, cfg.seed);
+            Arc::new(move |step| {
+                let (x, y) = task.batch_cls(step as u64 * b as u64, b);
+                Batch::Tokens { x, y }
+            })
+        }
+        other => anyhow::bail!(
+            "unknown arch {other:?} (trainer has batch generators for \
+             vit|llama|roberta)"
+        ),
+    };
+    Ok(p)
+}
+
+pub(crate) fn to_tensors(art: &Artifact, batch: Batch) -> (Tensor, Tensor) {
+    let m = &art.manifest;
+    match batch {
+        Batch::Images { x, y } => (
+            Tensor::from_f32(&m.x.shape, &x),
+            Tensor::from_i32(&m.y.shape, &y),
+        ),
+        Batch::Tokens { x, y } => (
+            Tensor::from_i32(&m.x.shape, &x),
+            Tensor::from_i32(&m.y.shape, &y),
+        ),
+    }
+}
+
+/// Result of one [`Session::step`] call.
+pub enum StepOutcome {
+    /// One optimizer step completed.
+    Stepped(StepStats),
+    /// The configured step budget was already exhausted; nothing ran.
+    Exhausted,
+}
+
+/// Per-step statistics of a completed [`Session::step`].
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    /// 0-based index of the step that just completed.
+    pub step: usize,
+    /// Microbatch-averaged training loss.
+    pub loss: f32,
+    /// Microbatch-averaged task metric.
+    pub metric: f32,
+    /// Learning rate applied.
+    pub lr: f32,
+    /// Measured residual (activation) bytes of the step.
+    pub activation_bytes: u64,
+}
+
+/// Constructor result that, on failure, carries the caller's
+/// parameters back out (rejoined to the full manifest-ordered vector)
+/// instead of dropping them — so `Trainer::train` can restore a
+/// checkpoint-loaded state exactly after a failed session build.
+type Recoverable<'a> = std::result::Result<Session<'a>,
+                                           (anyhow::Error, Vec<Tensor>)>;
+
+/// A reentrant fine-tuning session over an artifact (see module docs).
+pub struct Session<'a> {
+    art: &'a Artifact,
+    cfg: TrainCfg,
+    base: Arc<FrozenBase>,
+    trainable: Vec<Tensor>,
+    opt: Box<dyn Optimizer>,
+    /// Measured activation-memory accounting for this session.
+    pub memory: MemoryTracker,
+    /// Forked per-session executor (own arena); `None` falls back to
+    /// the artifact's shared executor.
+    exec: Option<Box<dyn Executor>>,
+    /// Flat-ABI fallback for executors without split support (e.g.
+    /// PJRT, which neither forks nor overrides `run_fwd_split`): one
+    /// materialized full parameter vector plus the trainable indices,
+    /// kept in sync after each optimizer step. Without this, the
+    /// default split impls would deep-copy the whole parameter set on
+    /// every fwd *and* bwd. `None` on backends that fork (native).
+    flat: Option<(Vec<Tensor>, Vec<usize>)>,
+    producer: Producer,
+    prefetch: Prefetcher,
+    metrics: Metrics,
+    step: usize,
+}
+
+impl<'a> Session<'a> {
+    /// Session sharing the artifact's frozen base (`Arc`-shared with
+    /// every other session on this artifact) and a fresh copy of the
+    /// trainable slice. Warms up exactly once (see [`Session::build`]).
+    pub fn new(art: &'a Artifact, cfg: TrainCfg) -> Result<Session<'a>> {
+        Session::build(art, cfg, art.frozen_base(), art.trainable_init())
+            .map_err(|(e, _)| e)
+    }
+
+    /// Session over explicit full parameters (e.g. restored from a
+    /// checkpoint): splits them along the manifest boundary into a
+    /// *private* frozen base plus the trainable slice. Numerically
+    /// identical to [`Session::new`] when `full` equals the artifact's
+    /// initial parameters.
+    pub fn with_params(art: &'a Artifact, cfg: TrainCfg,
+                       full: Vec<Tensor>) -> Result<Session<'a>> {
+        Session::try_with_params(art, cfg, full).map_err(|(e, _)| e)
+    }
+
+    /// [`Session::with_params`] that, on failure, returns the caller's
+    /// full parameter vector (values intact) alongside the error.
+    pub(crate) fn try_with_params(art: &'a Artifact, cfg: TrainCfg,
+                                  full: Vec<Tensor>) -> Recoverable<'a> {
+        if full.len() != art.manifest.params.len() {
+            let e = anyhow::anyhow!(
+                "param arity: got {}, manifest has {}", full.len(),
+                art.manifest.params.len());
+            return Err((e, full));
+        }
+        let (base, trainable) = FrozenBase::split(&art.manifest, full)
+            .expect("arity checked above");
+        let base = Arc::new(base);
+        Session::build(art, cfg, base.clone(), trainable)
+            .map_err(|(e, trainable)| (e, base.join(trainable)))
+    }
+
+    /// Shared constructor: fork the executor, build the single batch
+    /// producer (prefetcher + warmup + eval all reuse it), run the one
+    /// unmeasured warmup fwd/bwd — so first-run lazy initialization
+    /// (page faults on the parameter arrays, arena fill) is not charged
+    /// to the throughput meter — and only then start the metrics clock.
+    /// On failure the trainable tensors ride back out with the error.
+    fn build(art: &'a Artifact, cfg: TrainCfg, base: Arc<FrozenBase>,
+             trainable: Vec<Tensor>) -> Recoverable<'a> {
+        if trainable.len() != base.n_trainable() {
+            let e = anyhow::anyhow!(
+                "trainable slice arity: got {}, base expects {}",
+                trainable.len(), base.n_trainable());
+            return Err((e, trainable));
+        }
+        let opt: Box<dyn Optimizer> = match cfg.optimizer.as_str() {
+            "sgd" => Box::new(Sgd::new(0.9)),
+            _ => Box::new(AdamW::new(cfg.weight_decay)),
+        };
+        let producer = match make_producer(art, &cfg) {
+            Ok(p) => p,
+            Err(e) => return Err((e, trainable)),
+        };
+        let n_micro = cfg.steps * cfg.grad_accum;
+        let stream = producer.clone();
+        let prefetch =
+            Prefetcher::spawn(n_micro, 2, move |s| (stream.as_ref())(s));
+        let exec = art.fork_exec();
+        // on a backend without native split support, materialize one
+        // flat vector now instead of letting the default split impls
+        // clone the whole set per pass
+        let flat = if art.supports_split() {
+            None
+        } else {
+            Some((base.join(trainable.clone()),
+                  art.manifest.trainable_indices()))
+        };
+        let mut s = Session {
+            art,
+            cfg,
+            base,
+            trainable,
+            opt,
+            memory: MemoryTracker::new(),
+            exec,
+            flat,
+            producer,
+            prefetch,
+            metrics: Metrics::new(None).expect("no-sink metrics"),
+            step: 0,
+        };
+        if let Err(e) = s.warmup() {
+            return Err((e, s.take_trainable()));
+        }
+        // the metrics clock (throughput denominator) starts post-warmup
+        let sink = s.cfg.metrics_jsonl.clone();
+        match Metrics::new(sink.as_deref()) {
+            Ok(m) => s.metrics = m,
+            Err(e) => return Err((e, s.take_trainable())),
+        }
+        Ok(s)
+    }
+
+    /// One unmeasured fwd/bwd. The batch index is far outside any
+    /// train/eval index range, but small enough that `step * batch`
+    /// cannot overflow inside the producer.
+    fn warmup(&mut self) -> Result<()> {
+        let (x, y) = to_tensors(self.art, self.produce(u32::MAX as usize));
+        let out = self.fwd(&x, &y)?;
+        let g = self.bwd(&out.residuals, &x, &y)?;
+        self.recycle(out.residuals);
+        self.recycle(g);
+        Ok(())
+    }
+
+    fn take_trainable(self) -> Vec<Tensor> {
+        let Session { trainable, .. } = self;
+        trainable
+    }
+
+    fn exec(&self) -> &dyn Executor {
+        match &self.exec {
+            Some(e) => e.as_ref(),
+            None => self.art.executor(),
+        }
+    }
+
+    fn produce(&self, idx: usize) -> Batch {
+        (self.producer.as_ref())(idx)
+    }
+
+    fn fwd(&self, x: &Tensor, y: &Tensor) -> Result<FwdOut> {
+        let out = match &self.flat {
+            Some((full, _)) => self.exec().run_fwd(full, x, y)?,
+            None => self
+                .exec()
+                .run_fwd_split(&self.base, &self.trainable, x, y)?,
+        };
+        self.art.verify_fwd(&out)?;
+        Ok(out)
+    }
+
+    fn bwd(&self, residuals: &[Tensor], x: &Tensor,
+           y: &Tensor) -> Result<Vec<Tensor>> {
+        let grads = match &self.flat {
+            Some((full, _)) => {
+                self.exec().run_bwd(full, residuals, x, y)?
+            }
+            None => self.exec().run_bwd_split(&self.base,
+                                              &self.trainable,
+                                              residuals, x, y)?,
+        };
+        self.art.verify_bwd(&grads)?;
+        Ok(grads)
+    }
+
+    /// Copy the (just-updated) trainable tensors back into the flat
+    /// fallback vector, if one exists.
+    fn sync_flat(&mut self) {
+        if let Some((full, tidx)) = &mut self.flat {
+            for (rank, &i) in tidx.iter().enumerate() {
+                full[i].data.copy_from_slice(&self.trainable[rank].data);
+            }
+        }
+    }
+
+    /// Return step-scoped tensors to this session's executor arena.
+    pub fn recycle(&self, tensors: Vec<Tensor>) {
+        self.exec().recycle(tensors);
+    }
+
+    /// The artifact this session fine-tunes.
+    pub fn artifact(&self) -> &'a Artifact {
+        self.art
+    }
+
+    /// The shared frozen base handle (engine accounting + the
+    /// stored-once assertion compare `Arc` identities through this).
+    pub fn base(&self) -> &Arc<FrozenBase> {
+        &self.base
+    }
+
+    /// Resident bytes of this session's private trainable tensors.
+    pub fn trainable_bytes(&self) -> u64 {
+        self.trainable.iter().map(|t| t.nbytes() as u64).sum()
+    }
+
+    /// All parameter bytes this session privately holds: the trainable
+    /// slice, plus (on non-forking backends only) the flat-ABI fallback
+    /// vector — which duplicates the full parameter set.
+    pub fn resident_param_bytes(&self) -> u64 {
+        let flat: u64 = self
+            .flat
+            .as_ref()
+            .map(|(full, _)| {
+                full.iter().map(|t| t.nbytes() as u64).sum()
+            })
+            .unwrap_or(0);
+        self.trainable_bytes() + flat
+    }
+
+    /// Resident bytes of the optimizer state (0 until the first step
+    /// materializes it).
+    pub fn opt_state_bytes(&self) -> u64 {
+        self.opt.state_bytes() as u64
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Whether the configured step budget is exhausted.
+    pub fn is_done(&self) -> bool {
+        self.step >= self.cfg.steps
+    }
+
+    /// Run one full optimizer step: `grad_accum` microbatches of
+    /// fwd → observe residuals → bwd → accumulate, then the optimizer
+    /// update over the trainable slice (no raw-pointer disjoint-borrow
+    /// dance: the trainables are a dense per-session vector).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.is_done() {
+            return Ok(StepOutcome::Exhausted);
+        }
+        let step = self.step;
+        let cfg_steps = self.cfg.steps;
+        let grad_accum = self.cfg.grad_accum;
+        let lr = self.cfg.schedule.lr(self.cfg.lr, step, cfg_steps);
+        let mut loss_acc = 0f32;
+        let mut metric_acc = 0f32;
+        let mut accum: Option<Vec<Tensor>> = None;
+        for _ in 0..grad_accum {
+            let batch = self
+                .prefetch
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("prefetcher exhausted"))?;
+            let (x, y) = to_tensors(self.art, batch);
+            let out = self.fwd(&x, &y)?;
+            loss_acc += out.loss / grad_accum as f32;
+            metric_acc += out.metric / grad_accum as f32;
+            // ---- the measured activation-memory moment ----
+            self.memory.observe_residuals(&self.art.manifest,
+                                          &out.residuals);
+            let grads = self.bwd(&out.residuals, &x, &y)?;
+            // at the peak both the fresh gradients and (under
+            // grad_accum > 1) the running accumulator are live
+            let gbytes: u64 =
+                grads.iter().map(|g| g.nbytes() as u64).sum();
+            let abytes: u64 = accum
+                .as_ref()
+                .map(|acc| {
+                    acc.iter().map(|g| g.nbytes() as u64).sum()
+                })
+                .unwrap_or(0);
+            self.memory.observe_extra(gbytes + abytes);
+            self.memory.release();
+            // the residuals are dead past this point — hand their
+            // buffers back to the executor's arena for the next step
+            self.recycle(out.residuals);
+            match &mut accum {
+                None => {
+                    accum = Some(grads);
+                }
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(&grads) {
+                        let av = a.as_f32_mut();
+                        for (ai, gi) in av.iter_mut().zip(g.as_f32()) {
+                            *ai += gi;
+                        }
+                    }
+                    self.recycle(grads);
+                }
+            }
+        }
+        let mut grads = accum.take().unwrap();
+        if grad_accum > 1 {
+            let inv = 1.0 / grad_accum as f32;
+            for g in &mut grads {
+                for v in g.as_f32_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        {
+            let mut refs: Vec<&mut Tensor> =
+                self.trainable.iter_mut().collect();
+            self.opt.step(&mut refs, &grads, lr);
+        }
+        self.sync_flat();
+        // the gradient tensors' buffers came from the executor's
+        // arena (native backend); hand them back for the next step
+        self.recycle(grads);
+        let activation_bytes = self.memory.last_residual_bytes;
+        self.metrics.log_step(
+            StepRow {
+                step,
+                loss: loss_acc,
+                metric: metric_acc,
+                lr,
+                activation_bytes,
+                elapsed_s: self.metrics.elapsed_s(),
+            },
+            self.art.manifest.batch * grad_accum,
+        )?;
+        if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+            eprintln!(
+                "step {step:>5}  loss {loss_acc:.4}  metric \
+                 {metric_acc:.3}  lr {lr:.2e}  act \
+                 {:.1} MiB",
+                activation_bytes as f64 / 1048576.0
+            );
+        }
+        self.step += 1;
+        Ok(StepOutcome::Stepped(StepStats {
+            step,
+            loss: loss_acc,
+            metric: metric_acc,
+            lr,
+            activation_bytes,
+        }))
+    }
+
+    /// Evaluate on held-out batches (forward only), reusing the
+    /// session's producer — no per-call producer rebuild — and leaving
+    /// the step counter untouched.
+    pub fn evaluate(&mut self, start: usize,
+                    n_batches: usize) -> Result<(f32, f32)> {
+        let mut loss = 0f32;
+        let mut metric = 0f32;
+        for i in 0..n_batches {
+            let (x, y) = to_tensors(self.art, self.produce(start + i));
+            let out = self.fwd(&x, &y)?;
+            loss += out.loss / n_batches as f32;
+            metric += out.metric / n_batches as f32;
+            self.recycle(out.residuals);
+        }
+        Ok((loss, metric))
+    }
+
+    /// Flush metrics, run the end-of-training held-out evaluation
+    /// (fresh data indices past the training range), and assemble the
+    /// final report. Callable once the step budget is exhausted — or
+    /// earlier, for a partial report.
+    pub fn finish(&mut self) -> Result<TrainReport> {
+        self.metrics.flush()?;
+        let (eval_loss, eval_metric) = self.evaluate(
+            self.cfg.steps * self.cfg.grad_accum + 1000,
+            self.cfg.eval_batches,
+        )?;
+        Ok(TrainReport {
+            final_loss: self.metrics.mean_recent_loss(20),
+            final_metric: self.metrics.mean_recent_metric(20),
+            eval_loss,
+            eval_metric,
+            throughput: self.metrics.throughput(),
+            peak_activation_bytes: self.memory.peak_bytes,
+            steps: self.step,
+            rows: self.metrics.rows.clone(),
+            by_kind: self.memory.by_kind.clone(),
+            by_module: self.memory.by_module.clone(),
+        })
+    }
+
+    /// The full parameter vector (manifest order): frozen tensors
+    /// cloned from the (possibly shared) base, trainables cloned from
+    /// this session.
+    pub fn params(&self) -> Vec<Tensor> {
+        self.base.join(self.trainable.clone())
+    }
+
+    /// Consume the session into its full parameter vector, moving the
+    /// trainable tensors out (frozen tensors are still cloned — the
+    /// base may be shared with other sessions).
+    pub fn into_params(self) -> Vec<Tensor> {
+        let Session { base, trainable, .. } = self;
+        base.join(trainable)
+    }
+}

@@ -1,28 +1,27 @@
-//! The fine-tuning training loop.
+//! The fine-tuning training loop — now a thin façade over
+//! [`Session`](crate::coordinator::session::Session).
 //!
-//! Per step: prefetch batch → backend fwd (loss, metric, residuals) →
-//! [residual bytes == activation memory, tracked] → backend bwd (grads)
-//! → gradient accumulation → optimizer step on the host. The loop is
-//! backend-agnostic: it only speaks the residual ABI of
-//! `runtime::Executor`, so the same code drives the native CPU backend
-//! and (with `--features pjrt`) compiled XLA artifacts. Storage-format
-//! axes ride that contract for free: the `_mesa` presets' int8
-//! residual tensors flow through fwd → tracker → bwd → recycle
-//! untouched, and the measured `activation_bytes` shrink because the
-//! tensors themselves are smaller — not because of any trainer-side
-//! accounting rule.
+//! [`Trainer::train`] constructs one session from the trainer's
+//! (possibly checkpoint-restored) parameters and loops
+//! `Session::step()` to exhaustion, so the single-job CLI paths keep
+//! their exact behavior while the step-driven core is what the
+//! multi-tenant [`Engine`](crate::coordinator::engine::Engine)
+//! interleaves. Per step: prefetch batch → backend fwd (loss, metric,
+//! residuals) → [residual bytes == activation memory, tracked] →
+//! backend bwd (grads) → gradient accumulation → optimizer step on the
+//! host. The loop is backend-agnostic: it only speaks the residual ABI
+//! of `runtime::Executor`, so the same code drives the native CPU
+//! backend and (with `--features pjrt`) compiled XLA artifacts.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
 use crate::coordinator::memory::MemoryTracker;
-use crate::coordinator::metrics::{Metrics, StepRow};
-use crate::coordinator::optimizer::{AdamW, Optimizer, Sgd};
+use crate::coordinator::metrics::StepRow;
+use crate::coordinator::session::{make_producer, to_tensors, Session,
+                                  StepOutcome};
 use crate::coordinator::scheduler::Schedule;
-use crate::data::loader::{Batch, Prefetcher};
-use crate::data::synth_images::ImageTask;
-use crate::data::synth_text::TextTask;
 use crate::runtime::{Artifact, Tensor};
 
 /// Trainer hyper-parameters (CLI-overridable; see `config::RunCfg`).
@@ -97,70 +96,15 @@ pub struct TrainReport {
     pub by_module: Vec<(String, u64)>,
 }
 
-/// Build the task-appropriate batch producer for an artifact. Errors on
-/// an arch tag this trainer has no generator for (same contract as the
-/// other manifest parse paths — never panics on input data).
-fn make_producer(art: &Artifact, cfg: &TrainCfg)
-                 -> Result<Box<dyn Fn(usize) -> Batch + Send>> {
-    let m = &art.manifest;
-    let b = m.batch;
-    Ok(match m.arch.as_str() {
-        "vit" => {
-            let task = ImageTask::new(m.n_classes, m.n_tokens, m.patch_dim,
-                                      cfg.data_noise, cfg.seed);
-            Box::new(move |step| {
-                let (x, y) = task.batch(step as u64 * b as u64, b);
-                Batch::Images { x, y }
-            })
-        }
-        "llama" => {
-            let task = TextTask::new(m.vocab, m.n_tokens, 4, 0.85,
-                                     cfg.seed);
-            Box::new(move |step| {
-                let (x, y) = task.batch_lm(step as u64 * b as u64, b);
-                Batch::Tokens { x, y }
-            })
-        }
-        "roberta" => {
-            let task = TextTask::new(m.vocab, m.n_tokens, m.n_classes,
-                                     0.85, cfg.seed);
-            Box::new(move |step| {
-                let (x, y) = task.batch_cls(step as u64 * b as u64, b);
-                Batch::Tokens { x, y }
-            })
-        }
-        other => anyhow::bail!(
-            "unknown arch {other:?} (trainer has batch generators for \
-             vit|llama|roberta)"
-        ),
-    })
-}
-
-fn to_tensors(art: &Artifact, batch: Batch) -> (Tensor, Tensor) {
-    let m = &art.manifest;
-    match batch {
-        Batch::Images { x, y } => (
-            Tensor::from_f32(&m.x.shape, &x),
-            Tensor::from_i32(&m.y.shape, &y),
-        ),
-        Batch::Tokens { x, y } => (
-            Tensor::from_i32(&m.x.shape, &x),
-            Tensor::from_i32(&m.y.shape, &y),
-        ),
-    }
-}
-
-/// Drives fwd/bwd/optimizer over an artifact.
+/// Drives fwd/bwd/optimizer over an artifact (single-job façade).
 pub struct Trainer<'a> {
     /// The artifact being fine-tuned.
     pub art: &'a Artifact,
     /// Hyper-parameters.
     pub cfg: TrainCfg,
-    /// Current parameters (manifest order).
+    /// Current parameters (manifest order); updated after `train`.
     pub params: Vec<Tensor>,
-    /// Host-side optimizer over the trainables.
-    pub opt: Box<dyn Optimizer>,
-    /// Measured activation-memory accounting.
+    /// Measured activation-memory accounting of the last `train` run.
     pub memory: MemoryTracker,
 }
 
@@ -168,11 +112,7 @@ impl<'a> Trainer<'a> {
     /// Build a trainer with the artifact's initial parameters.
     pub fn new(art: &'a Artifact, cfg: TrainCfg) -> Result<Trainer<'a>> {
         let params = art.load_params()?;
-        let opt: Box<dyn Optimizer> = match cfg.optimizer.as_str() {
-            "sgd" => Box::new(Sgd::new(0.9)),
-            _ => Box::new(AdamW::new(cfg.weight_decay)),
-        };
-        Ok(Trainer { art, cfg, params, opt, memory: MemoryTracker::new() })
+        Ok(Trainer { art, cfg, params, memory: MemoryTracker::new() })
     }
 
     /// Replace initial params (e.g. restored from a pretrain checkpoint).
@@ -180,144 +120,46 @@ impl<'a> Trainer<'a> {
         self.params = params;
     }
 
-    /// Run the configured number of steps; returns the report.
+    /// Run the configured number of steps; returns the report. This is
+    /// a thin loop over [`Session::step`]: the session warms up once at
+    /// construction, each `step()` is one full optimizer step, and the
+    /// held-out evaluation happens in `finish()`.
+    ///
+    /// `self.params` stays valid on every path: after a mid-run error
+    /// it holds the session's (partially trained) parameters; if the
+    /// session could not even be constructed, the exact pre-call values
+    /// (e.g. a restored checkpoint) are put back.
     pub fn train(&mut self) -> Result<TrainReport> {
-        let cfg = self.cfg.clone();
-        let producer = make_producer(self.art, &cfg)?;
-        let n_micro = cfg.steps * cfg.grad_accum;
-        let prefetch = Prefetcher::spawn(n_micro, 2, producer);
-        let tidx = self.art.manifest.trainable_indices();
-        let mut accum: Option<Vec<Tensor>> = None;
-
-        // One unmeasured warmup fwd/bwd so first-run lazy initialization
-        // (PJRT compilation caches, page faults on the parameter arrays)
-        // is not charged to the throughput meter — it systematically
-        // penalized whichever variant ran first.
+        let params = std::mem::take(&mut self.params);
+        let mut session = match Session::try_with_params(
+            self.art, self.cfg.clone(), params)
         {
-            let producer2 = make_producer(self.art, &cfg)?;
-            // far outside any train/eval index range, but small enough
-            // that `step * batch` cannot overflow inside the producer
-            let (x, y) = to_tensors(self.art, producer2(u32::MAX as usize));
-            let out = self.art.run_fwd(&self.params, &x, &y)?;
-            let g = self.art.run_bwd(&self.params, &out.residuals,
-                                     &x, &y)?;
-            self.art.recycle(out.residuals);
-            self.art.recycle(g);
-        }
-        let mut metrics = Metrics::new(cfg.metrics_jsonl.as_deref())?;
-
-        for step in 0..cfg.steps {
-            let lr = cfg.schedule.lr(cfg.lr, step, cfg.steps);
-            let mut loss_acc = 0f32;
-            let mut metric_acc = 0f32;
-            for _ in 0..cfg.grad_accum {
-                let batch = prefetch.next().expect("prefetcher exhausted");
-                let (x, y) = to_tensors(self.art, batch);
-                let out = self.art.run_fwd(&self.params, &x, &y)?;
-                loss_acc += out.loss / cfg.grad_accum as f32;
-                metric_acc += out.metric / cfg.grad_accum as f32;
-                // ---- the measured activation-memory moment ----
-                self.memory.observe_residuals(&self.art.manifest,
-                                              &out.residuals);
-                let grads = self.art.run_bwd(&self.params, &out.residuals,
-                                             &x, &y)?;
-                let gbytes: u64 =
-                    grads.iter().map(|g| g.nbytes() as u64).sum();
-                self.memory.observe_extra(gbytes);
-                self.memory.release();
-                // the residuals are dead past this point — hand their
-                // buffers back to the executor's arena for the next step
-                self.art.recycle(out.residuals);
-                match &mut accum {
-                    None => {
-                        accum = Some(grads);
-                    }
-                    Some(acc) => {
-                        for (a, g) in acc.iter_mut().zip(&grads) {
-                            let av = a.as_f32_mut();
-                            for (ai, gi) in av.iter_mut()
-                                .zip(g.as_f32()) {
-                                *ai += gi;
-                            }
-                        }
-                        self.art.recycle(grads);
-                    }
-                }
+            Ok(s) => s,
+            Err((e, params)) => {
+                self.params = params;
+                return Err(e);
             }
-            let mut grads = accum.take().unwrap();
-            if cfg.grad_accum > 1 {
-                let inv = 1.0 / cfg.grad_accum as f32;
-                for g in &mut grads {
-                    for v in g.as_f32_mut() {
-                        *v *= inv;
-                    }
-                }
-            }
-            // optimizer step over trainables (grads are in tidx order)
-            {
-                let mut refs: Vec<&mut Tensor> = Vec::new();
-                let mut taken: Vec<(usize, *mut Tensor)> = tidx
-                    .iter()
-                    .map(|&i| (i, &mut self.params[i] as *mut Tensor))
-                    .collect();
-                for (_, p) in taken.iter_mut() {
-                    // SAFETY: indices are unique; disjoint &mut borrows
-                    refs.push(unsafe { &mut **p });
-                }
-                self.opt.step(&mut refs, &grads, lr);
-            }
-            // the gradient tensors' buffers came from the executor's
-            // arena (native backend); hand them back for the next step
-            self.art.recycle(grads);
-            metrics.log_step(
-                StepRow {
-                    step,
-                    loss: loss_acc,
-                    metric: metric_acc,
-                    lr,
-                    activation_bytes: self.memory.last_residual_bytes,
-                    elapsed_s: metrics.elapsed_s(),
-                },
-                self.art.manifest.batch * cfg.grad_accum,
-            )?;
-            if cfg.log_every > 0 && step % cfg.log_every == 0 {
-                eprintln!(
-                    "step {step:>5}  loss {loss_acc:.4}  metric \
-                     {metric_acc:.3}  lr {lr:.2e}  act \
-                     {:.1} MiB",
-                    self.memory.last_residual_bytes as f64 / 1048576.0
-                );
-            }
-        }
-        metrics.flush()?;
-
-        // held-out evaluation (fresh data indices past the training range)
-        let (eval_loss, eval_metric) =
-            self.evaluate(cfg.steps * cfg.grad_accum + 1000,
-                          cfg.eval_batches)?;
-
-        Ok(TrainReport {
-            final_loss: metrics.mean_recent_loss(20),
-            final_metric: metrics.mean_recent_metric(20),
-            eval_loss,
-            eval_metric,
-            throughput: metrics.throughput(),
-            peak_activation_bytes: self.memory.peak_bytes,
-            steps: cfg.steps,
-            rows: metrics.rows.clone(),
-            by_kind: self.memory.by_kind.clone(),
-            by_module: self.memory.by_module.clone(),
-        })
+        };
+        let result = (|| {
+            while let StepOutcome::Stepped(_) = session.step()? {}
+            session.finish()
+        })();
+        self.memory = session.memory.clone();
+        self.params = session.into_params();
+        result
     }
 
-    /// Evaluate on held-out batches (forward only).
+    /// Evaluate on held-out batches (forward only) with the trainer's
+    /// current parameters — the standalone `ambp eval` path (no warmup,
+    /// no session state).
     pub fn evaluate(&mut self, start: usize,
                     n_batches: usize) -> Result<(f32, f32)> {
         let producer = make_producer(self.art, &self.cfg)?;
         let mut loss = 0f32;
         let mut metric = 0f32;
         for i in 0..n_batches {
-            let (x, y) = to_tensors(self.art, producer(start + i));
+            let (x, y) =
+                to_tensors(self.art, (producer.as_ref())(start + i));
             let out = self.art.run_fwd(&self.params, &x, &y)?;
             loss += out.loss / n_batches as f32;
             metric += out.metric / n_batches as f32;

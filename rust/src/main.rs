@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   train     fine-tune a preset artifact (the main entry point)
+//!   serve     multi-tenant engine: run N fine-tuning sessions that
+//!             share frozen bases, under a byte budget
+//!   fleet     sessions-per-budget capacity report (baseline vs ours
+//!             vs mesa), cross-checked against a measured probe step
 //!   eval      forward-only evaluation of a (possibly restored) model
 //!   exp       reproduce a paper table/figure (fig1..fig8, tab1..tab12,
 //!             appc, appe, all)
@@ -11,11 +15,13 @@
 //!   solve     re-derive the ReGELU2/ReSiLU2 coefficients (Appendix E)
 //!   info      print a preset's manifest summary
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use ambp::config::RunCfg;
 use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
-use ambp::coordinator::{TrainCfg, Trainer};
+use ambp::coordinator::engine::fleet_capacity;
+use ambp::coordinator::{Engine, JobSpec, TrainCfg, Trainer};
 use ambp::runtime::{Artifact, Runtime};
 use ambp::util::cli::Args;
 use anyhow::{bail, Context, Result};
@@ -25,6 +31,8 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => train(&args),
+        "serve" => serve(&args),
+        "fleet" => fleet(&args),
         "eval" => eval(&args),
         "exp" => {
             let id = args
@@ -92,6 +100,150 @@ fn train(args: &Args) -> Result<()> {
         Checkpoint::from_params(&art.manifest, &trainer.params)
             .save(dst)?;
         println!("checkpoint saved to {dst:?}");
+    }
+    Ok(())
+}
+
+/// Multi-tenant serving: admit `--jobs preset[:steps[:seed]],…`
+/// sessions against `--budget <MiB>`, interleave their steps
+/// round-robin, report per-session results + fleet accounting.
+fn serve(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let budget =
+        (args.f64_or("budget", 1024.0)? * 1048576.0).round() as u64;
+    let jobs = args
+        .get("jobs")
+        .context("--jobs preset[:steps[:seed]],... required")?;
+    let base_cfg = TrainCfg {
+        steps: args.usize_or("steps", 20)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        log_every: args.usize_or("log-every", 0)?,
+        seed: args.usize_or("seed", 0)? as u64,
+        // serving is about step throughput; held-out evaluation is
+        // opt-in so it does not distort the aggregate samples/s
+        eval_batches: args.usize_or("eval-batches", 0)?,
+        ..TrainCfg::default()
+    };
+    let mut specs = Vec::new();
+    for (i, token) in jobs.split(',').enumerate() {
+        specs.push(JobSpec::parse(token.trim(), &base_cfg, i)?);
+    }
+    // one artifact per unique preset: sessions on the same preset
+    // share its frozen base by construction
+    let mut arts: BTreeMap<String, Artifact> = BTreeMap::new();
+    for spec in &specs {
+        if let std::collections::btree_map::Entry::Vacant(slot) =
+            arts.entry(spec.preset.clone())
+        {
+            slot.insert(ambp::runtime::load_or_synth(&rt, &spec.preset)?);
+        }
+    }
+    let strict = args.bool("strict");
+    let mut engine = Engine::new(budget);
+    let mut admitted_samples = 0u64;
+    for (i, spec) in specs.iter().enumerate() {
+        let name = format!("s{i}");
+        let art = &arts[&spec.preset];
+        match engine.admit(&name, art, spec.cfg.clone()) {
+            Ok(id) => {
+                admitted_samples += (art.manifest.batch
+                    * spec.cfg.grad_accum
+                    * spec.cfg.steps) as u64;
+                println!("admitted {name} ({}) as session {id}: \
+                          {} steps, seed {}",
+                         spec.preset, spec.cfg.steps, spec.cfg.seed);
+            }
+            Err(e) if strict => {
+                return Err(e.context(format!(
+                    "--strict: job {name} ({}) was not admitted",
+                    spec.preset
+                )));
+            }
+            Err(e) => println!("REJECTED {name} ({}): {e}", spec.preset),
+        }
+    }
+    if engine.is_empty() {
+        bail!("no session fit the {:.1} MiB budget",
+              budget as f64 / 1048576.0);
+    }
+    // the throughput clock covers the interleaved steps only —
+    // admission (each session's one-off warmup) and the end-of-run
+    // held-out evaluation inside finish() are setup/reporting
+    let t0 = std::time::Instant::now();
+    while engine.round()? > 0 {}
+    let wall = t0.elapsed().as_secs_f64();
+    let reports = engine.run()?;
+    println!("\nper-session results:");
+    for r in &reports {
+        println!(
+            "  {:<4} {:<40} loss {:.4}  metric {:.3}  act peak \
+             {:>8.2} MiB (predicted tape {:>8.2} MiB)",
+            r.name,
+            r.preset,
+            r.report.final_loss,
+            r.report.final_metric,
+            r.report.peak_activation_bytes as f64 / 1048576.0,
+            r.admission.tape_bytes as f64 / 1048576.0
+        );
+    }
+    println!("\nfleet: {} sessions | resident params {:.2} MiB \
+              (bases stored once) | predicted {:.2} MiB of {:.1} MiB \
+              budget | measured peak {:.2} MiB | aggregate {:.1} \
+              samples/s",
+             reports.len(),
+             engine.resident_param_bytes() as f64 / 1048576.0,
+             engine.predicted_bytes() as f64 / 1048576.0,
+             budget as f64 / 1048576.0,
+             engine.fleet.peak_bytes as f64 / 1048576.0,
+             admitted_samples as f64 / wall);
+    Ok(())
+}
+
+/// Sessions-per-budget capacity report: baseline vs ours
+/// (`*_regelu2_msln`) vs mesa under one byte budget — the Table-1
+/// savings restated as tenancy.
+fn fleet(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let budget =
+        (args.f64_or("budget", 64.0)? * 1048576.0).round() as u64;
+    let base = args.get_or("base", "vitt_loraqv");
+    let presets: Vec<String> = match args.get("presets") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).collect()
+        }
+        None => vec![
+            format!("{base}_gelu_ln"),
+            format!("{base}_gelu_ln_mesa"),
+            format!("{base}_regelu2_msln"),
+            format!("{base}_regelu2_msln_mesa"),
+        ],
+    };
+    let cfg = TrainCfg {
+        steps: 1,
+        log_every: 0,
+        eval_batches: 0,
+        ..TrainCfg::default()
+    };
+    let probe = !args.bool("no-probe");
+    let rows = fleet_capacity(&rt, budget, &presets, &cfg, probe)?;
+    println!("fleet capacity @ {:.1} MiB budget (marginal = tape + \
+              grads + optimizer + trainable; base stored once)",
+             budget as f64 / 1048576.0);
+    println!("{:<44} {:>10} {:>12} {:>12} {:>9}",
+             "preset", "base MiB", "marginal MiB", "measured MiB",
+             "sessions");
+    for r in &rows {
+        println!(
+            "{:<44} {:>10.2} {:>12.3} {:>12} {:>9}",
+            r.preset,
+            r.base_bytes as f64 / 1048576.0,
+            r.admission.marginal() as f64 / 1048576.0,
+            match r.measured_tape {
+                Some(b) => format!("{:.3}", b as f64 / 1048576.0),
+                None => "-".to_string(),
+            },
+            r.admitted
+        );
     }
     Ok(())
 }
@@ -220,6 +372,14 @@ global: --backend native|pjrt   (default native; presets with no on-disk
           --schedule constant|warmup_cosine|warmup_linear
           --grad-accum K --seed S --metrics out.jsonl
           --init-from ckpt/ --save-to ckpt/]
+  serve   --budget MiB --jobs P[:steps[:seed]],P[:steps[:seed]],...
+          [--steps N --lr X --seed S --log-every K --eval-batches E
+           --strict]
+          multi-tenant engine: sessions share frozen bases; admission
+          is gated on predicted tape+grads+optimizer bytes
+          (--strict: error out if any job is rejected)
+  fleet   [--budget MiB --base vitt_loraqv | --presets P,P,...
+          --no-probe]   sessions-per-budget capacity report
   eval    --preset P [--init-from ckpt/ --batches N]
   exp     <fig1..fig8|tab1..tab12|appc|appe|all> [--steps N]
   mem     --scale vit_base|vit_large|llama7b|llama13b|roberta|swin_tiny|\

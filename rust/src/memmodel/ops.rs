@@ -6,6 +6,10 @@
 //! * `Mode::Tape`  — f32 everything, attention saves {q,k,v} only
 //!   (matches the measured artifact manifests bit-for-bit).
 
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Arch {
     Vit,
@@ -137,6 +141,65 @@ fn linear_mode(which: &str, tuning: Tuning) -> LinMode {
 }
 
 impl MemCfg {
+    /// The analytical config mirroring a runtime [`Manifest`] in
+    /// `Mode::Tape` — what the engine's admission control predicts a
+    /// session's residual tape from, before any step runs. Caveat: the
+    /// analytical LLaMA block is always gated (SwiGLU), so for a
+    /// plain-MLP llama manifest the prediction is an upper bound;
+    /// admission resolves divergence conservatively with
+    /// `max(analytic, manifest)`.
+    pub fn from_manifest(m: &Manifest) -> Result<MemCfg> {
+        let arch = match m.arch.as_str() {
+            "vit" => Arch::Vit,
+            "llama" => Arch::Llama,
+            "roberta" => Arch::Roberta,
+            other => bail!("memmodel has no arch {other:?}"),
+        };
+        let tuning = match m.tuning.as_str() {
+            "full" => Tuning::Full,
+            "frozen" => Tuning::Frozen,
+            "lora_qv" | "loraqv" => Tuning::LoraQv,
+            "lora_all" | "loraall" => Tuning::LoraAll,
+            "lorafa_qv" | "lorafaqv" => Tuning::LoraFaQv,
+            "lorafa_all" | "lorafaall" => Tuning::LoraFaAll,
+            other => bail!("memmodel has no tuning {other:?}"),
+        };
+        let act = match m.activation.as_str() {
+            "gelu" => ActKind::Gelu,
+            "regelu2" => ActKind::ReGelu2,
+            "silu" => ActKind::Silu,
+            "resilu2" => ActKind::ReSilu2,
+            "relu" => ActKind::Relu,
+            other => bail!("memmodel has no activation {other:?}"),
+        };
+        let norm = match m.norm.as_str() {
+            "ln" => NormKind::Ln,
+            "msln" => NormKind::MsLn,
+            "rms" => NormKind::Rms,
+            "msrms" => NormKind::MsRms,
+            other => bail!("memmodel has no norm {other:?}"),
+        };
+        Ok(MemCfg {
+            arch,
+            dim: m.dim,
+            depth: m.depth,
+            n_heads: m.n_heads,
+            mlp_ratio: m.mlp_ratio,
+            n_tokens: m.n_tokens,
+            patch_dim: m.patch_dim,
+            n_classes: m.n_classes,
+            vocab: m.vocab,
+            lora_rank: m.lora_rank,
+            batch: m.batch,
+            tuning,
+            act,
+            norm,
+            mode: Mode::Tape,
+            ckpt: m.ckpt,
+            mesa: m.mesa,
+        })
+    }
+
     pub fn hidden(&self) -> usize {
         (self.dim as f64 * self.mlp_ratio) as usize
     }

@@ -26,15 +26,18 @@
 pub mod manifest;
 #[cfg(feature = "native")]
 pub mod native;
+pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod tensor;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::Manifest;
+pub use params::{FrozenBase, Params};
 pub use tensor::{DType, Tensor};
 
 /// Output of one forward pass at the residual ABI.
@@ -59,6 +62,46 @@ pub trait Executor {
     /// trainable parameters, in `Manifest::trainable_indices` order.
     fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<Vec<Tensor>>;
+
+    /// Forward pass at the **split** parameter ABI: an `Arc`-shared
+    /// frozen base plus the session's trainable tensors (manifest
+    /// trainable order). The default materializes a full flat vector
+    /// (cloning the frozen side) and delegates to [`Executor::run_fwd`]
+    /// — always correct, but it forfeits the sharing; backends override
+    /// it to read the split view zero-copy.
+    fn run_fwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                     x: &Tensor, y: &Tensor) -> Result<FwdOut> {
+        let full = Params::Split { base, trainable }.to_vec();
+        self.run_fwd(&full, x, y)
+    }
+
+    /// Backward pass at the split parameter ABI (see
+    /// [`Executor::run_fwd_split`]).
+    fn run_bwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                     residuals: &[Tensor], x: &Tensor,
+                     y: &Tensor) -> Result<Vec<Tensor>> {
+        let full = Params::Split { base, trainable }.to_vec();
+        self.run_bwd(&full, residuals, x, y)
+    }
+
+    /// Whether this executor reads the split parameter ABI natively
+    /// (overrides [`Executor::run_fwd_split`]) rather than relying on
+    /// the flat-materializing defaults. A pure capability query — no
+    /// allocation; sessions on a `false` backend keep one flat
+    /// parameter vector instead of using the split path.
+    fn supports_split(&self) -> bool {
+        false
+    }
+
+    /// Fork an executor that shares this one's compiled model but owns
+    /// its own step-scoped state (the native backend's activation
+    /// arena), so concurrent sessions never contend on scratch buffers.
+    /// `None` when the backend cannot fork — callers then share this
+    /// executor, which stays correct (its state is internally locked)
+    /// but serializes arena reuse.
+    fn fork(&self) -> Option<Box<dyn Executor>> {
+        None
+    }
 
     /// Hand step-scoped tensors (the residual list, once the backward
     /// pass has consumed it) back to the executor so their buffers can
@@ -133,7 +176,13 @@ pub struct Artifact {
     pub dir: PathBuf,
     /// The ABI contract: parameter layout, residual plan, batch shapes.
     pub manifest: Manifest,
-    params0: Vec<Tensor>,
+    /// The initial parameters, stored pre-split along the manifest's
+    /// trainable/frozen boundary: the frozen side lives behind an
+    /// `Arc` that every session clones, so the frozen weights are
+    /// resident exactly once in the process no matter how many
+    /// sessions fine-tune them (there is no second flat copy).
+    frozen: Arc<FrozenBase>,
+    trainable0: Vec<Tensor>,
     exec: Box<dyn Executor>,
 }
 
@@ -152,27 +201,86 @@ impl Artifact {
     }
 
     /// Assemble an artifact from parts (used by backend implementations).
+    /// `params0` must be in manifest order — every backend produces it
+    /// from the manifest itself, so a length mismatch is an API-misuse
+    /// bug, not an input-data condition.
     pub fn from_parts(dir: PathBuf, manifest: Manifest,
                       params0: Vec<Tensor>, exec: Box<dyn Executor>)
                       -> Artifact {
-        Artifact { dir, manifest, params0, exec }
+        let (frozen, trainable0) = FrozenBase::split(&manifest, params0)
+            .expect("artifact params must match the manifest layout");
+        Artifact {
+            dir,
+            manifest,
+            frozen: Arc::new(frozen),
+            trainable0,
+            exec,
+        }
     }
 
-    /// The artifact's initial parameters, in manifest order.
+    /// The artifact's initial parameters (a fresh copy), manifest order.
     pub fn load_params(&self) -> Result<Vec<Tensor>> {
-        Ok(self.params0.clone())
+        Ok(self.frozen.join(self.trainable0.clone()))
     }
 
-    /// Forward pass: `(params…, x, y) -> (loss, metric, residuals…)`.
-    pub fn run_fwd(&self, params: &[Tensor], x: &Tensor,
-                   y: &Tensor) -> Result<FwdOut> {
-        let out = self.exec.run_fwd(params, x, y)?;
+    /// The shared frozen base: the read-only parameter population every
+    /// session on this artifact shares (an `Arc` onto the artifact's
+    /// own storage — cloning the handle copies no tensor data).
+    pub fn frozen_base(&self) -> Arc<FrozenBase> {
+        self.frozen.clone()
+    }
+
+    /// A fresh per-session copy of the trainable tensors, in manifest
+    /// trainable order (the order `run_bwd` emits gradients in).
+    pub fn trainable_init(&self) -> Vec<Tensor> {
+        self.trainable0.clone()
+    }
+
+    /// The artifact's own executor (sessions that could not fork run
+    /// through it; its step-scoped state is internally locked).
+    pub fn executor(&self) -> &dyn Executor {
+        self.exec.as_ref()
+    }
+
+    /// Fork a session-private executor sharing this artifact's model
+    /// (see [`Executor::fork`]).
+    pub fn fork_exec(&self) -> Option<Box<dyn Executor>> {
+        self.exec.fork()
+    }
+
+    /// Whether the backend reads the split parameter ABI natively
+    /// (see [`Executor::supports_split`]).
+    pub fn supports_split(&self) -> bool {
+        self.exec.supports_split()
+    }
+
+    /// Check a forward output against the manifest residual plan.
+    pub fn verify_fwd(&self, out: &FwdOut) -> Result<()> {
         anyhow::ensure!(
             out.residuals.len() == self.manifest.residuals.len(),
             "fwd arity mismatch: got {}, manifest says {}",
             out.residuals.len(),
             self.manifest.residuals.len()
         );
+        Ok(())
+    }
+
+    /// Check a gradient list against the manifest trainable count.
+    pub fn verify_bwd(&self, grads: &[Tensor]) -> Result<()> {
+        let n_train = self.manifest.trainable_indices().len();
+        anyhow::ensure!(
+            grads.len() == n_train,
+            "bwd arity mismatch: got {}, expected {n_train}",
+            grads.len()
+        );
+        Ok(())
+    }
+
+    /// Forward pass: `(params…, x, y) -> (loss, metric, residuals…)`.
+    pub fn run_fwd(&self, params: &[Tensor], x: &Tensor,
+                   y: &Tensor) -> Result<FwdOut> {
+        let out = self.exec.run_fwd(params, x, y)?;
+        self.verify_fwd(&out)?;
         Ok(out)
     }
 
@@ -181,12 +289,26 @@ impl Artifact {
     pub fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor],
                    x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
         let grads = self.exec.run_bwd(params, residuals, x, y)?;
-        let n_train = self.manifest.trainable_indices().len();
-        anyhow::ensure!(
-            grads.len() == n_train,
-            "bwd arity mismatch: got {}, expected {n_train}",
-            grads.len()
-        );
+        self.verify_bwd(&grads)?;
+        Ok(grads)
+    }
+
+    /// [`Artifact::run_fwd`] at the split parameter ABI, against the
+    /// artifact's own executor.
+    pub fn run_fwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                         x: &Tensor, y: &Tensor) -> Result<FwdOut> {
+        let out = self.exec.run_fwd_split(base, trainable, x, y)?;
+        self.verify_fwd(&out)?;
+        Ok(out)
+    }
+
+    /// [`Artifact::run_bwd`] at the split parameter ABI.
+    pub fn run_bwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                         residuals: &[Tensor], x: &Tensor,
+                         y: &Tensor) -> Result<Vec<Tensor>> {
+        let grads =
+            self.exec.run_bwd_split(base, trainable, residuals, x, y)?;
+        self.verify_bwd(&grads)?;
         Ok(grads)
     }
 

@@ -16,7 +16,7 @@ use super::super::kernels::{
 use super::super::model::NetCfg;
 use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
 use super::{BwdCtx, FwdCtx, Layer, ParamReg};
-use crate::runtime::tensor::Tensor;
+use crate::runtime::params::Params;
 
 /// Where a linear finds its input residual in the backward pass.
 #[derive(Debug, Clone, Copy)]
@@ -152,7 +152,7 @@ impl LinOp {
 
     /// `y = x·Wᵀ [+ b] [+ uBᵀ]`; pushes the own input slot (if any) and
     /// the LoRA `u` slot.
-    pub fn fwd(&self, arena: &mut Arena, params: &[Tensor],
+    pub fn fwd(&self, arena: &mut Arena, params: Params<'_>,
                tape: &mut TapeWriter, x: &[f32],
                rows: usize) -> Result<Vec<f32>> {
         if let XSrc::Own(slot) = self.x_src {

@@ -36,6 +36,7 @@ use anyhow::Result;
 
 use super::arena::Arena;
 use crate::runtime::manifest::ParamInfo;
+use crate::runtime::params::Params;
 use crate::runtime::tensor::Tensor;
 
 pub use activation::Activation;
@@ -107,8 +108,9 @@ impl Profiler {
 /// [`Embed`] initializes it from `x`, [`Head`] consumes it into
 /// `loss`/`metric`.
 pub struct FwdCtx<'a> {
-    /// Model parameters, manifest order.
-    pub params: &'a [Tensor],
+    /// Model parameters, manifest order (flat slice or shared-base +
+    /// trainable split — layers index both identically).
+    pub params: Params<'a>,
     /// Step-scoped buffer arena (all activations come from here).
     pub arena: &'a mut Arena,
     /// Input batch.
@@ -139,8 +141,9 @@ impl FwdCtx<'_> {
 /// [`Head`] initializes it from the loss, [`Embed`] consumes it into
 /// the embedding gradients.
 pub struct BwdCtx<'a> {
-    /// Model parameters, manifest order.
-    pub params: &'a [Tensor],
+    /// Model parameters, manifest order (flat slice or shared-base +
+    /// trainable split — layers index both identically).
+    pub params: Params<'a>,
     /// Parameter layout (trainability gates gradient work).
     pub infos: &'a [ParamInfo],
     /// Step-scoped buffer arena.

@@ -21,11 +21,12 @@ pub mod pool;
 pub mod spec;
 
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::runtime::{Artifact, Backend, Executor, FwdOut, Tensor};
+use crate::runtime::{Artifact, Backend, Executor, FrozenBase, FwdOut,
+                     Params, Tensor};
 
 pub use arena::{Arena, ArenaStats};
 pub use layers::Profiler;
@@ -51,16 +52,26 @@ impl Backend for NativeBackend {
 /// [`Executor`] over a built native [`Model`], owning the step-scoped
 /// buffer [`Arena`]: activations and residual payloads are taken from
 /// (and, via [`Executor::recycle`], returned to) its free lists, so the
-/// steady-state train step allocates nothing.
+/// steady-state train step allocates nothing. The model itself is
+/// `Arc`-shared: [`Executor::fork`] hands out sibling executors over
+/// the same compiled layer stack, each with a private arena, which is
+/// what lets N concurrent sessions share one frozen base without
+/// contending on scratch buffers.
 pub struct NativeExec {
-    /// The model whose layout matches the artifact manifest.
-    pub model: Model,
+    /// The model whose layout matches the artifact manifest (shared
+    /// between this executor and any fork of it).
+    pub model: Arc<Model>,
     arena: Mutex<Arena>,
 }
 
 impl NativeExec {
     /// Wrap a built model with a fresh arena.
     pub fn new(model: Model) -> NativeExec {
+        NativeExec::from_shared(Arc::new(model))
+    }
+
+    /// Wrap an already-shared model with a fresh arena (the fork path).
+    pub fn from_shared(model: Arc<Model>) -> NativeExec {
         NativeExec { model, arena: Mutex::new(Arena::new()) }
     }
 
@@ -72,23 +83,52 @@ impl NativeExec {
             .unwrap_or_else(|e| e.into_inner())
             .stats()
     }
+
+    fn fwd_view(&self, params: Params<'_>, x: &Tensor,
+                y: &Tensor) -> Result<FwdOut> {
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        let (loss, metric, residuals) =
+            self.model.forward_view(&mut arena, params, x, y)?;
+        Ok(FwdOut { loss, metric, residuals })
+    }
+
+    fn bwd_view(&self, params: Params<'_>, residuals: &[Tensor],
+                x: &Tensor, y: &Tensor) -> Result<Vec<Tensor>> {
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        self.model.backward_view(&mut arena, params, residuals, x, y)
+    }
 }
 
 impl Executor for NativeExec {
     fn run_fwd(&self, params: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<FwdOut> {
-        let mut arena =
-            self.arena.lock().unwrap_or_else(|e| e.into_inner());
-        let (loss, metric, residuals) =
-            self.model.forward_in(&mut arena, params, x, y)?;
-        Ok(FwdOut { loss, metric, residuals })
+        self.fwd_view(Params::Flat(params), x, y)
     }
 
     fn run_bwd(&self, params: &[Tensor], residuals: &[Tensor], x: &Tensor,
                y: &Tensor) -> Result<Vec<Tensor>> {
-        let mut arena =
-            self.arena.lock().unwrap_or_else(|e| e.into_inner());
-        self.model.backward_in(&mut arena, params, residuals, x, y)
+        self.bwd_view(Params::Flat(params), residuals, x, y)
+    }
+
+    fn run_fwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                     x: &Tensor, y: &Tensor) -> Result<FwdOut> {
+        self.fwd_view(Params::Split { base, trainable }, x, y)
+    }
+
+    fn run_bwd_split(&self, base: &FrozenBase, trainable: &[Tensor],
+                     residuals: &[Tensor], x: &Tensor,
+                     y: &Tensor) -> Result<Vec<Tensor>> {
+        self.bwd_view(Params::Split { base, trainable }, residuals, x, y)
+    }
+
+    fn supports_split(&self) -> bool {
+        true
+    }
+
+    fn fork(&self) -> Option<Box<dyn Executor>> {
+        Some(Box::new(NativeExec::from_shared(self.model.clone())))
     }
 
     fn recycle(&self, residuals: Vec<Tensor>) {

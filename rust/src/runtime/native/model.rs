@@ -28,6 +28,7 @@ use super::layers::{
 use super::layers::{BwdCtx, FwdCtx};
 use crate::coeffs::funcs::{ReluComb, PAPER_GELU, PAPER_SILU};
 use crate::runtime::manifest::ParamInfo;
+use crate::runtime::params::Params;
 use crate::runtime::tensor::{DType, Tensor};
 use crate::util::rng::Rng;
 
@@ -512,6 +513,15 @@ impl Model {
     pub fn forward_in(&self, arena: &mut Arena, params: &[Tensor],
                       x: &Tensor,
                       y: &Tensor) -> Result<(f32, f32, Vec<Tensor>)> {
+        self.forward_impl(arena, Params::Flat(params), x, y, None)
+    }
+
+    /// Forward pass over a [`Params`] view — the multi-tenant entry
+    /// point: a session passes its `Arc`-shared frozen base plus its
+    /// private trainables and the layer stack reads both zero-copy.
+    pub fn forward_view(&self, arena: &mut Arena, params: Params<'_>,
+                        x: &Tensor,
+                        y: &Tensor) -> Result<(f32, f32, Vec<Tensor>)> {
         self.forward_impl(arena, params, x, y, None)
     }
 
@@ -520,10 +530,10 @@ impl Model {
     pub fn forward_profiled(&self, arena: &mut Arena, params: &[Tensor],
                             x: &Tensor, y: &Tensor, prof: &mut Profiler)
                             -> Result<(f32, f32, Vec<Tensor>)> {
-        self.forward_impl(arena, params, x, y, Some(prof))
+        self.forward_impl(arena, Params::Flat(params), x, y, Some(prof))
     }
 
-    fn forward_impl(&self, arena: &mut Arena, params: &[Tensor],
+    fn forward_impl(&self, arena: &mut Arena, params: Params<'_>,
                     x: &Tensor, y: &Tensor,
                     profiler: Option<&mut Profiler>)
                     -> Result<(f32, f32, Vec<Tensor>)> {
@@ -561,6 +571,15 @@ impl Model {
     pub fn backward_in(&self, arena: &mut Arena, params: &[Tensor],
                        residuals: &[Tensor], x: &Tensor,
                        y: &Tensor) -> Result<Vec<Tensor>> {
+        self.backward_impl(arena, Params::Flat(params), residuals, x, y,
+                           None)
+    }
+
+    /// Backward pass over a [`Params`] view (see
+    /// [`Model::forward_view`]).
+    pub fn backward_view(&self, arena: &mut Arena, params: Params<'_>,
+                         residuals: &[Tensor], x: &Tensor,
+                         y: &Tensor) -> Result<Vec<Tensor>> {
         self.backward_impl(arena, params, residuals, x, y, None)
     }
 
@@ -569,10 +588,11 @@ impl Model {
                              residuals: &[Tensor], x: &Tensor,
                              y: &Tensor, prof: &mut Profiler)
                              -> Result<Vec<Tensor>> {
-        self.backward_impl(arena, params, residuals, x, y, Some(prof))
+        self.backward_impl(arena, Params::Flat(params), residuals, x, y,
+                           Some(prof))
     }
 
-    fn backward_impl(&self, arena: &mut Arena, params: &[Tensor],
+    fn backward_impl(&self, arena: &mut Arena, params: Params<'_>,
                      residuals: &[Tensor], x: &Tensor, y: &Tensor,
                      profiler: Option<&mut Profiler>)
                      -> Result<Vec<Tensor>> {

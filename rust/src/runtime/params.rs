@@ -1,0 +1,275 @@
+//! Split parameter ownership along the manifest's trainable/frozen
+//! boundary — the multi-tenant sharing contract.
+//!
+//! A fine-tuning session touches two very different parameter
+//! populations: the *frozen base* (embeddings, attention/MLP weights
+//! under LoRA, …), which is read-only and identical for every session
+//! fine-tuning the same artifact, and the *trainable slice* (LoRA
+//! adapters, head, norms under full tuning), which is private per
+//! session. [`FrozenBase`] holds the former once — shared across
+//! sessions behind an `Arc` — and [`Params`] is the zero-copy view the
+//! executors read: either a flat manifest-ordered slice (the classic
+//! single-job path) or `base ⊎ trainable` stitched back together by
+//! index. N sessions on one base therefore store the base **once**,
+//! and the per-session marginal memory is exactly what the paper
+//! shrinks: the activation tape, plus the (tiny) trainable slice and
+//! its optimizer state.
+
+use std::ops::Index;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::Tensor;
+
+/// The frozen side of a split parameter set: manifest-ordered slots,
+/// `None` where the parameter trains (those live in the per-session
+/// trainable vector instead).
+pub struct FrozenBase {
+    /// `slots[i]` holds parameter `i` iff it is frozen.
+    slots: Vec<Option<Tensor>>,
+    /// `rank[i]` = position of parameter `i` inside the trainable
+    /// vector (valid only where `slots[i]` is `None`).
+    rank: Vec<usize>,
+    n_trainable: usize,
+    nbytes: u64,
+}
+
+impl FrozenBase {
+    /// Partition a full manifest-ordered parameter vector into a
+    /// (private) frozen base and the trainable slice, without copying
+    /// either side.
+    pub fn split(manifest: &Manifest, full: Vec<Tensor>)
+                 -> Result<(FrozenBase, Vec<Tensor>)> {
+        ensure!(full.len() == manifest.params.len(),
+                "param arity: got {}, manifest has {}", full.len(),
+                manifest.params.len());
+        let mut slots = Vec::with_capacity(manifest.params.len());
+        let mut rank = vec![usize::MAX; manifest.params.len()];
+        let mut trainable = Vec::new();
+        let mut nbytes = 0u64;
+        for (i, (info, t)) in
+            manifest.params.iter().zip(full.into_iter()).enumerate()
+        {
+            if info.trainable {
+                rank[i] = trainable.len();
+                trainable.push(t);
+                slots.push(None);
+            } else {
+                nbytes += t.nbytes() as u64;
+                slots.push(Some(t));
+            }
+        }
+        let n_trainable = trainable.len();
+        Ok((FrozenBase { slots, rank, n_trainable, nbytes }, trainable))
+    }
+
+    /// Total number of parameters (frozen + trainable).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the manifest has no parameters at all.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Number of trainable slots the per-session vector must fill.
+    pub fn n_trainable(&self) -> usize {
+        self.n_trainable
+    }
+
+    /// Resident bytes of the frozen tensors — what N sessions share
+    /// and the engine accounts exactly once per base.
+    pub fn nbytes(&self) -> u64 {
+        self.nbytes
+    }
+
+    /// Reassemble a full manifest-ordered parameter vector: frozen
+    /// tensors are cloned out of the base (it may be shared), the
+    /// trainable vector is moved in by rank.
+    pub fn join(&self, trainable: Vec<Tensor>) -> Vec<Tensor> {
+        assert_eq!(trainable.len(), self.n_trainable,
+                   "trainable arity mismatch");
+        let mut moved: Vec<Option<Tensor>> =
+            trainable.into_iter().map(Some).collect();
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Some(t) => t.clone(),
+                None => moved[self.rank[i]]
+                    .take()
+                    .expect("trainable rank consumed twice"),
+            })
+            .collect()
+    }
+}
+
+/// Zero-copy parameter view at the executor ABI: manifest-ordered
+/// indexing over either a flat slice or a shared-base/trainable split.
+#[derive(Clone, Copy)]
+pub enum Params<'a> {
+    /// The classic single-job layout: one owned, contiguous vector.
+    Flat(&'a [Tensor]),
+    /// Multi-tenant layout: `Arc`-shared frozen base + per-session
+    /// trainables (in manifest trainable order).
+    Split {
+        /// The shared frozen side.
+        base: &'a FrozenBase,
+        /// The session's trainable tensors, `FrozenBase` rank order.
+        trainable: &'a [Tensor],
+    },
+}
+
+impl<'a> Params<'a> {
+    /// Number of parameters in manifest order.
+    pub fn len(&self) -> usize {
+        match self {
+            Params::Flat(s) => s.len(),
+            Params::Split { base, .. } => base.len(),
+        }
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Parameter `i` with the view's full lifetime (not tied to a
+    /// borrow of the view itself).
+    pub fn get(self, i: usize) -> &'a Tensor {
+        match self {
+            Params::Flat(s) => &s[i],
+            Params::Split { base, trainable } => match &base.slots[i] {
+                Some(t) => t,
+                None => &trainable[base.rank[i]],
+            },
+        }
+    }
+
+    /// Materialize a full owned vector (clones every tensor) — the
+    /// compatibility path for executors that only speak the flat ABI.
+    pub fn to_vec(self) -> Vec<Tensor> {
+        (0..self.len()).map(|i| self.get(i).clone()).collect()
+    }
+}
+
+impl Index<usize> for Params<'_> {
+    type Output = Tensor;
+
+    fn index(&self, i: usize) -> &Tensor {
+        (*self).get(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ParamInfo, SelfCheck};
+    use crate::runtime::tensor::DType;
+    use crate::runtime::Manifest;
+
+    fn tiny_manifest(trainable: &[bool]) -> Manifest {
+        Manifest {
+            preset: "t".into(),
+            arch: "vit".into(),
+            tuning: "lora_qv".into(),
+            activation: "gelu".into(),
+            norm: "ln".into(),
+            dim: 4,
+            depth: 1,
+            n_heads: 1,
+            n_tokens: 2,
+            batch: 1,
+            n_classes: 2,
+            vocab: 0,
+            mlp_ratio: 1.0,
+            lora_rank: 1,
+            patch_dim: 2,
+            ckpt: false,
+            swiglu: false,
+            mesa: false,
+            params: trainable
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| ParamInfo {
+                    name: format!("p{i}"),
+                    shape: vec![2],
+                    trainable: t,
+                })
+                .collect(),
+            x: crate::runtime::manifest::BatchInfo {
+                shape: vec![1],
+                dtype: DType::F32,
+            },
+            y: crate::runtime::manifest::BatchInfo {
+                shape: vec![1],
+                dtype: DType::I32,
+            },
+            residuals: Vec::new(),
+            residual_bytes_total: 0,
+            merges: Vec::new(),
+            selfcheck: SelfCheck {
+                loss: 0.0,
+                metric: 0.0,
+                grad_l2: Vec::new(),
+            },
+        }
+    }
+
+    fn full_params(n: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| Tensor::from_f32(&[2], &[i as f32, -(i as f32)]))
+            .collect()
+    }
+
+    #[test]
+    fn split_view_matches_flat_view() {
+        let m = tiny_manifest(&[false, true, false, true, false]);
+        let full = full_params(5);
+        let (base, trainable) =
+            FrozenBase::split(&m, full.clone()).unwrap();
+        assert_eq!(base.n_trainable(), 2);
+        assert_eq!(base.nbytes(), 3 * 8);
+        let flat = Params::Flat(&full);
+        let split = Params::Split { base: &base, trainable: &trainable };
+        assert_eq!(flat.len(), split.len());
+        for i in 0..5 {
+            assert_eq!(flat[i].as_f32(), split[i].as_f32(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn join_roundtrips_split() {
+        let m = tiny_manifest(&[true, false, true]);
+        let full = full_params(3);
+        let (base, trainable) =
+            FrozenBase::split(&m, full.clone()).unwrap();
+        let rejoined = base.join(trainable);
+        for (a, b) in full.iter().zip(&rejoined) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+    }
+
+    #[test]
+    fn split_to_vec_rebuilds_full_set() {
+        let m = tiny_manifest(&[true, false]);
+        let full = full_params(2);
+        let (base, trainable) =
+            FrozenBase::split(&m, full.clone()).unwrap();
+        assert_eq!(base.n_trainable(), 1);
+        assert_eq!(base.nbytes(), 8);
+        let v = Params::Split { base: &base, trainable: &trainable }
+            .to_vec();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].as_f32(), full[0].as_f32());
+        assert_eq!(v[1].as_f32(), full[1].as_f32());
+    }
+
+    #[test]
+    fn split_rejects_wrong_arity() {
+        let m = tiny_manifest(&[true, false]);
+        assert!(FrozenBase::split(&m, full_params(3)).is_err());
+    }
+}

@@ -1,0 +1,362 @@
+//! Multi-tenant engine tests: session isolation and determinism (K
+//! interleaved sessions on one shared frozen base are bit-identical to
+//! the same K jobs run serially), parameter-byte accounting (the base
+//! is stored once — adding a session grows resident bytes by only its
+//! trainable slice), budgeted admission control (an over-budget job is
+//! rejected with the memmodel's predicted bytes in the error), and the
+//! fleet-capacity ordering: `*_regelu2_msln` / `*_mesa` presets admit
+//! strictly more sessions than baseline under the same byte budget,
+//! cross-checked against measured residual bytes.
+
+use std::sync::Arc;
+
+use ambp::coordinator::engine::{fleet_capacity, predict, Engine, JobSpec};
+use ambp::coordinator::{Session, StepOutcome, TrainCfg, Trainer};
+use ambp::runtime::native::pool::with_threads;
+use ambp::runtime::native::spec::sample_batch;
+use ambp::runtime::{Artifact, Runtime, Tensor};
+
+fn rt() -> Runtime {
+    Runtime::cpu().expect("native runtime")
+}
+
+fn cfg(steps: usize, seed: u64) -> TrainCfg {
+    TrainCfg {
+        steps,
+        lr: 2e-3,
+        log_every: 0,
+        eval_batches: 2,
+        seed,
+        ..TrainCfg::default()
+    }
+}
+
+fn assert_params_eq(a: &[Tensor], b: &[Tensor], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{label}: param {i} differs");
+    }
+}
+
+#[test]
+fn split_abi_matches_flat_abi_bitwise() {
+    // the tentpole's zero-copy split view must be numerically invisible:
+    // same loss, residual stream, and gradients as the flat path
+    let rt = rt();
+    for preset in ["vitt_loraqv_regelu2_msln",
+                   "llama_loraall_silu_rms_swiglu",
+                   "vitt_loraqv_gelu_ln_mesa",
+                   "vitt_loraqv_gelu_ln_ckpt"] {
+        let art = Artifact::synth(&rt, preset).unwrap();
+        let full = art.load_params().unwrap();
+        let pcfg =
+            ambp::runtime::native::spec::parse_preset(preset).unwrap();
+        let (x, y) = sample_batch(&pcfg, 3, 5);
+        let flat = art.run_fwd(&full, &x, &y).unwrap();
+        let base = art.frozen_base();
+        let trainable = art.trainable_init();
+        let split = art.run_fwd_split(&base, &trainable, &x, &y).unwrap();
+        assert_eq!(flat.loss.to_bits(), split.loss.to_bits(), "{preset}");
+        assert_eq!(flat.residuals.len(), split.residuals.len());
+        for (a, b) in flat.residuals.iter().zip(&split.residuals) {
+            assert_eq!(a.data, b.data, "{preset}: residual differs");
+        }
+        let gf = art.run_bwd(&full, &flat.residuals, &x, &y).unwrap();
+        let gs = art
+            .run_bwd_split(&base, &trainable, &split.residuals, &x, &y)
+            .unwrap();
+        assert_params_eq(&gf, &gs, preset);
+    }
+}
+
+/// (loss bits, metric bits, activation bytes) of one step.
+type StepSig = (u32, u32, u64);
+/// Per-step signatures + final params of one serial job.
+type RunSig = (Vec<StepSig>, Vec<Tensor>);
+
+/// Run K jobs serially through the classic `Trainer` path; return
+/// (per-step rows, final params) per job.
+fn serial_runs(art: &Artifact, cfgs: &[TrainCfg]) -> Vec<RunSig> {
+    cfgs.iter()
+        .map(|c| {
+            let mut t = Trainer::new(art, c.clone()).unwrap();
+            let rep = t.train().unwrap();
+            let rows = rep
+                .rows
+                .iter()
+                .map(|r| {
+                    (r.loss.to_bits(), r.metric.to_bits(),
+                     r.activation_bytes)
+                })
+                .collect();
+            (rows, t.params.clone())
+        })
+        .collect()
+}
+
+fn interleaved_matches_serial() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(4, 3), cfg(6, 9)]; // uneven budgets: s0 drains first
+    let serial = serial_runs(&art, &cfgs);
+
+    let mut engine = Engine::unbounded();
+    for (i, c) in cfgs.iter().enumerate() {
+        engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
+    }
+    // the two sessions really share one frozen base object
+    assert!(Arc::ptr_eq(engine.session(0).base(),
+                        engine.session(1).base()));
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 2);
+    for (i, (r, (rows, params))) in
+        reports.iter().zip(&serial).enumerate()
+    {
+        assert_eq!(r.report.steps, cfgs[i].steps, "s{i}: steps");
+        let got: Vec<StepSig> = r
+            .report
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(&got, rows, "s{i}: per-step rows diverged");
+        assert_params_eq(&engine.session(i).params(), params,
+                         &format!("s{i}"));
+    }
+}
+
+#[test]
+fn interleaved_sessions_bit_identical_to_serial_1_thread() {
+    with_threads(1, interleaved_matches_serial);
+}
+
+#[test]
+fn interleaved_sessions_bit_identical_to_serial_4_threads() {
+    with_threads(4, interleaved_matches_serial);
+}
+
+#[test]
+fn mixed_preset_fleet_is_isolated() {
+    // two bases (vit + llama) in one engine: sessions must still match
+    // their serial twins bit-for-bit
+    let rt = rt();
+    let vit = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let llama = Artifact::synth(&rt, "llama_loraall_silu_rms").unwrap();
+    let vc = cfg(3, 1);
+    let lc = cfg(3, 2);
+    let vit_serial = serial_runs(&vit, std::slice::from_ref(&vc));
+    let llama_serial = serial_runs(&llama, std::slice::from_ref(&lc));
+
+    let mut engine = Engine::unbounded();
+    engine.admit("vit", &vit, vc).unwrap();
+    engine.admit("llama", &llama, lc).unwrap();
+    let reports = engine.run().unwrap();
+    assert_eq!(reports[0].preset, "vitt_loraqv_gelu_ln");
+    assert_params_eq(&engine.session(0).params(), &vit_serial[0].1,
+                     "vit");
+    assert_params_eq(&engine.session(1).params(), &llama_serial[0].1,
+                     "llama");
+    // and the per-step losses match too
+    let got: Vec<u32> = reports[1]
+        .report
+        .rows
+        .iter()
+        .map(|r| r.loss.to_bits())
+        .collect();
+    let want: Vec<u32> =
+        llama_serial[0].0.iter().map(|r| r.0).collect();
+    assert_eq!(got, want, "llama losses diverged");
+}
+
+#[test]
+fn shared_base_stored_once_param_accounting() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let full_bytes: u64 = art
+        .load_params()
+        .unwrap()
+        .iter()
+        .map(|t| t.nbytes() as u64)
+        .sum();
+    let mut engine = Engine::unbounded();
+    engine.admit("a", &art, cfg(1, 0)).unwrap();
+    // one session: resident = base (once) + its trainables = all params
+    let r1 = engine.resident_param_bytes();
+    assert_eq!(r1, full_bytes);
+    engine.admit("b", &art, cfg(1, 1)).unwrap();
+    let r2 = engine.resident_param_bytes();
+    // the second session costs only its trainable slice — the frozen
+    // base did not duplicate
+    let trainable = engine.session(1).trainable_bytes();
+    assert_eq!(r2 - r1, trainable);
+    assert!(trainable < full_bytes / 10,
+            "lora trainables should be a small fraction: {trainable} \
+             of {full_bytes}");
+    engine.admit("c", &art, cfg(1, 2)).unwrap();
+    assert_eq!(engine.resident_param_bytes() - r2,
+               engine.session(2).trainable_bytes());
+}
+
+#[test]
+fn over_budget_job_rejected_with_predicted_bytes() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let c = cfg(2, 0);
+    let adm = predict(&art, &c);
+    assert!(adm.tape_bytes >= art.manifest.residual_bytes_total);
+    let base = art.frozen_base().nbytes();
+    // budget fits exactly one session, not two
+    let budget = base + adm.marginal() + adm.marginal() / 2;
+    let mut engine = Engine::new(budget);
+    engine.admit("a", &art, c.clone()).unwrap();
+    let err = engine.admit("b", &art, c).unwrap_err().to_string();
+    assert!(err.contains(&adm.marginal().to_string()),
+            "error must carry the predicted marginal bytes: {err}");
+    assert!(err.contains(&adm.tape_bytes.to_string()),
+            "error must carry the predicted tape bytes: {err}");
+    assert!(err.contains("budget"), "{err}");
+    // the admitted session still runs to completion
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 1);
+    assert!(reports[0].report.final_loss.is_finite());
+}
+
+#[test]
+fn fleet_capacity_ours_and_mesa_beat_baseline() {
+    let rt = rt();
+    let probe_cfg = TrainCfg {
+        steps: 1,
+        log_every: 0,
+        eval_batches: 0,
+        ..TrainCfg::default()
+    };
+    let baseline = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let m0 = predict(&baseline, &probe_cfg).marginal();
+    let b0 = baseline.frozen_base().nbytes();
+    // a budget that fits exactly 10 baseline sessions
+    let budget = b0 + 10 * m0;
+    let presets: Vec<String> = ["vitt_loraqv_gelu_ln",
+                                "vitt_loraqv_gelu_ln_mesa",
+                                "vitt_loraqv_regelu2_msln"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let rows =
+        fleet_capacity(&rt, budget, &presets, &probe_cfg, true).unwrap();
+    assert_eq!(rows[0].admitted, 10, "baseline sessions-per-budget");
+    // the acceptance ordering: both paper variants admit strictly more
+    // tenants than baseline under the same budget (the margin is large:
+    // their tapes are ~55% of baseline's)
+    assert!(rows[1].admitted > rows[0].admitted,
+            "mesa {} !> baseline {}", rows[1].admitted,
+            rows[0].admitted);
+    assert!(rows[2].admitted > rows[0].admitted,
+            "ours {} !> baseline {}", rows[2].admitted,
+            rows[0].admitted);
+    // ours vs mesa: the byte margin is real but thin (~1.5% of the
+    // marginal at vitt dims), so assert it at byte granularity where it
+    // is deterministic, and only weakly on the floor-divided counts
+    assert!(rows[2].admission.marginal() < rows[1].admission.marginal(),
+            "ours marginal {} !< mesa marginal {}",
+            rows[2].admission.marginal(), rows[1].admission.marginal());
+    assert!(rows[1].admission.marginal() < rows[0].admission.marginal(),
+            "mesa marginal {} !< baseline marginal {}",
+            rows[1].admission.marginal(), rows[0].admission.marginal());
+    assert!(rows[2].admitted >= rows[1].admitted,
+            "ours {} < mesa {}", rows[2].admitted, rows[1].admitted);
+    // cross-check against measured peaks: the probe step's measured
+    // residual bytes equal the schema-derived manifest total, and the
+    // prediction admission gates on is never below what was measured
+    for (row, preset) in rows.iter().zip(&presets) {
+        let art = Artifact::synth(&rt, preset).unwrap();
+        let measured = row.measured_tape.expect("probe ran");
+        assert_eq!(measured, art.manifest.residual_bytes_total,
+                   "{preset}: measured vs manifest");
+        assert!(row.admission.tape_bytes >= measured,
+                "{preset}: predicted tape below measured");
+    }
+}
+
+#[test]
+fn session_eval_is_non_destructive_and_reuses_producer() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    // twin A steps straight through; twin B evaluates between steps
+    let mut a = Session::new(&art, cfg(3, 7)).unwrap();
+    let mut b = Session::new(&art, cfg(3, 7)).unwrap();
+    let mut a_losses = Vec::new();
+    for _ in 0..3 {
+        match a.step().unwrap() {
+            StepOutcome::Stepped(s) => a_losses.push(s.loss.to_bits()),
+            StepOutcome::Exhausted => panic!("budget too small"),
+        }
+    }
+    let mut b_losses = Vec::new();
+    let e1 = b.evaluate(50_000, 2).unwrap();
+    for _ in 0..3 {
+        match b.step().unwrap() {
+            StepOutcome::Stepped(s) => b_losses.push(s.loss.to_bits()),
+            StepOutcome::Exhausted => panic!("budget too small"),
+        }
+        assert_eq!(b.evaluate(50_000, 2).unwrap().0.to_bits(),
+                   b.evaluate(50_000, 2).unwrap().0.to_bits(),
+                   "eval must be deterministic");
+    }
+    assert_eq!(a_losses, b_losses,
+               "mid-run evaluation perturbed the training stream");
+    assert_eq!(b.steps_done(), 3);
+    let e2 = b.evaluate(50_000, 2).unwrap();
+    // same held-out indices, trained params → loss moved, eval did not
+    // advance the step counter
+    assert_eq!(b.steps_done(), 3);
+    assert!(e1.0.is_finite() && e2.0.is_finite());
+    // exhausted sessions say so
+    assert!(matches!(b.step().unwrap(), StepOutcome::Exhausted));
+}
+
+#[test]
+fn job_spec_grammar() {
+    let base = cfg(20, 5);
+    let j = JobSpec::parse("vitt_loraqv_gelu_ln", &base, 2).unwrap();
+    assert_eq!(j.preset, "vitt_loraqv_gelu_ln");
+    assert_eq!(j.cfg.steps, 20);
+    assert_eq!(j.cfg.seed, 7); // base seed + job index
+    let j = JobSpec::parse("llama_loraall_silu_rms:12", &base, 0)
+        .unwrap();
+    assert_eq!(j.cfg.steps, 12);
+    assert_eq!(j.cfg.seed, 5);
+    let j = JobSpec::parse("p_full_gelu_ln:3:99", &base, 1).unwrap();
+    assert_eq!(j.cfg.steps, 3);
+    assert_eq!(j.cfg.seed, 99);
+    assert!(JobSpec::parse("p:3:9:extra", &base, 0).is_err());
+    assert!(JobSpec::parse("p:notanumber", &base, 0).is_err());
+}
+
+#[test]
+fn trainer_facade_unchanged_after_session_refactor() {
+    // the classic single-job path still trains, reduces loss, tracks
+    // memory, and leaves updated params on the trainer
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let before = art.load_params().unwrap();
+    let mut t = Trainer::new(&art, cfg(8, 0)).unwrap();
+    let rep = t.train().unwrap();
+    assert_eq!(rep.rows.len(), 8);
+    assert_eq!(rep.rows[0].activation_bytes,
+               art.manifest.residual_bytes_total);
+    assert!(rep.peak_activation_bytes
+                >= art.manifest.residual_bytes_total);
+    let tidx = art.manifest.trainable_indices();
+    let mut moved = false;
+    for (i, (a, b)) in before.iter().zip(&t.params).enumerate() {
+        if tidx.contains(&i) {
+            moved |= a.data != b.data;
+        } else {
+            assert_eq!(a.data, b.data, "frozen param {i} changed");
+        }
+    }
+    assert!(moved, "no trainable parameter moved");
+}
