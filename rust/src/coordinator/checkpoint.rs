@@ -2,16 +2,22 @@
 //! eq. 17 affine merge that turns an LN/RMS checkpoint into an
 //! MS-LN/MS-RMSNorm one).
 //!
-//! Format: `ckpt.json` (names + shapes) + `ckpt.bin` (f32 LE, in order).
+//! Format: one `ckpt.state` statefile per checkpoint directory
+//! (sections `ckpt.index` + `ckpt.data`, see `statefile` for the
+//! container layout) — checksummed, versioned, typed errors on
+//! corruption, dtype-faithful. Replaces the old two-file
+//! `ckpt.json` + `ckpt.bin` pair, which was f32-only and silently
+//! loaded truncated payloads.
 
 use std::collections::BTreeMap;
-use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::runtime::{DType, Manifest, Tensor};
-use crate::util::json::{num, obj, s, Json};
+use crate::coordinator::statefile::{
+    self, StateFile, Writer,
+};
+use crate::runtime::{Manifest, Tensor};
 
 pub struct Checkpoint {
     pub tensors: BTreeMap<String, Tensor>,
@@ -29,44 +35,30 @@ impl Checkpoint {
     }
 
     pub fn save(&self, dir: &Path) -> Result<()> {
-        std::fs::create_dir_all(dir)?;
-        let mut index = Vec::new();
-        let mut bin = std::io::BufWriter::new(
-            std::fs::File::create(dir.join("ckpt.bin"))?);
-        for (name, t) in &self.tensors {
-            index.push(obj(vec![
-                ("name", s(name)),
-                ("shape", Json::Arr(
-                    t.shape.iter().map(|d| num(*d as f64)).collect())),
-            ]));
-            bin.write_all(&t.data)?;
-        }
-        bin.flush()?;
-        std::fs::write(dir.join("ckpt.json"),
-                       Json::Arr(index).to_string())?;
-        Ok(())
+        let entries: Vec<(&str, &Tensor)> = self
+            .tensors
+            .iter()
+            .map(|(n, t)| (n.as_str(), t))
+            .collect();
+        let (index, data) = statefile::encode_tensors(&entries);
+        let mut w = Writer::new();
+        w.add("ckpt.index", index);
+        w.add("ckpt.data", data);
+        w.write(&dir.join("ckpt.state"))
     }
 
     pub fn load(dir: &Path) -> Result<Checkpoint> {
-        let index = Json::parse(&std::fs::read_to_string(
-            dir.join("ckpt.json"))?)?;
-        let bin = std::fs::read(dir.join("ckpt.bin"))?;
-        let mut tensors = BTreeMap::new();
-        let mut off = 0usize;
-        for e in index.as_arr()? {
-            let name = e.get("name")?.as_str()?.to_string();
-            let shape: Vec<usize> = e
-                .get("shape")?
-                .as_arr()?
-                .iter()
-                .map(|v| v.as_usize())
-                .collect::<Result<_>>()?;
-            let n: usize = shape.iter().product();
-            let mut t = Tensor::zeros(&shape, DType::F32);
-            t.data.copy_from_slice(&bin[off..off + n * 4]);
-            off += n * 4;
-            tensors.insert(name, t);
-        }
+        let path = dir.join("ckpt.state");
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        let sf = StateFile::parse(&buf)?;
+        let tensors = statefile::decode_tensors(
+            sf.section("ckpt.index")?,
+            sf.section("ckpt.data")?,
+            "ckpt",
+        )?
+        .into_iter()
+        .collect();
         Ok(Checkpoint { tensors })
     }
 

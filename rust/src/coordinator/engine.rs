@@ -15,13 +15,24 @@
 //! restates the paper's Table-1 savings as sessions-per-budget:
 //! `*_regelu2_msln` / `*_mesa` presets admit strictly more tenants
 //! than their baselines under the same byte budget.
+//!
+//! With a spool directory and preemption enabled, an over-budget
+//! admission no longer rejects outright: lower-priority unfinished
+//! sessions are suspended to disk (durable statefiles, see
+//! `statefile`) to make room, and [`Engine::round`] resumes them —
+//! highest priority first — as budget frees up. Because a session's
+//! state is bit-exactly portable (indexed data stream, raw optimizer
+//! state), the preempted runs finish bit-identical to uninterrupted
+//! ones.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::memory::MemoryTracker;
 use crate::coordinator::session::{Session, StepOutcome};
+use crate::coordinator::statefile::{self, SavedSession, SessionHandle};
 use crate::coordinator::trainer::{TrainCfg, TrainReport};
 use crate::memmodel::{total_bytes, MemCfg};
 use crate::runtime::{Artifact, Runtime};
@@ -33,13 +44,17 @@ pub struct JobSpec {
     pub preset: String,
     /// Per-session hyper-parameters.
     pub cfg: TrainCfg,
+    /// Scheduling priority (higher = more important; default 0). A
+    /// preempting engine may suspend lower-priority sessions to admit
+    /// this one.
+    pub priority: i64,
 }
 
 impl JobSpec {
-    /// Parse a `preset[:steps[:seed]]` job token (the `--jobs` list
-    /// grammar). Defaults come from `base`; when no seed is given, the
-    /// job index is added to the base seed so identical presets stream
-    /// distinct tenant data.
+    /// Parse a `preset[:steps[:seed[:prio]]]` job token (the `--jobs`
+    /// list grammar). Defaults come from `base`; when no seed is given,
+    /// the job index is added to the base seed so identical presets
+    /// stream distinct tenant data. Priority defaults to 0.
     pub fn parse(token: &str, base: &TrainCfg,
                  job_index: usize) -> Result<JobSpec> {
         let mut parts = token.split(':');
@@ -60,11 +75,17 @@ impl JobSpec {
                 .parse()
                 .with_context(|| format!("bad seed in job {token:?}"))?;
         }
+        let mut priority = 0i64;
+        if let Some(s) = parts.next() {
+            priority = s.parse().with_context(|| {
+                format!("bad priority in job {token:?}")
+            })?;
+        }
         if let Some(extra) = parts.next() {
             bail!("job {token:?}: unexpected field {extra:?} \
-                   (grammar: preset[:steps[:seed]])");
+                   (grammar: preset[:steps[:seed[:prio]]])");
         }
-        Ok(JobSpec { preset, cfg })
+        Ok(JobSpec { preset, cfg, priority })
     }
 }
 
@@ -152,7 +173,17 @@ struct Slot<'a> {
     name: String,
     session: Session<'a>,
     admission: Admission,
+    priority: i64,
     done: bool,
+}
+
+/// A session evicted to disk: the durable handle plus the resident
+/// artifact it resumes against and the admission prediction used for
+/// the fits-now check (recomputing it would need the on-disk cfg).
+struct Suspended<'a> {
+    handle: SessionHandle,
+    art: &'a Artifact,
+    admission: Admission,
 }
 
 /// Multi-tenant engine: admits sessions against a byte budget and
@@ -162,6 +193,12 @@ pub struct Engine<'a> {
     /// Unique shared bases: (`Arc` pointer identity, frozen bytes).
     bases: Vec<(usize, u64)>,
     slots: Vec<Slot<'a>>,
+    /// Where suspended sessions spool to (`None` = suspension off).
+    spool: Option<PathBuf>,
+    /// Whether over-budget admission may evict lower-priority sessions.
+    preempt: bool,
+    /// Sessions currently evicted to the spool.
+    suspended: Vec<Suspended<'a>>,
     /// Fleet-wide measured accounting: `current_bytes` carries the
     /// resident set (bases + trainables + optimizer state), the peak
     /// adds every admitted session's measured tape+grad peak — the
@@ -178,8 +215,26 @@ impl<'a> Engine<'a> {
             budget: budget_bytes,
             bases: Vec::new(),
             slots: Vec::new(),
+            spool: None,
+            preempt: false,
+            suspended: Vec::new(),
             fleet: MemoryTracker::new(),
         }
+    }
+
+    /// Set the directory suspended sessions spool to. Required before
+    /// [`Engine::suspend`] / [`Engine::enable_preempt`].
+    pub fn set_spool(&mut self, dir: PathBuf) {
+        self.spool = Some(dir);
+    }
+
+    /// Allow over-budget admissions to evict lower-priority sessions
+    /// to the spool instead of rejecting. Requires a spool directory.
+    pub fn enable_preempt(&mut self) -> Result<()> {
+        ensure!(self.spool.is_some(),
+                "preemption requires a spool directory (set_spool)");
+        self.preempt = true;
+        Ok(())
     }
 
     /// Engine with an effectively infinite budget.
@@ -202,15 +257,30 @@ impl<'a> Engine<'a> {
         self.slots.is_empty()
     }
 
+    /// What one resident slot is predicted to cost right now: the full
+    /// marginal while it can still step; once done, only its residency
+    /// (optimizer state + trainables + flat fallback) — a finished
+    /// session holds no tape and materializes no fresh gradients, so
+    /// its budget share shrinks and preempted work can come back.
+    fn slot_cost(slot: &Slot<'a>) -> u64 {
+        if slot.done {
+            slot.admission.opt_bytes + slot.admission.trainable_bytes
+                + slot.admission.flat_copy_bytes
+        } else {
+            slot.admission.marginal()
+        }
+    }
+
     /// Predicted fleet footprint: every unique base once + each
-    /// admitted session's marginal.
+    /// resident session's [`Engine::slot_cost`].
     pub fn predicted_bytes(&self) -> u64 {
         self.bases.iter().map(|(_, b)| b).sum::<u64>()
-            + self
-                .slots
-                .iter()
-                .map(|s| s.admission.marginal())
-                .sum::<u64>()
+            + self.slots.iter().map(Engine::slot_cost).sum::<u64>()
+    }
+
+    /// Total frozen-base bytes resident (each unique base once).
+    pub fn base_bytes(&self) -> u64 {
+        self.bases.iter().map(|(_, b)| b).sum()
     }
 
     /// *Actual* resident parameter bytes: each unique frozen base
@@ -232,20 +302,65 @@ impl<'a> Engine<'a> {
         self.slots.iter().map(|s| s.session.opt_state_bytes()).sum()
     }
 
-    /// Admit a session for `cfg` on `art`, or reject it when the
-    /// predicted footprint would exceed the budget — the error carries
-    /// the memmodel's predicted bytes. Admission constructs the
-    /// session (which warms up once), so an `Ok` session is ready to
-    /// step.
+    /// Admit a session for `cfg` on `art` at priority 0, or reject it
+    /// when the predicted footprint would exceed the budget — the
+    /// error carries the memmodel's predicted bytes. Admission
+    /// constructs the session (which warms up once), so an `Ok`
+    /// session is ready to step.
     pub fn admit(&mut self, name: &str, art: &'a Artifact,
                  cfg: TrainCfg) -> Result<usize> {
+        self.admit_prio(name, art, cfg, 0)
+    }
+
+    /// [`Engine::admit`] with an explicit priority. Under
+    /// [`Engine::enable_preempt`], an over-budget admission first
+    /// suspends enough strictly-lower-priority unfinished sessions
+    /// (lowest priority first, FIFO within a priority) to fit the new
+    /// job; when even evicting all eligible victims would not fit, no
+    /// one is evicted and the job is rejected with the usual detailed
+    /// error.
+    pub fn admit_prio(&mut self, name: &str, art: &'a Artifact,
+                      cfg: TrainCfg, priority: i64) -> Result<usize> {
         let admission = predict(art, &cfg);
         let base = art.frozen_base();
         let key = Arc::as_ptr(&base) as usize;
         let base_new = !self.bases.iter().any(|(k, _)| *k == key);
         let base_cost = if base_new { base.nbytes() } else { 0 };
-        let projected =
-            self.predicted_bytes() + base_cost + admission.marginal();
+        let needed = base_cost + admission.marginal();
+        if self.preempt && self.predicted_bytes() + needed > self.budget
+        {
+            // victims: unfinished, strictly lower priority; evict the
+            // least important first (ascending priority, then FIFO)
+            let mut victims: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| {
+                    !self.slots[i].done
+                        && self.slots[i].priority < priority
+                })
+                .collect();
+            victims.sort_by_key(|&i| (self.slots[i].priority, i));
+            let reclaim: u64 = victims
+                .iter()
+                .map(|&i| Engine::slot_cost(&self.slots[i]))
+                .sum();
+            // all-or-nothing feasibility: never evict anyone for a job
+            // that still would not fit
+            if self.predicted_bytes() + needed <= self.budget + reclaim {
+                let names: Vec<String> = victims
+                    .iter()
+                    .map(|&i| self.slots[i].name.clone())
+                    .collect();
+                for victim in names {
+                    if self.predicted_bytes() + needed <= self.budget {
+                        break;
+                    }
+                    let id = self
+                        .find(&victim)
+                        .expect("victim still resident");
+                    self.suspend(id)?;
+                }
+            }
+        }
+        let projected = self.predicted_bytes() + needed;
         if projected > self.budget {
             bail!(
                 "admission rejected for {name} ({}): predicted session \
@@ -281,6 +396,7 @@ impl<'a> Engine<'a> {
             name: name.to_string(),
             session,
             admission,
+            priority,
             done: false,
         });
         Ok(self.slots.len() - 1)
@@ -292,8 +408,186 @@ impl<'a> Engine<'a> {
         &self.slots[id].session
     }
 
-    /// Advance every unfinished session by one optimizer step, in
-    /// admission order. Returns how many sessions stepped (0 = all
+    /// Slot id of a resident session by name (ids shift when a session
+    /// is suspended — look up by name after any suspension).
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.name == name)
+    }
+
+    /// Names of the sessions currently evicted to the spool.
+    pub fn suspended_names(&self) -> Vec<String> {
+        self.suspended
+            .iter()
+            .map(|s| s.handle.name.clone())
+            .collect()
+    }
+
+    /// Whether any session — resident or suspended — still has steps
+    /// left.
+    pub fn has_unfinished(&self) -> bool {
+        !self.suspended.is_empty()
+            || self.slots.iter().any(|s| !s.done)
+    }
+
+    /// Evict a resident unfinished session to the spool: its portable
+    /// state (trainables, raw optimizer state, step counter, metrics
+    /// rows, memory accounting) is written to
+    /// `<spool>/<name>.state` and the slot is dropped — freeing its
+    /// tape/grad/optimizer/trainable budget share while the
+    /// `Arc`-shared frozen base stays resident with the artifact
+    /// (stored-once across suspend/resume). Returns the durable
+    /// handle.
+    pub fn suspend(&mut self, id: usize) -> Result<SessionHandle> {
+        let spool = self
+            .spool
+            .clone()
+            .context("suspend requires a spool directory (set_spool)")?;
+        ensure!(id < self.slots.len(), "no session slot {id}");
+        ensure!(
+            !self.slots[id].done,
+            "refusing to suspend finished session {:?} — its report is \
+             pending, not its steps",
+            self.slots[id].name
+        );
+        let slot = self.slots.remove(id);
+        let Slot { name, session, admission, priority, .. } = slot;
+        let art = session.artifact();
+        let state = session.into_state();
+        let path = spool.join(format!("{name}.state"));
+        let handle =
+            statefile::save_session(&path, &name, priority, &state)?;
+        let out = handle.clone();
+        self.suspended.push(Suspended { handle, art, admission });
+        Ok(out)
+    }
+
+    /// Suspend every unfinished resident session (checkpoint-on-halt:
+    /// the warm-restart path rebuilds the fleet from these files).
+    /// Returns the handles, in eviction order.
+    pub fn suspend_all(&mut self) -> Result<Vec<SessionHandle>> {
+        let mut out = Vec::new();
+        while let Some(id) = self.slots.iter().position(|s| !s.done) {
+            out.push(self.suspend(id)?);
+        }
+        Ok(out)
+    }
+
+    /// Re-admit a loaded session state against its (resident)
+    /// artifact: fit-check like [`Engine::admit`], rebuild the live
+    /// session bit-exactly via [`Session::resume`], and — only on
+    /// success — delete `origin` (the statefile it was loaded from).
+    pub fn resume_saved(&mut self, saved: SavedSession,
+                        art: &'a Artifact,
+                        origin: Option<&Path>) -> Result<usize> {
+        let SavedSession { name, priority, state } = saved;
+        let admission = predict(art, &state.cfg);
+        let base = art.frozen_base();
+        let key = Arc::as_ptr(&base) as usize;
+        let base_new = !self.bases.iter().any(|(k, _)| *k == key);
+        let base_cost = if base_new { base.nbytes() } else { 0 };
+        let projected =
+            self.predicted_bytes() + base_cost + admission.marginal();
+        ensure!(
+            projected <= self.budget,
+            "resume rejected for {name}: predicted footprint {} bytes \
+             would put the fleet at {projected} of budget {} bytes",
+            admission.marginal(),
+            self.budget
+        );
+        let session = Session::resume(art, state)?;
+        if base_new {
+            self.bases.push((key, base.nbytes()));
+        }
+        let done = session.is_done();
+        self.slots.push(Slot {
+            name,
+            session,
+            admission,
+            priority,
+            done,
+        });
+        if let Some(p) = origin {
+            std::fs::remove_file(p).with_context(|| {
+                format!("removing resumed statefile {p:?}")
+            })?;
+        }
+        Ok(self.slots.len() - 1)
+    }
+
+    /// [`Engine::resume_saved`] straight from a statefile on disk.
+    pub fn resume_file(&mut self, art: &'a Artifact,
+                       path: &Path) -> Result<usize> {
+        let saved = statefile::load_session(path)?;
+        self.resume_saved(saved, art, Some(path))
+    }
+
+    /// Warm-restart path: register an on-disk session statefile —
+    /// resume it right away when it fits the budget (the file is then
+    /// deleted), otherwise queue it as suspended so [`Engine::round`]
+    /// brings it back once budget frees up. Returns whether it
+    /// resumed immediately.
+    pub fn spool_in(&mut self, art: &'a Artifact,
+                    path: &Path) -> Result<bool> {
+        let saved = statefile::load_session(path)?;
+        let admission = predict(art, &saved.state.cfg);
+        if self.predicted_bytes()
+            + self.base_cost_for(art)
+            + admission.marginal()
+            <= self.budget
+        {
+            self.resume_saved(saved, art, Some(path))?;
+            Ok(true)
+        } else {
+            let handle = statefile::peek_session(path)?;
+            self.suspended.push(Suspended { handle, art, admission });
+            Ok(false)
+        }
+    }
+
+    /// Bytes admitting a session on `art` would add for its frozen
+    /// base: 0 when that base is already resident.
+    fn base_cost_for(&self, art: &'a Artifact) -> u64 {
+        let base = art.frozen_base();
+        let key = Arc::as_ptr(&base) as usize;
+        if self.bases.iter().any(|(k, _)| *k == key) {
+            0
+        } else {
+            base.nbytes()
+        }
+    }
+
+    /// Bring back as many suspended sessions as now fit the budget —
+    /// highest priority first, FIFO within a priority. Returns how
+    /// many resumed.
+    fn try_resume_suspended(&mut self) -> Result<usize> {
+        let mut resumed = 0usize;
+        loop {
+            let mut order: Vec<usize> =
+                (0..self.suspended.len()).collect();
+            // stable sort: FIFO among equal priorities
+            order.sort_by_key(|&i| {
+                std::cmp::Reverse(self.suspended[i].handle.priority)
+            });
+            let picked = order.into_iter().find(|&i| {
+                let s = &self.suspended[i];
+                self.predicted_bytes()
+                    + self.base_cost_for(s.art)
+                    + s.admission.marginal()
+                    <= self.budget
+            });
+            let Some(i) = picked else { break };
+            let s = self.suspended.remove(i);
+            let saved = statefile::load_session(&s.handle.path)?;
+            self.resume_saved(saved, s.art, Some(&s.handle.path))?;
+            resumed += 1;
+        }
+        Ok(resumed)
+    }
+
+    /// Advance every unfinished resident session by one optimizer
+    /// step, in admission order, then resume any suspended sessions
+    /// that now fit the freed budget. Returns how many sessions made
+    /// progress — stepped or came back from the spool (0 = all work
     /// exhausted). Fleet accounting is refreshed after the sweep.
     pub fn round(&mut self) -> Result<usize> {
         let mut stepped = 0usize;
@@ -316,7 +610,20 @@ impl<'a> Engine<'a> {
             .map(|s| s.session.memory.peak_bytes)
             .sum();
         self.fleet.observe_extra(tapes);
-        Ok(stepped)
+        let resumed = self.try_resume_suspended()?;
+        if stepped == 0 && resumed == 0 && !self.suspended.is_empty() {
+            // every resident session is done, yet the spooled ones
+            // still don't fit: no future round can change that
+            bail!(
+                "scheduling deadlock: suspended sessions {:?} cannot \
+                 fit the remaining budget ({} predicted of {} bytes) \
+                 even with all resident sessions finished",
+                self.suspended_names(),
+                self.predicted_bytes(),
+                self.budget
+            );
+        }
+        Ok(stepped + resumed)
     }
 
     /// Round-robin every session to exhaustion, then finish each

@@ -62,6 +62,17 @@ impl Metrics {
         Ok(())
     }
 
+    /// Re-seed the sink from a resumed session's saved state: the
+    /// loss-curve rows and the sample counter continue from where the
+    /// suspended run left off. Wall-clock state is deliberately *not*
+    /// restored — `elapsed_s`/`throughput` measure this process — and
+    /// a JSONL sink (freshly truncated by `Metrics::new`) starts over;
+    /// only `rows` carries the full curve. See KNOWN.md.
+    pub fn restore(&mut self, rows: Vec<StepRow>, samples_done: u64) {
+        self.rows = rows;
+        self.samples_done = samples_done;
+    }
+
     /// Samples per second since construction.
     pub fn throughput(&self) -> f64 {
         self.samples_done as f64 / self.start.elapsed().as_secs_f64()

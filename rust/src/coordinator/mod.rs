@@ -1,6 +1,7 @@
 //! L3 coordinator: the step-driven session core, the multi-tenant
 //! engine, optimizers, LR schedules, measured memory accounting,
-//! metrics, checkpoints.
+//! metrics, checkpoints, and the durable statefile format behind
+//! suspend/resume and preemptive scheduling.
 
 pub mod checkpoint;
 pub mod engine;
@@ -9,8 +10,10 @@ pub mod metrics;
 pub mod optimizer;
 pub mod scheduler;
 pub mod session;
+pub mod statefile;
 pub mod trainer;
 
 pub use engine::{Engine, EngineReport, JobSpec};
-pub use session::{Session, StepOutcome, StepStats};
+pub use session::{Session, SessionState, StepOutcome, StepStats};
+pub use statefile::{SavedSession, SessionHandle, StateError};
 pub use trainer::{TrainCfg, TrainReport, Trainer};

@@ -4,6 +4,9 @@
 //! state lives in host memory (like the paper's paged AdamW in QLoRA),
 //! only fwd/bwd run through PJRT.
 
+use anyhow::{ensure, Result};
+
+use crate::coordinator::statefile::{Cur, Enc, StateError};
 use crate::runtime::Tensor;
 
 pub trait Optimizer {
@@ -16,6 +19,28 @@ pub trait Optimizer {
     /// step materializes the state.
     fn state_bytes(&self) -> usize {
         0
+    }
+
+    /// Serialize the complete update state (step counter, moments,
+    /// velocities) to raw little-endian bytes — the `session.opt`
+    /// statefile section. Restoring via [`Optimizer::state_load`] on a
+    /// same-typed, same-hyperparameter optimizer must continue the
+    /// trajectory bit-identically. Stateless optimizers return empty.
+    fn state_save(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Optimizer::state_save`] on the same
+    /// optimizer type. The default (for stateless optimizers) accepts
+    /// only an empty buffer.
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        ensure!(
+            bytes.is_empty(),
+            "optimizer {:?} carries no state but got {} bytes",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
     }
 
     /// [`Optimizer::step`] over trainables embedded in a *full*
@@ -31,6 +56,32 @@ pub trait Optimizer {
         let mut refs = disjoint_mut(params, idx);
         self.step(&mut refs, grads, lr);
     }
+}
+
+/// Encode a list of f32 state vectors (u32 count implied by the
+/// caller; per-vector u32 length + raw f32 LE values).
+fn write_vecs(e: &mut Enc, vecs: &[Vec<f32>]) {
+    for v in vecs {
+        e.u32(v.len() as u32);
+        for &x in v {
+            e.f32(x);
+        }
+    }
+}
+
+/// Bounds-checked inverse of [`write_vecs`] for `n` vectors.
+fn read_vecs(c: &mut Cur, n: usize) -> Result<Vec<Vec<f32>>, StateError> {
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let len = c.u32()? as usize;
+        let raw = c.bytes(len * 4)?;
+        let mut v = Vec::with_capacity(len);
+        for chunk in raw.chunks_exact(4) {
+            v.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        out.push(v);
+    }
+    Ok(out)
 }
 
 /// Safe disjoint mutable borrows of `items` at strictly-increasing
@@ -121,6 +172,40 @@ impl Optimizer for AdamW {
     fn state_bytes(&self) -> usize {
         AdamW::state_bytes(self)
     }
+
+    fn state_save(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.i64(self.t as i64);
+        e.u32(self.m.len() as u32);
+        write_vecs(&mut e, &self.m);
+        write_vecs(&mut e, &self.v);
+        e.into_bytes()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = Cur::new(bytes, "session.opt (adamw)");
+        let t = c.i64()?;
+        ensure!(
+            t >= 0 && t <= i32::MAX as i64,
+            "adamw state: step counter {t} out of range"
+        );
+        let n = c.u32()? as usize;
+        let m = read_vecs(&mut c, n)?;
+        let v = read_vecs(&mut c, n)?;
+        c.done()?;
+        for (a, b) in m.iter().zip(&v) {
+            ensure!(
+                a.len() == b.len(),
+                "adamw state: m/v length mismatch ({} vs {})",
+                a.len(),
+                b.len()
+            );
+        }
+        self.t = t as i32;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
 }
 
 /// Plain SGD (with optional momentum) — the convergence-theory baseline
@@ -167,6 +252,22 @@ impl Optimizer for Sgd {
 
     fn state_bytes(&self) -> usize {
         self.vel.iter().map(|v| v.len() * 4).sum()
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(self.vel.len() as u32);
+        write_vecs(&mut e, &self.vel);
+        e.into_bytes()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = Cur::new(bytes, "session.opt (sgd)");
+        let n = c.u32()? as usize;
+        let vel = read_vecs(&mut c, n)?;
+        c.done()?;
+        self.vel = vel;
+        Ok(())
     }
 }
 
@@ -282,5 +383,77 @@ mod tests {
         let g = quad_grad(&p);
         opt.step(&mut [&mut p], &[g], 0.1);
         assert_eq!(opt.state_bytes(), 2 * 8 * 4);
+    }
+
+    /// Save at step k, load into a fresh optimizer, and the continued
+    /// trajectory must be bit-identical to the uninterrupted one.
+    fn check_resume_bit_identity(mk: impl Fn() -> Box<dyn Optimizer>) {
+        let start = [0.0f32, 10.0, -5.0, 3.0];
+        let mut p_full = Tensor::from_f32(&[4], &start);
+        let mut opt_full = mk();
+        let mut p_half = Tensor::from_f32(&[4], &start);
+        let mut opt_half = mk();
+        for _ in 0..5 {
+            let g = quad_grad(&p_full);
+            opt_full.step(&mut [&mut p_full], &[g], 0.05);
+            let g = quad_grad(&p_half);
+            opt_half.step(&mut [&mut p_half], &[g], 0.05);
+        }
+        let saved = opt_half.state_save();
+        let mut opt_resumed = mk();
+        opt_resumed.state_load(&saved).unwrap();
+        assert_eq!(
+            opt_resumed.state_bytes(),
+            opt_half.state_bytes(),
+            "restored state bytes"
+        );
+        for _ in 0..5 {
+            let g = quad_grad(&p_full);
+            opt_full.step(&mut [&mut p_full], &[g], 0.05);
+            let g = quad_grad(&p_half);
+            opt_resumed.step(&mut [&mut p_half], &[g], 0.05);
+        }
+        assert_eq!(p_full.data, p_half.data, "bitwise trajectory");
+    }
+
+    #[test]
+    fn adamw_state_roundtrip_is_bit_identical() {
+        check_resume_bit_identity(|| Box::new(AdamW::new(0.01)));
+    }
+
+    #[test]
+    fn sgd_state_roundtrip_is_bit_identical() {
+        check_resume_bit_identity(|| Box::new(Sgd::new(0.9)));
+    }
+
+    #[test]
+    fn fresh_state_roundtrips_and_preserves_lazy_init() {
+        let mut opt = AdamW::new(0.0);
+        let fresh = opt.state_save();
+        opt.state_load(&fresh).unwrap();
+        assert_eq!(opt.state_bytes(), 0);
+        // A lazily-initializing optimizer restored from pre-first-step
+        // state must still initialize on the first real step.
+        let mut p = Tensor::from_f32(&[2], &[1.0, 2.0]);
+        let g = quad_grad(&p);
+        opt.step(&mut [&mut p], &[g], 0.05);
+        assert_eq!(opt.state_bytes(), 2 * 2 * 4);
+    }
+
+    #[test]
+    fn corrupt_state_is_error_not_panic() {
+        let mut opt = AdamW::new(0.0);
+        assert!(opt.state_load(&[1, 2, 3]).is_err());
+        let mut good = {
+            let mut p = Tensor::from_f32(&[2], &[1.0, 2.0]);
+            let mut o = AdamW::new(0.0);
+            let g = quad_grad(&p);
+            o.step(&mut [&mut p], &[g], 0.05);
+            o.state_save()
+        };
+        good.truncate(good.len() - 3);
+        assert!(opt.state_load(&good).is_err());
+        let mut sgd = Sgd::new(0.9);
+        assert!(sgd.state_load(&[0xFF; 7]).is_err());
     }
 }

@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::coordinator::memory::MemoryTracker;
 use crate::coordinator::metrics::{Metrics, StepRow};
@@ -88,6 +88,42 @@ pub(crate) fn to_tensors(art: &Artifact, batch: Batch) -> (Tensor, Tensor) {
     }
 }
 
+/// The portable state of a suspended session — everything a
+/// same-artifact process needs to continue the run bit-identically:
+/// the trainable tensors, the raw optimizer state, the step counter
+/// (which, because the data producer is index-addressed, *is* the
+/// producer position: micro-batch index = step × grad_accum), the
+/// metrics rows, and the memory tracker. The frozen base is NOT here —
+/// it is identified by fingerprint and re-attached from the resident
+/// artifact on resume (stored-once across suspend/resume).
+///
+/// Serialized to disk by `statefile::save_session` / rebuilt by
+/// `statefile::load_session`; turned back into a live [`Session`] by
+/// [`Session::resume`].
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    /// Artifact preset this state belongs to.
+    pub preset: String,
+    /// Fingerprint of the frozen base the trainables were split from.
+    pub base_fingerprint: u64,
+    /// The full training configuration.
+    pub cfg: TrainCfg,
+    /// Optimizer steps completed.
+    pub step: usize,
+    /// Manifest names of the trainable tensors, in trainable order.
+    pub trainable_names: Vec<String>,
+    /// The trainable tensors, in manifest trainable order.
+    pub trainable: Vec<Tensor>,
+    /// Optimizer identifier (`"adamw"`, `"sgd"`).
+    pub opt_name: String,
+    /// Raw optimizer state (`Optimizer::state_save`).
+    pub opt_state: Vec<u8>,
+    /// Loss-curve rows logged so far.
+    pub rows: Vec<StepRow>,
+    /// Measured memory accounting at suspend time.
+    pub memory: MemoryTracker,
+}
+
 /// Result of one [`Session::step`] call.
 pub enum StepOutcome {
     /// One optimizer step completed.
@@ -148,8 +184,95 @@ impl<'a> Session<'a> {
     /// every other session on this artifact) and a fresh copy of the
     /// trainable slice. Warms up exactly once (see [`Session::build`]).
     pub fn new(art: &'a Artifact, cfg: TrainCfg) -> Result<Session<'a>> {
-        Session::build(art, cfg, art.frozen_base(), art.trainable_init())
+        Session::build(art, cfg, art.frozen_base(), art.trainable_init(),
+                       0)
             .map_err(|(e, _)| e)
+    }
+
+    /// Rebuild a live session from suspended state against a resident
+    /// artifact — the other half of [`Session::snapshot`] /
+    /// [`Session::into_state`]. The session re-attaches to the
+    /// artifact's `Arc`-shared frozen base (validated by fingerprint,
+    /// so the trainables provably belong to these frozen weights), the
+    /// data producer restarts at micro-batch `step × grad_accum`, and
+    /// the optimizer state is restored bit-exactly — the continued run
+    /// is bit-identical to one that was never suspended (pinned by
+    /// `tests/statefile.rs`).
+    pub fn resume(art: &'a Artifact,
+                  state: SessionState) -> Result<Session<'a>> {
+        let SessionState {
+            preset,
+            base_fingerprint,
+            cfg,
+            step,
+            trainable_names,
+            trainable,
+            opt_name,
+            opt_state,
+            rows,
+            memory,
+        } = state;
+        ensure!(
+            preset == art.manifest.preset,
+            "session resume: state is for preset {preset:?}, artifact \
+             is {:?}",
+            art.manifest.preset
+        );
+        let base = art.frozen_base();
+        ensure!(
+            base.fingerprint() == base_fingerprint,
+            "session resume: frozen-base fingerprint {:#018x} does not \
+             match the saved {base_fingerprint:#018x} — these trainables \
+             belong to different frozen weights",
+            base.fingerprint()
+        );
+        ensure!(
+            step <= cfg.steps,
+            "session resume: step {step} beyond configured total {}",
+            cfg.steps
+        );
+        let expect: Vec<_> =
+            art.manifest.params.iter().filter(|p| p.trainable).collect();
+        ensure!(
+            expect.len() == trainable.len()
+                && trainable_names.len() == trainable.len(),
+            "session resume: {} trainable tensors ({} names) vs {} in \
+             the manifest",
+            trainable.len(),
+            trainable_names.len(),
+            expect.len()
+        );
+        for ((p, name), t) in
+            expect.iter().zip(&trainable_names).zip(&trainable)
+        {
+            ensure!(
+                p.name == *name,
+                "session resume: trainable {name:?} where the manifest \
+                 expects {:?}",
+                p.name
+            );
+            ensure!(
+                p.shape == t.shape,
+                "session resume: {name:?} has shape {:?}, manifest says \
+                 {:?}",
+                t.shape,
+                p.shape
+            );
+        }
+        let mut s = Session::build(art, cfg, base, trainable, step)
+            .map_err(|(e, _)| e)?;
+        ensure!(
+            s.opt.name() == opt_name,
+            "session resume: saved optimizer {opt_name:?}, config \
+             builds {:?}",
+            s.opt.name()
+        );
+        s.opt.state_load(&opt_state)?;
+        let samples = rows.len() as u64
+            * (art.manifest.batch * s.cfg.grad_accum) as u64;
+        s.metrics.restore(rows, samples);
+        s.memory = memory;
+        Ok(s)
     }
 
     /// Session over explicit full parameters (e.g. restored from a
@@ -175,7 +298,7 @@ impl<'a> Session<'a> {
         let (base, trainable) = FrozenBase::split(&art.manifest, full)
             .expect("arity checked above");
         let base = Arc::new(base);
-        Session::build(art, cfg, base.clone(), trainable)
+        Session::build(art, cfg, base.clone(), trainable, 0)
             .map_err(|(e, trainable)| (e, base.join(trainable)))
     }
 
@@ -185,8 +308,15 @@ impl<'a> Session<'a> {
     /// (page faults on the parameter arrays, arena fill) is not charged
     /// to the throughput meter — and only then start the metrics clock.
     /// On failure the trainable tensors ride back out with the error.
+    ///
+    /// `start_step > 0` is the resume path: the prefetcher starts at
+    /// micro-batch `start_step × grad_accum` and the step counter at
+    /// `start_step`, so the session sees exactly the tail of the batch
+    /// sequence an uninterrupted run would. The warmup pass still runs
+    /// (it performs no parameter update, so bit-identity holds).
     fn build(art: &'a Artifact, cfg: TrainCfg, base: Arc<FrozenBase>,
-             trainable: Vec<Tensor>) -> Recoverable<'a> {
+             trainable: Vec<Tensor>,
+             start_step: usize) -> Recoverable<'a> {
         if trainable.len() != base.n_trainable() {
             let e = anyhow::anyhow!(
                 "trainable slice arity: got {}, base expects {}",
@@ -201,10 +331,13 @@ impl<'a> Session<'a> {
             Ok(p) => p,
             Err(e) => return Err((e, trainable)),
         };
-        let n_micro = cfg.steps * cfg.grad_accum;
         let stream = producer.clone();
-        let prefetch =
-            Prefetcher::spawn(n_micro, 2, move |s| (stream.as_ref())(s));
+        let prefetch = Prefetcher::spawn_range(
+            start_step * cfg.grad_accum,
+            cfg.steps * cfg.grad_accum,
+            2,
+            move |s| (stream.as_ref())(s),
+        );
         let exec = art.fork_exec();
         // on a backend without native split support, materialize one
         // flat vector now instead of letting the default split impls
@@ -227,7 +360,7 @@ impl<'a> Session<'a> {
             producer,
             prefetch,
             metrics: Metrics::new(None).expect("no-sink metrics"),
-            step: 0,
+            step: start_step,
         };
         if let Err(e) = s.warmup() {
             return Err((e, s.take_trainable()));
@@ -515,5 +648,60 @@ impl<'a> Session<'a> {
     pub fn into_params(self) -> Vec<Tensor> {
         let Session { base, trainable, .. } = self;
         base.join(trainable)
+    }
+
+    /// Manifest names of the trainable tensors, in trainable order.
+    fn trainable_names(&self) -> Vec<String> {
+        self.art
+            .manifest
+            .params
+            .iter()
+            .filter(|p| p.trainable)
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    /// Clone this session's portable state (see [`SessionState`]); the
+    /// session stays live. Use [`Session::into_state`] to consume it
+    /// instead (moves the trainables, no copy).
+    pub fn snapshot(&self) -> SessionState {
+        SessionState {
+            preset: self.art.manifest.preset.clone(),
+            base_fingerprint: self.base.fingerprint(),
+            cfg: self.cfg.clone(),
+            step: self.step,
+            trainable_names: self.trainable_names(),
+            trainable: self.trainable.clone(),
+            opt_name: self.opt.name().to_string(),
+            opt_state: self.opt.state_save(),
+            rows: self.metrics.rows.clone(),
+            memory: self.memory.clone(),
+        }
+    }
+
+    /// Consume the session into its portable state — the suspend path:
+    /// the trainable tensors move out (no copy), the prefetcher thread
+    /// is joined by drop, and the `Arc` on the shared frozen base is
+    /// released (its bytes stay resident with the artifact).
+    pub fn into_state(self) -> SessionState {
+        let preset = self.art.manifest.preset.clone();
+        let base_fingerprint = self.base.fingerprint();
+        let trainable_names = self.trainable_names();
+        let opt_name = self.opt.name().to_string();
+        let opt_state = self.opt.state_save();
+        let rows = self.metrics.rows.clone();
+        let Session { cfg, trainable, memory, step, .. } = self;
+        SessionState {
+            preset,
+            base_fingerprint,
+            cfg,
+            step,
+            trainable_names,
+            trainable,
+            opt_name,
+            opt_state,
+            rows,
+            memory,
+        }
     }
 }

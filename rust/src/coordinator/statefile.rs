@@ -1,0 +1,1428 @@
+//! Durable state: the versioned binary container every suspended
+//! session, serialized artifact, and checkpoint in this repo lives in.
+//!
+//! # Format (`FORMAT_VERSION` 1)
+//!
+//! A statefile is a single file: a fixed 32-byte header, an offset
+//! index, a string table holding the section names, then the section
+//! payloads, each padded to a 64-byte boundary so a reader may mmap
+//! the file and hand out aligned zero-copy slices (`StateFile` borrows
+//! the buffer; `section()` returns subslices, never copies).
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 8    | magic `"AMBPSTF\0"` |
+//! | 8      | 4    | format version, u32 LE |
+//! | 12     | 4    | section count `n`, u32 LE |
+//! | 16     | 8    | total file length in bytes, u64 LE |
+//! | 24     | 8    | file checksum, u64 LE (see below) |
+//! | 32     | 32·n | index: per section `{name_off u32, name_len u32, payload_off u64, payload_len u64, payload_checksum u64}` |
+//! | 32+32·n| —    | string table (concatenated section names) |
+//! | pad to 64 | — | zeros |
+//! | …      | —    | payloads, each starting on a 64-byte boundary |
+//!
+//! All integers are little-endian. Offsets are absolute. The checksum
+//! is FNV-1a 64 (see `util::hash`) over every byte of the file except
+//! the checksum field itself (`bytes[0..24] ++ bytes[32..len]`); each
+//! index entry additionally carries FNV-1a 64 of its own payload so a
+//! corrupted file can name the damaged section. The writer is fully
+//! deterministic — no timestamps, no randomness — so byte-for-byte
+//! fixture comparison pins the format (`tests/statefile.rs`).
+//!
+//! # Error taxonomy
+//!
+//! Every load failure is a typed [`StateError`] naming the bad
+//! section; the loader never panics on hostile bytes and never
+//! silently loads a damaged file. Corruption outside any payload
+//! (header, index, string table, padding) is attributed to section
+//! `"index"`.
+//!
+//! # What goes in one
+//!
+//! * **Sessions** (`session.*` sections): trainables, raw optimizer
+//!   state, step counter, data-producer seed/position, metrics rows,
+//!   memory tracker — everything [`super::session::Session::resume`]
+//!   needs to continue bit-identically.
+//! * **Artifacts** (`artifact.*` sections): manifest JSON + the
+//!   pre-split frozen base stored exactly once + initial trainables,
+//!   keyed by the base's content fingerprint so a resumed session can
+//!   re-attach to an already-resident base.
+//! * **Checkpoints** (`ckpt.*` sections): a flat named-tensor map
+//!   (see [`super::checkpoint`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::coordinator::memory::MemoryTracker;
+use crate::coordinator::metrics::StepRow;
+use crate::coordinator::scheduler::Schedule;
+use crate::coordinator::session::SessionState;
+use crate::coordinator::trainer::TrainCfg;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::runtime::{Artifact, Manifest, Runtime};
+use crate::util::hash::{fnv1a64, Fnv64};
+
+/// First 8 bytes of every statefile.
+pub const MAGIC: [u8; 8] = *b"AMBPSTF\0";
+
+/// The format version this build reads and writes. Bump it on any
+/// layout change — `tests/statefile.rs` pins the on-disk bytes with a
+/// committed fixture and fails until the fixture is regenerated.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 32;
+const INDEX_ENTRY_LEN: usize = 32;
+
+/// Typed load failure: names the damaged section, never panics,
+/// never silently loads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StateError {
+    /// The file does not start with [`MAGIC`].
+    BadMagic {
+        /// The first 8 bytes actually found.
+        found: [u8; 8],
+    },
+    /// The file's format version is not one this build reads — e.g. a
+    /// statefile written by a future version of the tool.
+    UnsupportedVersion {
+        /// Version stored in the file.
+        found: u32,
+        /// The version this build supports.
+        supported: u32,
+    },
+    /// Fewer bytes than the named section needs (also raised when the
+    /// stored file length disagrees with the actual length in either
+    /// direction, as section `"file"`).
+    Truncated {
+        /// Which region came up short.
+        section: String,
+        /// Bytes required.
+        needed: u64,
+        /// Bytes available.
+        have: u64,
+    },
+    /// A checksum did not verify. The section is the damaged payload
+    /// when one can be identified, `"index"` otherwise.
+    ChecksumMismatch {
+        /// Damaged section.
+        section: String,
+        /// Checksum stored in the file.
+        stored: u64,
+        /// Checksum computed from the bytes.
+        computed: u64,
+    },
+    /// A section the decoder requires is absent.
+    MissingSection {
+        /// The missing section's name.
+        section: String,
+    },
+    /// A section's bytes do not decode (bad tag, bad UTF-8, trailing
+    /// bytes, inconsistent lengths, …).
+    Malformed {
+        /// The undecodable section.
+        section: String,
+        /// What failed.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::BadMagic { found } => write!(
+                f,
+                "statefile: bad magic {found:02x?} (not an AMBP statefile)"
+            ),
+            StateError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "statefile: format version {found} not supported (this \
+                 build reads version {supported})"
+            ),
+            StateError::Truncated { section, needed, have } => write!(
+                f,
+                "statefile: section {section:?} truncated: need {needed} \
+                 bytes, have {have}"
+            ),
+            StateError::ChecksumMismatch { section, stored, computed } => {
+                write!(
+                    f,
+                    "statefile: checksum mismatch in section {section:?}: \
+                     stored {stored:#018x}, computed {computed:#018x}"
+                )
+            }
+            StateError::MissingSection { section } => {
+                write!(f, "statefile: missing section {section:?}")
+            }
+            StateError::Malformed { section, detail } => write!(
+                f,
+                "statefile: malformed section {section:?}: {detail}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
+fn align64(x: usize) -> usize {
+    (x + 63) & !63
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Statefile builder: named sections in, deterministic bytes out.
+#[derive(Default)]
+pub struct Writer {
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    /// Append a section. Section names must be unique within a file
+    /// (duplicates are a programming error, not an input condition).
+    pub fn add(&mut self, name: &str, data: Vec<u8>) {
+        assert!(
+            self.sections.iter().all(|(n, _)| n != name),
+            "duplicate statefile section {name:?}"
+        );
+        self.sections.push((name.to_string(), data));
+    }
+
+    /// Serialize to the on-disk byte layout (see the module docs).
+    pub fn finish(&self) -> Vec<u8> {
+        let n = self.sections.len();
+        let strtab_off = HEADER_LEN + n * INDEX_ENTRY_LEN;
+
+        // String table: section names concatenated in index order.
+        let mut strtab: Vec<u8> = Vec::new();
+        let mut name_pos: Vec<(u32, u32)> = Vec::with_capacity(n);
+        for (name, _) in &self.sections {
+            let off = (strtab_off + strtab.len()) as u32;
+            strtab.extend_from_slice(name.as_bytes());
+            name_pos.push((off, name.len() as u32));
+        }
+
+        // Payload placement: each section starts on a 64-byte boundary.
+        let mut cur = strtab_off + strtab.len();
+        let mut payload_pos: Vec<(usize, usize)> = Vec::with_capacity(n);
+        for (_, data) in &self.sections {
+            let off = align64(cur);
+            payload_pos.push((off, data.len()));
+            cur = off + data.len();
+        }
+        let file_len = cur;
+
+        let mut buf = vec![0u8; file_len];
+        buf[0..8].copy_from_slice(&MAGIC);
+        buf[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf[12..16].copy_from_slice(&(n as u32).to_le_bytes());
+        buf[16..24].copy_from_slice(&(file_len as u64).to_le_bytes());
+        // buf[24..32] = file checksum, written last.
+        for i in 0..n {
+            let data = &self.sections[i].1;
+            let (name_off, name_len) = name_pos[i];
+            let (off, len) = payload_pos[i];
+            let e = HEADER_LEN + i * INDEX_ENTRY_LEN;
+            buf[e..e + 4].copy_from_slice(&name_off.to_le_bytes());
+            buf[e + 4..e + 8].copy_from_slice(&name_len.to_le_bytes());
+            buf[e + 8..e + 16]
+                .copy_from_slice(&(off as u64).to_le_bytes());
+            buf[e + 16..e + 24]
+                .copy_from_slice(&(len as u64).to_le_bytes());
+            buf[e + 24..e + 32]
+                .copy_from_slice(&fnv1a64(data).to_le_bytes());
+            buf[off..off + len].copy_from_slice(data);
+        }
+        buf[strtab_off..strtab_off + strtab.len()]
+            .copy_from_slice(&strtab);
+
+        let mut h = Fnv64::new();
+        h.update(&buf[0..24]);
+        h.update(&buf[HEADER_LEN..]);
+        let checksum = h.finish();
+        buf[24..32].copy_from_slice(&checksum.to_le_bytes());
+        buf
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so a crash mid-write never leaves a half-written
+    /// statefile under the final name.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow!("statefile path {path:?} has no file name"))?
+            .to_string_lossy()
+            .into_owned();
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        std::fs::write(&tmp, self.finish())
+            .with_context(|| format!("writing statefile {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("committing statefile {path:?}"))?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+struct SectionMeta {
+    name: String,
+    off: usize,
+    len: usize,
+}
+
+/// A parsed statefile: zero-copy named access into the caller's
+/// buffer. Parsing validates magic, version, length, the whole-file
+/// checksum, and the index; `section()` then hands out subslices.
+pub struct StateFile<'a> {
+    buf: &'a [u8],
+    sections: Vec<SectionMeta>,
+}
+
+impl<'a> StateFile<'a> {
+    /// Parse and fully validate a statefile buffer.
+    pub fn parse(buf: &'a [u8]) -> Result<StateFile<'a>, StateError> {
+        if buf.len() < HEADER_LEN {
+            return Err(StateError::Truncated {
+                section: "header".into(),
+                needed: HEADER_LEN as u64,
+                have: buf.len() as u64,
+            });
+        }
+        if buf[0..8] != MAGIC {
+            let mut found = [0u8; 8];
+            found.copy_from_slice(&buf[0..8]);
+            return Err(StateError::BadMagic { found });
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(StateError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let n = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+        let file_len = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        if file_len != buf.len() as u64 {
+            return Err(StateError::Truncated {
+                section: "file".into(),
+                needed: file_len,
+                have: buf.len() as u64,
+            });
+        }
+        let stored = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        let mut h = Fnv64::new();
+        h.update(&buf[0..24]);
+        h.update(&buf[HEADER_LEN..]);
+        let computed = h.finish();
+        let sum_ok = stored == computed;
+        let sum_err = StateError::ChecksumMismatch {
+            section: "index".into(),
+            stored,
+            computed,
+        };
+
+        match Self::parse_index(buf, n) {
+            Ok(sections) => {
+                if sum_ok {
+                    return Ok(StateFile { buf, sections });
+                }
+                // The whole-file checksum failed but the index decodes:
+                // use the per-payload checksums to name the damaged
+                // section; damage outside every payload reports as
+                // "index".
+                for (i, s) in sections.iter().enumerate() {
+                    let e = HEADER_LEN + i * INDEX_ENTRY_LEN;
+                    let sec_stored = u64::from_le_bytes(
+                        buf[e + 24..e + 32].try_into().unwrap(),
+                    );
+                    let sec_computed =
+                        fnv1a64(&buf[s.off..s.off + s.len]);
+                    if sec_stored != sec_computed {
+                        return Err(StateError::ChecksumMismatch {
+                            section: s.name.clone(),
+                            stored: sec_stored,
+                            computed: sec_computed,
+                        });
+                    }
+                }
+                Err(sum_err)
+            }
+            // An undecodable index on a file whose checksum also fails
+            // is corruption, not a malformed writer.
+            Err(_) if !sum_ok => Err(sum_err),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn parse_index(
+        buf: &[u8],
+        n: usize,
+    ) -> Result<Vec<SectionMeta>, StateError> {
+        let malformed = |detail: String| StateError::Malformed {
+            section: "index".into(),
+            detail,
+        };
+        let index_end = HEADER_LEN
+            .checked_add(
+                n.checked_mul(INDEX_ENTRY_LEN)
+                    .ok_or_else(|| malformed("entry count overflow".into()))?,
+            )
+            .ok_or_else(|| malformed("entry count overflow".into()))?;
+        if index_end > buf.len() {
+            return Err(StateError::Truncated {
+                section: "index".into(),
+                needed: index_end as u64,
+                have: buf.len() as u64,
+            });
+        }
+        let mut sections = Vec::with_capacity(n);
+        for i in 0..n {
+            let e = HEADER_LEN + i * INDEX_ENTRY_LEN;
+            let name_off =
+                u32::from_le_bytes(buf[e..e + 4].try_into().unwrap())
+                    as usize;
+            let name_len =
+                u32::from_le_bytes(buf[e + 4..e + 8].try_into().unwrap())
+                    as usize;
+            let off = u64::from_le_bytes(
+                buf[e + 8..e + 16].try_into().unwrap(),
+            );
+            let len = u64::from_le_bytes(
+                buf[e + 16..e + 24].try_into().unwrap(),
+            );
+            let name_end = name_off.checked_add(name_len).ok_or_else(
+                || malformed(format!("entry {i}: name range overflow")),
+            )?;
+            if name_off < index_end || name_end > buf.len() {
+                return Err(malformed(format!(
+                    "entry {i}: name range {name_off}..{name_end} out of \
+                     bounds"
+                )));
+            }
+            let name = std::str::from_utf8(&buf[name_off..name_end])
+                .map_err(|_| {
+                    malformed(format!("entry {i}: name is not UTF-8"))
+                })?
+                .to_string();
+            let end = off.checked_add(len).ok_or_else(|| {
+                malformed(format!("entry {i}: payload range overflow"))
+            })?;
+            if end > buf.len() as u64 {
+                return Err(malformed(format!(
+                    "entry {i} ({name:?}): payload {off}..{end} out of \
+                     bounds"
+                )));
+            }
+            if sections.iter().any(|s: &SectionMeta| s.name == name) {
+                return Err(malformed(format!(
+                    "duplicate section name {name:?}"
+                )));
+            }
+            sections.push(SectionMeta {
+                name,
+                off: off as usize,
+                len: len as usize,
+            });
+        }
+        Ok(sections)
+    }
+
+    /// Section names, in file order.
+    pub fn names(&self) -> Vec<&str> {
+        self.sections.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Zero-copy payload of a named section.
+    pub fn section(&self, name: &str) -> Result<&'a [u8], StateError> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| &self.buf[s.off..s.off + s.len])
+            .ok_or_else(|| StateError::MissingSection {
+                section: name.to_string(),
+            })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Section codecs
+// ---------------------------------------------------------------------
+
+/// Little-endian section-payload encoder (the in-section byte order,
+/// as opposed to the file-level layout the `Writer` owns).
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked section-payload reader: every decode failure is a
+/// typed [`StateError`] attributed to the section being read — hostile
+/// bytes can never index out of range or allocate unboundedly.
+pub struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    section: String,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(buf: &'a [u8], section: &str) -> Cur<'a> {
+        Cur { buf, pos: 0, section: section.to_string() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StateError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            StateError::Malformed {
+                section: self.section.clone(),
+                detail: "length overflow".into(),
+            }
+        })?;
+        if end > self.buf.len() {
+            return Err(StateError::Truncated {
+                section: self.section.clone(),
+                needed: end as u64,
+                have: self.buf.len() as u64,
+            });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, StateError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, StateError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, StateError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, StateError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, StateError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, StateError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit a `usize` (offsets, counts).
+    pub fn usize(&mut self) -> Result<usize, StateError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| StateError::Malformed {
+            section: self.section.clone(),
+            detail: format!("value {v} exceeds usize"),
+        })
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], StateError> {
+        self.take(n)
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self) -> Result<String, StateError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        std::str::from_utf8(raw)
+            .map(|s| s.to_string())
+            .map_err(|_| StateError::Malformed {
+                section: self.section.clone(),
+                detail: "string is not UTF-8".into(),
+            })
+    }
+
+    pub fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Assert the whole section was consumed.
+    pub fn done(&self) -> Result<(), StateError> {
+        if self.at_end() {
+            Ok(())
+        } else {
+            Err(StateError::Malformed {
+                section: self.section.clone(),
+                detail: format!(
+                    "{} trailing bytes",
+                    self.buf.len() - self.pos
+                ),
+            })
+        }
+    }
+
+    fn malformed(&self, detail: String) -> StateError {
+        StateError::Malformed { section: self.section.clone(), detail }
+    }
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U8 => 2,
+        DType::I8 => 3,
+    }
+}
+
+fn dtype_from_tag(tag: u8) -> Option<DType> {
+    Some(match tag {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::U8,
+        3 => DType::I8,
+        _ => return None,
+    })
+}
+
+/// Encode a named tensor list as an (index, data) section pair. Each
+/// tensor's raw bytes start on a 64-byte boundary *within the data
+/// section*; the file-level writer aligns the section itself, so
+/// every tensor payload is 64-byte aligned in the file.
+pub fn encode_tensors(entries: &[(&str, &Tensor)]) -> (Vec<u8>, Vec<u8>) {
+    let mut idx = Enc::new();
+    let mut data: Vec<u8> = Vec::new();
+    for (name, t) in entries {
+        let off = align64(data.len());
+        data.resize(off, 0);
+        data.extend_from_slice(&t.data);
+        idx.str(name);
+        idx.u8(dtype_tag(t.dtype));
+        idx.u32(t.shape.len() as u32);
+        for &d in &t.shape {
+            idx.u64(d as u64);
+        }
+        idx.u64(off as u64);
+        idx.u64(t.data.len() as u64);
+    }
+    (idx.into_bytes(), data)
+}
+
+/// Decode an (index, data) tensor-table pair. `section` labels errors.
+pub fn decode_tensors(
+    index: &[u8],
+    data: &[u8],
+    section: &str,
+) -> Result<Vec<(String, Tensor)>, StateError> {
+    let mut cur = Cur::new(index, section);
+    let mut out = Vec::new();
+    while !cur.at_end() {
+        let name = cur.str()?;
+        let tag = cur.u8()?;
+        let dtype = dtype_from_tag(tag).ok_or_else(|| {
+            cur.malformed(format!("tensor {name:?}: bad dtype tag {tag}"))
+        })?;
+        let ndim = cur.u32()? as usize;
+        if ndim > 16 {
+            return Err(cur.malformed(format!(
+                "tensor {name:?}: implausible rank {ndim}"
+            )));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(cur.usize()?);
+        }
+        let off = cur.usize()?;
+        let len = cur.usize()?;
+        let elems = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| {
+                cur.malformed(format!("tensor {name:?}: shape overflow"))
+            })?;
+        if elems.checked_mul(dtype.size()) != Some(len) {
+            return Err(cur.malformed(format!(
+                "tensor {name:?}: shape {shape:?} × {dtype:?} does not \
+                 give {len} bytes"
+            )));
+        }
+        let end = off.checked_add(len).ok_or_else(|| {
+            cur.malformed(format!("tensor {name:?}: data range overflow"))
+        })?;
+        if end > data.len() {
+            return Err(StateError::Truncated {
+                section: section.to_string(),
+                needed: end as u64,
+                have: data.len() as u64,
+            });
+        }
+        out.push((
+            name,
+            Tensor { shape, dtype, data: data[off..end].to_vec() },
+        ));
+    }
+    Ok(out)
+}
+
+/// Encode a [`TrainCfg`] into a payload (part of `session.meta`).
+pub fn encode_cfg(e: &mut Enc, cfg: &TrainCfg) {
+    e.u64(cfg.steps as u64);
+    e.f32(cfg.lr);
+    e.f32(cfg.weight_decay);
+    match cfg.schedule {
+        Schedule::Constant => e.u8(0),
+        Schedule::WarmupCosine { warmup, warmup_init } => {
+            e.u8(1);
+            e.u64(warmup as u64);
+            e.f32(warmup_init);
+        }
+        Schedule::WarmupLinear { warmup_frac } => {
+            e.u8(2);
+            e.f32(warmup_frac);
+        }
+    }
+    e.str(&cfg.optimizer);
+    e.u64(cfg.grad_accum as u64);
+    e.u64(cfg.log_every as u64);
+    e.u64(cfg.seed);
+    e.f32(cfg.data_noise);
+    match &cfg.metrics_jsonl {
+        Some(p) => e.str(&p.to_string_lossy()),
+        None => e.str(""),
+    }
+    e.u64(cfg.eval_batches as u64);
+}
+
+/// Decode a [`TrainCfg`] (inverse of [`encode_cfg`]).
+pub fn decode_cfg(c: &mut Cur) -> Result<TrainCfg, StateError> {
+    let steps = c.usize()?;
+    let lr = c.f32()?;
+    let weight_decay = c.f32()?;
+    let schedule = match c.u8()? {
+        0 => Schedule::Constant,
+        1 => Schedule::WarmupCosine {
+            warmup: c.usize()?,
+            warmup_init: c.f32()?,
+        },
+        2 => Schedule::WarmupLinear { warmup_frac: c.f32()? },
+        tag => {
+            return Err(c.malformed(format!("bad schedule tag {tag}")))
+        }
+    };
+    let optimizer = c.str()?;
+    let grad_accum = c.usize()?;
+    let log_every = c.usize()?;
+    let seed = c.u64()?;
+    let data_noise = c.f32()?;
+    let metrics = c.str()?;
+    let eval_batches = c.usize()?;
+    Ok(TrainCfg {
+        steps,
+        lr,
+        weight_decay,
+        schedule,
+        optimizer,
+        grad_accum,
+        log_every,
+        seed,
+        data_noise,
+        metrics_jsonl: if metrics.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(metrics))
+        },
+        eval_batches,
+    })
+}
+
+fn encode_metrics(rows: &[StepRow]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(rows.len() as u64);
+    for r in rows {
+        e.u64(r.step as u64);
+        e.f32(r.loss);
+        e.f32(r.metric);
+        e.f32(r.lr);
+        e.u64(r.activation_bytes);
+        e.f64(r.elapsed_s);
+    }
+    e.into_bytes()
+}
+
+fn decode_metrics(buf: &[u8]) -> Result<Vec<StepRow>, StateError> {
+    let mut c = Cur::new(buf, "session.metrics");
+    let n = c.usize()?;
+    // Each row is 36 bytes on the wire — reject counts the payload
+    // cannot hold before allocating.
+    if n > buf.len() / 36 {
+        return Err(c.malformed(format!(
+            "row count {n} exceeds payload capacity"
+        )));
+    }
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        rows.push(StepRow {
+            step: c.usize()?,
+            loss: c.f32()?,
+            metric: c.f32()?,
+            lr: c.f32()?,
+            activation_bytes: c.u64()?,
+            elapsed_s: c.f64()?,
+        });
+    }
+    c.done()?;
+    Ok(rows)
+}
+
+fn encode_memory(m: &MemoryTracker) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(m.current_bytes);
+    e.u64(m.peak_bytes);
+    e.u64(m.last_residual_bytes);
+    e.u32(m.by_kind.len() as u32);
+    for (k, v) in &m.by_kind {
+        e.str(k);
+        e.u64(*v);
+    }
+    e.u32(m.by_module.len() as u32);
+    for (k, v) in &m.by_module {
+        e.str(k);
+        e.u64(*v);
+    }
+    e.into_bytes()
+}
+
+fn decode_memory(buf: &[u8]) -> Result<MemoryTracker, StateError> {
+    let mut c = Cur::new(buf, "session.memory");
+    let mut m = MemoryTracker {
+        current_bytes: c.u64()?,
+        peak_bytes: c.u64()?,
+        last_residual_bytes: c.u64()?,
+        ..Default::default()
+    };
+    for dst in [&mut m.by_kind, &mut m.by_module] {
+        let n = c.u32()? as usize;
+        for _ in 0..n {
+            let k = c.str()?;
+            let v = c.u64()?;
+            dst.push((k, v));
+        }
+    }
+    c.done()?;
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------
+// Session save/load
+// ---------------------------------------------------------------------
+
+/// A suspended session on disk: everything the engine needs to decide
+/// *whether* and *where* to resume it, without re-reading the file.
+#[derive(Debug, Clone)]
+pub struct SessionHandle {
+    /// The statefile holding the session.
+    pub path: PathBuf,
+    /// Engine-visible session name.
+    pub name: String,
+    /// Artifact preset the session trains.
+    pub preset: String,
+    /// Fingerprint of the frozen base the trainables belong to.
+    pub base_fingerprint: u64,
+    /// Optimizer steps already taken.
+    pub steps_done: usize,
+    /// Total optimizer steps the run was configured for.
+    pub steps_total: usize,
+    /// Scheduling priority (higher survives preemption longer).
+    pub priority: i64,
+}
+
+/// A fully decoded session statefile.
+#[derive(Debug)]
+pub struct SavedSession {
+    /// Engine-visible session name.
+    pub name: String,
+    /// Scheduling priority.
+    pub priority: i64,
+    /// The portable session state.
+    pub state: SessionState,
+}
+
+/// Serialize a suspended session to `path` (atomically).
+pub fn save_session(
+    path: &Path,
+    name: &str,
+    priority: i64,
+    st: &SessionState,
+) -> Result<SessionHandle> {
+    ensure!(
+        st.trainable_names.len() == st.trainable.len(),
+        "session state: {} trainable names vs {} tensors",
+        st.trainable_names.len(),
+        st.trainable.len()
+    );
+    let mut meta = Enc::new();
+    meta.str(name);
+    meta.i64(priority);
+    meta.str(&st.preset);
+    meta.u64(st.base_fingerprint);
+    meta.u64(st.step as u64);
+    meta.str(&st.opt_name);
+    // Data-producer state. Both values are *derived* (the producer is
+    // indexed: micro-batch index = step · grad_accum), stored
+    // explicitly so the file is self-describing and the loader can
+    // cross-check them against the config.
+    meta.u64(st.cfg.seed);
+    meta.u64((st.step * st.cfg.grad_accum) as u64);
+    encode_cfg(&mut meta, &st.cfg);
+
+    let entries: Vec<(&str, &Tensor)> = st
+        .trainable_names
+        .iter()
+        .map(|s| s.as_str())
+        .zip(st.trainable.iter())
+        .collect();
+    let (tidx, tdata) = encode_tensors(&entries);
+
+    let mut w = Writer::new();
+    w.add("session.meta", meta.into_bytes());
+    w.add("session.trainable.index", tidx);
+    w.add("session.trainable.data", tdata);
+    w.add("session.opt", st.opt_state.clone());
+    w.add("session.metrics", encode_metrics(&st.rows));
+    w.add("session.memory", encode_memory(&st.memory));
+    w.write(path)?;
+    Ok(SessionHandle {
+        path: path.to_path_buf(),
+        name: name.to_string(),
+        preset: st.preset.clone(),
+        base_fingerprint: st.base_fingerprint,
+        steps_done: st.step,
+        steps_total: st.cfg.steps,
+        priority,
+    })
+}
+
+/// Load and validate a session statefile.
+pub fn load_session(path: &Path) -> Result<SavedSession> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading session statefile {path:?}"))?;
+    let sf = StateFile::parse(&buf)?;
+    let mut c = Cur::new(sf.section("session.meta")?, "session.meta");
+    let name = c.str()?;
+    let priority = c.i64()?;
+    let preset = c.str()?;
+    let base_fingerprint = c.u64()?;
+    let step = c.usize()?;
+    let opt_name = c.str()?;
+    let data_seed = c.u64()?;
+    let data_pos = c.usize()?;
+    let cfg = decode_cfg(&mut c)?;
+    c.done()?;
+    if data_seed != cfg.seed {
+        return Err(StateError::Malformed {
+            section: "session.meta".into(),
+            detail: format!(
+                "producer seed {data_seed} disagrees with config seed {}",
+                cfg.seed
+            ),
+        }
+        .into());
+    }
+    if step.checked_mul(cfg.grad_accum) != Some(data_pos) {
+        return Err(StateError::Malformed {
+            section: "session.meta".into(),
+            detail: format!(
+                "producer position {data_pos} disagrees with step {step} × \
+                 grad_accum {}",
+                cfg.grad_accum
+            ),
+        }
+        .into());
+    }
+    if step > cfg.steps {
+        return Err(StateError::Malformed {
+            section: "session.meta".into(),
+            detail: format!(
+                "step {step} beyond configured total {}",
+                cfg.steps
+            ),
+        }
+        .into());
+    }
+    let table = decode_tensors(
+        sf.section("session.trainable.index")?,
+        sf.section("session.trainable.data")?,
+        "session.trainable",
+    )?;
+    let (trainable_names, trainable): (Vec<String>, Vec<Tensor>) =
+        table.into_iter().unzip();
+    let opt_state = sf.section("session.opt")?.to_vec();
+    let rows = decode_metrics(sf.section("session.metrics")?)?;
+    let memory = decode_memory(sf.section("session.memory")?)?;
+    Ok(SavedSession {
+        name,
+        priority,
+        state: SessionState {
+            preset,
+            base_fingerprint,
+            cfg,
+            step,
+            trainable_names,
+            trainable,
+            opt_name,
+            opt_state,
+            rows,
+            memory,
+        },
+    })
+}
+
+/// Read only the scheduling envelope of a session statefile (name,
+/// preset, progress, priority) — what `ambp serve --spool` needs to
+/// enumerate resumable work without decoding tensor payloads.
+pub fn peek_session(path: &Path) -> Result<SessionHandle> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading session statefile {path:?}"))?;
+    let sf = StateFile::parse(&buf)?;
+    let mut c = Cur::new(sf.section("session.meta")?, "session.meta");
+    let name = c.str()?;
+    let priority = c.i64()?;
+    let preset = c.str()?;
+    let base_fingerprint = c.u64()?;
+    let step = c.usize()?;
+    let _opt_name = c.str()?;
+    let _data_seed = c.u64()?;
+    let _data_pos = c.usize()?;
+    let cfg = decode_cfg(&mut c)?;
+    c.done()?;
+    Ok(SessionHandle {
+        path: path.to_path_buf(),
+        name,
+        preset,
+        base_fingerprint,
+        steps_done: step,
+        steps_total: cfg.steps,
+        priority,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Artifact save/load
+// ---------------------------------------------------------------------
+
+/// Serialize an artifact: manifest JSON, the frozen base stored
+/// exactly once (straight out of the shared `Arc` — no flat-vector
+/// rebuild), and the initial trainables.
+pub fn save_artifact(path: &Path, art: &Artifact) -> Result<()> {
+    let base = art.frozen_base();
+    let mut frozen: Vec<(&str, &Tensor)> = Vec::new();
+    let trainable0 = art.trainable_init();
+    let mut t_names: Vec<&str> = Vec::new();
+    for (i, p) in art.manifest.params.iter().enumerate() {
+        match base.slot(i) {
+            Some(t) => frozen.push((p.name.as_str(), t)),
+            None => t_names.push(p.name.as_str()),
+        }
+    }
+    ensure!(
+        t_names.len() == trainable0.len(),
+        "artifact trainable arity: {} names vs {} tensors",
+        t_names.len(),
+        trainable0.len()
+    );
+    let t_entries: Vec<(&str, &Tensor)> = t_names
+        .into_iter()
+        .zip(trainable0.iter())
+        .collect();
+
+    let mut meta = Enc::new();
+    meta.str(&art.manifest.preset);
+    meta.u64(base.fingerprint());
+
+    let (fidx, fdata) = encode_tensors(&frozen);
+    let (tidx, tdata) = encode_tensors(&t_entries);
+    let mut w = Writer::new();
+    w.add("artifact.meta", meta.into_bytes());
+    w.add("artifact.manifest", art.manifest.to_json().into_bytes());
+    w.add("artifact.frozen.index", fidx);
+    w.add("artifact.frozen.data", fdata);
+    w.add("artifact.trainable.index", tidx);
+    w.add("artifact.trainable.data", tdata);
+    w.write(path)
+}
+
+/// Load an artifact statefile and rebuild the executor through the
+/// runtime's backend. The reconstructed frozen base must reproduce the
+/// stored fingerprint bit-for-bit.
+pub fn load_artifact(rt: &Runtime, path: &Path) -> Result<Artifact> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading artifact statefile {path:?}"))?;
+    let sf = StateFile::parse(&buf)?;
+    let mut c = Cur::new(sf.section("artifact.meta")?, "artifact.meta");
+    let preset = c.str()?;
+    let fingerprint = c.u64()?;
+    c.done()?;
+    let mtext = std::str::from_utf8(sf.section("artifact.manifest")?)
+        .map_err(|_| StateError::Malformed {
+            section: "artifact.manifest".into(),
+            detail: "manifest is not UTF-8".into(),
+        })?;
+    let manifest = Manifest::parse(mtext).map_err(|e| {
+        anyhow::Error::from(StateError::Malformed {
+            section: "artifact.manifest".into(),
+            detail: format!("{e:#}"),
+        })
+    })?;
+    ensure!(
+        manifest.preset == preset,
+        "artifact statefile: meta preset {preset:?} disagrees with \
+         manifest preset {:?}",
+        manifest.preset
+    );
+    let frozen = decode_tensors(
+        sf.section("artifact.frozen.index")?,
+        sf.section("artifact.frozen.data")?,
+        "artifact.frozen",
+    )?;
+    let trainable = decode_tensors(
+        sf.section("artifact.trainable.index")?,
+        sf.section("artifact.trainable.data")?,
+        "artifact.trainable",
+    )?;
+    let mut fi = frozen.into_iter();
+    let mut ti = trainable.into_iter();
+    let mut full = Vec::with_capacity(manifest.params.len());
+    for p in &manifest.params {
+        let from = if p.trainable { &mut ti } else { &mut fi };
+        let (name, t) = from.next().ok_or_else(|| {
+            anyhow!(
+                "artifact statefile: no tensor left for parameter {:?}",
+                p.name
+            )
+        })?;
+        ensure!(
+            name == p.name,
+            "artifact statefile: tensor {name:?} where the manifest \
+             expects {:?}",
+            p.name
+        );
+        ensure!(
+            t.shape == p.shape,
+            "artifact statefile: {name:?} has shape {:?}, manifest says \
+             {:?}",
+            t.shape,
+            p.shape
+        );
+        full.push(t);
+    }
+    ensure!(
+        fi.next().is_none() && ti.next().is_none(),
+        "artifact statefile: extra tensors beyond the manifest layout"
+    );
+    let art = rt.assemble(path.to_path_buf(), manifest, full)?;
+    let got = art.frozen_base().fingerprint();
+    ensure!(
+        got == fingerprint,
+        "artifact statefile: frozen-base fingerprint {got:#018x} does \
+         not reproduce stored {fingerprint:#018x}"
+    );
+    Ok(art)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> Vec<u8> {
+        let mut w = Writer::new();
+        w.add("alpha", b"hello world".to_vec());
+        w.add("beta", vec![0xAB; 100]);
+        w.add("empty", Vec::new());
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_sections() {
+        let buf = sample_file();
+        let sf = StateFile::parse(&buf).unwrap();
+        assert_eq!(sf.names(), vec!["alpha", "beta", "empty"]);
+        assert_eq!(sf.section("alpha").unwrap(), b"hello world");
+        assert_eq!(sf.section("beta").unwrap(), &[0xAB; 100][..]);
+        assert_eq!(sf.section("empty").unwrap(), b"");
+        assert!(matches!(
+            sf.section("gamma"),
+            Err(StateError::MissingSection { .. })
+        ));
+    }
+
+    #[test]
+    fn payloads_are_64_aligned_and_writer_is_deterministic() {
+        let buf = sample_file();
+        let sf = StateFile::parse(&buf).unwrap();
+        for s in &sf.sections {
+            assert_eq!(s.off % 64, 0, "section {:?}", s.name);
+        }
+        assert_eq!(buf, sample_file());
+    }
+
+    #[test]
+    fn empty_file_is_just_a_header() {
+        let buf = Writer::new().finish();
+        assert_eq!(buf.len(), HEADER_LEN);
+        let sf = StateFile::parse(&buf).unwrap();
+        assert!(sf.names().is_empty());
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut buf = sample_file();
+        buf[0] ^= 0x01;
+        match StateFile::parse(&buf) {
+            Err(StateError::BadMagic { found }) => {
+                assert_ne!(found, MAGIC)
+            }
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn future_version_is_typed() {
+        let mut buf = sample_file();
+        buf[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        match StateFile::parse(&buf) {
+            Err(StateError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, FORMAT_VERSION + 1);
+                assert_eq!(supported, FORMAT_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed_at_every_length() {
+        let buf = sample_file();
+        for keep in [0, 1, 16, 31, 32, buf.len() / 2, buf.len() - 1] {
+            match StateFile::parse(&buf[..keep]) {
+                Err(StateError::Truncated { .. }) => {}
+                other => panic!("keep={keep}: expected Truncated, got \
+                                 {other:?}"),
+            }
+        }
+        // Extension is also a length mismatch.
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(matches!(
+            StateFile::parse(&long),
+            Err(StateError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn payload_corruption_names_the_section() {
+        let buf = sample_file();
+        let sf = StateFile::parse(&buf).unwrap();
+        let beta_off =
+            sf.sections.iter().find(|s| s.name == "beta").unwrap().off;
+        let mut bad = buf.clone();
+        bad[beta_off + 3] ^= 0x40;
+        match StateFile::parse(&bad) {
+            Err(StateError::ChecksumMismatch { section, .. }) => {
+                assert_eq!(section, "beta")
+            }
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_or_index_corruption_is_checksum_mismatch() {
+        let buf = sample_file();
+        // Flip the stored checksum itself: nothing else is damaged, so
+        // the blame lands on "index".
+        let mut bad = buf.clone();
+        bad[25] ^= 0x10;
+        match StateFile::parse(&bad) {
+            Err(StateError::ChecksumMismatch { section, .. }) => {
+                assert_eq!(section, "index")
+            }
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        // Flip a bit inside an index entry's stored payload checksum.
+        let mut bad = buf;
+        bad[HEADER_LEN + 24] ^= 0x01;
+        match StateFile::parse(&bad) {
+            Err(StateError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tensor_table_roundtrip() {
+        let a = Tensor::from_f32(&[2, 3], &[1., -2., 3.5, 4., 5., 6.]);
+        let b = Tensor::from_i32(&[2], &[7, -8]);
+        let c = Tensor::from_u8(&[3], &[1, 2, 3]);
+        let (idx, data) = encode_tensors(&[
+            ("a.W", &a),
+            ("a.b", &b),
+            ("codes", &c),
+        ]);
+        let out = decode_tensors(&idx, &data, "t").unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].0, "a.W");
+        assert_eq!(out[0].1.shape, vec![2, 3]);
+        assert_eq!(out[0].1.data, a.data);
+        assert_eq!(out[1].1.as_i32(), &[7, -8]);
+        assert_eq!(out[2].1.dtype, DType::U8);
+    }
+
+    #[test]
+    fn tensor_table_rejects_inconsistent_lengths() {
+        let a = Tensor::from_f32(&[2], &[1., 2.]);
+        let (mut idx, data) = encode_tensors(&[("a", &a)]);
+        // Corrupt the declared byte length (last 8 bytes of the entry).
+        let n = idx.len();
+        idx[n - 8] ^= 0x04;
+        assert!(matches!(
+            decode_tensors(&idx, &data, "t"),
+            Err(StateError::Malformed { .. })
+                | Err(StateError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn cfg_roundtrip_all_schedules() {
+        for schedule in [
+            Schedule::Constant,
+            Schedule::WarmupCosine { warmup: 7, warmup_init: 1e-5 },
+            Schedule::WarmupLinear { warmup_frac: 0.25 },
+        ] {
+            let cfg = TrainCfg {
+                steps: 42,
+                lr: 3e-4,
+                weight_decay: 0.01,
+                schedule,
+                optimizer: "sgd".into(),
+                grad_accum: 2,
+                log_every: 5,
+                seed: 99,
+                data_noise: 0.7,
+                metrics_jsonl: Some(PathBuf::from("/tmp/m.jsonl")),
+                eval_batches: 3,
+            };
+            let mut e = Enc::new();
+            encode_cfg(&mut e, &cfg);
+            let bytes = e.into_bytes();
+            let mut c = Cur::new(&bytes, "cfg");
+            let back = decode_cfg(&mut c).unwrap();
+            c.done().unwrap();
+            assert_eq!(back.steps, cfg.steps);
+            assert_eq!(back.lr.to_bits(), cfg.lr.to_bits());
+            assert_eq!(back.schedule, cfg.schedule);
+            assert_eq!(back.optimizer, cfg.optimizer);
+            assert_eq!(back.seed, cfg.seed);
+            assert_eq!(back.metrics_jsonl, cfg.metrics_jsonl);
+        }
+    }
+
+    #[test]
+    fn metrics_and_memory_roundtrip() {
+        let rows = vec![
+            StepRow {
+                step: 0,
+                loss: 2.5,
+                metric: 0.1,
+                lr: 1e-3,
+                activation_bytes: 4096,
+                elapsed_s: 0.25,
+            },
+            StepRow {
+                step: 1,
+                loss: 2.25,
+                metric: 0.2,
+                lr: 9e-4,
+                activation_bytes: 4096,
+                elapsed_s: 0.5,
+            },
+        ];
+        let back = decode_metrics(&encode_metrics(&rows)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].loss.to_bits(), rows[1].loss.to_bits());
+        assert_eq!(back[1].elapsed_s.to_bits(), rows[1].elapsed_s.to_bits());
+
+        let mem = MemoryTracker {
+            current_bytes: 10,
+            peak_bytes: 20,
+            last_residual_bytes: 5,
+            by_kind: vec![("act_codes".into(), 7)],
+            by_module: vec![("block0".into(), 3), ("head".into(), 4)],
+        };
+        let back = decode_memory(&encode_memory(&mem)).unwrap();
+        assert_eq!(back.peak_bytes, 20);
+        assert_eq!(back.by_kind, mem.by_kind);
+        assert_eq!(back.by_module, mem.by_module);
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        // Random-ish deterministic garbage at assorted lengths.
+        let mut x: u64 = 0x243F_6A88_85A3_08D3;
+        for len in [0usize, 1, 8, 31, 32, 33, 64, 200, 1000] {
+            let mut buf = Vec::with_capacity(len);
+            for _ in 0..len {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                buf.push((x >> 33) as u8);
+            }
+            let _ = StateFile::parse(&buf); // must return, not panic
+        }
+        // A valid header claiming a huge section count.
+        let mut buf = Writer::new().finish();
+        buf[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(StateFile::parse(&buf).is_err());
+    }
+}

@@ -28,9 +28,23 @@ impl Prefetcher {
     where
         F: Fn(usize) -> Batch + Send + 'static,
     {
+        Prefetcher::spawn_range(0, n_steps, depth, make)
+    }
+
+    /// Spawn a producer calling `make(step)` for step = start..end —
+    /// the resume path: a session suspended after k micro-batches
+    /// restarts its producer at position k and sees the exact batch
+    /// sequence an uninterrupted run would have seen (the producer is
+    /// a pure function of the step index). `start >= end` yields an
+    /// immediately-exhausted producer.
+    pub fn spawn_range<F>(start: usize, end: usize, depth: usize,
+                          make: F) -> Self
+    where
+        F: Fn(usize) -> Batch + Send + 'static,
+    {
         let (tx, rx) = mpsc::sync_channel(depth);
         let handle = thread::spawn(move || {
-            for step in 0..n_steps {
+            for step in start..end {
                 if tx.send(make(step)).is_err() {
                     return; // consumer dropped early
                 }
@@ -89,6 +103,27 @@ mod tests {
         });
         let _ = p.next();
         drop(p); // must not deadlock
+    }
+
+    #[test]
+    fn spawn_range_resumes_mid_sequence() {
+        let p = Prefetcher::spawn_range(3, 6, 2, |step| Batch::Tokens {
+            x: vec![step as i32],
+            y: vec![],
+        });
+        for step in 3..6 {
+            match p.next().unwrap() {
+                Batch::Tokens { x, .. } => assert_eq!(x[0], step as i32),
+                _ => panic!(),
+            }
+        }
+        assert!(p.next().is_none());
+        // Degenerate range: already complete.
+        let done = Prefetcher::spawn_range(4, 4, 2, |_| Batch::Tokens {
+            x: vec![],
+            y: vec![],
+        });
+        assert!(done.next().is_none());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!             share frozen bases, under a byte budget
 //!   fleet     sessions-per-budget capacity report (baseline vs ours
 //!             vs mesa), cross-checked against a measured probe step
+//!   suspend   train a session for K steps, then spool its durable
+//!             state to a statefile (crash-safe, bit-exact)
+//!   resume    continue a suspended session from its statefile to
+//!             completion — bit-identical to an uninterrupted run
 //!   eval      forward-only evaluation of a (possibly restored) model
 //!   exp       reproduce a paper table/figure (fig1..fig8, tab1..tab12,
 //!             appc, appe, all)
@@ -21,10 +25,12 @@ use std::path::{Path, PathBuf};
 use ambp::config::RunCfg;
 use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
 use ambp::coordinator::engine::fleet_capacity;
-use ambp::coordinator::{Engine, JobSpec, TrainCfg, Trainer};
+use ambp::coordinator::{
+    statefile, Engine, JobSpec, Session, StepOutcome, TrainCfg, Trainer,
+};
 use ambp::runtime::{Artifact, Runtime};
 use ambp::util::cli::Args;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -32,6 +38,8 @@ fn main() -> Result<()> {
     match cmd {
         "train" => train(&args),
         "serve" => serve(&args),
+        "suspend" => suspend_cmd(&args),
+        "resume" => resume_cmd(&args),
         "fleet" => fleet(&args),
         "eval" => eval(&args),
         "exp" => {
@@ -76,6 +84,12 @@ fn train(args: &Args) -> Result<()> {
         art.manifest.trainable_indices().len(),
         art.manifest.residuals.len()
     );
+    if let Some(p) = args.get("save-artifact") {
+        statefile::save_artifact(Path::new(p), &art)?;
+        println!("artifact statefile saved to {p:?} (fingerprint \
+                  {:#018x})",
+                 art.frozen_base().fingerprint());
+    }
     let mut trainer = Trainer::new(&art, cfg.train.clone())?;
     if let Some(src) = &cfg.init_from {
         let ck = Checkpoint::load(src)?;
@@ -104,16 +118,49 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-tenant serving: admit `--jobs preset[:steps[:seed]],…`
+/// Multi-tenant serving: admit `--jobs preset[:steps[:seed[:prio]]],…`
 /// sessions against `--budget <MiB>`, interleave their steps
-/// round-robin, report per-session results + fleet accounting.
+/// round-robin, report per-session results + fleet accounting. With
+/// `--spool DIR`, suspended sessions live as statefiles there:
+/// `--preempt` lets a higher-priority job evict lower-priority ones
+/// instead of being rejected, `--halt-after R` suspends the whole
+/// fleet after R rounds (deterministic stand-in for a crash), and any
+/// `*.state` already in the spool is warm-restarted — so running the
+/// same `serve` again finishes the interrupted work bit-identically.
 fn serve(args: &Args) -> Result<()> {
     let rt = runtime(args)?;
     let budget =
         (args.f64_or("budget", 1024.0)? * 1048576.0).round() as u64;
-    let jobs = args
-        .get("jobs")
-        .context("--jobs preset[:steps[:seed]],... required")?;
+    let spool = args.get("spool").map(PathBuf::from);
+    let preempt = args.bool("preempt");
+    ensure!(!preempt || spool.is_some(), "--preempt requires --spool");
+    let halt_after = args.usize_or("halt-after", 0)?;
+    ensure!(halt_after == 0 || spool.is_some(),
+            "--halt-after requires --spool");
+    // scan the spool for suspended sessions to warm-restart
+    let mut spooled: Vec<statefile::SessionHandle> = Vec::new();
+    if let Some(dir) = &spool {
+        std::fs::create_dir_all(dir)?;
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|x| x == "state").unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        for p in &paths {
+            spooled.push(statefile::peek_session(p)?);
+        }
+    }
+    let jobs = match args.get("jobs") {
+        Some(j) => j,
+        None if !spooled.is_empty() => "",
+        None => bail!(
+            "--jobs preset[:steps[:seed[:prio]]],... required (or an \
+             existing --spool with suspended sessions)"
+        ),
+    };
     let base_cfg = TrainCfg {
         steps: args.usize_or("steps", 20)?,
         lr: args.f64_or("lr", 1e-3)? as f32,
@@ -125,33 +172,62 @@ fn serve(args: &Args) -> Result<()> {
         ..TrainCfg::default()
     };
     let mut specs = Vec::new();
-    for (i, token) in jobs.split(',').enumerate() {
+    for (i, token) in
+        jobs.split(',').filter(|t| !t.trim().is_empty()).enumerate()
+    {
         specs.push(JobSpec::parse(token.trim(), &base_cfg, i)?);
     }
-    // one artifact per unique preset: sessions on the same preset
-    // share its frozen base by construction
+    // one artifact per unique preset (jobs ∪ spooled sessions):
+    // sessions on the same preset share its frozen base by
+    // construction
     let mut arts: BTreeMap<String, Artifact> = BTreeMap::new();
-    for spec in &specs {
+    let presets = specs
+        .iter()
+        .map(|s| s.preset.clone())
+        .chain(spooled.iter().map(|h| h.preset.clone()));
+    for preset in presets {
         if let std::collections::btree_map::Entry::Vacant(slot) =
-            arts.entry(spec.preset.clone())
+            arts.entry(preset.clone())
         {
-            slot.insert(ambp::runtime::load_or_synth(&rt, &spec.preset)?);
+            slot.insert(ambp::runtime::load_or_synth(&rt, &preset)?);
         }
     }
     let strict = args.bool("strict");
     let mut engine = Engine::new(budget);
+    if let Some(dir) = &spool {
+        engine.set_spool(dir.clone());
+    }
+    if preempt {
+        engine.enable_preempt()?;
+    }
     let mut admitted_samples = 0u64;
+    // warm restart first: interrupted work precedes new jobs (a
+    // preempting higher-priority job can still evict it)
+    for h in &spooled {
+        let art = &arts[&h.preset];
+        admitted_samples += ((h.steps_total - h.steps_done)
+            * art.manifest.batch) as u64;
+        let now = engine.spool_in(art, &h.path)?;
+        println!(
+            "{} {} ({}) at step {}/{} from {:?}",
+            if now { "resumed" } else { "queued suspended" },
+            h.name, h.preset, h.steps_done, h.steps_total, h.path
+        );
+    }
     for (i, spec) in specs.iter().enumerate() {
         let name = format!("s{i}");
         let art = &arts[&spec.preset];
-        match engine.admit(&name, art, spec.cfg.clone()) {
+        let suspended_before = engine.suspended_names().len();
+        match engine.admit_prio(&name, art, spec.cfg.clone(),
+                                spec.priority) {
             Ok(id) => {
                 admitted_samples += (art.manifest.batch
                     * spec.cfg.grad_accum
                     * spec.cfg.steps) as u64;
                 println!("admitted {name} ({}) as session {id}: \
-                          {} steps, seed {}",
-                         spec.preset, spec.cfg.steps, spec.cfg.seed);
+                          {} steps, seed {}, priority {}",
+                         spec.preset, spec.cfg.steps, spec.cfg.seed,
+                         spec.priority);
             }
             Err(e) if strict => {
                 return Err(e.context(format!(
@@ -161,8 +237,11 @@ fn serve(args: &Args) -> Result<()> {
             }
             Err(e) => println!("REJECTED {name} ({}): {e}", spec.preset),
         }
+        for v in &engine.suspended_names()[suspended_before..] {
+            println!("  (preempted {v} to the spool)");
+        }
     }
-    if engine.is_empty() {
+    if engine.is_empty() && !engine.has_unfinished() {
         bail!("no session fit the {:.1} MiB budget",
               budget as f64 / 1048576.0);
     }
@@ -170,7 +249,24 @@ fn serve(args: &Args) -> Result<()> {
     // admission (each session's one-off warmup) and the end-of-run
     // held-out evaluation inside finish() are setup/reporting
     let t0 = std::time::Instant::now();
-    while engine.round()? > 0 {}
+    let mut rounds = 0usize;
+    while engine.round()? > 0 {
+        rounds += 1;
+        if halt_after > 0 && rounds >= halt_after
+            && engine.has_unfinished()
+        {
+            let handles = engine.suspend_all()?;
+            println!("\nhalted after {rounds} round(s); suspended {} \
+                      session(s) to the spool:",
+                     handles.len());
+            for h in &handles {
+                println!("  {} ({}) at step {}/{} → {:?}", h.name,
+                         h.preset, h.steps_done, h.steps_total, h.path);
+            }
+            println!("re-run `ambp serve --spool` to finish them");
+            return Ok(());
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
     let reports = engine.run()?;
     println!("\nper-session results:");
@@ -196,6 +292,70 @@ fn serve(args: &Args) -> Result<()> {
              budget as f64 / 1048576.0,
              engine.fleet.peak_bytes as f64 / 1048576.0,
              admitted_samples as f64 / wall);
+    Ok(())
+}
+
+/// Train a single session for `--at K` steps, then suspend it to a
+/// durable statefile — the CLI half of the crash/kill story (CI runs
+/// suspend, then `ambp resume`, and checks the result matches an
+/// uninterrupted `ambp train` bit-for-bit).
+fn suspend_cmd(args: &Args) -> Result<()> {
+    let cfg = RunCfg::from_args(args)?;
+    let art = load_artifact(&cfg, args)?;
+    let state = PathBuf::from(
+        args.get("state").context("--state <file.state> required")?);
+    let at = args.usize_or("at", cfg.train.steps / 2)?;
+    ensure!(at < cfg.train.steps,
+            "--at {at} must leave steps to resume (steps {})",
+            cfg.train.steps);
+    let name = args.get_or("name", "s0");
+    let mut s = Session::new(&art, cfg.train.clone())?;
+    for _ in 0..at {
+        match s.step()? {
+            StepOutcome::Stepped(_) => {}
+            StepOutcome::Exhausted => bail!("step budget exhausted"),
+        }
+    }
+    let handle =
+        statefile::save_session(&state, name, 0, &s.into_state())?;
+    println!("suspended {} ({}) at step {}/{} → {:?}", handle.name,
+             handle.preset, handle.steps_done, handle.steps_total,
+             handle.path);
+    Ok(())
+}
+
+/// Continue a suspended session from its statefile to completion.
+/// The artifact is re-synthesized from the saved preset (or loaded
+/// from `--artifact-state`); the frozen-base fingerprint check
+/// guarantees the trainables are resumed against the exact weights
+/// they were split from. Deletes the statefile on success.
+fn resume_cmd(args: &Args) -> Result<()> {
+    let state = PathBuf::from(
+        args.get("state").context("--state <file.state> required")?);
+    let rt = runtime(args)?;
+    let saved = statefile::load_session(&state)?;
+    let art = match args.get("artifact-state") {
+        Some(p) => statefile::load_artifact(&rt, Path::new(p))?,
+        None => ambp::runtime::load_or_synth(&rt, &saved.state.preset)?,
+    };
+    println!("resuming {} ({}) at step {}/{}", saved.name,
+             saved.state.preset, saved.state.step,
+             saved.state.cfg.steps);
+    let mut s = Session::resume(&art, saved.state)?;
+    while let StepOutcome::Stepped(_) = s.step()? {}
+    let report = s.finish()?;
+    println!(
+        "done: final loss {:.4}  metric {:.3}  steps {} (peak \
+         activation {:.1} MiB)",
+        report.final_loss, report.final_metric, report.steps,
+        report.peak_activation_bytes as f64 / 1048576.0
+    );
+    if let Some(dst) = args.get("save-to") {
+        Checkpoint::from_params(&art.manifest, &s.params())
+            .save(Path::new(dst))?;
+        println!("checkpoint saved to {dst:?}");
+    }
+    std::fs::remove_file(&state)?;
     Ok(())
 }
 
@@ -371,13 +531,22 @@ global: --backend native|pjrt   (default native; presets with no on-disk
   train   --preset P [--steps N --lr X --optimizer adamw|sgd
           --schedule constant|warmup_cosine|warmup_linear
           --grad-accum K --seed S --metrics out.jsonl
-          --init-from ckpt/ --save-to ckpt/]
-  serve   --budget MiB --jobs P[:steps[:seed]],P[:steps[:seed]],...
+          --init-from ckpt/ --save-to ckpt/ --save-artifact a.state]
+  serve   --budget MiB --jobs P[:steps[:seed[:prio]]],...
           [--steps N --lr X --seed S --log-every K --eval-batches E
-           --strict]
+           --strict --spool DIR --preempt --halt-after R]
           multi-tenant engine: sessions share frozen bases; admission
           is gated on predicted tape+grads+optimizer bytes
-          (--strict: error out if any job is rejected)
+          (--strict: error out if any job is rejected; --preempt:
+          evict lower-priority sessions to --spool instead;
+          --halt-after R: suspend the fleet after R rounds — re-run
+          with the same --spool, no --jobs, to finish; any *.state
+          already in --spool is warm-restarted first)
+  suspend --preset P --state f.state [--at K --steps N --name s0 ...]
+          run K steps, then spool the session's durable state
+  resume  --state f.state [--artifact-state a.state --save-to ckpt/]
+          continue a suspended session to completion (bit-identical
+          to an uninterrupted run; deletes f.state on success)
   fleet   [--budget MiB --base vitt_loraqv | --presets P,P,...
           --no-probe]   sessions-per-budget capacity report
   eval    --preset P [--init-from ckpt/ --batches N]

@@ -140,7 +140,14 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {dir:?}"))?;
-        let j = Json::parse(&text)?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest JSON text (the `manifest.json` schema). Also the
+    /// decoder for the manifest section embedded in artifact
+    /// statefiles.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
         let cfg = j.get("config")?;
         let params = j
             .get("params")?
@@ -244,6 +251,132 @@ impl Manifest {
         })
     }
 
+    /// Serialize back to the exact JSON schema [`Manifest::parse`]
+    /// reads. `parse(m.to_json())` reconstructs every field: strings
+    /// and integers round-trip exactly, and the f64 fields
+    /// (`mlp_ratio`, `bits_per_elem`, selfcheck values) round-trip
+    /// bit-identically because the serializer prints the shortest
+    /// representation that re-parses to the same f64.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{num, obj, s};
+        let shape = |sh: &[usize]| {
+            Json::Arr(sh.iter().map(|&d| num(d as f64)).collect())
+        };
+        let binfo = |b: &BatchInfo| {
+            obj(vec![
+                ("shape", shape(&b.shape)),
+                ("dtype", s(b.dtype.manifest_str())),
+            ])
+        };
+        let j = obj(vec![
+            ("preset", s(&self.preset)),
+            (
+                "config",
+                obj(vec![
+                    ("arch", s(&self.arch)),
+                    ("tuning", s(&self.tuning)),
+                    ("activation", s(&self.activation)),
+                    ("norm", s(&self.norm)),
+                    ("dim", num(self.dim as f64)),
+                    ("depth", num(self.depth as f64)),
+                    ("n_heads", num(self.n_heads as f64)),
+                    ("n_tokens", num(self.n_tokens as f64)),
+                    ("batch", num(self.batch as f64)),
+                    ("n_classes", num(self.n_classes as f64)),
+                    ("vocab", num(self.vocab as f64)),
+                    ("mlp_ratio", num(self.mlp_ratio)),
+                    ("lora_rank", num(self.lora_rank as f64)),
+                    ("patch_dim", num(self.patch_dim as f64)),
+                    ("ckpt", Json::Bool(self.ckpt)),
+                    ("swiglu", Json::Bool(self.swiglu)),
+                    ("mesa", Json::Bool(self.mesa)),
+                ]),
+            ),
+            (
+                "params",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("name", s(&p.name)),
+                                ("shape", shape(&p.shape)),
+                                ("trainable", Json::Bool(p.trainable)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "batch",
+                obj(vec![("x", binfo(&self.x)), ("y", binfo(&self.y))]),
+            ),
+            (
+                "residuals",
+                Json::Arr(
+                    self.residuals
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("name", s(&r.name)),
+                                ("kind", s(&r.kind)),
+                                ("module", s(&r.module)),
+                                ("shape", shape(&r.shape)),
+                                ("dtype", s(r.dtype.manifest_str())),
+                                ("bits_per_elem", num(r.bits_per_elem)),
+                                ("bytes", num(r.bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "residual_bytes_total",
+                num(self.residual_bytes_total as f64),
+            ),
+            (
+                "merges",
+                Json::Arr(
+                    self.merges
+                        .iter()
+                        .map(|m| {
+                            obj(vec![
+                                ("norm", s(&m.norm)),
+                                (
+                                    "linears",
+                                    Json::Arr(
+                                        m.linears
+                                            .iter()
+                                            .map(|l| s(l))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "selfcheck",
+                obj(vec![
+                    ("loss", num(self.selfcheck.loss)),
+                    ("metric", num(self.selfcheck.metric)),
+                    (
+                        "grad_l2",
+                        Json::Arr(
+                            self.selfcheck
+                                .grad_l2
+                                .iter()
+                                .map(|&g| num(g))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ]);
+        j.to_string()
+    }
+
     /// Indices of the trainable parameters, in manifest order — the
     /// order bwd emits gradients in.
     pub fn trainable_indices(&self) -> Vec<usize> {
@@ -290,5 +423,93 @@ impl Manifest {
         }
         out.sort_by(|a, b| b.1.cmp(&a.1));
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            preset: "p".into(),
+            arch: "vit".into(),
+            tuning: "lora_qv".into(),
+            activation: "regelu2".into(),
+            norm: "msln".into(),
+            dim: 8,
+            depth: 2,
+            n_heads: 2,
+            n_tokens: 4,
+            batch: 3,
+            n_classes: 5,
+            vocab: 0,
+            mlp_ratio: 4.0,
+            lora_rank: 2,
+            patch_dim: 6,
+            ckpt: false,
+            swiglu: true,
+            mesa: true,
+            params: vec![ParamInfo {
+                name: "head.W".into(),
+                shape: vec![8, 5],
+                trainable: true,
+            }],
+            x: BatchInfo { shape: vec![3, 4, 6], dtype: DType::F32 },
+            y: BatchInfo { shape: vec![3], dtype: DType::I32 },
+            residuals: vec![ResInfo {
+                name: "r0".into(),
+                kind: "act_codes".into(),
+                module: "block0.mlp".into(),
+                shape: vec![3, 4, 32],
+                dtype: DType::U8,
+                bits_per_elem: 2.0,
+                bytes: 96,
+            }],
+            residual_bytes_total: 96,
+            merges: vec![MergeOp {
+                norm: "block0.ln1".into(),
+                linears: vec!["block0.attn.q".into()],
+            }],
+            selfcheck: SelfCheck {
+                loss: 1.609_437_912_434_100_3,
+                metric: 0.2,
+                grad_l2: vec![0.5, std::f64::consts::PI],
+            },
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = sample();
+        let m2 = Manifest::parse(&m.to_json()).unwrap();
+        assert_eq!(m.preset, m2.preset);
+        assert_eq!(m.arch, m2.arch);
+        assert_eq!(m.mlp_ratio.to_bits(), m2.mlp_ratio.to_bits());
+        assert_eq!(m.swiglu, m2.swiglu);
+        assert_eq!(m.mesa, m2.mesa);
+        assert_eq!(m.params.len(), m2.params.len());
+        assert_eq!(m.params[0].name, m2.params[0].name);
+        assert_eq!(m.params[0].shape, m2.params[0].shape);
+        assert_eq!(m.x.shape, m2.x.shape);
+        assert_eq!(m.y.dtype, m2.y.dtype);
+        assert_eq!(m.residuals[0].dtype, m2.residuals[0].dtype);
+        assert_eq!(
+            m.residuals[0].bits_per_elem.to_bits(),
+            m2.residuals[0].bits_per_elem.to_bits()
+        );
+        assert_eq!(m.residual_bytes_total, m2.residual_bytes_total);
+        assert_eq!(m.merges[0].norm, m2.merges[0].norm);
+        assert_eq!(m.merges[0].linears, m2.merges[0].linears);
+        assert_eq!(
+            m.selfcheck.loss.to_bits(),
+            m2.selfcheck.loss.to_bits()
+        );
+        assert_eq!(
+            m.selfcheck.grad_l2[1].to_bits(),
+            m2.selfcheck.grad_l2[1].to_bits()
+        );
+        // And the serialization itself is a fixpoint.
+        assert_eq!(m.to_json(), m2.to_json());
     }
 }

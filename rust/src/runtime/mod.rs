@@ -127,6 +127,19 @@ pub trait Backend {
         bail!("backend {:?} cannot synthesize preset {preset:?}",
               self.name())
     }
+
+    /// Assemble an artifact from an already-parsed manifest and a full
+    /// manifest-ordered parameter vector — the entry point the
+    /// statefile loader uses, where both come out of a single `.state`
+    /// file instead of a directory. `dir` is a provenance label only
+    /// (no files are read from it). Backends that cannot rebuild an
+    /// executor from a manifest alone return an error.
+    fn assemble(&self, dir: PathBuf, manifest: Manifest,
+                params0: Vec<Tensor>) -> Result<Artifact> {
+        let _ = (dir, manifest, params0);
+        bail!("backend {:?} cannot assemble an artifact from a manifest",
+              self.name())
+    }
 }
 
 /// A backend handle. `Runtime::cpu()` returns the default (native) CPU
@@ -166,6 +179,13 @@ impl Runtime {
     /// The active backend's identifier.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Assemble an artifact from in-memory parts through the backend
+    /// (see [`Backend::assemble`]). Used by the statefile loader.
+    pub fn assemble(&self, dir: PathBuf, manifest: Manifest,
+                    params0: Vec<Tensor>) -> Result<Artifact> {
+        self.backend.assemble(dir, manifest, params0)
     }
 }
 

@@ -20,13 +20,13 @@ pub mod model;
 pub mod pool;
 pub mod spec;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::runtime::{Artifact, Backend, Executor, FrozenBase, FwdOut,
-                     Params, Tensor};
+                     Manifest, Params, Tensor};
 
 pub use arena::{Arena, ArenaStats};
 pub use layers::Profiler;
@@ -46,6 +46,11 @@ impl Backend for NativeBackend {
 
     fn synthesize(&self, preset: &str) -> Result<Artifact> {
         spec::synth_artifact(preset)
+    }
+
+    fn assemble(&self, dir: PathBuf, manifest: Manifest,
+                params0: Vec<Tensor>) -> Result<Artifact> {
+        spec::assemble_artifact(dir, manifest, params0)
     }
 }
 

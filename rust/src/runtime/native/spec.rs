@@ -12,7 +12,7 @@
 //! byte-for-byte; `tests/tape_grid.rs` pins that identity over the full
 //! preset grid.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -326,6 +326,17 @@ pub fn synth_artifact(preset: &str) -> Result<Artifact> {
 /// ABI exactly.
 pub fn load_artifact(dir: &Path) -> Result<Artifact> {
     let disk = Manifest::load(dir)?;
+    let params = disk.load_params(dir)?;
+    assemble_artifact(dir.to_path_buf(), disk, params)
+}
+
+/// Rebuild a native artifact from an already-parsed manifest plus a
+/// full manifest-ordered parameter vector — the shared tail of
+/// [`load_artifact`] and the statefile loader (`Backend::assemble`),
+/// which reads both out of a single `.state` file. `dir` is a
+/// provenance label only.
+pub fn assemble_artifact(dir: PathBuf, disk: Manifest,
+                         params: Vec<Tensor>) -> Result<Artifact> {
     let cfg = NetCfg {
         arch: NetCfg::arch_from_str(&disk.arch)?,
         dim: disk.dim,
@@ -358,14 +369,13 @@ pub fn load_artifact(dir: &Path) -> Result<Artifact> {
                 "param mismatch: native {:?}{:?} vs manifest {:?}{:?}",
                 a.name, a.shape, b.name, b.shape);
     }
-    let params = disk.load_params(dir)?;
     let mut manifest = build_manifest(&disk.preset, &model, &params)?;
     // keep the exporter's selfcheck + merge table; ours replaced the
     // residual plan, which is what must match this executor
     manifest.merges = disk.merges;
     manifest.selfcheck = disk.selfcheck;
     Ok(Artifact::from_parts(
-        dir.to_path_buf(),
+        dir,
         manifest,
         params,
         Box::new(NativeExec::new(model)),

@@ -21,6 +21,7 @@ use anyhow::{ensure, Result};
 
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
+use crate::util::hash::Fnv64;
 
 /// The frozen side of a split parameter set: manifest-ordered slots,
 /// `None` where the parameter trains (those live in the per-session
@@ -33,6 +34,12 @@ pub struct FrozenBase {
     rank: Vec<usize>,
     n_trainable: usize,
     nbytes: u64,
+    /// Content fingerprint of the frozen tensors (FNV-1a 64 over slot
+    /// index, shape, and raw bytes of every frozen slot). Two bases
+    /// with the same fingerprint hold bit-identical frozen weights, so
+    /// a resumed session may re-attach to an already-resident base
+    /// instead of loading a second copy.
+    fingerprint: u64,
 }
 
 impl FrozenBase {
@@ -48,6 +55,7 @@ impl FrozenBase {
         let mut rank = vec![usize::MAX; manifest.params.len()];
         let mut trainable = Vec::new();
         let mut nbytes = 0u64;
+        let mut hash = Fnv64::new();
         for (i, (info, t)) in
             manifest.params.iter().zip(full.into_iter()).enumerate()
         {
@@ -57,11 +65,20 @@ impl FrozenBase {
                 slots.push(None);
             } else {
                 nbytes += t.nbytes() as u64;
+                hash.update(&(i as u64).to_le_bytes());
+                for &d in &t.shape {
+                    hash.update(&(d as u64).to_le_bytes());
+                }
+                hash.update(&t.data);
                 slots.push(Some(t));
             }
         }
         let n_trainable = trainable.len();
-        Ok((FrozenBase { slots, rank, n_trainable, nbytes }, trainable))
+        let fingerprint = hash.finish();
+        Ok((
+            FrozenBase { slots, rank, n_trainable, nbytes, fingerprint },
+            trainable,
+        ))
     }
 
     /// Total number of parameters (frozen + trainable).
@@ -83,6 +100,20 @@ impl FrozenBase {
     /// and the engine accounts exactly once per base.
     pub fn nbytes(&self) -> u64 {
         self.nbytes
+    }
+
+    /// Content fingerprint of the frozen side (see [`FrozenBase`]
+    /// field docs). Stable across processes: it hashes only slot
+    /// indices, shapes, and raw little-endian tensor bytes.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Frozen tensor at manifest position `i`, `None` where the
+    /// parameter trains. Used by the statefile writer to serialize the
+    /// base exactly once in manifest order.
+    pub fn slot(&self, i: usize) -> Option<&Tensor> {
+        self.slots[i].as_ref()
     }
 
     /// Reassemble a full manifest-ordered parameter vector: frozen
@@ -271,5 +302,25 @@ mod tests {
     fn split_rejects_wrong_arity() {
         let m = tiny_manifest(&[true, false]);
         assert!(FrozenBase::split(&m, full_params(3)).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_frozen_content_only() {
+        let m = tiny_manifest(&[false, true, false]);
+        let (b1, _) = FrozenBase::split(&m, full_params(3)).unwrap();
+        let (b2, _) = FrozenBase::split(&m, full_params(3)).unwrap();
+        assert_eq!(b1.fingerprint(), b2.fingerprint());
+
+        // Mutating a trainable slot leaves the fingerprint unchanged.
+        let mut full = full_params(3);
+        full[1].as_f32_mut()[0] = 99.0;
+        let (b3, _) = FrozenBase::split(&m, full).unwrap();
+        assert_eq!(b1.fingerprint(), b3.fingerprint());
+
+        // Mutating a frozen slot changes it.
+        let mut full = full_params(3);
+        full[2].as_f32_mut()[0] = 99.0;
+        let (b4, _) = FrozenBase::split(&m, full).unwrap();
+        assert_ne!(b1.fingerprint(), b4.fingerprint());
     }
 }

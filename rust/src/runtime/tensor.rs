@@ -32,6 +32,16 @@ impl DType {
         })
     }
 
+    /// Inverse of [`DType::from_manifest`]: the manifest dtype string.
+    pub fn manifest_str(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U8 => "uint8",
+            DType::I8 => "int8",
+        }
+    }
+
     /// Bytes per element.
     pub fn size(self) -> usize {
         match self {

@@ -2,5 +2,6 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod rng;

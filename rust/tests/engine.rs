@@ -331,6 +331,13 @@ fn job_spec_grammar() {
     let j = JobSpec::parse("p_full_gelu_ln:3:99", &base, 1).unwrap();
     assert_eq!(j.cfg.steps, 3);
     assert_eq!(j.cfg.seed, 99);
+    assert_eq!(j.priority, 0);
+    // 4th field: scheduling priority (may be negative)
+    let j = JobSpec::parse("p_full_gelu_ln:3:99:-2", &base, 1).unwrap();
+    assert_eq!(j.cfg.steps, 3);
+    assert_eq!(j.cfg.seed, 99);
+    assert_eq!(j.priority, -2);
+    assert!(JobSpec::parse("p:3:9:1:extra", &base, 0).is_err());
     assert!(JobSpec::parse("p:3:9:extra", &base, 0).is_err());
     assert!(JobSpec::parse("p:notanumber", &base, 0).is_err());
 }
@@ -359,4 +366,131 @@ fn trainer_facade_unchanged_after_session_refactor() {
         }
     }
     assert!(moved, "no trainable parameter moved");
+}
+
+/// Fresh per-test spool directory under the OS temp dir.
+fn spool_dir(label: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ambp_engine_test_{}_{label}", std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn preemption_admits_what_strict_rejects_and_stays_bit_identical() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(4, 3), cfg(6, 9), cfg(5, 7)];
+    let serial = serial_runs(&art, &cfgs);
+    let adm = predict(&art, &cfgs[0]);
+    let base = art.frozen_base().nbytes();
+    // fits two live sessions, not three
+    let budget = base + 2 * adm.marginal() + adm.marginal() / 2;
+
+    // strict admission provably rejects the third job at this budget
+    {
+        let mut strict = Engine::new(budget);
+        strict.admit("s0", &art, cfgs[0].clone()).unwrap();
+        strict.admit("s1", &art, cfgs[1].clone()).unwrap();
+        let err = strict
+            .admit("hi", &art, cfgs[2].clone())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("budget"), "{err}");
+    }
+
+    // the preemptive engine instead evicts the lowest-priority tenant
+    let spool = spool_dir("preempt");
+    let mut engine = Engine::new(budget);
+    engine.set_spool(spool.clone());
+    engine.enable_preempt().unwrap();
+    engine.admit_prio("s0", &art, cfgs[0].clone(), 0).unwrap();
+    engine.admit_prio("s1", &art, cfgs[1].clone(), 5).unwrap();
+    engine.admit_prio("hi", &art, cfgs[2].clone(), 10).unwrap();
+    // exactly one eviction: s0 (priority 0 < 5 < 10), spooled to disk
+    assert_eq!(engine.suspended_names(), vec!["s0".to_string()]);
+    assert!(engine.find("s0").is_none());
+    assert!(engine.find("s1").is_some());
+    assert!(engine.find("hi").is_some());
+    assert!(spool.join("s0.state").is_file());
+    assert!(engine.predicted_bytes() <= budget);
+
+    // the rounds drain s1 + hi, then pull s0 back from the spool and
+    // finish it; nothing stays suspended and the spool file is consumed
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 3);
+    assert!(engine.suspended_names().is_empty());
+    assert!(!spool.join("s0.state").exists(),
+            "resume must consume the spool file");
+
+    // every job — the preempted one included — matches its serial twin
+    // bit-for-bit, preemption round trip and all
+    for (i, name) in ["s0", "s1", "hi"].iter().enumerate() {
+        let r = reports
+            .iter()
+            .find(|r| r.name == *name)
+            .unwrap_or_else(|| panic!("{name}: no report"));
+        assert_eq!(r.report.steps, cfgs[i].steps, "{name}: steps");
+        let got: Vec<StepSig> = r
+            .report
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(got, serial[i].0, "{name}: per-step rows diverged");
+        let id = engine.find(name).unwrap();
+        assert_params_eq(&engine.session(id).params(), &serial[i].1,
+                         name);
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn suspend_resume_keeps_the_base_stored_once() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let spool = spool_dir("stored_once");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, cfg(4, 3)).unwrap();
+    engine.admit("s1", &art, cfg(4, 9)).unwrap();
+    let base = engine.base_bytes();
+    assert_eq!(base, art.frozen_base().nbytes());
+    let resident = engine.resident_param_bytes();
+    let id = engine.find("s0").unwrap();
+    let victim_bytes = engine.session(id).resident_param_bytes();
+    assert!(victim_bytes > 0);
+    let h = engine.suspend(id).unwrap();
+    assert_eq!(h.name, "s0");
+    assert_eq!(h.path, spool.join("s0.state"));
+    assert_eq!(h.steps_done, 0);
+    assert_eq!(h.steps_total, 4);
+    // suspending sheds exactly the tenant's private parameter bytes;
+    // the shared frozen base stays resident (stored once) for s1
+    assert_eq!(engine.base_bytes(), base);
+    assert_eq!(engine.resident_param_bytes(), resident - victim_bytes);
+    assert_eq!(engine.suspended_names(), vec!["s0".to_string()]);
+    // resume restores the same residency against the same base object
+    engine.resume_file(&art, &h.path).unwrap();
+    assert_eq!(engine.base_bytes(), base);
+    assert_eq!(engine.resident_param_bytes(), resident);
+    assert!(engine.suspended_names().is_empty());
+    assert!(!h.path.exists(), "resume must consume the spool file");
+    let a = engine.find("s0").unwrap();
+    let b = engine.find("s1").unwrap();
+    assert!(Arc::ptr_eq(engine.session(a).base(),
+                        engine.session(b).base()),
+            "resumed session must rejoin the shared base");
+    // a finished session holds no resumable work: suspend refuses
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 2);
+    let id = engine.find("s1").unwrap();
+    let err = engine.suspend(id).unwrap_err().to_string();
+    assert!(err.contains("finished"), "{err}");
+    let _ = std::fs::remove_dir_all(&spool);
 }

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Regenerate statefile_v1.state, the byte-exact pin of statefile
+FORMAT_VERSION 1.
+
+This is an independent reimplementation of `Writer::finish` in
+`src/coordinator/statefile.rs` — the test
+`format_is_pinned_by_fixture` in `tests/statefile.rs` compares the
+Rust writer's output byte-for-byte against the file this script
+produces (the `#[ignore]`d test `regenerate_fixture` writes the same
+bytes from the Rust side). If the two ever disagree, either the format
+changed (bump FORMAT_VERSION, update both writers, regenerate) or one
+writer has a bug.
+"""
+
+import os
+import struct
+
+MAGIC = b"AMBPSTF\0"
+FORMAT_VERSION = 1
+HEADER_LEN = 32
+INDEX_ENTRY_LEN = 32
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(data, h=FNV_OFFSET):
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def align64(x):
+    return (x + 63) & ~63
+
+
+def finish(sections):
+    """Mirror of Writer::finish: header, index, string table, 64-byte
+    aligned payloads, per-payload FNV-1a 64 checksums, whole-file
+    checksum over bytes[0..24] ++ bytes[32..len]."""
+    n = len(sections)
+    strtab_off = HEADER_LEN + n * INDEX_ENTRY_LEN
+    strtab = b""
+    name_pos = []
+    for name, _ in sections:
+        name_pos.append((strtab_off + len(strtab), len(name)))
+        strtab += name.encode()
+    cur = strtab_off + len(strtab)
+    payload_pos = []
+    for _, data in sections:
+        off = align64(cur)
+        payload_pos.append((off, len(data)))
+        cur = off + len(data)
+    file_len = cur
+
+    buf = bytearray(file_len)
+    buf[0:8] = MAGIC
+    buf[8:12] = struct.pack("<I", FORMAT_VERSION)
+    buf[12:16] = struct.pack("<I", n)
+    buf[16:24] = struct.pack("<Q", file_len)
+    # buf[24:32] = file checksum, written last
+    for i, (name, data) in enumerate(sections):
+        noff, nlen = name_pos[i]
+        off, ln = payload_pos[i]
+        e = HEADER_LEN + i * INDEX_ENTRY_LEN
+        buf[e : e + 4] = struct.pack("<I", noff)
+        buf[e + 4 : e + 8] = struct.pack("<I", nlen)
+        buf[e + 8 : e + 16] = struct.pack("<Q", off)
+        buf[e + 16 : e + 24] = struct.pack("<Q", ln)
+        buf[e + 24 : e + 32] = struct.pack("<Q", fnv1a64(data))
+        buf[off : off + ln] = data
+    buf[strtab_off : strtab_off + len(strtab)] = strtab
+    checksum = fnv1a64(bytes(buf[HEADER_LEN:]), fnv1a64(bytes(buf[0:24])))
+    buf[24:32] = struct.pack("<Q", checksum)
+    return bytes(buf)
+
+
+def main():
+    # Keep in sync with fixture_writer() in tests/statefile.rs.
+    sections = [
+        ("fixture.meta", b"ambp statefile fixture v1\n"),
+        ("fixture.data", struct.pack("<4f", 1.0, 2.0, -3.5, 4.25)),
+    ]
+    out = finish(sections)
+    path = os.path.join(os.path.dirname(__file__), "statefile_v1.state")
+    with open(path, "wb") as f:
+        f.write(out)
+    print(f"wrote {len(out)} bytes to {path}")
+
+
+if __name__ == "__main__":
+    main()

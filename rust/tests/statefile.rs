@@ -1,0 +1,502 @@
+//! Durable-state test suite: the crash/corruption/bit-identity pins
+//! for the statefile format and suspend/resume.
+//!
+//! * Format pin: the committed fixture `tests/fixtures/statefile_v1.state`
+//!   must equal the Rust writer's output byte-for-byte — any layout
+//!   change fails here until `FORMAT_VERSION` is bumped and the
+//!   fixture regenerated (`cargo test -- --ignored regenerate_fixture`
+//!   or `python3 tests/fixtures/gen_statefile_v1.py`).
+//! * Corruption robustness: every single-bit flip and every truncation
+//!   of a statefile yields a typed `StateError` naming the damaged
+//!   region — never a panic, never a silent load.
+//! * Bit identity: suspend at step k + resume equals an uninterrupted
+//!   run byte-for-byte (per-step loss/metric/activation signatures and
+//!   final trainables) across presets and worker-thread counts,
+//!   including resuming under a different thread count than the
+//!   suspend ran with.
+
+use std::path::{Path, PathBuf};
+
+use ambp::coordinator::checkpoint::Checkpoint;
+use ambp::coordinator::statefile::{
+    self, StateError, StateFile, Writer, FORMAT_VERSION, MAGIC,
+};
+use ambp::coordinator::{Session, StepOutcome, TrainCfg};
+use ambp::runtime::native::pool::with_threads;
+use ambp::runtime::{Artifact, Runtime, Tensor};
+
+const FIXTURE: &str = "tests/fixtures/statefile_v1.state";
+
+fn rt() -> Runtime {
+    Runtime::cpu().expect("native runtime")
+}
+
+fn cfg(steps: usize, seed: u64) -> TrainCfg {
+    TrainCfg {
+        steps,
+        lr: 2e-3,
+        log_every: 0,
+        eval_batches: 2,
+        seed,
+        ..TrainCfg::default()
+    }
+}
+
+/// Scratch path under the OS temp dir, unique per label (tests run in
+/// one process; labels keep parallel test threads apart).
+fn scratch(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ambp_statefile_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(label)
+}
+
+/// `unwrap_err` without a `Debug` bound on the success type
+/// (`Session` and `Checkpoint` don't implement it).
+fn err_of<T, E>(r: Result<T, E>, what: &str) -> E {
+    match r {
+        Err(e) => e,
+        Ok(_) => panic!("{what} unexpectedly succeeded"),
+    }
+}
+
+/// The exact sections `gen_statefile_v1.py` writes — keep in sync.
+fn fixture_writer() -> Writer {
+    let mut w = Writer::new();
+    w.add("fixture.meta", b"ambp statefile fixture v1\n".to_vec());
+    let mut data = Vec::new();
+    for v in [1.0f32, 2.0, -3.5, 4.25] {
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    w.add("fixture.data", data);
+    w
+}
+
+// ---------------------------------------------------------------------
+// Format pin
+// ---------------------------------------------------------------------
+
+#[test]
+fn format_is_pinned_by_fixture() {
+    assert_eq!(MAGIC, *b"AMBPSTF\0");
+    assert_eq!(FORMAT_VERSION, 1);
+    let want = std::fs::read(FIXTURE)
+        .expect("fixture missing — run tests from the rust/ package root");
+    let got = fixture_writer().finish();
+    assert_eq!(
+        got, want,
+        "the on-disk statefile layout changed without a fixture \
+         update: bump FORMAT_VERSION in src/coordinator/statefile.rs, \
+         then regenerate tests/fixtures/statefile_v1.state (cargo test \
+         -- --ignored regenerate_fixture, and keep \
+         tests/fixtures/gen_statefile_v1.py in sync)"
+    );
+}
+
+#[test]
+fn fixture_parses_and_sections_read_zero_copy() {
+    let buf = std::fs::read(FIXTURE).unwrap();
+    let sf = StateFile::parse(&buf).unwrap();
+    assert_eq!(sf.names(), vec!["fixture.meta", "fixture.data"]);
+    assert_eq!(sf.section("fixture.meta").unwrap(),
+               b"ambp statefile fixture v1\n");
+    let data = sf.section("fixture.data").unwrap();
+    // payloads are 64-byte aligned within the file
+    let off = data.as_ptr() as usize - buf.as_ptr() as usize;
+    assert_eq!(off % 64, 0, "payload not 64-byte aligned");
+    let vals: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    assert_eq!(vals, vec![1.0, 2.0, -3.5, 4.25]);
+    assert!(matches!(sf.section("nope"),
+                     Err(StateError::MissingSection { .. })));
+}
+
+/// Rewrites the fixture from the Rust writer. Run only after an
+/// intentional format change (with a FORMAT_VERSION bump):
+/// `cargo test --test statefile -- --ignored regenerate_fixture`
+#[test]
+#[ignore]
+fn regenerate_fixture() {
+    fixture_writer().write(Path::new(FIXTURE)).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Corruption robustness
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_single_bit_flip_is_a_typed_error() {
+    let clean = std::fs::read(FIXTURE).unwrap();
+    assert!(StateFile::parse(&clean).is_ok());
+    // fixture geometry (asserted so region attribution stays honest)
+    let meta_payload = 128..154usize;
+    let data_payload = 192..208usize;
+    assert_eq!(clean.len(), data_payload.end);
+    for byte in 0..clean.len() {
+        for bit in 0..8 {
+            let mut buf = clean.clone();
+            buf[byte] ^= 1 << bit;
+            let err = match StateFile::parse(&buf) {
+                Err(e) => e,
+                Ok(_) => panic!(
+                    "flip of byte {byte} bit {bit} loaded silently"
+                ),
+            };
+            match byte {
+                0..=7 => assert!(
+                    matches!(err, StateError::BadMagic { .. }),
+                    "byte {byte}: {err}"
+                ),
+                8..=11 => assert!(
+                    matches!(err,
+                             StateError::UnsupportedVersion { .. }),
+                    "byte {byte}: {err}"
+                ),
+                16..=23 => assert!(
+                    matches!(&err,
+                             StateError::Truncated { section, .. }
+                                 if section == "file"),
+                    "byte {byte}: {err}"
+                ),
+                24..=31 => assert!(
+                    matches!(&err,
+                             StateError::ChecksumMismatch { section, .. }
+                                 if section == "index"),
+                    "byte {byte}: {err}"
+                ),
+                b if meta_payload.contains(&b) => assert!(
+                    matches!(&err,
+                             StateError::ChecksumMismatch { section, .. }
+                                 if section == "fixture.meta"),
+                    "byte {byte}: {err}"
+                ),
+                b if data_payload.contains(&b) => assert!(
+                    matches!(&err,
+                             StateError::ChecksumMismatch { section, .. }
+                                 if section == "fixture.data"),
+                    "byte {byte}: {err}"
+                ),
+                // section count, index entries, string table, padding:
+                // always detected, attribution varies with the flip
+                _ => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncation_and_any_extension_is_typed() {
+    let clean = std::fs::read(FIXTURE).unwrap();
+    for cut in 0..clean.len() {
+        let buf = &clean[..cut];
+        let err = match StateFile::parse(buf) {
+            Err(e) => e,
+            Ok(_) => panic!("truncation to {cut} bytes loaded silently"),
+        };
+        if cut < 32 {
+            assert!(
+                matches!(&err, StateError::Truncated { section, .. }
+                             if section == "header"),
+                "cut {cut}: {err}"
+            );
+        } else {
+            assert!(
+                matches!(&err, StateError::Truncated { section, .. }
+                             if section == "file"),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+    let mut extended = clean.clone();
+    extended.push(0);
+    assert!(matches!(
+        StateFile::parse(&extended),
+        Err(StateError::Truncated { ref section, .. })
+            if section == "file"
+    ));
+}
+
+#[test]
+fn future_version_is_refused_before_checksum() {
+    // a well-formed file from a hypothetical v2 writer: version bumped,
+    // checksum recomputed so only the version check can refuse it
+    let mut buf = fixture_writer().finish();
+    buf[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let mut h = ambp::util::hash::Fnv64::new();
+    h.update(&buf[0..24]);
+    h.update(&buf[32..]);
+    let sum = h.finish();
+    buf[24..32].copy_from_slice(&sum.to_le_bytes());
+    assert_eq!(
+        StateFile::parse(&buf).unwrap_err(),
+        StateError::UnsupportedVersion { found: 2, supported: 1 }
+    );
+}
+
+#[test]
+fn corrupted_session_statefile_never_resumes() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let mut s = Session::new(&art, cfg(4, 1)).unwrap();
+    s.step().unwrap();
+    let path = scratch("corrupt_session.state");
+    statefile::save_session(&path, "victim", 0, &s.into_state())
+        .unwrap();
+    let clean = std::fs::read(&path).unwrap();
+    assert!(statefile::load_session(&path).is_ok());
+    // bit-flip a sweep of offsets across the whole file (headers,
+    // index, tensor payloads): load must fail typed, never panic
+    for byte in (0..clean.len()).step_by(97) {
+        let mut buf = clean.clone();
+        buf[byte] ^= 0x10;
+        std::fs::write(&path, &buf).unwrap();
+        let err = err_of(statefile::load_session(&path),
+                         "loading a corrupt session statefile");
+        assert!(err.is::<StateError>(),
+                "byte {byte}: untyped error {err}");
+    }
+    // truncations too
+    for cut in [0, 1, 31, 32, clean.len() / 2, clean.len() - 1] {
+        std::fs::write(&path, &clean[..cut]).unwrap();
+        assert!(statefile::load_session(&path).is_err(),
+                "truncation to {cut} bytes loaded");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn resume_against_the_wrong_artifact_is_refused() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let other = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let mut s = Session::new(&art, cfg(4, 1)).unwrap();
+    s.step().unwrap();
+    let state = s.into_state();
+    // preset mismatch caught before any tensor is touched
+    let err = err_of(Session::resume(&other, state.clone()),
+                     "cross-preset resume");
+    assert!(err.to_string().contains("preset"), "{err}");
+    // same preset, different frozen weights: the fingerprint refuses
+    let mut tampered = state.clone();
+    tampered.base_fingerprint ^= 1;
+    let err = err_of(Session::resume(&art, tampered),
+                     "wrong-fingerprint resume");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    // and the untampered state still resumes
+    assert!(Session::resume(&art, state).is_ok());
+}
+
+// ---------------------------------------------------------------------
+// Bit identity: suspend + resume == uninterrupted
+// ---------------------------------------------------------------------
+
+/// (loss bits, metric bits, activation bytes) per step.
+type StepSig = (u32, u32, u64);
+
+fn sig(s: &ambp::coordinator::StepStats) -> StepSig {
+    (s.loss.to_bits(), s.metric.to_bits(), s.activation_bytes)
+}
+
+fn run_uninterrupted(art: &Artifact,
+                     c: &TrainCfg) -> (Vec<StepSig>, Vec<Tensor>) {
+    let mut s = Session::new(art, c.clone()).unwrap();
+    let mut rows = Vec::new();
+    while let StepOutcome::Stepped(st) = s.step().unwrap() {
+        rows.push(sig(&st));
+    }
+    (rows, s.params())
+}
+
+/// Step to k, spool to disk, reload, resume to completion — the rows
+/// span the whole run, pre- and post-suspend.
+fn run_with_suspend(art: &Artifact, c: &TrainCfg, k: usize,
+                    path: &Path) -> (Vec<StepSig>, Vec<Tensor>) {
+    let mut s = Session::new(art, c.clone()).unwrap();
+    let mut rows = Vec::new();
+    for _ in 0..k {
+        match s.step().unwrap() {
+            StepOutcome::Stepped(st) => rows.push(sig(&st)),
+            StepOutcome::Exhausted => panic!("suspend point beyond run"),
+        }
+    }
+    let handle =
+        statefile::save_session(path, "t", 0, &s.into_state()).unwrap();
+    assert_eq!(handle.steps_done, k);
+    assert_eq!(handle.steps_total, c.steps);
+    // the envelope peek agrees with the full load
+    let peeked = statefile::peek_session(path).unwrap();
+    assert_eq!(peeked.steps_done, k);
+    assert_eq!(peeked.preset, art.manifest.preset);
+    let saved = statefile::load_session(path).unwrap();
+    assert_eq!(saved.state.rows.len(), k);
+    let mut s2 = Session::resume(art, saved.state).unwrap();
+    assert_eq!(s2.steps_done(), k);
+    while let StepOutcome::Stepped(st) = s2.step().unwrap() {
+        rows.push(sig(&st));
+    }
+    std::fs::remove_file(path).unwrap();
+    (rows, s2.params())
+}
+
+fn assert_params_eq(a: &[Tensor], b: &[Tensor], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{label}: param {i} differs");
+    }
+}
+
+fn suspend_resume_grid(threads_label: &str) {
+    let rt = rt();
+    for preset in ["vitt_loraqv_regelu2_msln",
+                   "vitt_loraqv_gelu_ln_mesa",
+                   "vitt_loraqv_gelu_ln_ckpt",
+                   "llama_loraall_silu_rms_swiglu"] {
+        let art = Artifact::synth(&rt, preset).unwrap();
+        let c = cfg(5, 3);
+        let (want_rows, want_params) = run_uninterrupted(&art, &c);
+        assert_eq!(want_rows.len(), 5);
+        let path =
+            scratch(&format!("grid_{threads_label}_{preset}.state"));
+        let (got_rows, got_params) =
+            run_with_suspend(&art, &c, 2, &path);
+        assert_eq!(got_rows, want_rows,
+                   "{preset} [{threads_label}]: per-step signatures \
+                    diverged across suspend/resume");
+        assert_params_eq(&got_params, &want_params,
+                         &format!("{preset} [{threads_label}]"));
+    }
+}
+
+#[test]
+fn suspend_resume_bit_identical_1_thread() {
+    with_threads(1, || suspend_resume_grid("t1"));
+}
+
+#[test]
+fn suspend_resume_bit_identical_4_threads() {
+    with_threads(4, || suspend_resume_grid("t4"));
+}
+
+#[test]
+fn resume_under_a_different_thread_count_still_matches() {
+    // the kernels are bit-identical across worker counts, so a session
+    // suspended under 1 thread and resumed under 4 must equal the
+    // uninterrupted single-thread run
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let c = cfg(5, 11);
+    let (want_rows, want_params) =
+        with_threads(1, || run_uninterrupted(&art, &c));
+    let path = scratch("cross_thread.state");
+    let mut rows = Vec::new();
+    with_threads(1, || {
+        let mut s = Session::new(&art, c.clone()).unwrap();
+        for _ in 0..2 {
+            match s.step().unwrap() {
+                StepOutcome::Stepped(st) => rows.push(sig(&st)),
+                StepOutcome::Exhausted => panic!(),
+            }
+        }
+        statefile::save_session(&path, "x", 0, &s.into_state())
+            .unwrap();
+    });
+    let got_params = with_threads(4, || {
+        let saved = statefile::load_session(&path).unwrap();
+        let mut s = Session::resume(&art, saved.state).unwrap();
+        while let StepOutcome::Stepped(st) = s.step().unwrap() {
+            rows.push(sig(&st));
+        }
+        s.params()
+    });
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(rows, want_rows, "cross-thread resume diverged");
+    assert_params_eq(&got_params, &want_params, "cross-thread");
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint + artifact containers on the same format
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_on_statefile_roundtrips_and_detects_corruption() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let params = art.load_params().unwrap();
+    let ck = Checkpoint::from_params(&art.manifest, &params);
+    let dir = scratch("ckpt_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    ck.save(&dir).unwrap();
+    // single statefile, no legacy two-file format
+    assert!(dir.join("ckpt.state").is_file());
+    assert!(!dir.join("ckpt.json").exists());
+    assert!(!dir.join("ckpt.bin").exists());
+    let ck2 = Checkpoint::load(&dir).unwrap();
+    assert_eq!(ck2.tensors.len(), params.len());
+    for (info, p) in art.manifest.params.iter().zip(&params) {
+        let t = &ck2.tensors[&info.name];
+        assert_eq!(t.shape, p.shape, "{}", info.name);
+        assert_eq!(t.data, p.data, "{}", info.name);
+    }
+    // restore round-trips through a manifest-ordered vector
+    let mut restored = art.load_params().unwrap();
+    let n = ck2.restore(&art.manifest, &mut restored).unwrap();
+    assert_eq!(n, params.len());
+    // corruption in the tensor payload is a typed refusal
+    let file = dir.join("ckpt.state");
+    let mut buf = std::fs::read(&file).unwrap();
+    let mid = buf.len() / 2;
+    buf[mid] ^= 0x40;
+    std::fs::write(&file, &buf).unwrap();
+    let err = err_of(Checkpoint::load(&dir),
+                     "loading a corrupt checkpoint");
+    assert!(err.is::<StateError>(), "untyped error: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn artifact_statefile_reconstructs_the_same_model() {
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let path = scratch("artifact.state");
+    statefile::save_artifact(&path, &art).unwrap();
+    let art2 = statefile::load_artifact(&rt, &path).unwrap();
+    assert_eq!(art2.manifest.preset, art.manifest.preset);
+    assert_eq!(art2.manifest.params.len(), art.manifest.params.len());
+    assert_eq!(art2.manifest.residual_bytes_total,
+               art.manifest.residual_bytes_total);
+    assert_eq!(art2.frozen_base().fingerprint(),
+               art.frozen_base().fingerprint(),
+               "frozen-base fingerprint changed across the container");
+    assert_params_eq(&art2.load_params().unwrap(),
+                     &art.load_params().unwrap(), "artifact params");
+    // the reconstructed artifact trains bit-identically
+    let c = cfg(2, 5);
+    let (rows_a, params_a) = run_uninterrupted(&art, &c);
+    let (rows_b, params_b) = run_uninterrupted(&art2, &c);
+    assert_eq!(rows_a, rows_b, "reloaded artifact steps diverged");
+    assert_params_eq(&params_a, &params_b, "reloaded artifact");
+    // a session suspended on the original resumes on the reloaded
+    // artifact — the fingerprint proves the bases are the same bytes
+    let spath = scratch("artifact_session.state");
+    let (rows_c, params_c) = {
+        let mut s = Session::new(&art, c.clone()).unwrap();
+        let mut rows = vec![match s.step().unwrap() {
+            StepOutcome::Stepped(st) => sig(&st),
+            StepOutcome::Exhausted => panic!(),
+        }];
+        statefile::save_session(&spath, "m", 0, &s.into_state())
+            .unwrap();
+        let saved = statefile::load_session(&spath).unwrap();
+        let mut s2 = Session::resume(&art2, saved.state).unwrap();
+        while let StepOutcome::Stepped(st) = s2.step().unwrap() {
+            rows.push(sig(&st));
+        }
+        (rows, s2.params())
+    };
+    std::fs::remove_file(&spath).unwrap();
+    assert_eq!(rows_c, rows_a, "cross-container resume diverged");
+    assert_params_eq(&params_c, &params_a, "cross-container resume");
+    std::fs::remove_file(&path).unwrap();
+}
