@@ -33,6 +33,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::memory::MemoryTracker;
 use crate::coordinator::session::{Session, StepOutcome};
 use crate::coordinator::statefile::{self, SavedSession, SessionHandle};
+use crate::coordinator::supervisor::{self, FaultKind, FaultRecord};
 use crate::coordinator::trainer::{TrainCfg, TrainReport};
 use crate::memmodel::{total_bytes, MemCfg};
 use crate::runtime::{Artifact, Runtime};
@@ -157,16 +158,46 @@ pub fn predict(art: &Artifact, cfg: &TrainCfg) -> Admission {
     }
 }
 
+/// How one admitted session ended.
+pub enum SessionOutcome {
+    /// The session ran its full step budget; here is its report.
+    Completed(TrainReport),
+    /// The supervisor isolated a fault: the session was removed from
+    /// the fleet (its last good state spooled to
+    /// `<name>.quarantine.state` when a spool directory exists) and
+    /// every other tenant kept running.
+    Quarantined(FaultRecord),
+}
+
 /// Final engine output for one session.
 pub struct EngineReport {
     /// Session name (from `admit`).
     pub name: String,
     /// Preset the session trained.
     pub preset: String,
-    /// What admission predicted.
-    pub admission: Admission,
-    /// The session's training report.
-    pub report: TrainReport,
+    /// What admission predicted (`None` only for sessions that never
+    /// reached admission, e.g. a spool file quarantined at scan time).
+    pub admission: Option<Admission>,
+    /// How the session ended.
+    pub outcome: SessionOutcome,
+}
+
+impl EngineReport {
+    /// The training report, when the session completed.
+    pub fn train(&self) -> Option<&TrainReport> {
+        match &self.outcome {
+            SessionOutcome::Completed(r) => Some(r),
+            SessionOutcome::Quarantined(_) => None,
+        }
+    }
+
+    /// The fault record, when the session was quarantined.
+    pub fn fault(&self) -> Option<&FaultRecord> {
+        match &self.outcome {
+            SessionOutcome::Completed(_) => None,
+            SessionOutcome::Quarantined(rec) => Some(rec),
+        }
+    }
 }
 
 struct Slot<'a> {
@@ -175,6 +206,9 @@ struct Slot<'a> {
     admission: Admission,
     priority: i64,
     done: bool,
+    /// Consecutive supervised-step I/O retries since the last good
+    /// step (reset on success; bounded by `Engine::max_retries`).
+    retries: u32,
 }
 
 /// A session evicted to disk: the durable handle plus the resident
@@ -199,6 +233,17 @@ pub struct Engine<'a> {
     preempt: bool,
     /// Sessions currently evicted to the spool.
     suspended: Vec<Suspended<'a>>,
+    /// Fail-fast mode: any session fault aborts the whole fleet run
+    /// (the pre-supervision behavior). Off by default — the supervisor
+    /// isolates faults per tenant instead.
+    strict: bool,
+    /// Bound on consecutive transient-I/O retries per session before
+    /// the fault is treated as terminal and the session quarantined.
+    max_retries: u32,
+    /// Sessions the supervisor removed from the fleet this run, with
+    /// the admission they held (if any); drained into
+    /// [`EngineReport`]s by [`Engine::run`].
+    quarantined: Vec<(Option<Admission>, FaultRecord)>,
     /// Fleet-wide measured accounting: `current_bytes` carries the
     /// resident set (bases + trainables + optimizer state), the peak
     /// adds every admitted session's measured tape+grad peak — the
@@ -218,8 +263,24 @@ impl<'a> Engine<'a> {
             spool: None,
             preempt: false,
             suspended: Vec::new(),
+            strict: false,
+            max_retries: 2,
+            quarantined: Vec::new(),
             fleet: MemoryTracker::new(),
         }
+    }
+
+    /// Fail-fast mode: propagate the first session fault out of
+    /// [`Engine::round`] instead of isolating it (the `--strict`
+    /// behavior). Off by default.
+    pub fn set_strict(&mut self, strict: bool) {
+        self.strict = strict;
+    }
+
+    /// Bound on consecutive transient-I/O retries per session before
+    /// the supervisor quarantines it (default 2).
+    pub fn set_max_retries(&mut self, max_retries: u32) {
+        self.max_retries = max_retries;
     }
 
     /// Set the directory suspended sessions spool to. Required before
@@ -321,6 +382,12 @@ impl<'a> Engine<'a> {
     /// error.
     pub fn admit_prio(&mut self, name: &str, art: &'a Artifact,
                       cfg: TrainCfg, priority: i64) -> Result<usize> {
+        ensure!(
+            self.find(name).is_none()
+                && !self.suspended.iter().any(|s| s.handle.name == name),
+            "admission rejected for {name}: a session with that name \
+             is already resident or suspended"
+        );
         let admission = predict(art, &cfg);
         let base = art.frozen_base();
         let key = Arc::as_ptr(&base) as usize;
@@ -353,10 +420,19 @@ impl<'a> Engine<'a> {
                     if self.predicted_bytes() + needed <= self.budget {
                         break;
                     }
-                    let id = self
-                        .find(&victim)
-                        .expect("victim still resident");
-                    self.suspend(id)?;
+                    // a victim may have vanished (e.g. quarantined by
+                    // the supervisor between selection and eviction):
+                    // degrade to the ordinary rejected-admission path
+                    // instead of panicking
+                    let Some(id) = self.find(&victim) else { break };
+                    match self.suspend(id) {
+                        Ok(_) => {}
+                        Err(e) if self.strict => return Err(e),
+                        // eviction failed (e.g. spool I/O): the victim
+                        // was restored in place, so stop evicting and
+                        // let the fit check below reject the admission
+                        Err(_) => break,
+                    }
                 }
             }
         }
@@ -398,6 +474,7 @@ impl<'a> Engine<'a> {
             admission,
             priority,
             done: false,
+            retries: 0,
         });
         Ok(self.slots.len() - 1)
     }
@@ -450,15 +527,60 @@ impl<'a> Engine<'a> {
             self.slots[id].name
         );
         let slot = self.slots.remove(id);
-        let Slot { name, session, admission, priority, .. } = slot;
+        let Slot { name, session, admission, priority, done, retries } =
+            slot;
         let art = session.artifact();
         let state = session.into_state();
         let path = spool.join(format!("{name}.state"));
-        let handle =
-            statefile::save_session(&path, &name, priority, &state)?;
-        let out = handle.clone();
-        self.suspended.push(Suspended { handle, art, admission });
-        Ok(out)
+        let saved = if self.strict {
+            statefile::save_session(&path, &name, priority, &state)
+        } else {
+            supervisor::with_io_retry(self.max_retries + 1, || {
+                supervisor::catch_fault(|| {
+                    statefile::save_session(&path, &name, priority,
+                                            &state)
+                })
+            })
+        };
+        match saved {
+            Ok(handle) => {
+                let out = handle.clone();
+                self.suspended.push(Suspended {
+                    handle,
+                    art,
+                    admission,
+                });
+                Ok(out)
+            }
+            Err(e) => {
+                // spooling failed: rebuild the live session from the
+                // state we just took so no work is lost — the slot
+                // returns to its old position and the caller decides
+                // what to do with the error
+                match supervisor::catch_fault(|| {
+                    Session::resume(art, state)
+                }) {
+                    Ok(session) => {
+                        self.slots.insert(id, Slot {
+                            name: name.clone(),
+                            session,
+                            admission,
+                            priority,
+                            done,
+                            retries,
+                        });
+                        Err(e.context(format!(
+                            "suspending {name} failed; session \
+                             restored in place"
+                        )))
+                    }
+                    Err(re) => Err(e.context(format!(
+                        "suspending {name} failed AND restoring the \
+                         live session failed ({re:#}); session lost"
+                    ))),
+                }
+            }
+        }
     }
 
     /// Suspend every unfinished resident session (checkpoint-on-halt:
@@ -505,6 +627,7 @@ impl<'a> Engine<'a> {
             admission,
             priority,
             done,
+            retries: 0,
         });
         if let Some(p) = origin {
             std::fs::remove_file(p).with_context(|| {
@@ -584,20 +707,211 @@ impl<'a> Engine<'a> {
         Ok(resumed)
     }
 
+    /// [`Engine::try_resume_suspended`] under supervision: a statefile
+    /// that refuses to load (after bounded I/O retries) is quarantined
+    /// — renamed to `<name>.quarantine.state` with a report beside it —
+    /// instead of failing the round, and the scan moves on. Resolving a
+    /// blocking entry either way counts as progress, so the deadlock
+    /// detector never trips on a file the supervisor just retired.
+    fn try_resume_suspended_supervised(&mut self) -> usize {
+        let mut resumed = 0usize;
+        loop {
+            let mut order: Vec<usize> =
+                (0..self.suspended.len()).collect();
+            order.sort_by_key(|&i| {
+                std::cmp::Reverse(self.suspended[i].handle.priority)
+            });
+            let picked = order.into_iter().find(|&i| {
+                let s = &self.suspended[i];
+                self.predicted_bytes()
+                    + self.base_cost_for(s.art)
+                    + s.admission.marginal()
+                    <= self.budget
+            });
+            let Some(i) = picked else { break };
+            let s = self.suspended.remove(i);
+            let attempt =
+                supervisor::with_io_retry(self.max_retries + 1, || {
+                    supervisor::catch_fault(|| {
+                        statefile::load_session(&s.handle.path)
+                    })
+                })
+                .and_then(|saved| {
+                    supervisor::catch_fault(|| {
+                        self.resume_saved(saved, s.art,
+                                          Some(&s.handle.path))
+                    })
+                });
+            match attempt {
+                Ok(_) => resumed += 1,
+                Err(e) => {
+                    let kind = supervisor::classify(&e);
+                    let mut rec = FaultRecord {
+                        name: s.handle.name.clone(),
+                        preset: s.handle.preset.clone(),
+                        kind,
+                        step: s.handle.steps_done,
+                        retries: if kind == FaultKind::Io {
+                            self.max_retries
+                        } else {
+                            0
+                        },
+                        detail: format!("{e:?}"),
+                        state_path: None,
+                        report_path: None,
+                    };
+                    if s.handle.path.exists() {
+                        if let Err(e2) = supervisor::quarantine_file(
+                            &s.handle.path,
+                            &mut rec,
+                        ) {
+                            rec.detail.push_str(&format!(
+                                "; quarantine failed: {e2:?}"
+                            ));
+                        }
+                    }
+                    self.quarantined.push((Some(s.admission), rec));
+                    // the blocking entry is resolved — that is
+                    // progress for the deadlock detector
+                    resumed += 1;
+                }
+            }
+        }
+        resumed
+    }
+
+    /// Remove slot `idx` from the fleet as a quarantined tenant: its
+    /// last good state is spooled to `<name>.quarantine.state` (when a
+    /// spool directory is set) with a diagnostic report beside it, and
+    /// the record is queued for [`Engine::run`]'s output. Infallible —
+    /// quarantine is the error path's terminal state, so secondary
+    /// failures (e.g. the quarantine write itself faulting) are folded
+    /// into the record's detail instead of propagating.
+    fn quarantine_slot(&mut self, idx: usize, kind: FaultKind,
+                       detail: String) {
+        let slot = self.slots.remove(idx);
+        let Slot { name, session, admission, priority, retries, .. } =
+            slot;
+        let mut rec = FaultRecord {
+            name: name.clone(),
+            preset: session.artifact().manifest.preset.clone(),
+            kind,
+            step: session.steps_done(),
+            retries,
+            detail,
+            state_path: None,
+            report_path: None,
+        };
+        if let Some(spool) = self.spool.clone() {
+            let qpath = supervisor::quarantine_state_path(&spool, &name);
+            let state = session.into_state();
+            let saved =
+                supervisor::with_io_retry(self.max_retries + 1, || {
+                    supervisor::catch_fault(|| {
+                        statefile::save_session(&qpath, &name, priority,
+                                                &state)
+                    })
+                });
+            match saved {
+                Ok(_) => rec.state_path = Some(qpath),
+                Err(e) => rec.detail.push_str(&format!(
+                    "; quarantine state write failed: {e:?}"
+                )),
+            }
+            match supervisor::write_report(&spool, &rec) {
+                Ok(p) => rec.report_path = Some(p),
+                Err(e) => rec.detail.push_str(&format!(
+                    "; quarantine report write failed: {e:?}"
+                )),
+            }
+        }
+        self.quarantined.push((Some(admission), rec));
+    }
+
     /// Advance every unfinished resident session by one optimizer
     /// step, in admission order, then resume any suspended sessions
     /// that now fit the freed budget. Returns how many sessions made
     /// progress — stepped or came back from the spool (0 = all work
     /// exhausted). Fleet accounting is refreshed after the sweep.
+    ///
+    /// In the default (supervised) mode a faulting tenant never fails
+    /// the round: transient I/O faults are retried from the last good
+    /// state up to `max_retries` times, everything else quarantines the
+    /// tenant ([`Engine::quarantine_slot`]) and the sweep continues.
+    /// Under [`Engine::set_strict`] the first fault propagates, as it
+    /// did before supervision existed.
     pub fn round(&mut self) -> Result<usize> {
         let mut stepped = 0usize;
-        for slot in &mut self.slots {
-            if slot.done {
+        let mut i = 0usize;
+        while i < self.slots.len() {
+            if self.slots[i].done {
+                i += 1;
                 continue;
             }
-            match slot.session.step()? {
-                StepOutcome::Stepped(_) => stepped += 1,
-                StepOutcome::Exhausted => slot.done = true,
+            if self.strict {
+                match self.slots[i].session.step()? {
+                    StepOutcome::Stepped(_) => stepped += 1,
+                    StepOutcome::Exhausted => self.slots[i].done = true,
+                }
+                i += 1;
+                continue;
+            }
+            let name = self.slots[i].name.clone();
+            let r = supervisor::supervised_step(
+                &name,
+                &mut self.slots[i].session,
+            );
+            match r {
+                Ok(StepOutcome::Stepped(_)) => {
+                    self.slots[i].retries = 0;
+                    stepped += 1;
+                    i += 1;
+                }
+                Ok(StepOutcome::Exhausted) => {
+                    self.slots[i].done = true;
+                    i += 1;
+                }
+                Err(e) => {
+                    let kind = supervisor::classify(&e);
+                    if kind == FaultKind::Io
+                        && self.slots[i].retries < self.max_retries
+                    {
+                        // transient: rebuild the session bit-exactly
+                        // from its last good (pre-step) state — the
+                        // failed attempt may have consumed prefetched
+                        // batches, and resume replays the data stream
+                        // from the committed step counter
+                        self.slots[i].retries += 1;
+                        supervisor::backoff(self.slots[i].retries);
+                        let art = self.slots[i].session.artifact();
+                        let snap = self.slots[i].session.snapshot();
+                        let rebuilt = supervisor::catch_fault(|| {
+                            Session::resume(art, snap)
+                        });
+                        match rebuilt {
+                            Ok(fresh) => {
+                                self.slots[i].session = fresh;
+                                // the retry is scheduled work: count it
+                                // as progress so run() comes back for
+                                // the re-attempt
+                                stepped += 1;
+                                i += 1;
+                            }
+                            Err(re) => {
+                                self.quarantine_slot(
+                                    i,
+                                    kind,
+                                    format!(
+                                        "{e:?}; retry rebuild \
+                                         failed: {re:?}"
+                                    ),
+                                );
+                            }
+                        }
+                    } else {
+                        self.quarantine_slot(i, kind, format!("{e:?}"));
+                    }
+                }
             }
         }
         // capacity-planning peak: resident set + every session's
@@ -610,7 +924,11 @@ impl<'a> Engine<'a> {
             .map(|s| s.session.memory.peak_bytes)
             .sum();
         self.fleet.observe_extra(tapes);
-        let resumed = self.try_resume_suspended()?;
+        let resumed = if self.strict {
+            self.try_resume_suspended()?
+        } else {
+            self.try_resume_suspended_supervised()
+        };
         if stepped == 0 && resumed == 0 && !self.suspended.is_empty() {
             // every resident session is done, yet the spooled ones
             // still don't fit: no future round can change that
@@ -627,17 +945,47 @@ impl<'a> Engine<'a> {
     }
 
     /// Round-robin every session to exhaustion, then finish each
-    /// (held-out evaluation + report), in admission order.
+    /// (held-out evaluation + report), in admission order. Quarantined
+    /// tenants appear at the end of the report list as
+    /// [`SessionOutcome::Quarantined`] — the fleet run itself still
+    /// returns `Ok` (supervised mode's whole point); only `--strict`
+    /// mode (or an engine-level failure like a scheduling deadlock)
+    /// surfaces an `Err`.
     pub fn run(&mut self) -> Result<Vec<EngineReport>> {
         while self.round()? > 0 {}
-        let mut out = Vec::with_capacity(self.slots.len());
-        for slot in &mut self.slots {
-            let report = slot.session.finish()?;
+        let mut out =
+            Vec::with_capacity(self.slots.len() + self.quarantined.len());
+        let mut i = 0usize;
+        while i < self.slots.len() {
+            let report = if self.strict {
+                self.slots[i].session.finish()?
+            } else {
+                match supervisor::catch_fault(|| {
+                    self.slots[i].session.finish()
+                }) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let kind = supervisor::classify(&e);
+                        self.quarantine_slot(i, kind, format!("{e:?}"));
+                        continue;
+                    }
+                }
+            };
+            let slot = &self.slots[i];
             out.push(EngineReport {
                 name: slot.name.clone(),
                 preset: slot.session.artifact().manifest.preset.clone(),
-                admission: slot.admission.clone(),
-                report,
+                admission: Some(slot.admission.clone()),
+                outcome: SessionOutcome::Completed(report),
+            });
+            i += 1;
+        }
+        for (admission, rec) in self.quarantined.drain(..) {
+            out.push(EngineReport {
+                name: rec.name.clone(),
+                preset: rec.preset.clone(),
+                admission,
+                outcome: SessionOutcome::Quarantined(rec),
             });
         }
         Ok(out)

@@ -45,18 +45,21 @@ impl Metrics {
         })
     }
 
+    fn row_json(row: &StepRow) -> Json {
+        obj(vec![
+            ("step", num(row.step as f64)),
+            ("loss", num(row.loss as f64)),
+            ("metric", num(row.metric as f64)),
+            ("lr", num(row.lr as f64)),
+            ("act_bytes", num(row.activation_bytes as f64)),
+            ("t", num(row.elapsed_s)),
+        ])
+    }
+
     pub fn log_step(&mut self, row: StepRow, batch: usize) -> Result<()> {
         self.samples_done += batch as u64;
         if let Some(w) = &mut self.writer {
-            let j = obj(vec![
-                ("step", num(row.step as f64)),
-                ("loss", num(row.loss as f64)),
-                ("metric", num(row.metric as f64)),
-                ("lr", num(row.lr as f64)),
-                ("act_bytes", num(row.activation_bytes as f64)),
-                ("t", num(row.elapsed_s)),
-            ]);
-            writeln!(w, "{}", j.to_string())?;
+            writeln!(w, "{}", Metrics::row_json(&row).to_string())?;
         }
         self.rows.push(row);
         Ok(())
@@ -64,13 +67,22 @@ impl Metrics {
 
     /// Re-seed the sink from a resumed session's saved state: the
     /// loss-curve rows and the sample counter continue from where the
-    /// suspended run left off. Wall-clock state is deliberately *not*
-    /// restored — `elapsed_s`/`throughput` measure this process — and
-    /// a JSONL sink (freshly truncated by `Metrics::new`) starts over;
-    /// only `rows` carries the full curve. See KNOWN.md.
-    pub fn restore(&mut self, rows: Vec<StepRow>, samples_done: u64) {
+    /// suspended run left off. The restored rows are re-written into
+    /// the JSONL sink (which `Metrics::new` freshly truncated), so a
+    /// resumed run's on-disk metric history stays complete — replayed
+    /// steps appear exactly once, with their originally-logged values.
+    /// Wall-clock state is deliberately *not* restored — `elapsed_s` /
+    /// `throughput` measure this process. See KNOWN.md.
+    pub fn restore(&mut self, rows: Vec<StepRow>,
+                   samples_done: u64) -> Result<()> {
+        if let Some(w) = &mut self.writer {
+            for row in &rows {
+                writeln!(w, "{}", Metrics::row_json(row).to_string())?;
+            }
+        }
         self.rows = rows;
         self.samples_done = samples_done;
+        Ok(())
     }
 
     /// Samples per second since construction.
@@ -169,6 +181,40 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let j = Json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(j.get("loss").unwrap().as_f64().unwrap(), 1.0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn restore_rewrites_history_into_a_fresh_sink() {
+        let dir = std::env::temp_dir().join(format!(
+            "ambp_metrics_restore_test_{}",
+            std::process::id()
+        ));
+        let path = dir.join("m.jsonl");
+        let row = |step: usize| StepRow {
+            step,
+            loss: step as f32,
+            metric: 0.0,
+            lr: 0.1,
+            activation_bytes: 1,
+            elapsed_s: 0.0,
+        };
+        // a fresh sink truncates; restore must re-write the saved rows
+        // so the resumed file still carries the full history
+        let mut m = Metrics::new(Some(&path)).unwrap();
+        m.restore(vec![row(0), row(1)], 8).unwrap();
+        m.log_step(row(2), 4).unwrap();
+        m.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let steps: Vec<usize> = text
+            .lines()
+            .map(|l| {
+                Json::parse(l).unwrap().get("step").unwrap()
+                    .as_usize().unwrap()
+            })
+            .collect();
+        assert_eq!(steps, vec![0, 1, 2]);
+        assert_eq!(m.rows.len(), 3);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

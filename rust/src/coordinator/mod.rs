@@ -11,9 +11,11 @@ pub mod optimizer;
 pub mod scheduler;
 pub mod session;
 pub mod statefile;
+pub mod supervisor;
 pub mod trainer;
 
-pub use engine::{Engine, EngineReport, JobSpec};
+pub use engine::{Engine, EngineReport, JobSpec, SessionOutcome};
 pub use session::{Session, SessionState, StepOutcome, StepStats};
 pub use statefile::{SavedSession, SessionHandle, StateError};
+pub use supervisor::{FaultKind, FaultRecord, NumericFault};
 pub use trainer::{TrainCfg, TrainReport, Trainer};

@@ -24,6 +24,7 @@ use anyhow::{ensure, Result};
 use crate::coordinator::memory::MemoryTracker;
 use crate::coordinator::metrics::{Metrics, StepRow};
 use crate::coordinator::optimizer::{AdamW, Optimizer, Sgd};
+use crate::coordinator::supervisor::NumericFault;
 use crate::coordinator::trainer::{TrainCfg, TrainReport};
 use crate::data::loader::{Batch, Prefetcher};
 use crate::data::synth_images::ImageTask;
@@ -270,7 +271,7 @@ impl<'a> Session<'a> {
         s.opt.state_load(&opt_state)?;
         let samples = rows.len() as u64
             * (art.manifest.batch * s.cfg.grad_accum) as u64;
-        s.metrics.restore(rows, samples);
+        s.metrics.restore(rows, samples)?;
         s.memory = memory;
         Ok(s)
     }
@@ -512,10 +513,25 @@ impl<'a> Session<'a> {
             let out = self.fwd(&x, &y)?;
             loss_acc += out.loss / grad_accum as f32;
             metric_acc += out.metric / grad_accum as f32;
+            // fault site "step.loss": `nan` poisons the accumulated
+            // loss; `io`/`panic` abort the microbatch loop here
+            if crate::util::faultpoint::trip("step.loss")? {
+                loss_acc = f32::NAN;
+            }
             // ---- the measured activation-memory moment ----
             self.memory.observe_residuals(&self.art.manifest,
                                           &out.residuals);
-            let grads = self.bwd(&out.residuals, &x, &y)?;
+            let mut grads = self.bwd(&out.residuals, &x, &y)?;
+            // fault site "step.compute": `nan` poisons one gradient
+            // element (caught below by the norm gate)
+            if crate::util::faultpoint::trip("step.compute")? {
+                if let Some(v) = grads
+                    .first_mut()
+                    .and_then(|g| g.as_f32_mut().first_mut())
+                {
+                    *v = f32::NAN;
+                }
+            }
             // at the peak both the fresh gradients and (under
             // grad_accum > 1) the running accumulator are live
             let gbytes: u64 =
@@ -554,6 +570,43 @@ impl<'a> Session<'a> {
                     *v *= inv;
                 }
             }
+        }
+        // Numeric health gate — *before* the optimizer update, so a
+        // poisoned step returns a typed error while the trainables and
+        // optimizer state are still at their last good values (the
+        // supervisor quarantines from exactly this state).
+        if !loss_acc.is_finite() {
+            return Err(NumericFault {
+                what: "loss",
+                value: loss_acc as f64,
+                step,
+            }
+            .into());
+        }
+        if !metric_acc.is_finite() {
+            return Err(NumericFault {
+                what: "metric",
+                value: metric_acc as f64,
+                step,
+            }
+            .into());
+        }
+        let grad_sq: f64 = grads
+            .iter()
+            .map(|g| {
+                g.as_f32()
+                    .iter()
+                    .map(|&v| v as f64 * v as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        if !grad_sq.is_finite() {
+            return Err(NumericFault {
+                what: "gradient norm",
+                value: grad_sq,
+                step,
+            }
+            .into());
         }
         {
             let mut refs: Vec<&mut Tensor> =

@@ -264,12 +264,38 @@ impl Writer {
             .to_string_lossy()
             .into_owned();
         let tmp = path.with_file_name(format!("{file_name}.tmp"));
-        std::fs::write(&tmp, self.finish())
+        // fault site "spool.write": `io` models a transient write
+        // failure, `nan` corrupts one byte of the serialized image (the
+        // write itself "succeeds" — detection is the reader's job)
+        let corrupt = crate::util::faultpoint::trip("spool.write")
+            .with_context(|| format!("writing statefile {tmp:?}"))?;
+        let mut bytes = self.finish();
+        if corrupt {
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x01;
+        }
+        std::fs::write(&tmp, bytes)
             .with_context(|| format!("writing statefile {tmp:?}"))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("committing statefile {path:?}"))?;
         Ok(())
     }
+}
+
+/// Read a statefile's raw bytes — the single funnel every session/
+/// artifact load and peek goes through, and therefore where the
+/// "spool.read" fault site lives (`io` = transient read failure,
+/// `nan` = one flipped byte, caught downstream by the checksums).
+fn read_state_bytes(path: &Path, what: &str) -> Result<Vec<u8>> {
+    let corrupt = crate::util::faultpoint::trip("spool.read")
+        .with_context(|| format!("reading {what} statefile {path:?}"))?;
+    let mut buf = std::fs::read(path)
+        .with_context(|| format!("reading {what} statefile {path:?}"))?;
+    if corrupt && !buf.is_empty() {
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x01;
+    }
+    Ok(buf)
 }
 
 // ---------------------------------------------------------------------
@@ -951,8 +977,7 @@ pub fn save_session(
 
 /// Load and validate a session statefile.
 pub fn load_session(path: &Path) -> Result<SavedSession> {
-    let buf = std::fs::read(path)
-        .with_context(|| format!("reading session statefile {path:?}"))?;
+    let buf = read_state_bytes(path, "session")?;
     let sf = StateFile::parse(&buf)?;
     let mut c = Cur::new(sf.section("session.meta")?, "session.meta");
     let name = c.str()?;
@@ -1028,8 +1053,7 @@ pub fn load_session(path: &Path) -> Result<SavedSession> {
 /// preset, progress, priority) — what `ambp serve --spool` needs to
 /// enumerate resumable work without decoding tensor payloads.
 pub fn peek_session(path: &Path) -> Result<SessionHandle> {
-    let buf = std::fs::read(path)
-        .with_context(|| format!("reading session statefile {path:?}"))?;
+    let buf = read_state_bytes(path, "session")?;
     let sf = StateFile::parse(&buf)?;
     let mut c = Cur::new(sf.section("session.meta")?, "session.meta");
     let name = c.str()?;
@@ -1102,8 +1126,7 @@ pub fn save_artifact(path: &Path, art: &Artifact) -> Result<()> {
 /// runtime's backend. The reconstructed frozen base must reproduce the
 /// stored fingerprint bit-for-bit.
 pub fn load_artifact(rt: &Runtime, path: &Path) -> Result<Artifact> {
-    let buf = std::fs::read(path)
-        .with_context(|| format!("reading artifact statefile {path:?}"))?;
+    let buf = read_state_bytes(path, "artifact")?;
     let sf = StateFile::parse(&buf)?;
     let mut c = Cur::new(sf.section("artifact.meta")?, "artifact.meta");
     let preset = c.str()?;

@@ -1,0 +1,450 @@
+//! Fleet supervision: fault classification, bounded retry, and
+//! quarantine for the multi-tenant engine.
+//!
+//! PR 6 gave the engine corruption *detection* (typed [`StateError`]s,
+//! per-section checksums, bit-identical suspend/resume); this module
+//! builds *survival* on top of it. A tenant's `step()` runs under
+//! [`supervised_step`] — `catch_unwind` plus [`classify`] — so one
+//! faulting tenant degrades to a per-tenant outcome instead of killing
+//! the fleet:
+//!
+//! | fault                     | kind      | policy                    |
+//! |---------------------------|-----------|---------------------------|
+//! | panic (any `panic!`)      | `Panic`   | quarantine                |
+//! | `io::Error` in the chain  | `Io`      | bounded retry, then       |
+//! |                           |           | quarantine                |
+//! | NaN/Inf loss or grad norm | `Numeric` | quarantine                |
+//! | `StateError` (statefile)  | `State`   | quarantine                |
+//! | anything else             | `Other`   | quarantine                |
+//!
+//! Quarantine means: the tenant's last good state is spooled to
+//! `<name>.quarantine.state`, a diagnostic report naming the fault,
+//! step, and preset is written to `<name>.quarantine.json`, and the
+//! fleet keeps stepping every other tenant. Under `--strict` none of
+//! this engages — any fault propagates out of `Engine::round` exactly
+//! as before this layer existed.
+//!
+//! [`scan_spool`] is the salvaging warm-restart: it enumerates a spool
+//! directory, retries transient read faults with bounded backoff, and
+//! quarantines files that still refuse to parse — so one corrupt
+//! statefile no longer blocks every healthy session's restart.
+//!
+//! Every branch here is reachable deterministically through
+//! `util::faultpoint` (`AMBP_FAULTS` / `ambp serve --faults`); the
+//! armed sites are `step.loss`, `step.compute`, `spool.write`, and
+//! `spool.read`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::session::{Session, StepOutcome};
+use crate::coordinator::statefile::{self, SessionHandle, StateError};
+use crate::util::faultpoint;
+use crate::util::json::{num, obj, s};
+
+/// Classification of a tenant fault — what failed, which picks the
+/// recovery policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A caught panic (library bug, injected fault).
+    Panic,
+    /// An `io::Error` somewhere in the source chain — treated as
+    /// transient and retried with bounded backoff.
+    Io,
+    /// Non-finite loss/metric or gradient norm ([`NumericFault`]).
+    Numeric,
+    /// Statefile corruption ([`StateError`]).
+    State,
+    /// An error none of the typed probes matched — terminal, like a
+    /// panic.
+    Other,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Io => "io",
+            FaultKind::Numeric => "numeric",
+            FaultKind::State => "state",
+            FaultKind::Other => "other",
+        }
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Numeric-health failure raised by `Session::step` *before* the
+/// optimizer update — so the session it comes from is still at its
+/// last good state.
+#[derive(Debug, Clone)]
+pub struct NumericFault {
+    /// Which quantity went non-finite (`"loss"`, `"metric"`,
+    /// `"gradient norm"`).
+    pub what: &'static str,
+    /// The offending value.
+    pub value: f64,
+    /// The 0-based step that produced it.
+    pub step: usize,
+}
+
+impl std::fmt::Display for NumericFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite {} ({}) at step {}",
+            self.what, self.value, self.step
+        )
+    }
+}
+
+impl std::error::Error for NumericFault {}
+
+/// A caught panic preserved as a typed error, so [`classify`] can tell
+/// it from ordinary library errors after `catch_unwind`.
+#[derive(Debug)]
+pub struct PanicFault(pub String);
+
+impl std::fmt::Display for PanicFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "panic: {}", self.0)
+    }
+}
+
+impl std::error::Error for PanicFault {}
+
+/// Best-effort extraction of a panic payload's message.
+pub fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(m) = p.downcast_ref::<&str>() {
+        (*m).to_string()
+    } else if let Some(m) = p.downcast_ref::<String>() {
+        m.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Classify an error by walking its source chain for the typed causes
+/// the policy table keys on. Probe order is most-specific first:
+/// a [`PanicFault`] or [`NumericFault`] wins over an incidental
+/// `io::Error` deeper in the chain.
+pub fn classify(e: &anyhow::Error) -> FaultKind {
+    if e.downcast_ref::<PanicFault>().is_some() {
+        FaultKind::Panic
+    } else if e.downcast_ref::<NumericFault>().is_some() {
+        FaultKind::Numeric
+    } else if e.downcast_ref::<StateError>().is_some() {
+        FaultKind::State
+    } else if e.downcast_ref::<std::io::Error>().is_some() {
+        FaultKind::Io
+    } else {
+        FaultKind::Other
+    }
+}
+
+/// Run `f`, converting a panic into a typed [`PanicFault`] error
+/// instead of unwinding through the fleet loop.
+pub fn catch_fault<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => Err(PanicFault(panic_message(p)).into()),
+    }
+}
+
+/// One tenant step under supervision: panics become typed errors, and
+/// fault points scoped `"<name>/<site>"` fire only for this tenant.
+pub fn supervised_step(name: &str,
+                       session: &mut Session<'_>) -> Result<StepOutcome> {
+    catch_fault(|| faultpoint::with_scope(name, || session.step()))
+}
+
+/// Bounded backoff between I/O retry attempts (milliseconds, doubling,
+/// capped — short enough for tests, long enough to skip a transient).
+pub fn backoff(attempt: u32) {
+    std::thread::sleep(Duration::from_millis(2u64 << attempt.min(5)));
+}
+
+/// Run `f` up to `attempts` times total, retrying (with [`backoff`])
+/// only faults that classify as [`FaultKind::Io`]; every other error —
+/// and the last I/O error — returns immediately.
+pub fn with_io_retry<T>(attempts: u32,
+                        mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    let attempts = attempts.max(1);
+    let mut k = 0u32;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                k += 1;
+                if classify(&e) != FaultKind::Io || k >= attempts {
+                    return Err(e);
+                }
+                backoff(k);
+            }
+        }
+    }
+}
+
+/// Everything a quarantine records about one faulted tenant.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// Engine-visible session name.
+    pub name: String,
+    /// Preset the session trained (empty when the fault predates
+    /// knowing it, e.g. an unreadable spool file).
+    pub preset: String,
+    /// What failed.
+    pub kind: FaultKind,
+    /// Steps the session had completed when it faulted.
+    pub step: usize,
+    /// I/O retries spent before giving up (0 for terminal kinds).
+    pub retries: u32,
+    /// Human-readable fault chain (the supervisor's evidence).
+    pub detail: String,
+    /// Where the last good state was quarantined, when it could be.
+    pub state_path: Option<PathBuf>,
+    /// Where the diagnostic report was written, when it could be.
+    pub report_path: Option<PathBuf>,
+}
+
+/// `<dir>/<name>.quarantine.state`.
+pub fn quarantine_state_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.quarantine.state"))
+}
+
+/// `<dir>/<name>.quarantine.json`.
+pub fn quarantine_report_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.quarantine.json"))
+}
+
+/// Whether a path is a quarantined statefile. Spool scans must skip
+/// these: `<name>.quarantine.state` still has extension `state`.
+pub fn is_quarantine(path: &Path) -> bool {
+    path.file_name()
+        .map(|f| f.to_string_lossy().ends_with(".quarantine.state"))
+        .unwrap_or(false)
+}
+
+/// Write the diagnostic report (`<name>.quarantine.json`) for a fault.
+pub fn write_report(dir: &Path, rec: &FaultRecord) -> Result<PathBuf> {
+    let p = quarantine_report_path(dir, &rec.name);
+    let j = obj(vec![
+        ("name", s(&rec.name)),
+        ("preset", s(&rec.preset)),
+        ("fault", s(rec.kind.as_str())),
+        ("step", num(rec.step as f64)),
+        ("retries", num(rec.retries as f64)),
+        ("detail", s(&rec.detail)),
+    ]);
+    std::fs::write(&p, format!("{}\n", j.to_string()))
+        .with_context(|| format!("writing quarantine report {p:?}"))?;
+    Ok(p)
+}
+
+/// Quarantine an on-disk statefile: rename it to
+/// `<name>.quarantine.state` and write the diagnostic report next to
+/// it. Updates `rec` with both paths.
+pub fn quarantine_file(path: &Path, rec: &mut FaultRecord) -> Result<()> {
+    let dir = path.parent().unwrap_or(Path::new("."));
+    let q = quarantine_state_path(dir, &rec.name);
+    std::fs::rename(path, &q).with_context(|| {
+        format!("quarantining statefile {path:?} -> {q:?}")
+    })?;
+    rec.state_path = Some(q);
+    rec.report_path = Some(write_report(dir, rec)?);
+    Ok(())
+}
+
+/// Result of a salvaging spool scan: the sessions worth resuming and
+/// the files that were quarantined instead.
+#[derive(Debug, Default)]
+pub struct SpoolScan {
+    /// Statefiles that parsed — resumable work.
+    pub healthy: Vec<SessionHandle>,
+    /// Files that failed to parse even after retries, now renamed to
+    /// `<name>.quarantine.state` with a report beside them.
+    pub quarantined: Vec<FaultRecord>,
+}
+
+/// Enumerate a spool directory's `*.state` files (skipping anything
+/// already quarantined), retrying transient read faults up to
+/// `max_retries` times. With `strict`, the first unreadable file fails
+/// the scan (today's behavior); otherwise it is quarantined — renamed
+/// plus a diagnostic report carrying the typed `StateError` (which
+/// names the damaged section) — and the scan continues, so one corrupt
+/// file no longer blocks every healthy session's warm restart.
+pub fn scan_spool(dir: &Path, max_retries: u32,
+                  strict: bool) -> Result<SpoolScan> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning spool {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().map(|x| x == "state").unwrap_or(false)
+                && !is_quarantine(p)
+        })
+        .collect();
+    paths.sort();
+    let mut scan = SpoolScan::default();
+    for p in paths {
+        if strict {
+            scan.healthy.push(statefile::peek_session(&p)?);
+            continue;
+        }
+        let attempt = with_io_retry(max_retries + 1, || {
+            catch_fault(|| statefile::peek_session(&p))
+        });
+        match attempt {
+            Ok(h) => scan.healthy.push(h),
+            Err(e) => {
+                let kind = classify(&e);
+                let name = p
+                    .file_stem()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "unknown".to_string());
+                let mut rec = FaultRecord {
+                    name,
+                    preset: String::new(),
+                    kind,
+                    step: 0,
+                    retries: if kind == FaultKind::Io {
+                        max_retries
+                    } else {
+                        0
+                    },
+                    detail: format!("{e:?}"),
+                    state_path: None,
+                    report_path: None,
+                };
+                if let Err(e2) = quarantine_file(&p, &mut rec) {
+                    rec.detail
+                        .push_str(&format!("; quarantine failed: {e2}"));
+                }
+                scan.quarantined.push(rec);
+            }
+        }
+    }
+    Ok(scan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    fn io_err() -> anyhow::Error {
+        std::io::Error::other("transient").into()
+    }
+
+    #[test]
+    fn classify_probes_the_source_chain() {
+        assert_eq!(classify(&io_err()), FaultKind::Io);
+        assert_eq!(
+            classify(&io_err().context("outer").context("outermost")),
+            FaultKind::Io
+        );
+        assert_eq!(
+            classify(
+                &NumericFault { what: "loss", value: f64::NAN, step: 3 }
+                    .into()
+            ),
+            FaultKind::Numeric
+        );
+        assert_eq!(
+            classify(
+                &StateError::MissingSection { section: "x".into() }
+                    .into()
+            ),
+            FaultKind::State
+        );
+        assert_eq!(
+            classify(&PanicFault("boom".into()).into()),
+            FaultKind::Panic
+        );
+        assert_eq!(classify(&anyhow!("who knows")), FaultKind::Other);
+    }
+
+    #[test]
+    fn catch_fault_types_the_panic() {
+        let e = catch_fault::<()>(|| panic!("kaboom {}", 7)).unwrap_err();
+        assert_eq!(classify(&e), FaultKind::Panic);
+        assert!(e.to_string().contains("kaboom 7"));
+        assert_eq!(catch_fault(|| Ok(5)).unwrap(), 5);
+    }
+
+    #[test]
+    fn io_retry_is_bounded_and_io_only() {
+        // two transient I/O failures, then success
+        let mut calls = 0;
+        let r: Result<u32> = with_io_retry(3, || {
+            calls += 1;
+            if calls < 3 { Err(io_err()) } else { Ok(calls) }
+        });
+        assert_eq!(r.unwrap(), 3);
+        // exhaustion returns the last error
+        let mut calls = 0;
+        let r: Result<()> = with_io_retry(2, || {
+            calls += 1;
+            Err(io_err())
+        });
+        assert_eq!(classify(&r.unwrap_err()), FaultKind::Io);
+        assert_eq!(calls, 2);
+        // non-I/O faults are never retried
+        let mut calls = 0;
+        let r: Result<()> = with_io_retry(5, || {
+            calls += 1;
+            Err(anyhow!("terminal"))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn quarantine_renames_and_reports() {
+        let dir = std::env::temp_dir().join(format!(
+            "ambp_supervisor_quarantine_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let victim = dir.join("s7.state");
+        std::fs::write(&victim, b"not a statefile").unwrap();
+        let mut rec = FaultRecord {
+            name: "s7".into(),
+            preset: "p".into(),
+            kind: FaultKind::State,
+            step: 4,
+            retries: 0,
+            detail: "statefile: bad magic".into(),
+            state_path: None,
+            report_path: None,
+        };
+        quarantine_file(&victim, &mut rec).unwrap();
+        assert!(!victim.exists());
+        let q = quarantine_state_path(&dir, "s7");
+        assert!(q.is_file());
+        assert!(is_quarantine(&q));
+        assert!(!is_quarantine(&victim));
+        let report = std::fs::read_to_string(
+            quarantine_report_path(&dir, "s7"),
+        )
+        .unwrap();
+        let j = crate::util::json::Json::parse(&report).unwrap();
+        assert_eq!(j.get("fault").unwrap().as_str().unwrap(), "state");
+        assert_eq!(j.get("step").unwrap().as_usize().unwrap(), 4);
+        assert!(j
+            .get("detail")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("bad magic"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

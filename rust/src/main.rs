@@ -26,7 +26,8 @@ use ambp::config::RunCfg;
 use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
 use ambp::coordinator::engine::fleet_capacity;
 use ambp::coordinator::{
-    statefile, Engine, JobSpec, Session, StepOutcome, TrainCfg, Trainer,
+    statefile, supervisor, Engine, JobSpec, Session, StepOutcome,
+    TrainCfg, Trainer,
 };
 use ambp::runtime::{Artifact, Runtime};
 use ambp::util::cli::Args;
@@ -137,21 +138,30 @@ fn serve(args: &Args) -> Result<()> {
     let halt_after = args.usize_or("halt-after", 0)?;
     ensure!(halt_after == 0 || spool.is_some(),
             "--halt-after requires --spool");
-    // scan the spool for suspended sessions to warm-restart
+    let strict = args.bool("strict");
+    let max_retries = args.usize_or("max-retries", 2)? as u32;
+    let metrics_dir = args.get("metrics-dir").map(PathBuf::from);
+    if let Some(f) = args.get("faults") {
+        ambp::util::faultpoint::arm(f)
+            .map_err(|e| anyhow::anyhow!("--faults {f:?}: {e}"))?;
+        println!("fault injection armed: {f}");
+    }
+    // salvaging warm-restart scan: healthy statefiles resume, corrupt
+    // ones are quarantined (renamed + report) instead of blocking the
+    // whole fleet — unless --strict, where the first bad file errors
     let mut spooled: Vec<statefile::SessionHandle> = Vec::new();
     if let Some(dir) = &spool {
         std::fs::create_dir_all(dir)?;
-        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| {
-                p.extension().map(|x| x == "state").unwrap_or(false)
-            })
-            .collect();
-        paths.sort();
-        for p in &paths {
-            spooled.push(statefile::peek_session(p)?);
+        let scan = supervisor::scan_spool(dir, max_retries, strict)?;
+        for rec in &scan.quarantined {
+            println!(
+                "QUARANTINED spool file for {} ({} fault) → {:?}",
+                rec.name,
+                rec.kind,
+                rec.state_path.as_deref().unwrap_or(Path::new("?"))
+            );
         }
+        spooled = scan.healthy;
     }
     let jobs = match args.get("jobs") {
         Some(j) => j,
@@ -192,8 +202,9 @@ fn serve(args: &Args) -> Result<()> {
             slot.insert(ambp::runtime::load_or_synth(&rt, &preset)?);
         }
     }
-    let strict = args.bool("strict");
     let mut engine = Engine::new(budget);
+    engine.set_strict(strict);
+    engine.set_max_retries(max_retries);
     if let Some(dir) = &spool {
         engine.set_spool(dir.clone());
     }
@@ -214,12 +225,30 @@ fn serve(args: &Args) -> Result<()> {
             h.name, h.preset, h.steps_done, h.steps_total, h.path
         );
     }
+    // fresh-job names dedupe against the spooled sessions' names: a
+    // colliding job gets a deterministic `s<i>_<k>` suffix instead of
+    // shadowing (or being shadowed by) the warm-restarted session
+    let mut used: std::collections::BTreeSet<String> =
+        spooled.iter().map(|h| h.name.clone()).collect();
     for (i, spec) in specs.iter().enumerate() {
-        let name = format!("s{i}");
+        let mut name = format!("s{i}");
+        let mut k = 1usize;
+        while used.contains(&name) {
+            name = format!("s{i}_{k}");
+            k += 1;
+        }
+        if k > 1 {
+            println!("job {i} renamed to {name} (name s{i} is taken \
+                      by a spooled session)");
+        }
+        used.insert(name.clone());
         let art = &arts[&spec.preset];
+        let mut cfg = spec.cfg.clone();
+        if let Some(md) = &metrics_dir {
+            cfg.metrics_jsonl = Some(md.join(format!("{name}.jsonl")));
+        }
         let suspended_before = engine.suspended_names().len();
-        match engine.admit_prio(&name, art, spec.cfg.clone(),
-                                spec.priority) {
+        match engine.admit_prio(&name, art, cfg, spec.priority) {
             Ok(id) => {
                 admitted_samples += (art.manifest.batch
                     * spec.cfg.grad_accum
@@ -271,16 +300,47 @@ fn serve(args: &Args) -> Result<()> {
     let reports = engine.run()?;
     println!("\nper-session results:");
     for r in &reports {
-        println!(
-            "  {:<4} {:<40} loss {:.4}  metric {:.3}  act peak \
-             {:>8.2} MiB (predicted tape {:>8.2} MiB)",
-            r.name,
-            r.preset,
-            r.report.final_loss,
-            r.report.final_metric,
-            r.report.peak_activation_bytes as f64 / 1048576.0,
-            r.admission.tape_bytes as f64 / 1048576.0
-        );
+        match (&r.outcome, &r.admission) {
+            (
+                ambp::coordinator::SessionOutcome::Completed(rep),
+                adm,
+            ) => {
+                let tape = adm
+                    .as_ref()
+                    .map(|a| a.tape_bytes as f64 / 1048576.0)
+                    .unwrap_or(0.0);
+                println!(
+                    "  {:<4} {:<40} loss {:.4}  metric {:.3}  act \
+                     peak {:>8.2} MiB (predicted tape {:>8.2} MiB)",
+                    r.name,
+                    r.preset,
+                    rep.final_loss,
+                    rep.final_metric,
+                    rep.peak_activation_bytes as f64 / 1048576.0,
+                    tape
+                );
+            }
+            (
+                ambp::coordinator::SessionOutcome::Quarantined(rec),
+                _,
+            ) => {
+                println!(
+                    "  {:<4} {:<40} QUARANTINED ({} fault at step \
+                     {}, {} retries) → {:?}",
+                    r.name,
+                    r.preset,
+                    rec.kind,
+                    rec.step,
+                    rec.retries,
+                    rec.state_path
+                        .as_deref()
+                        .unwrap_or(Path::new("(state not spooled)"))
+                );
+                if let Some(line) = rec.detail.lines().next() {
+                    println!("       {line}");
+                }
+            }
+        }
     }
     println!("\nfleet: {} sessions | resident params {:.2} MiB \
               (bases stored once) | predicted {:.2} MiB of {:.1} MiB \
@@ -534,14 +594,26 @@ global: --backend native|pjrt   (default native; presets with no on-disk
           --init-from ckpt/ --save-to ckpt/ --save-artifact a.state]
   serve   --budget MiB --jobs P[:steps[:seed[:prio]]],...
           [--steps N --lr X --seed S --log-every K --eval-batches E
-           --strict --spool DIR --preempt --halt-after R]
+           --strict --spool DIR --preempt --halt-after R
+           --max-retries K --faults SPEC --metrics-dir DIR]
           multi-tenant engine: sessions share frozen bases; admission
           is gated on predicted tape+grads+optimizer bytes
-          (--strict: error out if any job is rejected; --preempt:
-          evict lower-priority sessions to --spool instead;
-          --halt-after R: suspend the fleet after R rounds — re-run
-          with the same --spool, no --jobs, to finish; any *.state
-          already in --spool is warm-restarted first)
+          (--strict: error out if any job is rejected or any fault
+          occurs; --preempt: evict lower-priority sessions to --spool
+          instead; --halt-after R: suspend the fleet after R rounds —
+          re-run with the same --spool, no --jobs, to finish; any
+          *.state already in --spool is warm-restarted first, and a
+          corrupt one is quarantined to <name>.quarantine.state with
+          a .json report instead of blocking the fleet)
+          supervision: a faulting tenant is retried from its last
+          good state on transient I/O errors (--max-retries K,
+          default 2) and quarantined on panics / non-finite loss or
+          gradients — the other tenants keep running; --faults
+          site:hit:kind[:count],... (kind panic|io|nan; also env
+          AMBP_FAULTS) arms the deterministic fault-injection sites
+          step.loss, step.compute, spool.write, spool.read —
+          prefix \"name/site\" targets one tenant;
+          --metrics-dir DIR writes per-session JSONL loss curves
   suspend --preset P --state f.state [--at K --steps N --name s0 ...]
           run K steps, then spool the session's durable state
   resume  --state f.state [--artifact-state a.state --save-to ckpt/]

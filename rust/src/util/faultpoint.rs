@@ -1,0 +1,335 @@
+//! Deterministic fault injection: site-keyed, step-counted fault
+//! points, compiled in always and armed at runtime.
+//!
+//! A *fault point* is a named call site (`trip("spool.write")`) that
+//! normally does nothing. Arming a plan — from the `AMBP_FAULTS`
+//! environment variable or programmatically via [`arm`] — makes
+//! selected sites misbehave on selected hits:
+//!
+//! ```text
+//! AMBP_FAULTS=site:hit:kind[:count][,site:hit:kind[:count]...]
+//!            site  — site key, optionally scoped: "s1/step.loss"
+//!            hit   — 0-based hit index at which the fault fires
+//!            kind  — panic | io | nan
+//!            count — number of consecutive hits that fault
+//!                    (default 1; "*" = every hit from `hit` on)
+//! ```
+//!
+//! Scoping: the engine wraps each tenant's step in
+//! [`with_scope`]`(name, ..)`; a spec keyed `"name/site"` matches only
+//! hits made under that scope, while a bare `"site"` spec matches hits
+//! from any (or no) scope. Scoped and bare specs keep independent hit
+//! counters, so "the 2nd spool write of tenant s1" is expressible even
+//! when other tenants write in between.
+//!
+//! Kinds:
+//! * `panic` — [`trip`] panics with a recognizable message (the
+//!   supervisor's `catch_unwind` sees it like any library panic).
+//! * `io`    — [`trip`] returns `Err(io::Error)` of kind `Other` with
+//!   a recognizable message (models a transient I/O fault).
+//! * `nan`   — [`trip`] returns `Ok(true)`: the *call site* corrupts
+//!   its own data (poison a loss, flip a byte) — the harness cannot
+//!   know what "NaN" means for an arbitrary site.
+//!
+//! The armed check is a single relaxed atomic load when no plan is
+//! armed, so leaving the sites compiled into release builds is free.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// What an armed site does when its hit index comes up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectKind {
+    /// `trip` panics.
+    Panic,
+    /// `trip` returns an injected `io::Error`.
+    Io,
+    /// `trip` returns `Ok(true)`; the call site corrupts its own data.
+    Nan,
+}
+
+impl InjectKind {
+    fn parse(s: &str) -> Option<InjectKind> {
+        match s {
+            "panic" => Some(InjectKind::Panic),
+            "io" => Some(InjectKind::Io),
+            "nan" => Some(InjectKind::Nan),
+            _ => None,
+        }
+    }
+}
+
+/// One armed fault: fire `kind` at `site` on hit indices
+/// `[at, at + count)` (count == u32::MAX means "forever").
+#[derive(Clone, Debug)]
+struct FaultSpec {
+    site: String,
+    at: u32,
+    kind: InjectKind,
+    count: u32,
+    hits: u32,
+}
+
+fn plan() -> &'static Mutex<Vec<FaultSpec>> {
+    static PLAN: OnceLock<Mutex<Vec<FaultSpec>>> = OnceLock::new();
+    PLAN.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Fast path: false ⇒ no spec is armed and `hit` returns None without
+/// taking the lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// `AMBP_FAULTS` is read once, lazily, on the first `hit`/`arm`.
+fn env_init() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("AMBP_FAULTS") {
+            if !v.trim().is_empty() {
+                // Env arming is best-effort: a malformed var aborts
+                // loudly rather than silently running faultless.
+                arm(&v).expect("malformed AMBP_FAULTS");
+            }
+        }
+    });
+}
+
+/// Parse a fault plan (`site:hit:kind[:count],…`) and add it to the
+/// armed set. Specs accumulate across calls; use [`clear`] to reset.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut specs = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        // site may itself contain '/' but not ':'.
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 3 || fields.len() > 4 {
+            return Err(format!(
+                "fault spec `{part}`: want site:hit:kind[:count]"
+            ));
+        }
+        let at: u32 = fields[1]
+            .parse()
+            .map_err(|_| format!("fault spec `{part}`: bad hit index"))?;
+        let kind = InjectKind::parse(fields[2]).ok_or(format!(
+            "fault spec `{part}`: kind must be panic|io|nan"
+        ))?;
+        let count: u32 = match fields.get(3) {
+            None => 1,
+            Some(&"*") => u32::MAX,
+            Some(c) => c
+                .parse()
+                .map_err(|_| format!("fault spec `{part}`: bad count"))?,
+        };
+        specs.push(FaultSpec {
+            site: fields[0].to_string(),
+            at,
+            kind,
+            count,
+            hits: 0,
+        });
+    }
+    if !specs.is_empty() {
+        plan().lock().unwrap().append(&mut specs);
+        ARMED.store(true, Ordering::Release);
+    }
+    Ok(())
+}
+
+/// Disarm everything and reset all hit counters.
+pub fn clear() {
+    plan().lock().unwrap().clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Serialize tests that arm fault plans: the guard holds a process-wide
+/// mutex and clears the plan on acquire and on drop, so `cargo test`'s
+/// in-binary parallelism cannot interleave two armed plans.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+pub fn exclusive() -> FaultGuard {
+    static GATE: Mutex<()> = Mutex::new(());
+    let lock = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    clear();
+    FaultGuard { _lock: lock }
+}
+
+thread_local! {
+    static SCOPE: std::cell::RefCell<Vec<String>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with hits attributed to scope `name`: a spec keyed
+/// `"name/site"` matches only inside, a bare `"site"` spec still
+/// matches everywhere. Scopes nest; the innermost wins for prefixing.
+pub fn with_scope<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    SCOPE.with(|s| s.borrow_mut().push(name.to_string()));
+    struct Pop;
+    impl Drop for Pop {
+        fn drop(&mut self) {
+            SCOPE.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+    let _pop = Pop;
+    f()
+}
+
+fn current_scope() -> Option<String> {
+    SCOPE.with(|s| s.borrow().last().cloned())
+}
+
+/// Record a hit at `site`; returns the kind to inject if an armed spec
+/// fires on this hit. Both the scoped key (`"{scope}/{site}"`) and the
+/// bare key count hits independently; if both fire, scoped wins.
+pub fn hit(site: &str) -> Option<InjectKind> {
+    env_init();
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let scoped = current_scope().map(|sc| format!("{sc}/{site}"));
+    let mut fired = None;
+    let mut specs = plan().lock().unwrap();
+    for spec in specs.iter_mut() {
+        let matches = spec.site == site
+            || scoped.as_deref() == Some(spec.site.as_str());
+        if !matches {
+            continue;
+        }
+        let n = spec.hits;
+        spec.hits = spec.hits.saturating_add(1);
+        let firing = n >= spec.at
+            && (spec.count == u32::MAX
+                || n < spec.at.saturating_add(spec.count));
+        if firing {
+            // Scoped specs take precedence over bare ones.
+            let scoped_spec = spec.site.contains('/');
+            if fired.is_none() || scoped_spec {
+                fired = Some(spec.kind);
+            }
+        }
+    }
+    fired
+}
+
+/// The standard fault-point shape for fallible call sites.
+///
+/// * not armed / not firing → `Ok(false)`
+/// * `io`    → `Err(injected io::Error)`
+/// * `panic` → panics
+/// * `nan`   → `Ok(true)` — the caller corrupts its own data
+pub fn trip(site: &str) -> io::Result<bool> {
+    match hit(site) {
+        None => Ok(false),
+        Some(InjectKind::Nan) => Ok(true),
+        Some(InjectKind::Io) => Err(io::Error::other(format!(
+            "injected fault: io at {site}"
+        ))),
+        Some(InjectKind::Panic) => {
+            panic!("injected fault: panic at {site}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_inert() {
+        let _g = exclusive();
+        assert_eq!(hit("anything"), None);
+        assert!(!trip("anything").unwrap());
+    }
+
+    #[test]
+    fn fires_on_exact_hit_index_with_count() {
+        let _g = exclusive();
+        arm("x:1:io:2").unwrap();
+        assert_eq!(hit("x"), None); // hit 0
+        assert_eq!(hit("x"), Some(InjectKind::Io)); // hit 1
+        assert_eq!(hit("x"), Some(InjectKind::Io)); // hit 2
+        assert_eq!(hit("x"), None); // hit 3
+    }
+
+    #[test]
+    fn forever_count_and_multi_spec_parse() {
+        let _g = exclusive();
+        arm("a:0:nan:*, b:0:panic").unwrap();
+        for _ in 0..4 {
+            assert_eq!(hit("a"), Some(InjectKind::Nan));
+        }
+        assert_eq!(hit("c"), None);
+    }
+
+    #[test]
+    fn scoped_spec_only_fires_in_scope_and_wins_over_bare() {
+        let _g = exclusive();
+        arm("t1/x:0:panic:*,x:0:io:*").unwrap();
+        // Outside the scope only the bare spec matches.
+        assert_eq!(hit("x"), Some(InjectKind::Io));
+        // Inside scope t1 the scoped spec wins.
+        with_scope("t1", || {
+            assert_eq!(hit("x"), Some(InjectKind::Panic));
+        });
+        with_scope("t2", || {
+            assert_eq!(hit("x"), Some(InjectKind::Io));
+        });
+    }
+
+    #[test]
+    fn scoped_and_bare_counters_are_independent() {
+        let _g = exclusive();
+        arm("t1/x:1:nan").unwrap();
+        // Bare hits do not advance the scoped counter.
+        assert_eq!(hit("x"), None);
+        assert_eq!(hit("x"), None);
+        with_scope("t1", || {
+            assert_eq!(hit("x"), None); // scoped hit 0
+            assert_eq!(hit("x"), Some(InjectKind::Nan)); // scoped hit 1
+        });
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        let _g = exclusive();
+        assert!(arm("x:0").is_err());
+        assert!(arm("x:zero:io").is_err());
+        assert!(arm("x:0:frobnicate").is_err());
+        assert!(arm("x:0:io:many").is_err());
+        // Nothing armed by the failed calls.
+        assert_eq!(hit("x"), None);
+    }
+
+    #[test]
+    fn trip_maps_kinds() {
+        let _g = exclusive();
+        arm("io.site:0:io,nan.site:0:nan").unwrap();
+        assert!(!trip("clean.site").unwrap());
+        assert!(trip("nan.site").unwrap());
+        let e = trip("io.site").unwrap_err();
+        assert!(e.to_string().contains("injected fault: io"));
+    }
+
+    #[test]
+    fn panic_kind_panics_with_recognizable_payload() {
+        let _g = exclusive();
+        arm("boom:0:panic").unwrap();
+        let r = std::panic::catch_unwind(|| {
+            let _ = trip("boom");
+        });
+        let payload = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(payload.contains("injected fault: panic at boom"));
+    }
+}

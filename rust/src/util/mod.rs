@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faultpoint;
 pub mod hash;
 pub mod json;
 pub mod rng;

@@ -112,9 +112,9 @@ fn interleaved_matches_serial() {
     for (i, (r, (rows, params))) in
         reports.iter().zip(&serial).enumerate()
     {
-        assert_eq!(r.report.steps, cfgs[i].steps, "s{i}: steps");
-        let got: Vec<StepSig> = r
-            .report
+        let rep = r.train().expect("completed");
+        assert_eq!(rep.steps, cfgs[i].steps, "s{i}: steps");
+        let got: Vec<StepSig> = rep
             .rows
             .iter()
             .map(|row| {
@@ -161,7 +161,8 @@ fn mixed_preset_fleet_is_isolated() {
                      "llama");
     // and the per-step losses match too
     let got: Vec<u32> = reports[1]
-        .report
+        .train()
+        .expect("completed")
         .rows
         .iter()
         .map(|r| r.loss.to_bits())
@@ -221,7 +222,8 @@ fn over_budget_job_rejected_with_predicted_bytes() {
     // the admitted session still runs to completion
     let reports = engine.run().unwrap();
     assert_eq!(reports.len(), 1);
-    assert!(reports[0].report.final_loss.is_finite());
+    assert!(reports[0].train().expect("completed").final_loss
+                .is_finite());
 }
 
 #[test]
@@ -432,9 +434,9 @@ fn preemption_admits_what_strict_rejects_and_stays_bit_identical() {
             .iter()
             .find(|r| r.name == *name)
             .unwrap_or_else(|| panic!("{name}: no report"));
-        assert_eq!(r.report.steps, cfgs[i].steps, "{name}: steps");
-        let got: Vec<StepSig> = r
-            .report
+        let rep = r.train().expect("completed");
+        assert_eq!(rep.steps, cfgs[i].steps, "{name}: steps");
+        let got: Vec<StepSig> = rep
             .rows
             .iter()
             .map(|row| {

@@ -1,0 +1,573 @@
+//! Fleet-supervision tests: deterministic fault injection through
+//! every `util::faultpoint` site, the quarantine/retry policy table,
+//! salvaging warm restarts over a partially corrupt spool, and the
+//! strict-mode fail-fast escape hatch.
+//!
+//! The acceptance bar (ISSUE 7): inject each fault kind into one
+//! tenant of a three-tenant fleet and the fleet still completes —
+//! transient I/O faults are retried from the last good state,
+//! terminal faults quarantine exactly the faulted tenant, and the
+//! untouched tenants finish bit-identical to an undisturbed serial
+//! run. Every test holds `faultpoint::exclusive()` so armed plans
+//! never leak across `cargo test`'s in-binary parallelism.
+
+use ambp::coordinator::engine::{predict, Engine};
+use ambp::coordinator::{
+    statefile, Session, StepOutcome, TrainCfg, Trainer,
+};
+use ambp::coordinator::supervisor::{self, FaultKind};
+use ambp::runtime::{Artifact, Runtime, Tensor};
+use ambp::util::faultpoint;
+use ambp::util::json::Json;
+
+fn rt() -> Runtime {
+    Runtime::cpu().expect("native runtime")
+}
+
+fn cfg(steps: usize, seed: u64) -> TrainCfg {
+    TrainCfg {
+        steps,
+        lr: 2e-3,
+        log_every: 0,
+        eval_batches: 2,
+        seed,
+        ..TrainCfg::default()
+    }
+}
+
+/// Fresh per-test spool directory under the OS temp dir.
+fn spool_dir(label: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ambp_supervisor_test_{}_{label}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// (loss bits, metric bits) per step.
+type StepSig = (u32, u32);
+
+/// Serial twin of one job through the classic `Trainer` path.
+fn serial_run(art: &Artifact, c: &TrainCfg) -> (Vec<StepSig>, Vec<Tensor>) {
+    let mut t = Trainer::new(art, c.clone()).unwrap();
+    let rep = t.train().unwrap();
+    let rows = rep
+        .rows
+        .iter()
+        .map(|r| (r.loss.to_bits(), r.metric.to_bits()))
+        .collect();
+    (rows, t.params.clone())
+}
+
+fn row_sigs(rows: &[ambp::coordinator::metrics::StepRow]) -> Vec<StepSig> {
+    rows.iter()
+        .map(|r| (r.loss.to_bits(), r.metric.to_bits()))
+        .collect()
+}
+
+fn assert_params_eq(a: &[Tensor], b: &[Tensor], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{label}: param {i} differs");
+    }
+}
+
+/// Save a fresh session's state after `pre_steps` steps, for spool
+/// scan / resume tests.
+fn save_state(art: &Artifact, path: &std::path::Path, name: &str,
+              c: TrainCfg, pre_steps: usize) {
+    let mut s = Session::new(art, c).unwrap();
+    for _ in 0..pre_steps {
+        assert!(matches!(s.step().unwrap(), StepOutcome::Stepped(_)));
+    }
+    statefile::save_session(path, name, 0, &s.into_state()).unwrap();
+}
+
+/// The tentpole acceptance grid: each fault kind at each in-step site,
+/// injected into tenant s1 of a three-tenant fleet. The fleet always
+/// completes; io is retried transparently, panic/nan quarantine s1;
+/// s0/s2 are bit-identical to their undisturbed serial twins in every
+/// cell.
+#[test]
+fn fault_grid_step_sites_isolate_one_tenant() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(4, 3), cfg(4, 9), cfg(4, 7)];
+    let serial: Vec<_> = cfgs.iter().map(|c| serial_run(&art, c)).collect();
+
+    for site in ["step.loss", "step.compute"] {
+        for kind in ["panic", "io", "nan"] {
+            faultpoint::clear();
+            faultpoint::arm(&format!("s1/{site}:1:{kind}")).unwrap();
+            let label = format!("{site}:{kind}");
+            let spool = spool_dir(&label.replace([':', '.'], "_"));
+            let mut engine = Engine::unbounded();
+            engine.set_spool(spool.clone());
+            for (i, c) in cfgs.iter().enumerate() {
+                engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
+            }
+            let reports = engine.run().unwrap();
+            assert_eq!(reports.len(), 3, "{label}: fleet size");
+
+            // the undisturbed tenants always finish bit-identically
+            for i in [0usize, 2] {
+                let name = format!("s{i}");
+                let r = reports
+                    .iter()
+                    .find(|r| r.name == name)
+                    .unwrap_or_else(|| panic!("{label}: {name} missing"));
+                let rep = r.train().unwrap_or_else(|| {
+                    panic!("{label}: {name} should have completed")
+                });
+                assert_eq!(row_sigs(&rep.rows), serial[i].0,
+                           "{label}: {name} rows diverged");
+                let id = engine.find(&name).unwrap();
+                assert_params_eq(&engine.session(id).params(),
+                                 &serial[i].1, &format!("{label}/{name}"));
+            }
+
+            let s1 = reports.iter().find(|r| r.name == "s1").unwrap();
+            if kind == "io" {
+                // transient: one retry from the last good state, then
+                // a bit-identical finish — no quarantine anywhere
+                let rep = s1.train().unwrap_or_else(|| {
+                    panic!("{label}: io must be retried, not terminal")
+                });
+                assert_eq!(row_sigs(&rep.rows), serial[1].0,
+                           "{label}: s1 rows diverged after retry");
+                let id = engine.find("s1").unwrap();
+                assert_params_eq(&engine.session(id).params(),
+                                 &serial[1].1, &format!("{label}/s1"));
+                assert!(!supervisor::quarantine_state_path(&spool, "s1")
+                            .exists(),
+                        "{label}: spurious quarantine");
+            } else {
+                // terminal: s1 quarantined at the faulting step with
+                // its last good state spooled + a diagnostic report
+                let rec = s1.fault().unwrap_or_else(|| {
+                    panic!("{label}: s1 should be quarantined")
+                });
+                let want = if kind == "panic" {
+                    FaultKind::Panic
+                } else {
+                    FaultKind::Numeric
+                };
+                assert_eq!(rec.kind, want, "{label}: kind");
+                assert_eq!(rec.step, 1, "{label}: faulting step");
+                assert!(engine.find("s1").is_none(),
+                        "{label}: quarantined tenant still resident");
+                let qstate = supervisor::quarantine_state_path(&spool, "s1");
+                assert_eq!(rec.state_path.as_deref(), Some(&*qstate));
+                let saved = statefile::load_session(&qstate).unwrap();
+                assert_eq!(saved.name, "s1");
+                assert_eq!(saved.state.step, 1,
+                           "{label}: quarantined state must be the \
+                            last good step");
+                let report = std::fs::read_to_string(
+                    supervisor::quarantine_report_path(&spool, "s1"),
+                )
+                .unwrap();
+                let j = Json::parse(&report).unwrap();
+                assert_eq!(j.get("fault").unwrap().as_str().unwrap(),
+                           want.as_str(), "{label}");
+                assert_eq!(j.get("step").unwrap().as_usize().unwrap(), 1);
+                assert_eq!(j.get("name").unwrap().as_str().unwrap(), "s1");
+                assert_eq!(j.get("preset").unwrap().as_str().unwrap(),
+                           "vitt_loraqv_regelu2_msln");
+                if kind == "nan" {
+                    let what = if site == "step.loss" {
+                        "non-finite loss"
+                    } else {
+                        "non-finite gradient norm"
+                    };
+                    assert!(rec.detail.contains(what),
+                            "{label}: detail {:?} should name the \
+                             non-finite quantity", rec.detail);
+                }
+            }
+            let _ = std::fs::remove_dir_all(&spool);
+        }
+    }
+}
+
+#[test]
+fn io_retry_exhaustion_quarantines_with_retry_count() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    faultpoint::arm("s1/step.compute:0:io:*").unwrap();
+    let spool = spool_dir("retry_exhaustion");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.set_max_retries(1);
+    for (i, c) in [cfg(3, 3), cfg(3, 9), cfg(3, 7)].iter().enumerate() {
+        engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
+    }
+    let reports = engine.run().unwrap();
+    let rec = reports
+        .iter()
+        .find(|r| r.name == "s1")
+        .unwrap()
+        .fault()
+        .expect("persistent io must exhaust retries and quarantine");
+    assert_eq!(rec.kind, FaultKind::Io);
+    assert_eq!(rec.retries, 1, "retries spent must equal max_retries");
+    assert_eq!(rec.step, 0, "never completed a step");
+    assert!(rec.detail.contains("injected fault: io"), "{}", rec.detail);
+    // the quarantined state is loadable and sits at the last good step
+    let saved = statefile::load_session(
+        &supervisor::quarantine_state_path(&spool, "s1"),
+    )
+    .unwrap();
+    assert_eq!(saved.state.step, 0);
+    // the other two tenants completed normally
+    for name in ["s0", "s2"] {
+        assert!(reports.iter().find(|r| r.name == name).unwrap()
+                    .train().is_some(), "{name} should complete");
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn strict_mode_fail_fasts_on_injected_fault() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    faultpoint::arm("step.loss:0:io").unwrap();
+    let spool = spool_dir("strict");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.set_strict(true);
+    engine.admit("s0", &art, cfg(3, 3)).unwrap();
+    engine.admit("s1", &art, cfg(3, 9)).unwrap();
+    let err = format!("{:?}", engine.run().unwrap_err());
+    assert!(err.contains("injected fault: io"), "{err}");
+    // fail-fast means no supervision artifacts: no quarantine files
+    let leftovers: Vec<_> = std::fs::read_dir(&spool)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| supervisor::is_quarantine(&e.path())
+                    || e.path().extension().map(|x| x == "json")
+                        .unwrap_or(false))
+        .collect();
+    assert!(leftovers.is_empty(), "{leftovers:?}");
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+/// Salvaging warm-restart: `scan_spool` retries transient read faults,
+/// quarantines files that stay unreadable (typed `StateError` naming
+/// the damaged section in the report), and never re-lists a
+/// quarantined file.
+#[test]
+fn scan_spool_salvages_around_corrupt_statefiles() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let spool = spool_dir("scan");
+    for (i, name) in ["a", "b", "c"].iter().enumerate() {
+        save_state(&art, &spool.join(format!("{name}.state")), name,
+                   cfg(3, i as u64), 1);
+    }
+
+    // one transient read fault: retried, every file healthy
+    faultpoint::arm("spool.read:0:io").unwrap();
+    let scan = supervisor::scan_spool(&spool, 2, false).unwrap();
+    assert_eq!(scan.healthy.len(), 3);
+    assert!(scan.quarantined.is_empty());
+
+    // persistent read faults exhaust the 3 attempts on the first file
+    // (sorted order: a.state) and quarantine exactly it
+    faultpoint::clear();
+    faultpoint::arm("spool.read:0:io:3").unwrap();
+    let scan = supervisor::scan_spool(&spool, 2, false).unwrap();
+    assert_eq!(scan.healthy.len(), 2);
+    assert_eq!(scan.quarantined.len(), 1);
+    let rec = &scan.quarantined[0];
+    assert_eq!(rec.name, "a");
+    assert_eq!(rec.kind, FaultKind::Io);
+    assert_eq!(rec.retries, 2);
+    assert!(spool.join("a.quarantine.state").is_file());
+    assert!(!spool.join("a.state").exists());
+
+    // a flipped byte fails the checksum: a typed StateError quarantine
+    // whose detail names the damaged section, under strict an Err
+    faultpoint::clear();
+    faultpoint::arm("spool.read:0:nan").unwrap();
+    assert!(supervisor::scan_spool(&spool, 2, true).is_err(),
+            "strict scan must fail on the corrupt file");
+    faultpoint::clear();
+    faultpoint::arm("spool.read:0:nan").unwrap();
+    let scan = supervisor::scan_spool(&spool, 2, false).unwrap();
+    assert_eq!(scan.healthy.len(), 1);
+    assert_eq!(scan.quarantined.len(), 1);
+    let rec = &scan.quarantined[0];
+    assert_eq!(rec.name, "b");
+    assert_eq!(rec.kind, FaultKind::State);
+    assert!(rec.detail.contains("checksum"),
+            "detail should carry the typed StateError: {}", rec.detail);
+    let report = std::fs::read_to_string(
+        supervisor::quarantine_report_path(&spool, "b"),
+    )
+    .unwrap();
+    assert_eq!(Json::parse(&report).unwrap().get("fault").unwrap()
+                   .as_str().unwrap(),
+               "state");
+
+    // a panic while parsing is caught and quarantined like the rest
+    faultpoint::clear();
+    faultpoint::arm("spool.read:0:panic").unwrap();
+    let scan = supervisor::scan_spool(&spool, 2, false).unwrap();
+    assert!(scan.healthy.is_empty());
+    assert_eq!(scan.quarantined[0].name, "c");
+    assert_eq!(scan.quarantined[0].kind, FaultKind::Panic);
+
+    // quarantined files are invisible to a clean rescan
+    faultpoint::clear();
+    let scan = supervisor::scan_spool(&spool, 2, false).unwrap();
+    assert!(scan.healthy.is_empty());
+    assert!(scan.quarantined.is_empty());
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn suspend_write_fault_retries_then_restores_in_place() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let c = cfg(4, 3);
+    let (serial_rows, serial_params) = serial_run(&art, &c);
+    let spool = spool_dir("suspend_faults");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, c.clone()).unwrap();
+
+    // transient write fault: with_io_retry absorbs it, the suspend
+    // lands on disk as usual
+    faultpoint::arm("spool.write:0:io").unwrap();
+    let id = engine.find("s0").unwrap();
+    let h = engine.suspend(id).unwrap();
+    assert!(h.path.is_file());
+    assert_eq!(engine.suspended_names(), vec!["s0".to_string()]);
+    faultpoint::clear();
+    engine.resume_file(&art, &h.path).unwrap();
+
+    // persistent write panic: the suspend fails, but the session is
+    // rebuilt in place — no work lost, admission unchanged
+    faultpoint::arm("spool.write:0:panic:*").unwrap();
+    let id = engine.find("s0").unwrap();
+    let err = format!("{:?}", engine.suspend(id).unwrap_err());
+    assert!(err.contains("restored in place"), "{err}");
+    assert!(engine.find("s0").is_some(),
+            "failed suspend must not lose the session");
+    assert_eq!(engine.len(), 1);
+    assert!(engine.suspended_names().is_empty());
+    faultpoint::clear();
+
+    // after all that turbulence the run is still bit-identical
+    let reports = engine.run().unwrap();
+    let rep = reports[0].train().expect("completed");
+    assert_eq!(row_sigs(&rep.rows), serial_rows,
+               "rows diverged after suspend faults");
+    let id = engine.find("s0").unwrap();
+    assert_params_eq(&engine.session(id).params(), &serial_params, "s0");
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn corrupt_suspend_image_quarantines_at_resume_time() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let spool = spool_dir("corrupt_image");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, cfg(4, 3)).unwrap();
+    // the write "succeeds" but one byte of the image is flipped — the
+    // damage is only detectable by the reader's checksums
+    faultpoint::arm("spool.write:0:nan").unwrap();
+    let id = engine.find("s0").unwrap();
+    let h = engine.suspend(id).unwrap();
+    assert!(h.path.is_file());
+    faultpoint::clear();
+    // the resume path detects the corruption, quarantines the file,
+    // and the fleet run still returns Ok
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 1);
+    let rec = reports[0].fault().expect("corrupt image must quarantine");
+    assert_eq!(rec.kind, FaultKind::State);
+    assert!(spool.join("s0.quarantine.state").is_file());
+    assert!(!spool.join("s0.state").exists(),
+            "the corrupt original must be renamed away");
+    assert!(rec.detail.contains("checksum"), "{}", rec.detail);
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+/// Satellite: a failed eviction during preemptive admission degrades to
+/// a rejected admission — no panic, victims stay resident (replaces the
+/// old `.expect("victim still resident")`).
+#[test]
+fn failed_eviction_degrades_to_rejected_admission() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(3, 3), cfg(3, 9), cfg(3, 7)];
+    let serial: Vec<_> = cfgs.iter().map(|c| serial_run(&art, c)).collect();
+    let adm = predict(&art, &cfgs[0]);
+    let base = art.frozen_base().nbytes();
+    let budget = base + 2 * adm.marginal() + adm.marginal() / 2;
+    let spool = spool_dir("failed_eviction");
+    let mut engine = Engine::new(budget);
+    engine.set_spool(spool.clone());
+    engine.enable_preempt().unwrap();
+    engine.admit_prio("s0", &art, cfgs[0].clone(), 0).unwrap();
+    engine.admit_prio("s1", &art, cfgs[1].clone(), 5).unwrap();
+    // every spool write panics: the eviction of s0 cannot land
+    faultpoint::arm("spool.write:0:panic:*").unwrap();
+    let err = engine
+        .admit_prio("hi", &art, cfgs[2].clone(), 10)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("budget"), "{err}");
+    assert!(engine.find("s0").is_some(), "victim must stay resident");
+    assert!(engine.find("s1").is_some());
+    assert!(engine.find("hi").is_none());
+    assert!(engine.suspended_names().is_empty());
+    faultpoint::clear();
+    // the survivors still finish bit-identically
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 2);
+    for (i, name) in ["s0", "s1"].iter().enumerate() {
+        let r = reports.iter().find(|r| r.name == *name).unwrap();
+        assert_eq!(row_sigs(&r.train().unwrap().rows), serial[i].0,
+                   "{name}");
+        let id = engine.find(name).unwrap();
+        assert_params_eq(&engine.session(id).params(), &serial[i].1,
+                         name);
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+/// Satellite: the scheduling-deadlock error names the spooled sessions,
+/// leaves their statefiles intact, and the same spool dir re-serves
+/// under a bigger budget.
+#[test]
+fn scheduling_deadlock_leaves_spool_reservable() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let c = cfg(3, 3);
+    let adm = predict(&art, &c);
+    let base = art.frozen_base().nbytes();
+    let done_cost = adm.opt_bytes + adm.trainable_bytes
+        + adm.flat_copy_bytes;
+    // fits one live session; even a *finished* resident session plus a
+    // second marginal overflows — the spooled job can never come back
+    let budget = base + adm.marginal() + done_cost / 2;
+    let spool = spool_dir("deadlock");
+    let stuck = spool.join("s1.state");
+    save_state(&art, &stuck, "s1", cfg(3, 9), 1);
+    let mut engine = Engine::new(budget);
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, c).unwrap();
+    assert!(!engine.spool_in(&art, &stuck).unwrap(),
+            "s1 must queue, not resume");
+    let err = loop {
+        match engine.round() {
+            Ok(_) => {}
+            Err(e) => break e.to_string(),
+        }
+    };
+    assert!(err.contains("scheduling deadlock"), "{err}");
+    assert!(err.contains("s1"), "deadlock error must name the spooled \
+                                 session: {err}");
+    // the statefile is intact — not consumed, not quarantined
+    assert!(stuck.is_file());
+    let h = statefile::peek_session(&stuck).unwrap();
+    assert_eq!(h.name, "s1");
+    assert_eq!(h.steps_done, 1);
+    // a bigger budget finishes the stranded work from the same spool
+    let mut engine2 = Engine::unbounded();
+    engine2.set_spool(spool.clone());
+    assert!(engine2.spool_in(&art, &stuck).unwrap());
+    let reports = engine2.run().unwrap();
+    let rep = reports
+        .iter()
+        .find(|r| r.name == "s1")
+        .unwrap()
+        .train()
+        .expect("completed");
+    assert_eq!(rep.steps, 3);
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+/// Satellite: a resumed run's `--metrics` JSONL sink keeps the full
+/// step history — restored rows are re-written, replayed steps appear
+/// exactly once, and the file matches an uninterrupted twin's.
+#[test]
+fn resumed_metrics_sink_keeps_full_history() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let dir = spool_dir("metrics_history");
+    let twin_path = dir.join("twin.jsonl");
+    let resumed_path = dir.join("resumed.jsonl");
+    let mk = |p: &std::path::Path| TrainCfg {
+        metrics_jsonl: Some(p.to_path_buf()),
+        ..cfg(4, 3)
+    };
+    // uninterrupted twin
+    let mut twin = Session::new(&art, mk(&twin_path)).unwrap();
+    while let StepOutcome::Stepped(_) = twin.step().unwrap() {}
+    twin.finish().unwrap();
+    // interrupted at step 2, saved, resumed, finished
+    let state = dir.join("s.state");
+    save_state(&art, &state, "s0", mk(&resumed_path), 2);
+    let saved = statefile::load_session(&state).unwrap();
+    let mut resumed = Session::resume(&art, saved.state).unwrap();
+    while let StepOutcome::Stepped(_) = resumed.step().unwrap() {}
+    resumed.finish().unwrap();
+    let read_steps = |p: &std::path::Path| -> Vec<(usize, f64)> {
+        std::fs::read_to_string(p)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                let j = Json::parse(l).unwrap();
+                (j.get("step").unwrap().as_usize().unwrap(),
+                 j.get("loss").unwrap().as_f64().unwrap())
+            })
+            .collect()
+    };
+    let twin_rows = read_steps(&twin_path);
+    let resumed_rows = read_steps(&resumed_path);
+    assert_eq!(twin_rows.len(), 4);
+    assert_eq!(
+        resumed_rows, twin_rows,
+        "a resumed sink must carry the full history, not a truncated \
+         tail"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: admission rejects a duplicate session name outright —
+/// resident or suspended — instead of spawning a shadowing tenant.
+#[test]
+fn duplicate_session_names_are_rejected() {
+    let _g = faultpoint::exclusive();
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let spool = spool_dir("dup_names");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, cfg(3, 3)).unwrap();
+    let err = engine.admit("s0", &art, cfg(3, 9)).unwrap_err().to_string();
+    assert!(err.contains("already resident or suspended"), "{err}");
+    // the name stays taken while the session sits in the spool
+    let id = engine.find("s0").unwrap();
+    engine.suspend(id).unwrap();
+    let err = engine.admit("s0", &art, cfg(3, 9)).unwrap_err().to_string();
+    assert!(err.contains("already resident or suspended"), "{err}");
+    let _ = std::fs::remove_dir_all(&spool);
+}

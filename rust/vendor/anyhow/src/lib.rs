@@ -46,6 +46,23 @@ impl Error {
     pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
         self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
     }
+
+    /// Walk the source chain for the first error of concrete type `E`.
+    ///
+    /// Like the real crate's method of the same name, this is how
+    /// callers classify an opaque `Error` (e.g. "was this caused by an
+    /// `io::Error`?"). Context frames in this shim only rewrite the
+    /// message, so the chain from `source()` down is the full chain.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut src = self.source();
+        while let Some(e) = src {
+            if let Some(hit) = e.downcast_ref::<E>() {
+                return Some(hit);
+            }
+            src = e.source();
+        }
+        None
+    }
 }
 
 impl fmt::Display for Error {
@@ -187,6 +204,17 @@ mod tests {
             .with_context(|| format!("loading {}", "x"))
             .unwrap_err();
         assert!(e.to_string().starts_with("loading x: reading"));
+    }
+
+    #[test]
+    fn downcast_ref_walks_the_chain() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").context("outermost").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.to_string(), "disk on fire");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // A message-only error has no chain to walk.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
