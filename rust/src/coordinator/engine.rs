@@ -164,7 +164,7 @@ pub enum SessionOutcome {
     Completed(TrainReport),
     /// The supervisor isolated a fault: the session was removed from
     /// the fleet (its last good state spooled to
-    /// `<name>.quarantine.state` when a spool directory exists) and
+    /// `<name>.state.quarantine` when a spool directory exists) and
     /// every other tenant kept running.
     Quarantined(FaultRecord),
 }
@@ -198,6 +198,34 @@ impl EngineReport {
             SessionOutcome::Quarantined(rec) => Some(rec),
         }
     }
+}
+
+/// What one session did during a [`Engine::round_with`] sweep — the
+/// front line's observability feed (per-session step-latency
+/// percentiles, completion detection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepEventKind {
+    /// The session completed one optimizer step.
+    Stepped,
+    /// The session's step budget ran out this sweep (no step ran).
+    Finished,
+    /// The supervisor quarantined the session this sweep.
+    Quarantined,
+}
+
+/// One per-session event from a [`Engine::round_with`] sweep.
+#[derive(Debug, Clone)]
+pub struct StepEvent {
+    /// Session name.
+    pub name: String,
+    /// Steps the session has completed after this event.
+    pub step: usize,
+    /// Wall-clock seconds the step took (0 for non-`Stepped` events).
+    /// Latency is measurement, not state: it is *not* part of the
+    /// determinism contract.
+    pub dur_s: f64,
+    /// What happened.
+    pub kind: StepEventKind,
 }
 
 struct Slot<'a> {
@@ -367,9 +395,11 @@ impl<'a> Engine<'a> {
     /// when the predicted footprint would exceed the budget — the
     /// error carries the memmodel's predicted bytes. Admission
     /// constructs the session (which warms up once), so an `Ok`
-    /// session is ready to step.
+    /// session is ready to step. Sessions are addressed by `name` from
+    /// here on ([`Engine::session`], [`Engine::suspend`]) — slot
+    /// positions are an internal detail.
     pub fn admit(&mut self, name: &str, art: &'a Artifact,
-                 cfg: TrainCfg) -> Result<usize> {
+                 cfg: TrainCfg) -> Result<()> {
         self.admit_prio(name, art, cfg, 0)
     }
 
@@ -381,7 +411,7 @@ impl<'a> Engine<'a> {
     /// one is evicted and the job is rejected with the usual detailed
     /// error.
     pub fn admit_prio(&mut self, name: &str, art: &'a Artifact,
-                      cfg: TrainCfg, priority: i64) -> Result<usize> {
+                      cfg: TrainCfg, priority: i64) -> Result<()> {
         ensure!(
             self.find(name).is_none()
                 && !self.suspended.iter().any(|s| s.handle.name == name),
@@ -425,7 +455,7 @@ impl<'a> Engine<'a> {
                     // degrade to the ordinary rejected-admission path
                     // instead of panicking
                     let Some(id) = self.find(&victim) else { break };
-                    match self.suspend(id) {
+                    match self.suspend_idx(id) {
                         Ok(_) => {}
                         Err(e) if self.strict => return Err(e),
                         // eviction failed (e.g. spool I/O): the victim
@@ -476,18 +506,37 @@ impl<'a> Engine<'a> {
             done: false,
             retries: 0,
         });
-        Ok(self.slots.len() - 1)
+        Ok(())
     }
 
-    /// Direct access to an admitted session (tests: parameter and
-    /// base-identity assertions).
-    pub fn session(&self, id: usize) -> &Session<'a> {
-        &self.slots[id].session
+    /// What admitting a session for `cfg` on `art` would add to the
+    /// predicted fleet footprint *right now*: the memmodel marginal
+    /// plus the frozen base — the latter only when no resident session
+    /// already shares it. This is the number scheduling policies
+    /// fit-check against the budget before committing any bytes.
+    pub fn admission_cost(&self, art: &'a Artifact,
+                          cfg: &TrainCfg) -> u64 {
+        self.base_cost_for(art) + predict(art, cfg).marginal()
     }
 
-    /// Slot id of a resident session by name (ids shift when a session
-    /// is suspended — look up by name after any suspension).
-    pub fn find(&self, name: &str) -> Option<usize> {
+    /// Direct access to a resident session by name (tests: parameter
+    /// and base-identity assertions). `None` when no resident session
+    /// carries that name (it may be suspended, quarantined, or done
+    /// and retired).
+    pub fn session(&self, name: &str) -> Option<&Session<'a>> {
+        self.find(name).map(|id| &self.slots[id].session)
+    }
+
+    /// Whether a resident session carries this name (suspended
+    /// sessions are listed by [`Engine::suspended_names`] instead).
+    pub fn contains(&self, name: &str) -> bool {
+        self.find(name).is_some()
+    }
+
+    /// Slot index of a resident session by name. Internal only: slot
+    /// indices shift whenever a session is suspended, quarantined, or
+    /// retired, so the public API deals exclusively in stable names.
+    fn find(&self, name: &str) -> Option<usize> {
         self.slots.iter().position(|s| s.name == name)
     }
 
@@ -506,15 +555,25 @@ impl<'a> Engine<'a> {
             || self.slots.iter().any(|s| !s.done)
     }
 
-    /// Evict a resident unfinished session to the spool: its portable
-    /// state (trainables, raw optimizer state, step counter, metrics
-    /// rows, memory accounting) is written to
-    /// `<spool>/<name>.state` and the slot is dropped — freeing its
-    /// tape/grad/optimizer/trainable budget share while the
-    /// `Arc`-shared frozen base stays resident with the artifact
+    /// Evict a resident unfinished session (addressed by its stable
+    /// name) to the spool: its portable state (trainables, raw
+    /// optimizer state, step counter, metrics rows, memory accounting)
+    /// is written to `<spool>/<name>.state` and the slot is dropped —
+    /// freeing its tape/grad/optimizer/trainable budget share while
+    /// the `Arc`-shared frozen base stays resident with the artifact
     /// (stored-once across suspend/resume). Returns the durable
     /// handle.
-    pub fn suspend(&mut self, id: usize) -> Result<SessionHandle> {
+    pub fn suspend(&mut self, name: &str) -> Result<SessionHandle> {
+        let id = self.find(name).with_context(|| {
+            format!("no resident session named {name:?}")
+        })?;
+        self.suspend_idx(id)
+    }
+
+    /// [`Engine::suspend`] by slot index — the internal spelling every
+    /// eviction path funnels through (indices are only stable within
+    /// one call, which is why the public API takes a name).
+    fn suspend_idx(&mut self, id: usize) -> Result<SessionHandle> {
         let spool = self
             .spool
             .clone()
@@ -589,7 +648,7 @@ impl<'a> Engine<'a> {
     pub fn suspend_all(&mut self) -> Result<Vec<SessionHandle>> {
         let mut out = Vec::new();
         while let Some(id) = self.slots.iter().position(|s| !s.done) {
-            out.push(self.suspend(id)?);
+            out.push(self.suspend_idx(id)?);
         }
         Ok(out)
     }
@@ -600,7 +659,7 @@ impl<'a> Engine<'a> {
     /// success — delete `origin` (the statefile it was loaded from).
     pub fn resume_saved(&mut self, saved: SavedSession,
                         art: &'a Artifact,
-                        origin: Option<&Path>) -> Result<usize> {
+                        origin: Option<&Path>) -> Result<()> {
         let SavedSession { name, priority, state } = saved;
         let admission = predict(art, &state.cfg);
         let base = art.frozen_base();
@@ -634,12 +693,12 @@ impl<'a> Engine<'a> {
                 format!("removing resumed statefile {p:?}")
             })?;
         }
-        Ok(self.slots.len() - 1)
+        Ok(())
     }
 
     /// [`Engine::resume_saved`] straight from a statefile on disk.
     pub fn resume_file(&mut self, art: &'a Artifact,
-                       path: &Path) -> Result<usize> {
+                       path: &Path) -> Result<()> {
         let saved = statefile::load_session(path)?;
         self.resume_saved(saved, art, Some(path))
     }
@@ -709,7 +768,7 @@ impl<'a> Engine<'a> {
 
     /// [`Engine::try_resume_suspended`] under supervision: a statefile
     /// that refuses to load (after bounded I/O retries) is quarantined
-    /// — renamed to `<name>.quarantine.state` with a report beside it —
+    /// — renamed to `<name>.state.quarantine` with a report beside it —
     /// instead of failing the round, and the scan moves on. Resolving a
     /// blocking entry either way counts as progress, so the deadlock
     /// detector never trips on a file the supervisor just retired.
@@ -781,7 +840,7 @@ impl<'a> Engine<'a> {
     }
 
     /// Remove slot `idx` from the fleet as a quarantined tenant: its
-    /// last good state is spooled to `<name>.quarantine.state` (when a
+    /// last good state is spooled to `<name>.state.quarantine` (when a
     /// spool directory is set) with a diagnostic report beside it, and
     /// the record is queued for [`Engine::run`]'s output. Infallible —
     /// quarantine is the error path's terminal state, so secondary
@@ -841,6 +900,16 @@ impl<'a> Engine<'a> {
     /// Under [`Engine::set_strict`] the first fault propagates, as it
     /// did before supervision existed.
     pub fn round(&mut self) -> Result<usize> {
+        let mut events = Vec::new();
+        self.round_with(&mut events)
+    }
+
+    /// [`Engine::round`] that additionally appends one [`StepEvent`]
+    /// per session touched — wall-clock step durations for the front
+    /// line's latency percentiles, plus `Finished` / `Quarantined`
+    /// markers. The scheduling behavior is identical to `round`.
+    pub fn round_with(&mut self,
+                      events: &mut Vec<StepEvent>) -> Result<usize> {
         let mut stepped = 0usize;
         let mut i = 0usize;
         while i < self.slots.len() {
@@ -848,15 +917,33 @@ impl<'a> Engine<'a> {
                 i += 1;
                 continue;
             }
+            let name = self.slots[i].name.clone();
             if self.strict {
+                let t0 = std::time::Instant::now();
                 match self.slots[i].session.step()? {
-                    StepOutcome::Stepped(_) => stepped += 1,
-                    StepOutcome::Exhausted => self.slots[i].done = true,
+                    StepOutcome::Stepped(_) => {
+                        stepped += 1;
+                        events.push(StepEvent {
+                            name,
+                            step: self.slots[i].session.steps_done(),
+                            dur_s: t0.elapsed().as_secs_f64(),
+                            kind: StepEventKind::Stepped,
+                        });
+                    }
+                    StepOutcome::Exhausted => {
+                        self.slots[i].done = true;
+                        events.push(StepEvent {
+                            name,
+                            step: self.slots[i].session.steps_done(),
+                            dur_s: 0.0,
+                            kind: StepEventKind::Finished,
+                        });
+                    }
                 }
                 i += 1;
                 continue;
             }
-            let name = self.slots[i].name.clone();
+            let t0 = std::time::Instant::now();
             let r = supervisor::supervised_step(
                 &name,
                 &mut self.slots[i].session,
@@ -865,14 +952,27 @@ impl<'a> Engine<'a> {
                 Ok(StepOutcome::Stepped(_)) => {
                     self.slots[i].retries = 0;
                     stepped += 1;
+                    events.push(StepEvent {
+                        name,
+                        step: self.slots[i].session.steps_done(),
+                        dur_s: t0.elapsed().as_secs_f64(),
+                        kind: StepEventKind::Stepped,
+                    });
                     i += 1;
                 }
                 Ok(StepOutcome::Exhausted) => {
                     self.slots[i].done = true;
+                    events.push(StepEvent {
+                        name,
+                        step: self.slots[i].session.steps_done(),
+                        dur_s: 0.0,
+                        kind: StepEventKind::Finished,
+                    });
                     i += 1;
                 }
                 Err(e) => {
                     let kind = supervisor::classify(&e);
+                    let step_now = self.slots[i].session.steps_done();
                     if kind == FaultKind::Io
                         && self.slots[i].retries < self.max_retries
                     {
@@ -906,10 +1006,22 @@ impl<'a> Engine<'a> {
                                          failed: {re:?}"
                                     ),
                                 );
+                                events.push(StepEvent {
+                                    name,
+                                    step: step_now,
+                                    dur_s: 0.0,
+                                    kind: StepEventKind::Quarantined,
+                                });
                             }
                         }
                     } else {
                         self.quarantine_slot(i, kind, format!("{e:?}"));
+                        events.push(StepEvent {
+                            name,
+                            step: step_now,
+                            dur_s: 0.0,
+                            kind: StepEventKind::Quarantined,
+                        });
                     }
                 }
             }
@@ -979,6 +1091,57 @@ impl<'a> Engine<'a> {
                 outcome: SessionOutcome::Completed(report),
             });
             i += 1;
+        }
+        for (admission, rec) in self.quarantined.drain(..) {
+            out.push(EngineReport {
+                name: rec.name.clone(),
+                preset: rec.preset.clone(),
+                admission,
+                outcome: SessionOutcome::Quarantined(rec),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Finish and *remove* every done session, and drain the
+    /// quarantine queue, returning their [`EngineReport`]s. This is
+    /// the long-running front-line counterpart to [`Engine::run`]:
+    /// `run` leaves finished slots resident (callers inspect their
+    /// parameters afterwards), but a finished slot still holds its
+    /// optimizer-state + trainable + flat-fallback residency — over an
+    /// open-ended job queue that would pin budget forever. Retiring
+    /// frees exactly that share; the `Arc`-shared frozen bases stay
+    /// resident with their artifacts (a later session on the same base
+    /// still admits at zero base cost).
+    pub fn retire_done(&mut self) -> Result<Vec<EngineReport>> {
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i < self.slots.len() {
+            if !self.slots[i].done {
+                i += 1;
+                continue;
+            }
+            let report = if self.strict {
+                self.slots[i].session.finish()?
+            } else {
+                match supervisor::catch_fault(|| {
+                    self.slots[i].session.finish()
+                }) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let kind = supervisor::classify(&e);
+                        self.quarantine_slot(i, kind, format!("{e:?}"));
+                        continue;
+                    }
+                }
+            };
+            let slot = self.slots.remove(i);
+            out.push(EngineReport {
+                name: slot.name,
+                preset: slot.session.artifact().manifest.preset.clone(),
+                admission: Some(slot.admission),
+                outcome: SessionOutcome::Completed(report),
+            });
         }
         for (admission, rec) in self.quarantined.drain(..) {
             out.push(EngineReport {

@@ -1,0 +1,518 @@
+//! Serving front line: a priority job queue driving the [`Engine`]
+//! step loop under a memmodel-guided scheduling policy.
+//!
+//! Time is *virtual*: 1 tick = one engine round (every unfinished
+//! resident session advances one optimizer step per tick). Each tick
+//! runs four stages in a fixed order:
+//!
+//! 1. **arrivals** — trace jobs whose arrival tick has come are
+//!    enqueued (jobs that cannot fit even an empty fleet are rejected
+//!    outright);
+//! 2. **retire** — finished sessions are evaluated and removed,
+//!    freeing their optimizer/trainable/flat residency
+//!    ([`Engine::retire_done`]);
+//! 3. **admit** — the policy scans the queue and admits every job the
+//!    memmodel prediction says fits the byte budget
+//!    ([`Engine::admission_cost`]), *before any bytes are allocated*;
+//! 4. **round** — one [`Engine::round_with`] sweep.
+//!
+//! Retiring *before* the round keeps an invariant the engine's
+//! deadlock detector relies on: at round entry every resident slot is
+//! unfinished, so a round that makes no progress while sessions sit in
+//! the spool really is a dead end.
+//!
+//! Queue-wait (admit tick − arrival tick) and everything else derived
+//! from virtual time is deterministic — a pure function of
+//! (trace, budget, policy). Wall-clock step latency is measurement
+//! only and excluded from the determinism contract.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::engine::{
+    predict, Engine, EngineReport, SessionOutcome, StepEvent,
+    StepEventKind,
+};
+use crate::coordinator::metrics::{
+    FleetMetrics, Percentiles, SessionSummary,
+};
+use crate::coordinator::traffic::TrafficJob;
+use crate::coordinator::trainer::TrainCfg;
+use crate::runtime::Artifact;
+
+/// Admission-ordering policy. All three fit-check against the same
+/// memmodel prediction; they differ only in *which* queued jobs are
+/// offered to the budget, and in what order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict FIFO by arrival: only the queue head is considered each
+    /// tick, and a head that does not fit blocks everyone behind it
+    /// (the pre-front-line `--jobs` admission order).
+    RoundRobin,
+    /// Scan the queue priority-descending (FIFO within a priority) and
+    /// admit every job that fits.
+    FirstFit,
+    /// Pack the budget best, where "best" is measured in admitted
+    /// jobs: repeatedly admit the *cheapest* predicted-cost fitting
+    /// job (ascending-cost greedy is count-optimal for a single byte
+    /// budget; ties broken priority-descending, then FIFO). Per tick
+    /// this admits at least as many jobs as either other policy.
+    BestFit,
+}
+
+impl Policy {
+    pub fn parse(token: &str) -> Result<Policy> {
+        match token {
+            "rr" | "round-robin" => Ok(Policy::RoundRobin),
+            "ff" | "first-fit" => Ok(Policy::FirstFit),
+            "bf" | "best-fit" => Ok(Policy::BestFit),
+            _ => Err(anyhow!(
+                "unknown policy {token:?} (expected round-robin, \
+                 first-fit or best-fit)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::FirstFit => "first-fit",
+            Policy::BestFit => "best-fit",
+        }
+    }
+}
+
+/// Front-line configuration.
+#[derive(Debug, Clone)]
+pub struct FrontCfg {
+    pub policy: Policy,
+    /// Fleet byte budget.
+    pub budget: u64,
+    /// Template `TrainCfg`; each job overrides `steps` and `seed` from
+    /// its trace entry (and never writes per-session JSONL).
+    pub base_cfg: TrainCfg,
+    /// Tick horizon; 0 = run until the trace drains.
+    pub max_ticks: u64,
+    /// Spool directory (required for preemption).
+    pub spool: Option<PathBuf>,
+    /// Allow admissions to evict lower-priority sessions to the spool.
+    pub preempt: bool,
+}
+
+/// What a front-line run produced: the observability surface plus the
+/// raw per-session engine reports (the bit-identity tests compare
+/// these against serial twins).
+pub struct FrontReport {
+    pub metrics: FleetMetrics,
+    pub reports: Vec<EngineReport>,
+}
+
+/// Per-job bookkeeping, indexed by trace position.
+struct JobRec {
+    job: TrafficJob,
+    name: String,
+    /// Memmodel-predicted marginal bytes (computed once, up front).
+    marginal: u64,
+    admit: Option<u64>,
+    finish: Option<u64>,
+    steps: usize,
+    peak: u64,
+    lat: Vec<f64>,
+    outcome: &'static str,
+}
+
+fn job_cfg(base: &TrainCfg, job: &TrafficJob) -> TrainCfg {
+    let mut c = base.clone();
+    c.steps = job.steps;
+    c.seed = job.seed;
+    c.metrics_jsonl = None;
+    c
+}
+
+/// Predicted cost of admitting `rec` right now, and whether it fits.
+fn fit_now<'a>(engine: &Engine<'a>, art: &'a Artifact,
+               c: &TrainCfg) -> (u64, bool) {
+    let cost = engine.admission_cost(art, c);
+    (cost, engine.predicted_bytes() + cost <= engine.budget())
+}
+
+/// Run `trace` through an engine under `cfg`, returning fleet metrics
+/// and the per-session reports.
+pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
+                 trace: &[TrafficJob],
+                 cfg: &FrontCfg) -> Result<FrontReport> {
+    let mut engine: Engine<'a> = Engine::new(cfg.budget);
+    if let Some(dir) = &cfg.spool {
+        engine.set_spool(dir.clone());
+    }
+    if cfg.preempt {
+        engine.enable_preempt()?;
+    }
+
+    // --- per-job records, name → index map, preset validation -------
+    let mut states: Vec<JobRec> = Vec::with_capacity(trace.len());
+    let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+    for (idx, job) in trace.iter().enumerate() {
+        let art = arts.get(&job.preset).with_context(|| {
+            format!("trace job {idx}: unknown preset {:?}", job.preset)
+        })?;
+        let marginal = predict(art, &job_cfg(&cfg.base_cfg, job)).marginal();
+        let name = format!("j{idx}");
+        by_name.insert(name.clone(), idx);
+        states.push(JobRec {
+            job: job.clone(),
+            name,
+            marginal,
+            admit: None,
+            finish: None,
+            steps: 0,
+            peak: 0,
+            lat: Vec::new(),
+            outcome: "queued",
+        });
+    }
+
+    let mut pending: Vec<usize> = Vec::new();
+    let mut reports: Vec<EngineReport> = Vec::new();
+    let mut events: Vec<StepEvent> = Vec::new();
+    let mut next = 0usize;
+    let mut tick = 0u64;
+    let mut preemptions = 0usize;
+    let mut iters = 0u64;
+
+    // attempt one admission; returns whether the job went in
+    let try_admit = |engine: &mut Engine<'a>,
+                     rec: &mut JobRec,
+                     preemptions: &mut usize,
+                     tick: u64| -> Result<bool> {
+        let art = &arts[&rec.job.preset];
+        let c = job_cfg(&cfg.base_cfg, &rec.job);
+        let (_, fits) = fit_now(engine, art, &c);
+        let admitted = if fits {
+            engine.admit_prio(&rec.name, art, c, rec.job.priority)?;
+            true
+        } else if cfg.preempt {
+            // over budget: the engine may evict lower-priority victims;
+            // a rejection here is a no-fit, not an error
+            let before = engine.suspended_names().len();
+            match engine.admit_prio(&rec.name, art, c, rec.job.priority) {
+                Ok(()) => {
+                    *preemptions +=
+                        engine.suspended_names().len() - before;
+                    true
+                }
+                Err(_) => false,
+            }
+        } else {
+            false
+        };
+        if admitted && rec.admit.is_none() {
+            rec.admit = Some(tick);
+        }
+        Ok(admitted)
+    };
+
+    // one policy pass over the queue; returns admissions made
+    let admit_phase = |engine: &mut Engine<'a>,
+                       pending: &mut Vec<usize>,
+                       states: &mut Vec<JobRec>,
+                       preemptions: &mut usize,
+                       tick: u64| -> Result<usize> {
+        let mut admitted = 0usize;
+        match cfg.policy {
+            Policy::RoundRobin => {
+                // head-of-line: stop at the first job that doesn't fit
+                while let Some(&j) = pending.first() {
+                    if !try_admit(engine, &mut states[j], preemptions,
+                                  tick)? {
+                        break;
+                    }
+                    pending.remove(0);
+                    admitted += 1;
+                }
+            }
+            Policy::FirstFit => {
+                let mut order = pending.clone();
+                order.sort_by_key(|&j| {
+                    (-states[j].job.priority, states[j].job.arrival, j)
+                });
+                for j in order {
+                    if try_admit(engine, &mut states[j], preemptions,
+                                 tick)? {
+                        pending.retain(|&p| p != j);
+                        admitted += 1;
+                    }
+                }
+            }
+            Policy::BestFit => {
+                loop {
+                    // the fitting job with the smallest predicted cost
+                    // (count-optimal greedy); ties: priority desc,
+                    // arrival asc, index asc
+                    let mut best: Option<(usize, u64)> = None;
+                    for &j in pending.iter() {
+                        let art = &arts[&states[j].job.preset];
+                        let c = job_cfg(&cfg.base_cfg, &states[j].job);
+                        let (cost, fits) = fit_now(engine, art, &c);
+                        if !fits {
+                            continue;
+                        }
+                        let better = match best {
+                            None => true,
+                            Some((b, bcost)) => {
+                                (cost, -states[j].job.priority,
+                                 states[j].job.arrival, j)
+                                    < (bcost, -states[b].job.priority,
+                                       states[b].job.arrival, b)
+                            }
+                        };
+                        if better {
+                            best = Some((j, cost));
+                        }
+                    }
+                    let picked = match best {
+                        Some((j, _)) => {
+                            // the plain fit check passed, so this must go in
+                            let ok = try_admit(engine, &mut states[j],
+                                               preemptions, tick)?;
+                            debug_assert!(ok);
+                            ok.then_some(j)
+                        }
+                        None if cfg.preempt => {
+                            // nothing fits outright: offer the cheapest
+                            // job first and let eviction decide
+                            let mut order = pending.clone();
+                            order.sort_by_key(|&j| {
+                                let art =
+                                    &arts[&states[j].job.preset];
+                                let c = job_cfg(&cfg.base_cfg,
+                                                &states[j].job);
+                                (fit_now(engine, art, &c).0,
+                                 -states[j].job.priority,
+                                 states[j].job.arrival, j)
+                            });
+                            let mut hit = None;
+                            for j in order {
+                                if try_admit(engine, &mut states[j],
+                                             preemptions, tick)? {
+                                    hit = Some(j);
+                                    break;
+                                }
+                            }
+                            hit
+                        }
+                        None => None,
+                    };
+                    match picked {
+                        Some(j) => {
+                            pending.retain(|&p| p != j);
+                            admitted += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+        Ok(admitted)
+    };
+
+    loop {
+        iters += 1;
+        if iters > 1_000_000 {
+            bail!("front line exceeded its safety bound of 1M ticks");
+        }
+
+        // 1. arrivals — jobs too big for even an empty fleet are
+        // rejected outright (the budget can never hold base + marginal)
+        while next < states.len() && states[next].job.arrival <= tick {
+            let art = &arts[&states[next].job.preset];
+            let floor = art.frozen_base().nbytes() + states[next].marginal;
+            if floor > cfg.budget {
+                states[next].outcome = "rejected";
+            } else {
+                pending.push(next);
+            }
+            next += 1;
+        }
+
+        // 2. retire finished sessions
+        for r in engine.retire_done()? {
+            record_report(&mut states, &by_name, &mut reports, r, tick);
+        }
+
+        // 3. policy admissions
+        admit_phase(&mut engine, &mut pending, &mut states,
+                    &mut preemptions, tick)?;
+
+        // wedge check: with nothing resident or suspended, the fleet
+        // is bases-only — the smallest it will ever be again — so a
+        // queued job that does not fit *now* never will
+        if engine.is_empty()
+            && engine.suspended_names().is_empty()
+            && !pending.is_empty()
+        {
+            let before = pending.len();
+            let mut keep = Vec::new();
+            for &j in pending.iter() {
+                let art = &arts[&states[j].job.preset];
+                let c = job_cfg(&cfg.base_cfg, &states[j].job);
+                if fit_now(&engine, art, &c).1 {
+                    keep.push(j);
+                } else {
+                    states[j].outcome = "rejected";
+                }
+            }
+            pending = keep;
+            if pending.len() != before {
+                admit_phase(&mut engine, &mut pending, &mut states,
+                            &mut preemptions, tick)?;
+            }
+        }
+
+        // drained?
+        if next >= states.len()
+            && pending.is_empty()
+            && engine.is_empty()
+            && engine.suspended_names().is_empty()
+        {
+            break;
+        }
+
+        // 4. one engine round
+        if engine.has_unfinished() {
+            engine.round_with(&mut events)?;
+            for ev in events.drain(..) {
+                let Some(&j) = by_name.get(&ev.name) else { continue };
+                states[j].steps = ev.step;
+                if ev.kind == StepEventKind::Stepped {
+                    states[j].lat.push(ev.dur_s);
+                }
+            }
+        }
+
+        // horizon / advance
+        if cfg.max_ticks > 0 && tick + 1 >= cfg.max_ticks {
+            tick += 1;
+            break;
+        }
+        if engine.is_empty()
+            && engine.suspended_names().is_empty()
+            && pending.is_empty()
+            && next < states.len()
+        {
+            // idle: fast-forward virtual time to the next arrival
+            tick = states[next].job.arrival;
+        } else {
+            tick += 1;
+        }
+    }
+
+    // collect sessions that finished on the last round
+    for r in engine.retire_done()? {
+        record_report(&mut states, &by_name, &mut reports, r, tick);
+    }
+
+    // label what the horizon cut off
+    for name in engine.suspended_names() {
+        if let Some(&j) = by_name.get(&name) {
+            states[j].outcome = "suspended";
+        }
+    }
+    for rec in states.iter_mut() {
+        if rec.outcome == "queued" && engine.contains(&rec.name) {
+            rec.outcome = "running";
+        }
+    }
+
+    // --- metrics assembly -------------------------------------------
+    let queue_waits: Vec<f64> = states
+        .iter()
+        .filter_map(|r| {
+            r.admit
+                .map(|a| a.saturating_sub(r.job.arrival) as f64)
+        })
+        .collect();
+    let all_lat: Vec<f64> =
+        states.iter().flat_map(|r| r.lat.iter().copied()).collect();
+    let sessions: Vec<SessionSummary> = states
+        .iter()
+        .map(|r| SessionSummary {
+            name: r.name.clone(),
+            preset: r.job.preset.clone(),
+            priority: r.job.priority,
+            arrival: r.job.arrival,
+            admit: r.admit,
+            finish: r.finish,
+            steps: r.steps,
+            predicted_marginal_bytes: r.marginal,
+            peak_activation_bytes: r.peak,
+            step_latency_s: Percentiles::from_samples(&r.lat),
+            outcome: r.outcome.to_string(),
+        })
+        .collect();
+    let metrics = FleetMetrics {
+        policy: cfg.policy.as_str().to_string(),
+        budget_bytes: cfg.budget,
+        ticks: tick,
+        horizon: cfg.max_ticks,
+        submitted: states.len(),
+        admitted: states.iter().filter(|r| r.admit.is_some()).count(),
+        rejected: states
+            .iter()
+            .filter(|r| r.outcome == "rejected")
+            .count(),
+        completed: states
+            .iter()
+            .filter(|r| r.outcome == "completed")
+            .count(),
+        quarantined: states
+            .iter()
+            .filter(|r| r.outcome == "quarantined")
+            .count(),
+        preemptions,
+        queue_wait_ticks: Percentiles::from_samples(&queue_waits),
+        step_latency_s: Percentiles::from_samples(&all_lat),
+        sessions,
+    };
+    Ok(FrontReport { metrics, reports })
+}
+
+fn record_report(states: &mut [JobRec],
+                 by_name: &BTreeMap<String, usize>,
+                 reports: &mut Vec<EngineReport>,
+                 r: EngineReport,
+                 tick: u64) {
+    if let Some(&j) = by_name.get(&r.name) {
+        states[j].finish = Some(tick);
+        match &r.outcome {
+            SessionOutcome::Completed(tr) => {
+                states[j].outcome = "completed";
+                states[j].steps = tr.steps;
+                states[j].peak = tr.peak_activation_bytes;
+            }
+            SessionOutcome::Quarantined(_) => {
+                states[j].outcome = "quarantined";
+            }
+        }
+    }
+    reports.push(r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("round-robin").unwrap(),
+                   Policy::RoundRobin);
+        assert_eq!(Policy::parse("first-fit").unwrap(),
+                   Policy::FirstFit);
+        assert_eq!(Policy::parse("bf").unwrap(), Policy::BestFit);
+        assert!(Policy::parse("lifo").is_err());
+        assert_eq!(Policy::BestFit.as_str(), "best-fit");
+    }
+}

@@ -134,9 +134,234 @@ impl Metrics {
     }
 }
 
+/// Nearest-rank percentile over an *unsorted* sample set (the input is
+/// copied and sorted). Returns 0.0 on an empty set so the JSON surface
+/// stays numeric.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+    xs[rank.clamp(1, xs.len()) - 1]
+}
+
+/// p50/p90/p99 triple — the percentile surface both the per-session
+/// step-latency and the fleet queue-wait aggregations report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn from_samples(samples: &[f64]) -> Percentiles {
+        Percentiles {
+            p50: percentile(samples, 50.0),
+            p90: percentile(samples, 90.0),
+            p99: percentile(samples, 99.0),
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("p50", num(self.p50)),
+            ("p90", num(self.p90)),
+            ("p99", num(self.p99)),
+        ])
+    }
+}
+
+/// Per-session serving metrics the front line aggregates: virtual-time
+/// queue accounting (deterministic) plus wall-clock step latency
+/// (measurement only — excluded from the determinism contract).
+#[derive(Debug, Clone)]
+pub struct SessionSummary {
+    /// Session name (`j<idx>` in trace order).
+    pub name: String,
+    /// Preset the job trains.
+    pub preset: String,
+    /// Scheduling priority.
+    pub priority: i64,
+    /// Arrival tick from the trace.
+    pub arrival: u64,
+    /// Tick the job was admitted (None: still queued or rejected).
+    pub admit: Option<u64>,
+    /// Tick the job's report was retired (None: not finished).
+    pub finish: Option<u64>,
+    /// Optimizer steps completed.
+    pub steps: usize,
+    /// Memmodel-predicted marginal bytes admission gated on.
+    pub predicted_marginal_bytes: u64,
+    /// Measured peak activation bytes (0 until completed).
+    pub peak_activation_bytes: u64,
+    /// Wall-clock per-step latency percentiles (seconds).
+    pub step_latency_s: Percentiles,
+    /// `completed | quarantined | running | queued | rejected`.
+    pub outcome: String,
+}
+
+impl SessionSummary {
+    /// Queue wait in ticks (admit − arrival), when admitted.
+    pub fn queue_wait(&self) -> Option<u64> {
+        self.admit.map(|a| a.saturating_sub(self.arrival))
+    }
+
+    pub fn json(&self) -> Json {
+        let opt = |v: Option<u64>| match v {
+            Some(x) => num(x as f64),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("name", s(&self.name)),
+            ("preset", s(&self.preset)),
+            ("priority", num(self.priority as f64)),
+            ("arrival", num(self.arrival as f64)),
+            ("admit", opt(self.admit)),
+            ("finish", opt(self.finish)),
+            ("queue_wait_ticks", opt(self.queue_wait())),
+            ("steps", num(self.steps as f64)),
+            ("predicted_marginal_bytes",
+             num(self.predicted_marginal_bytes as f64)),
+            ("peak_activation_bytes",
+             num(self.peak_activation_bytes as f64)),
+            ("step_latency_s", self.step_latency_s.json()),
+            ("outcome", s(&self.outcome)),
+        ])
+    }
+}
+
+/// Fleet-level serving metrics for one front-line run — the JSON
+/// surface `ambp bench-fleet` emits next to the `BENCH_*.json` files.
+/// Every field except the two wall-clock latency blocks is a pure
+/// function of (trace, budget, policy), i.e. deterministic across
+/// thread counts and machines.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// Scheduling policy that produced this run.
+    pub policy: String,
+    /// Byte budget the fleet was packed against.
+    pub budget_bytes: u64,
+    /// Virtual ticks the run consumed (1 tick = one engine round).
+    pub ticks: u64,
+    /// Tick horizon the run was capped at (0 = ran to completion).
+    pub horizon: u64,
+    /// Jobs in the trace.
+    pub submitted: usize,
+    /// Jobs admitted at least once.
+    pub admitted: usize,
+    /// Jobs that can never fit the budget (rejected at enqueue).
+    pub rejected: usize,
+    /// Jobs that completed and were retired.
+    pub completed: usize,
+    /// Jobs the supervisor quarantined.
+    pub quarantined: usize,
+    /// Preemptions (sessions evicted to the spool by admission).
+    pub preemptions: usize,
+    /// Queue-wait percentiles over admitted jobs, in ticks.
+    pub queue_wait_ticks: Percentiles,
+    /// Fleet-wide wall-clock step-latency percentiles (seconds).
+    pub step_latency_s: Percentiles,
+    /// Per-session breakdown, in trace order.
+    pub sessions: Vec<SessionSummary>,
+}
+
+impl FleetMetrics {
+    /// Completed jobs per virtual tick — the packing-quality number
+    /// the policy/preset comparisons rank on.
+    pub fn throughput_jobs_per_tick(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.ticks as f64
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("policy", s(&self.policy)),
+            ("budget_bytes", num(self.budget_bytes as f64)),
+            ("ticks", num(self.ticks as f64)),
+            ("horizon", num(self.horizon as f64)),
+            ("submitted", num(self.submitted as f64)),
+            ("admitted", num(self.admitted as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("completed", num(self.completed as f64)),
+            ("quarantined", num(self.quarantined as f64)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("throughput_jobs_per_tick",
+             num(self.throughput_jobs_per_tick())),
+            ("queue_wait_ticks", self.queue_wait_ticks.json()),
+            ("step_latency_s", self.step_latency_s.json()),
+            ("sessions",
+             Json::Arr(self.sessions.iter().map(|x| x.json()).collect())),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 90.0), 90.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        // unsorted input is handled (the helper sorts a copy)
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn fleet_metrics_json_shape() {
+        let sess = SessionSummary {
+            name: "j0".into(),
+            preset: "p".into(),
+            priority: 1,
+            arrival: 2,
+            admit: Some(5),
+            finish: Some(9),
+            steps: 3,
+            predicted_marginal_bytes: 1024,
+            peak_activation_bytes: 2048,
+            step_latency_s: Percentiles::from_samples(&[0.1, 0.2]),
+            outcome: "completed".into(),
+        };
+        assert_eq!(sess.queue_wait(), Some(3));
+        let fleet = FleetMetrics {
+            policy: "best-fit".into(),
+            budget_bytes: 1 << 20,
+            ticks: 10,
+            horizon: 0,
+            submitted: 1,
+            admitted: 1,
+            rejected: 0,
+            completed: 1,
+            quarantined: 0,
+            preemptions: 0,
+            queue_wait_ticks: Percentiles::from_samples(&[3.0]),
+            step_latency_s: Percentiles::from_samples(&[0.1, 0.2]),
+            sessions: vec![sess],
+        };
+        let j = Json::parse(&fleet.json().to_string()).unwrap();
+        assert_eq!(j.get("policy").unwrap().as_str().unwrap(),
+                   "best-fit");
+        assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
+        let qs = j.get("queue_wait_ticks").unwrap();
+        assert_eq!(qs.get("p50").unwrap().as_f64().unwrap(), 3.0);
+        let sessions = j.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions[0].get("queue_wait_ticks").unwrap()
+                       .as_usize().unwrap(),
+                   3);
+        assert!((fleet.throughput_jobs_per_tick() - 0.1).abs() < 1e-12);
+    }
 
     #[test]
     fn rows_and_means() {

@@ -1,10 +1,12 @@
 //! L3 coordinator: the step-driven session core, the multi-tenant
 //! engine, optimizers, LR schedules, measured memory accounting,
-//! metrics, checkpoints, and the durable statefile format behind
-//! suspend/resume and preemptive scheduling.
+//! metrics, checkpoints, the durable statefile format behind
+//! suspend/resume and preemptive scheduling, and the serving front
+//! line (job queue + traffic + scheduling policies).
 
 pub mod checkpoint;
 pub mod engine;
+pub mod frontline;
 pub mod memory;
 pub mod metrics;
 pub mod optimizer;
@@ -12,9 +14,14 @@ pub mod scheduler;
 pub mod session;
 pub mod statefile;
 pub mod supervisor;
+pub mod traffic;
 pub mod trainer;
 
-pub use engine::{Engine, EngineReport, JobSpec, SessionOutcome};
+pub use engine::{Engine, EngineReport, JobSpec, SessionOutcome,
+                 StepEvent, StepEventKind};
+pub use frontline::{FrontCfg, FrontReport, Policy};
+pub use metrics::{FleetMetrics, Percentiles, SessionSummary};
+pub use traffic::{TrafficCfg, TrafficJob};
 pub use session::{Session, SessionState, StepOutcome, StepStats};
 pub use statefile::{SavedSession, SessionHandle, StateError};
 pub use supervisor::{FaultKind, FaultRecord, NumericFault};

@@ -74,6 +74,72 @@ mod tests {
     }
 
     #[test]
+    fn warmup_handoff_is_continuous() {
+        // step == warmup switches branches; the two formulas must meet
+        // at base without a jump (warmup end feeds cos(0) / t = 0)
+        let c = Schedule::WarmupCosine { warmup: 10, warmup_init: 1e-6 };
+        assert!((c.lr(1.0, 10, 100) - 1.0).abs() < 1e-6);
+        let before = c.lr(1.0, 9, 100);
+        let after = c.lr(1.0, 10, 100);
+        assert!((after - before).abs() < 0.2, "{before} vs {after}");
+        let l = Schedule::WarmupLinear { warmup_frac: 0.1 };
+        // linear warmup hits base on its *last* warmup step (step+1
+        // numerator), and the decay branch starts back at base
+        assert!((l.lr(1.0, 9, 100) - 1.0).abs() < 1e-6);
+        assert!((l.lr(1.0, 10, 100) - 1.0).abs() < 1e-6);
+        assert_eq!(Schedule::Constant.lr(1.0, 10, 100), 1.0);
+    }
+
+    #[test]
+    fn zero_warmup_starts_at_base() {
+        // warmup = 0: no warmup branch is ever taken; decay starts
+        // immediately from base and the max(1) guards avoid 0/0
+        let c = Schedule::WarmupCosine { warmup: 0, warmup_init: 0.5 };
+        assert!((c.lr(1.0, 0, 100) - 1.0).abs() < 1e-6);
+        assert!(c.lr(1.0, 1, 100) < 1.0);
+        let l = Schedule::WarmupLinear { warmup_frac: 0.0 };
+        assert!((l.lr(1.0, 0, 100) - 1.0).abs() < 1e-6);
+        assert!(l.lr(1.0, 50, 100) < 0.51);
+        assert_eq!(Schedule::Constant.lr(1.0, 0, 100), 1.0);
+    }
+
+    #[test]
+    fn total_shorter_than_warmup_stays_finite() {
+        // total < warmup: the decay branch's saturating_sub would be 0
+        // without the max(1) guard; every step must stay a finite
+        // warmup-ramp value below (or at) base
+        let c = Schedule::WarmupCosine { warmup: 50, warmup_init: 0.0 };
+        for step in 0..60 {
+            let lr = c.lr(1.0, step, 10);
+            assert!(lr.is_finite() && (0.0..=1.0).contains(&lr),
+                    "cosine step {step}: {lr}");
+        }
+        let l = Schedule::WarmupLinear { warmup_frac: 1.0 };
+        for step in 0..20 {
+            let lr = l.lr(1.0, step, 10);
+            assert!(lr.is_finite() && (0.0..=1.0).contains(&lr),
+                    "linear step {step}: {lr}");
+        }
+        assert_eq!(Schedule::Constant.lr(1.0, 20, 10), 1.0);
+    }
+
+    #[test]
+    fn final_step_decays_to_zero() {
+        let c = Schedule::WarmupCosine { warmup: 10, warmup_init: 0.0 };
+        // cos(pi * (total-warmup-ish)/(total-warmup)) → lr ≈ 0 at the
+        // last step, exactly 0 past total
+        assert!(c.lr(1.0, 99, 100) < 5e-3);
+        assert!(c.lr(1.0, 100, 100) < 1e-7);
+        assert!(c.lr(1.0, 250, 100) < 1e-7);
+        let l = Schedule::WarmupLinear { warmup_frac: 0.1 };
+        assert!(l.lr(1.0, 99, 100) < 0.02);
+        assert_eq!(l.lr(1.0, 100, 100), 0.0);
+        assert_eq!(l.lr(1.0, 250, 100), 0.0);
+        // constant never decays — its "final step" is still base
+        assert_eq!(Schedule::Constant.lr(1.0, 100, 100), 1.0);
+    }
+
+    #[test]
     fn never_negative_or_nan() {
         for s in [
             Schedule::Constant,

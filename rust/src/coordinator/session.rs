@@ -186,7 +186,7 @@ impl<'a> Session<'a> {
     /// trainable slice. Warms up exactly once (see [`Session::build`]).
     pub fn new(art: &'a Artifact, cfg: TrainCfg) -> Result<Session<'a>> {
         Session::build(art, cfg, art.frozen_base(), art.trainable_init(),
-                       0)
+                       0, false)
             .map_err(|(e, _)| e)
     }
 
@@ -198,7 +198,10 @@ impl<'a> Session<'a> {
     /// data producer restarts at micro-batch `step × grad_accum`, and
     /// the optimizer state is restored bit-exactly — the continued run
     /// is bit-identical to one that was never suspended (pinned by
-    /// `tests/statefile.rs`).
+    /// `tests/statefile.rs`). The original session already paid the
+    /// one-off warmup pass, so resume skips it — warmup performs no
+    /// parameter update and feeds an out-of-range batch index, so
+    /// skipping it cannot perturb the training state.
     pub fn resume(art: &'a Artifact,
                   state: SessionState) -> Result<Session<'a>> {
         let SessionState {
@@ -260,7 +263,7 @@ impl<'a> Session<'a> {
                 p.shape
             );
         }
-        let mut s = Session::build(art, cfg, base, trainable, step)
+        let mut s = Session::build(art, cfg, base, trainable, step, true)
             .map_err(|(e, _)| e)?;
         ensure!(
             s.opt.name() == opt_name,
@@ -299,7 +302,7 @@ impl<'a> Session<'a> {
         let (base, trainable) = FrozenBase::split(&art.manifest, full)
             .expect("arity checked above");
         let base = Arc::new(base);
-        Session::build(art, cfg, base.clone(), trainable, 0)
+        Session::build(art, cfg, base.clone(), trainable, 0, false)
             .map_err(|(e, trainable)| (e, base.join(trainable)))
     }
 
@@ -313,11 +316,14 @@ impl<'a> Session<'a> {
     /// `start_step > 0` is the resume path: the prefetcher starts at
     /// micro-batch `start_step × grad_accum` and the step counter at
     /// `start_step`, so the session sees exactly the tail of the batch
-    /// sequence an uninterrupted run would. The warmup pass still runs
-    /// (it performs no parameter update, so bit-identity holds).
+    /// sequence an uninterrupted run would. `warmed` marks a session
+    /// whose state already went through warmup once (the resume path):
+    /// the pass is skipped there — it performs no parameter update, so
+    /// identity holds either way, but skipping it saves one full
+    /// fwd/bwd of compute per resume.
     fn build(art: &'a Artifact, cfg: TrainCfg, base: Arc<FrozenBase>,
-             trainable: Vec<Tensor>,
-             start_step: usize) -> Recoverable<'a> {
+             trainable: Vec<Tensor>, start_step: usize,
+             warmed: bool) -> Recoverable<'a> {
         if trainable.len() != base.n_trainable() {
             let e = anyhow::anyhow!(
                 "trainable slice arity: got {}, base expects {}",
@@ -363,8 +369,10 @@ impl<'a> Session<'a> {
             metrics: Metrics::new(None).expect("no-sink metrics"),
             step: start_step,
         };
-        if let Err(e) = s.warmup() {
-            return Err((e, s.take_trainable()));
+        if !warmed {
+            if let Err(e) = s.warmup() {
+                return Err((e, s.take_trainable()));
+            }
         }
         // the metrics clock (throughput denominator) starts post-warmup
         let sink = s.cfg.metrics_jsonl.clone();

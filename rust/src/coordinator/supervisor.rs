@@ -18,9 +18,10 @@
 //! | anything else             | `Other`   | quarantine                |
 //!
 //! Quarantine means: the tenant's last good state is spooled to
-//! `<name>.quarantine.state`, a diagnostic report naming the fault,
-//! step, and preset is written to `<name>.quarantine.json`, and the
-//! fleet keeps stepping every other tenant. Under `--strict` none of
+//! `<name>.state.quarantine` (extension `quarantine`, so naive
+//! `*.state` globs no longer match it), a diagnostic report naming
+//! the fault, step, and preset is written to `<name>.quarantine.json`,
+//! and the fleet keeps stepping every other tenant. Under `--strict` none of
 //! this engages — any fault propagates out of `Engine::round` exactly
 //! as before this layer existed.
 //!
@@ -214,9 +215,11 @@ pub struct FaultRecord {
     pub report_path: Option<PathBuf>,
 }
 
-/// `<dir>/<name>.quarantine.state`.
+/// `<dir>/<name>.state.quarantine` — the extension is `quarantine`,
+/// deliberately *not* `state`, so external `*.state` globs cannot pick
+/// up a quarantined file as resumable work.
 pub fn quarantine_state_path(dir: &Path, name: &str) -> PathBuf {
-    dir.join(format!("{name}.quarantine.state"))
+    dir.join(format!("{name}.state.quarantine"))
 }
 
 /// `<dir>/<name>.quarantine.json`.
@@ -224,11 +227,17 @@ pub fn quarantine_report_path(dir: &Path, name: &str) -> PathBuf {
     dir.join(format!("{name}.quarantine.json"))
 }
 
-/// Whether a path is a quarantined statefile. Spool scans must skip
-/// these: `<name>.quarantine.state` still has extension `state`.
+/// Whether a path is a quarantined statefile. Accepts both the current
+/// `<name>.state.quarantine` suffix and the legacy
+/// `<name>.quarantine.state` one (spool dirs written before the
+/// rename), so old quarantines stay invisible to spool scans.
 pub fn is_quarantine(path: &Path) -> bool {
     path.file_name()
-        .map(|f| f.to_string_lossy().ends_with(".quarantine.state"))
+        .map(|f| {
+            let f = f.to_string_lossy();
+            f.ends_with(".state.quarantine")
+                || f.ends_with(".quarantine.state")
+        })
         .unwrap_or(false)
 }
 
@@ -249,7 +258,7 @@ pub fn write_report(dir: &Path, rec: &FaultRecord) -> Result<PathBuf> {
 }
 
 /// Quarantine an on-disk statefile: rename it to
-/// `<name>.quarantine.state` and write the diagnostic report next to
+/// `<name>.state.quarantine` and write the diagnostic report next to
 /// it. Updates `rec` with both paths.
 pub fn quarantine_file(path: &Path, rec: &mut FaultRecord) -> Result<()> {
     let dir = path.parent().unwrap_or(Path::new("."));
@@ -269,7 +278,7 @@ pub struct SpoolScan {
     /// Statefiles that parsed — resumable work.
     pub healthy: Vec<SessionHandle>,
     /// Files that failed to parse even after retries, now renamed to
-    /// `<name>.quarantine.state` with a report beside them.
+    /// `<name>.state.quarantine` with a report beside them.
     pub quarantined: Vec<FaultRecord>,
 }
 
@@ -429,9 +438,15 @@ mod tests {
         quarantine_file(&victim, &mut rec).unwrap();
         assert!(!victim.exists());
         let q = quarantine_state_path(&dir, "s7");
+        assert_eq!(q, dir.join("s7.state.quarantine"));
         assert!(q.is_file());
+        assert!(q.extension().map(|x| x != "state").unwrap_or(false),
+                "a quarantine must not ride the .state extension");
         assert!(is_quarantine(&q));
         assert!(!is_quarantine(&victim));
+        // the legacy suffix (pre-rename spool dirs) is still recognized
+        assert!(is_quarantine(Path::new("/spool/s7.quarantine.state")));
+        assert!(!is_quarantine(Path::new("/spool/s7.state")));
         let report = std::fs::read_to_string(
             quarantine_report_path(&dir, "s7"),
         )

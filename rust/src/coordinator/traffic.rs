@@ -1,0 +1,241 @@
+//! Deterministic synthetic traffic: seeded bursty job arrivals over the
+//! existing synth data, replayable as JSONL trace files.
+//!
+//! A trace is a list of [`TrafficJob`]s sorted by arrival tick. The
+//! generator is a pure function of [`TrafficCfg`] — two runs with the
+//! same config produce byte-identical traces, and the RNG consumption
+//! per job is independent of the preset *names*, so two configs that
+//! differ only in their preset lists (same list length) produce traces
+//! with identical arrivals/steps/seeds/priorities and presets swapped
+//! position-for-position. `bench-fleet` leans on that to compare
+//! baseline vs ours/mesa preset groups under the same traffic shape.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// One job in a traffic trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficJob {
+    /// Virtual arrival tick (1 tick = one engine round).
+    pub arrival: u64,
+    /// Preset name to train.
+    pub preset: String,
+    /// Optimizer steps the job requests.
+    pub steps: usize,
+    /// Data/init seed for the job's `TrainCfg`.
+    pub seed: u64,
+    /// Scheduling priority (higher runs first among fitting jobs).
+    pub priority: i64,
+}
+
+/// Generator knobs. All sampling is driven by `seed` alone.
+#[derive(Debug, Clone)]
+pub struct TrafficCfg {
+    /// RNG seed for the whole trace.
+    pub seed: u64,
+    /// Total jobs to emit.
+    pub jobs: usize,
+    /// Presets to sample uniformly per job.
+    pub presets: Vec<String>,
+    /// Mean gap (ticks) between bursts; actual gap is 1..=2*gap.
+    pub burst_gap: u64,
+    /// Max jobs per burst (burst size is 1..=burst_max).
+    pub burst_max: usize,
+    /// Per-job step count range (inclusive).
+    pub steps_min: usize,
+    pub steps_max: usize,
+    /// Priorities are sampled uniformly from 0..=max_priority.
+    pub max_priority: i64,
+}
+
+impl Default for TrafficCfg {
+    fn default() -> TrafficCfg {
+        TrafficCfg {
+            seed: 7,
+            jobs: 12,
+            presets: Vec::new(),
+            burst_gap: 3,
+            burst_max: 3,
+            steps_min: 2,
+            steps_max: 5,
+            max_priority: 2,
+        }
+    }
+}
+
+/// Generate a bursty arrival trace. Jobs arrive in bursts of
+/// `1..=burst_max` sharing one arrival tick, with `1..=2*burst_gap`
+/// ticks between bursts.
+pub fn generate(cfg: &TrafficCfg) -> Result<Vec<TrafficJob>> {
+    if cfg.presets.is_empty() {
+        return Err(anyhow!("traffic: preset list is empty"));
+    }
+    if cfg.steps_min == 0 || cfg.steps_max < cfg.steps_min {
+        return Err(anyhow!(
+            "traffic: bad step range {}..={}",
+            cfg.steps_min,
+            cfg.steps_max
+        ));
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.jobs);
+    let mut tick = 0u64;
+    while out.len() < cfg.jobs {
+        let burst = 1 + rng.below(cfg.burst_max as u64) as usize;
+        for _ in 0..burst {
+            if out.len() == cfg.jobs {
+                break;
+            }
+            let preset =
+                cfg.presets[rng.below(cfg.presets.len() as u64) as usize].clone();
+            let span = (cfg.steps_max - cfg.steps_min + 1) as u64;
+            let steps = cfg.steps_min + rng.below(span) as usize;
+            // Seeds stay small: the JSON trace stores numbers as f64,
+            // which is exact only below 2^53.
+            let seed = rng.below(1_000_000);
+            let priority = rng.below(cfg.max_priority as u64 + 1) as i64;
+            out.push(TrafficJob { arrival: tick, preset, steps, seed, priority });
+        }
+        tick += 1 + rng.below(cfg.burst_gap * 2);
+    }
+    Ok(out)
+}
+
+fn job_json(j: &TrafficJob) -> Json {
+    obj(vec![
+        ("arrival", num(j.arrival as f64)),
+        ("preset", s(&j.preset)),
+        ("steps", num(j.steps as f64)),
+        ("seed", num(j.seed as f64)),
+        ("prio", num(j.priority as f64)),
+    ])
+}
+
+/// Write a trace as JSON lines (one job object per line).
+pub fn save_trace(path: &Path, jobs: &[TrafficJob]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut buf = String::new();
+    for j in jobs {
+        buf.push_str(&job_json(j).to_string());
+        buf.push('\n');
+    }
+    fs::write(path, buf).with_context(|| format!("writing trace {path:?}"))?;
+    Ok(())
+}
+
+/// Load a JSONL trace written by [`save_trace`] (or by hand).
+pub fn load_trace(path: &Path) -> Result<Vec<TrafficJob>> {
+    let text =
+        fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("trace {path:?} line {}", lineno + 1))?;
+        let field = |k: &str| -> Result<&Json> {
+            j.get(k)
+                .ok_or_else(|| anyhow!("trace {path:?} line {}: missing {k:?}", lineno + 1))
+        };
+        out.push(TrafficJob {
+            arrival: field("arrival")?.as_usize().ok_or_else(|| {
+                anyhow!("trace line {}: arrival not a number", lineno + 1)
+            })? as u64,
+            preset: field("preset")?
+                .as_str()
+                .ok_or_else(|| anyhow!("trace line {}: preset not a string", lineno + 1))?
+                .to_string(),
+            steps: field("steps")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace line {}: steps not a number", lineno + 1))?,
+            seed: field("seed")?.as_usize().ok_or_else(|| {
+                anyhow!("trace line {}: seed not a number", lineno + 1)
+            })? as u64,
+            priority: field("prio")?.as_usize().ok_or_else(|| {
+                anyhow!("trace line {}: prio not a number", lineno + 1)
+            })? as i64,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrafficCfg {
+        TrafficCfg {
+            seed: 42,
+            jobs: 10,
+            presets: vec!["a".into(), "b".into()],
+            ..TrafficCfg::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let t1 = generate(&cfg()).unwrap();
+        let t2 = generate(&cfg()).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), 10);
+        assert!(t1.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        for j in &t1 {
+            assert!(j.steps >= 2 && j.steps <= 5);
+            assert!(j.priority >= 0 && j.priority <= 2);
+            assert!(j.seed < 1_000_000);
+        }
+    }
+
+    #[test]
+    fn preset_swap_keeps_shape() {
+        let base = generate(&cfg()).unwrap();
+        let mut swapped_cfg = cfg();
+        swapped_cfg.presets = vec!["x".into(), "y".into()];
+        let swapped = generate(&swapped_cfg).unwrap();
+        for (a, b) in base.iter().zip(&swapped) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.priority, b.priority);
+            // presets swapped position-for-position
+            let want = if a.preset == "a" { "x" } else { "y" };
+            assert_eq!(b.preset, want);
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let jobs = generate(&cfg()).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "ambp_trace_{}_{}",
+            std::process::id(),
+            "roundtrip"
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save_trace(&path, &jobs).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(jobs, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_cfg() {
+        let mut c = cfg();
+        c.presets.clear();
+        assert!(generate(&c).is_err());
+        let mut c = cfg();
+        c.steps_min = 4;
+        c.steps_max = 3;
+        assert!(generate(&c).is_err());
+    }
+}

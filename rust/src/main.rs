@@ -3,7 +3,11 @@
 //! Subcommands:
 //!   train     fine-tune a preset artifact (the main entry point)
 //!   serve     multi-tenant engine: run N fine-tuning sessions that
-//!             share frozen bases, under a byte budget
+//!             share frozen bases, under a byte budget; with --trace,
+//!             a job trace drives the priority queue under a
+//!             scheduling policy (--policy)
+//!   bench-fleet  policy × preset-group serving benchmark on a seeded
+//!             trace; writes BENCH_fleet.json
 //!   fleet     sessions-per-budget capacity report (baseline vs ours
 //!             vs mesa), cross-checked against a measured probe step
 //!   suspend   train a session for K steps, then spool its durable
@@ -26,11 +30,13 @@ use ambp::config::RunCfg;
 use ambp::coordinator::checkpoint::{merge_affine, Checkpoint};
 use ambp::coordinator::engine::fleet_capacity;
 use ambp::coordinator::{
-    statefile, supervisor, Engine, JobSpec, Session, StepOutcome,
+    frontline, statefile, supervisor, traffic, Engine, FleetMetrics,
+    FrontCfg, JobSpec, Policy, Session, StepOutcome, TrafficCfg,
     TrainCfg, Trainer,
 };
 use ambp::runtime::{Artifact, Runtime};
 use ambp::util::cli::Args;
+use ambp::util::json::obj;
 use anyhow::{bail, ensure, Context, Result};
 
 fn main() -> Result<()> {
@@ -39,6 +45,7 @@ fn main() -> Result<()> {
     match cmd {
         "train" => train(&args),
         "serve" => serve(&args),
+        "bench-fleet" => bench_fleet(&args),
         "suspend" => suspend_cmd(&args),
         "resume" => resume_cmd(&args),
         "fleet" => fleet(&args),
@@ -146,6 +153,11 @@ fn serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--faults {f:?}: {e}"))?;
         println!("fault injection armed: {f}");
     }
+    // front-line mode: a job trace + scheduling policy drive the
+    // engine through the priority queue instead of a fixed --jobs list
+    if args.get("trace").is_some() || args.get("policy").is_some() {
+        return serve_frontline(&rt, args, budget, spool, preempt);
+    }
     // salvaging warm-restart scan: healthy statefiles resume, corrupt
     // ones are quarantined (renamed + report) instead of blocking the
     // whole fleet — unless --strict, where the first bad file errors
@@ -249,11 +261,11 @@ fn serve(args: &Args) -> Result<()> {
         }
         let suspended_before = engine.suspended_names().len();
         match engine.admit_prio(&name, art, cfg, spec.priority) {
-            Ok(id) => {
+            Ok(()) => {
                 admitted_samples += (art.manifest.batch
                     * spec.cfg.grad_accum
                     * spec.cfg.steps) as u64;
-                println!("admitted {name} ({}) as session {id}: \
+                println!("admitted {name} ({}): \
                           {} steps, seed {}, priority {}",
                          spec.preset, spec.cfg.steps, spec.cfg.seed,
                          spec.priority);
@@ -352,6 +364,247 @@ fn serve(args: &Args) -> Result<()> {
              budget as f64 / 1048576.0,
              engine.fleet.peak_bytes as f64 / 1048576.0,
              admitted_samples as f64 / wall);
+    Ok(())
+}
+
+/// Front-line serving: a JSONL job trace (arrival/preset/steps/seed/
+/// prio per line) drives the engine through the priority queue under
+/// `--policy round-robin|first-fit|best-fit`, with fleet metrics
+/// printed and optionally written as JSON (`--fleet-json`).
+fn serve_frontline(rt: &Runtime, args: &Args, budget: u64,
+                   spool: Option<PathBuf>,
+                   preempt: bool) -> Result<()> {
+    let trace_path = PathBuf::from(args.get("trace").context(
+        "--policy requires --trace FILE (a JSONL job trace; write one \
+         with `ambp bench-fleet --save-trace DIR`)",
+    )?);
+    let policy = Policy::parse(args.get_or("policy", "first-fit"))?;
+    let trace = traffic::load_trace(&trace_path)?;
+    ensure!(!trace.is_empty(), "trace {trace_path:?} is empty");
+    if let Some(dir) = &spool {
+        std::fs::create_dir_all(dir)?;
+    }
+    let base_cfg = TrainCfg {
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        log_every: 0,
+        eval_batches: args.usize_or("eval-batches", 0)?,
+        ..TrainCfg::default()
+    };
+    let mut arts: BTreeMap<String, Artifact> = BTreeMap::new();
+    for job in &trace {
+        if let std::collections::btree_map::Entry::Vacant(slot) =
+            arts.entry(job.preset.clone())
+        {
+            slot.insert(ambp::runtime::load_or_synth(rt, &job.preset)?);
+        }
+    }
+    let fcfg = FrontCfg {
+        policy,
+        budget,
+        base_cfg,
+        max_ticks: args.usize_or("ticks", 0)? as u64,
+        spool,
+        preempt,
+    };
+    println!("front line: {} jobs from {:?}, policy {}, budget {:.1} \
+              MiB{}",
+             trace.len(), trace_path, policy.as_str(),
+             budget as f64 / 1048576.0,
+             if fcfg.max_ticks > 0 {
+                 format!(", horizon {} ticks", fcfg.max_ticks)
+             } else {
+                 String::new()
+             });
+    let rep = frontline::serve(&arts, &trace, &fcfg)?;
+    print_fleet(&rep.metrics);
+    if let Some(p) = args.get("fleet-json") {
+        std::fs::write(p, rep.metrics.json().to_string() + "\n")?;
+        println!("fleet metrics JSON → {p:?}");
+    }
+    Ok(())
+}
+
+fn print_fleet(m: &FleetMetrics) {
+    println!("\nper-job results (virtual time; 1 tick = 1 engine \
+              round):");
+    println!("  {:<5} {:<34} {:>4} {:>7} {:>6} {:>6} {:>5} {:>5}  {}",
+             "job", "preset", "prio", "arrive", "admit", "finish",
+             "wait", "steps", "outcome");
+    for s in &m.sessions {
+        let opt = |v: Option<u64>| match v {
+            Some(x) => x.to_string(),
+            None => "-".to_string(),
+        };
+        println!("  {:<5} {:<34} {:>4} {:>7} {:>6} {:>6} {:>5} {:>5}  {}",
+                 s.name, s.preset, s.priority, s.arrival,
+                 opt(s.admit), opt(s.finish), opt(s.queue_wait()),
+                 s.steps, s.outcome);
+    }
+    println!("fleet[{}]: {} submitted | {} admitted | {} completed | \
+              {} rejected | {} quarantined | {} preemptions | {} \
+              ticks | {:.3} jobs/tick",
+             m.policy, m.submitted, m.admitted, m.completed,
+             m.rejected, m.quarantined, m.preemptions, m.ticks,
+             m.throughput_jobs_per_tick());
+    println!("  queue wait  p50/p90/p99: {:.0}/{:.0}/{:.0} ticks",
+             m.queue_wait_ticks.p50, m.queue_wait_ticks.p90,
+             m.queue_wait_ticks.p99);
+    println!("  step latency p50/p90/p99: {:.1}/{:.1}/{:.1} ms \
+              (wall clock — not deterministic)",
+             m.step_latency_s.p50 * 1e3, m.step_latency_s.p90 * 1e3,
+             m.step_latency_s.p99 * 1e3);
+}
+
+/// Policy × preset-group serving benchmark: one seeded bursty trace
+/// shape, replayed with baseline / ours / mesa presets swapped in
+/// position-for-position, under each scheduling policy and one shared
+/// byte budget. Writes the fleet-metrics JSON grid to
+/// `BENCH_fleet.json` next to the other `BENCH_*.json` files.
+fn bench_fleet(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let jobs = args.usize_or("jobs", 12)?;
+    let ticks = args.usize_or("ticks", 24)? as u64;
+    // equal-length preset lists so every group consumes the RNG
+    // identically: same arrivals/steps/seeds, presets swapped
+    let groups: Vec<(&str, Vec<&str>)> = vec![
+        ("baseline",
+         vec!["vitt_loraqv_gelu_ln", "llama_loraall_silu_rms"]),
+        ("ours",
+         vec!["vitt_loraqv_regelu2_msln",
+              "llama_loraall_resilu2_msrms"]),
+        ("mesa",
+         vec!["vitt_loraqv_gelu_ln_mesa",
+              "llama_loraall_silu_rms_mesa"]),
+    ];
+    let mut arts: BTreeMap<String, Artifact> = BTreeMap::new();
+    for (_, presets) in &groups {
+        for preset in presets {
+            if let std::collections::btree_map::Entry::Vacant(slot) =
+                arts.entry(preset.to_string())
+            {
+                slot.insert(ambp::runtime::load_or_synth(&rt, preset)?);
+            }
+        }
+    }
+    let base_cfg = TrainCfg {
+        log_every: 0,
+        eval_batches: 0,
+        ..TrainCfg::default()
+    };
+    // default budget: the baseline group's bases + headroom for ~2 of
+    // its largest sessions — binding for baseline, roomy for the
+    // smaller-tape ours/mesa marginals (override with --budget MiB)
+    let budget = match args.f64_or("budget", 0.0)? {
+        b if b > 0.0 => (b * 1048576.0).round() as u64,
+        _ => {
+            let baseline = &groups[0].1;
+            let bases: u64 = baseline
+                .iter()
+                .map(|p| arts[*p].frozen_base().nbytes())
+                .sum();
+            let max_marginal = baseline
+                .iter()
+                .map(|p| {
+                    ambp::coordinator::engine::predict(&arts[*p],
+                                                       &base_cfg)
+                        .marginal()
+                })
+                .max()
+                .unwrap_or(0);
+            bases + 2 * max_marginal
+        }
+    };
+    println!("bench-fleet: seed {seed}, {jobs} jobs, horizon {ticks} \
+              ticks, budget {:.2} MiB",
+             budget as f64 / 1048576.0);
+    println!("{:<10} {:<12} {:>8} {:>9} {:>9} {:>10} {:>11}",
+             "group", "policy", "admitted", "completed", "rejected",
+             "wait p50", "jobs/tick");
+    let mut results: Vec<(String, FleetMetrics)> = Vec::new();
+    for (gname, presets) in &groups {
+        let tcfg = TrafficCfg {
+            seed,
+            jobs,
+            presets: presets.iter().map(|p| p.to_string()).collect(),
+            // all priorities equal: the bench compares pure packing
+            max_priority: 0,
+            ..TrafficCfg::default()
+        };
+        let trace = traffic::generate(&tcfg)?;
+        if let Some(dir) = args.get("save-trace") {
+            let p = PathBuf::from(dir).join(format!("{gname}.jsonl"));
+            traffic::save_trace(&p, &trace)?;
+            println!("  trace[{gname}] → {p:?}");
+        }
+        for policy in
+            [Policy::RoundRobin, Policy::FirstFit, Policy::BestFit]
+        {
+            let fcfg = FrontCfg {
+                policy,
+                budget,
+                base_cfg: base_cfg.clone(),
+                max_ticks: ticks,
+                spool: None,
+                preempt: false,
+            };
+            let m = frontline::serve(&arts, &trace, &fcfg)?.metrics;
+            println!("{:<10} {:<12} {:>8} {:>9} {:>9} {:>10.0} \
+                      {:>11.3}",
+                     gname, policy.as_str(), m.admitted, m.completed,
+                     m.rejected, m.queue_wait_ticks.p50,
+                     m.throughput_jobs_per_tick());
+            results.push((format!("{gname}/{}", policy.as_str()), m));
+        }
+    }
+    let out = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => ambp::util::bench::repo_root().join("BENCH_fleet.json"),
+    };
+    let json = obj(results
+        .iter()
+        .map(|(k, m)| (k.as_str(), m.json()))
+        .collect());
+    std::fs::write(&out, json.to_string() + "\n")?;
+    println!("fleet bench grid → {out:?}");
+    if args.bool("assert") {
+        let admitted = |g: &str, p: &str| -> usize {
+            results
+                .iter()
+                .find(|(k, _)| k == &format!("{g}/{p}"))
+                .map(|(_, m)| m.admitted)
+                .unwrap_or(0)
+        };
+        for (g, _) in &groups {
+            let (rr, ff, bf) = (admitted(g, "round-robin"),
+                                admitted(g, "first-fit"),
+                                admitted(g, "best-fit"));
+            ensure!(bf >= ff && ff >= rr,
+                    "policy ordering violated for {g}: best-fit {bf} \
+                     / first-fit {ff} / round-robin {rr}");
+        }
+        for p in ["round-robin", "first-fit", "best-fit"] {
+            for g in ["ours", "mesa"] {
+                ensure!(admitted(g, p) >= admitted("baseline", p),
+                        "{g}/{p} admitted {} < baseline/{p} {}",
+                        admitted(g, p), admitted("baseline", p));
+            }
+        }
+        let mut better = 0usize;
+        for p in ["round-robin", "first-fit", "best-fit"] {
+            for g in ["ours", "mesa"] {
+                if admitted(g, p) > admitted("baseline", p) {
+                    better += 1;
+                }
+            }
+        }
+        ensure!(better > 0,
+                "ours/mesa never admitted strictly more jobs than \
+                 baseline under the shared budget");
+        println!("assertions passed: best-fit ≥ first-fit ≥ \
+                  round-robin per group; ours/mesa ≥ baseline per \
+                  policy (strictly better in {better} cells)");
+    }
     Ok(())
 }
 
@@ -603,8 +856,15 @@ global: --backend native|pjrt   (default native; presets with no on-disk
           instead; --halt-after R: suspend the fleet after R rounds —
           re-run with the same --spool, no --jobs, to finish; any
           *.state already in --spool is warm-restarted first, and a
-          corrupt one is quarantined to <name>.quarantine.state with
+          corrupt one is quarantined to <name>.state.quarantine with
           a .json report instead of blocking the fleet)
+          front line: --trace FILE [--policy round-robin|first-fit|
+          best-fit --ticks T --fleet-json OUT] replaces --jobs with a
+          JSONL job trace (arrival/preset/steps/seed/prio per line)
+          driving the priority queue under a memmodel-guided
+          scheduling policy; --ticks caps the virtual-time horizon
+          and --fleet-json writes the fleet metrics (queue-wait and
+          step-latency percentiles per session)
           supervision: a faulting tenant is retried from its last
           good state on transient I/O errors (--max-retries K,
           default 2) and quarantined on panics / non-finite loss or
@@ -614,6 +874,13 @@ global: --backend native|pjrt   (default native; presets with no on-disk
           step.loss, step.compute, spool.write, spool.read —
           prefix \"name/site\" targets one tenant;
           --metrics-dir DIR writes per-session JSONL loss curves
+  bench-fleet [--seed S --jobs N --ticks T --budget MiB --out F
+          --save-trace DIR --assert]
+          policy (round-robin/first-fit/best-fit) × preset group
+          (baseline/ours/mesa) grid on one seeded bursty trace shape
+          under one byte budget; writes BENCH_fleet.json; --assert
+          checks best-fit ≥ first-fit ≥ round-robin admissions and
+          ours/mesa ≥ baseline under the shared budget
   suspend --preset P --state f.state [--at K --steps N --name s0 ...]
           run K steps, then spool the session's durable state
   resume  --state f.state [--artifact-state a.state --save-to ckpt/]

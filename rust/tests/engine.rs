@@ -105,8 +105,8 @@ fn interleaved_matches_serial() {
         engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
     }
     // the two sessions really share one frozen base object
-    assert!(Arc::ptr_eq(engine.session(0).base(),
-                        engine.session(1).base()));
+    assert!(Arc::ptr_eq(engine.session("s0").unwrap().base(),
+                        engine.session("s1").unwrap().base()));
     let reports = engine.run().unwrap();
     assert_eq!(reports.len(), 2);
     for (i, (r, (rows, params))) in
@@ -123,8 +123,9 @@ fn interleaved_matches_serial() {
             })
             .collect();
         assert_eq!(&got, rows, "s{i}: per-step rows diverged");
-        assert_params_eq(&engine.session(i).params(), params,
-                         &format!("s{i}"));
+        assert_params_eq(&engine.session(&format!("s{i}")).unwrap()
+                             .params(),
+                         params, &format!("s{i}"));
     }
 }
 
@@ -155,10 +156,10 @@ fn mixed_preset_fleet_is_isolated() {
     engine.admit("llama", &llama, lc).unwrap();
     let reports = engine.run().unwrap();
     assert_eq!(reports[0].preset, "vitt_loraqv_gelu_ln");
-    assert_params_eq(&engine.session(0).params(), &vit_serial[0].1,
-                     "vit");
-    assert_params_eq(&engine.session(1).params(), &llama_serial[0].1,
-                     "llama");
+    assert_params_eq(&engine.session("vit").unwrap().params(),
+                     &vit_serial[0].1, "vit");
+    assert_params_eq(&engine.session("llama").unwrap().params(),
+                     &llama_serial[0].1, "llama");
     // and the per-step losses match too
     let got: Vec<u32> = reports[1]
         .train()
@@ -191,14 +192,14 @@ fn shared_base_stored_once_param_accounting() {
     let r2 = engine.resident_param_bytes();
     // the second session costs only its trainable slice — the frozen
     // base did not duplicate
-    let trainable = engine.session(1).trainable_bytes();
+    let trainable = engine.session("b").unwrap().trainable_bytes();
     assert_eq!(r2 - r1, trainable);
     assert!(trainable < full_bytes / 10,
             "lora trainables should be a small fraction: {trainable} \
              of {full_bytes}");
     engine.admit("c", &art, cfg(1, 2)).unwrap();
     assert_eq!(engine.resident_param_bytes() - r2,
-               engine.session(2).trainable_bytes());
+               engine.session("c").unwrap().trainable_bytes());
 }
 
 #[test]
@@ -413,9 +414,9 @@ fn preemption_admits_what_strict_rejects_and_stays_bit_identical() {
     engine.admit_prio("hi", &art, cfgs[2].clone(), 10).unwrap();
     // exactly one eviction: s0 (priority 0 < 5 < 10), spooled to disk
     assert_eq!(engine.suspended_names(), vec!["s0".to_string()]);
-    assert!(engine.find("s0").is_none());
-    assert!(engine.find("s1").is_some());
-    assert!(engine.find("hi").is_some());
+    assert!(!engine.contains("s0"));
+    assert!(engine.contains("s1"));
+    assert!(engine.contains("hi"));
     assert!(spool.join("s0.state").is_file());
     assert!(engine.predicted_bytes() <= budget);
 
@@ -445,9 +446,8 @@ fn preemption_admits_what_strict_rejects_and_stays_bit_identical() {
             })
             .collect();
         assert_eq!(got, serial[i].0, "{name}: per-step rows diverged");
-        let id = engine.find(name).unwrap();
-        assert_params_eq(&engine.session(id).params(), &serial[i].1,
-                         name);
+        assert_params_eq(&engine.session(name).unwrap().params(),
+                         &serial[i].1, name);
     }
     let _ = std::fs::remove_dir_all(&spool);
 }
@@ -464,10 +464,10 @@ fn suspend_resume_keeps_the_base_stored_once() {
     let base = engine.base_bytes();
     assert_eq!(base, art.frozen_base().nbytes());
     let resident = engine.resident_param_bytes();
-    let id = engine.find("s0").unwrap();
-    let victim_bytes = engine.session(id).resident_param_bytes();
+    let victim_bytes =
+        engine.session("s0").unwrap().resident_param_bytes();
     assert!(victim_bytes > 0);
-    let h = engine.suspend(id).unwrap();
+    let h = engine.suspend("s0").unwrap();
     assert_eq!(h.name, "s0");
     assert_eq!(h.path, spool.join("s0.state"));
     assert_eq!(h.steps_done, 0);
@@ -483,16 +483,56 @@ fn suspend_resume_keeps_the_base_stored_once() {
     assert_eq!(engine.resident_param_bytes(), resident);
     assert!(engine.suspended_names().is_empty());
     assert!(!h.path.exists(), "resume must consume the spool file");
-    let a = engine.find("s0").unwrap();
-    let b = engine.find("s1").unwrap();
-    assert!(Arc::ptr_eq(engine.session(a).base(),
-                        engine.session(b).base()),
+    assert!(Arc::ptr_eq(engine.session("s0").unwrap().base(),
+                        engine.session("s1").unwrap().base()),
             "resumed session must rejoin the shared base");
     // a finished session holds no resumable work: suspend refuses
     let reports = engine.run().unwrap();
     assert_eq!(reports.len(), 2);
-    let id = engine.find("s1").unwrap();
-    let err = engine.suspend(id).unwrap_err().to_string();
+    let err = engine.suspend("s1").unwrap_err().to_string();
     assert!(err.contains("finished"), "{err}");
+    // and suspending a name that is not resident says so
+    let err = engine.suspend("nobody").unwrap_err().to_string();
+    assert!(err.contains("nobody"), "{err}");
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn names_stay_stable_across_suspension() {
+    // regression for the slot-id footgun: evicting slot 0 used to
+    // shift every later session's index, so a held id silently pointed
+    // at a different tenant. The name-addressed API must keep
+    // targeting the same session before and after the shift.
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let spool = spool_dir("stable_names");
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.admit("s0", &art, cfg(4, 3)).unwrap();
+    engine.admit("s1", &art, cfg(4, 9)).unwrap();
+    engine.admit("s2", &art, cfg(4, 11)).unwrap();
+    let s2_trainable_before: Vec<Vec<f32>> = engine
+        .session("s2")
+        .unwrap()
+        .params()
+        .iter()
+        .map(|t| t.data.clone())
+        .collect();
+    // suspend slot 0 — under index addressing, "session 2" would now
+    // resolve to what used to be slot 3 (out of bounds here)
+    engine.suspend("s0").unwrap();
+    assert!(!engine.contains("s0"));
+    assert!(engine.contains("s1") && engine.contains("s2"));
+    let s2 = engine.session("s2").unwrap();
+    let after: Vec<Vec<f32>> =
+        s2.params().iter().map(|t| t.data.clone()).collect();
+    assert_eq!(s2_trainable_before, after,
+               "name s2 resolved to a different session after the \
+                eviction shifted slot indices");
+    // and the shifted tenant is still individually suspendable by name
+    engine.suspend("s2").unwrap();
+    assert_eq!(engine.suspended_names(),
+               vec!["s0".to_string(), "s2".to_string()]);
+    assert!(engine.contains("s1"));
     let _ = std::fs::remove_dir_all(&spool);
 }

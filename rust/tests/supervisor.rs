@@ -124,8 +124,8 @@ fn fault_grid_step_sites_isolate_one_tenant() {
                 });
                 assert_eq!(row_sigs(&rep.rows), serial[i].0,
                            "{label}: {name} rows diverged");
-                let id = engine.find(&name).unwrap();
-                assert_params_eq(&engine.session(id).params(),
+                assert_params_eq(&engine.session(&name).unwrap()
+                                     .params(),
                                  &serial[i].1, &format!("{label}/{name}"));
             }
 
@@ -138,8 +138,8 @@ fn fault_grid_step_sites_isolate_one_tenant() {
                 });
                 assert_eq!(row_sigs(&rep.rows), serial[1].0,
                            "{label}: s1 rows diverged after retry");
-                let id = engine.find("s1").unwrap();
-                assert_params_eq(&engine.session(id).params(),
+                assert_params_eq(&engine.session("s1").unwrap()
+                                     .params(),
                                  &serial[1].1, &format!("{label}/s1"));
                 assert!(!supervisor::quarantine_state_path(&spool, "s1")
                             .exists(),
@@ -157,7 +157,7 @@ fn fault_grid_step_sites_isolate_one_tenant() {
                 };
                 assert_eq!(rec.kind, want, "{label}: kind");
                 assert_eq!(rec.step, 1, "{label}: faulting step");
-                assert!(engine.find("s1").is_none(),
+                assert!(!engine.contains("s1"),
                         "{label}: quarantined tenant still resident");
                 let qstate = supervisor::quarantine_state_path(&spool, "s1");
                 assert_eq!(rec.state_path.as_deref(), Some(&*qstate));
@@ -289,7 +289,7 @@ fn scan_spool_salvages_around_corrupt_statefiles() {
     assert_eq!(rec.name, "a");
     assert_eq!(rec.kind, FaultKind::Io);
     assert_eq!(rec.retries, 2);
-    assert!(spool.join("a.quarantine.state").is_file());
+    assert!(spool.join("a.state.quarantine").is_file());
     assert!(!spool.join("a.state").exists());
 
     // a flipped byte fails the checksum: a typed StateError quarantine
@@ -347,8 +347,7 @@ fn suspend_write_fault_retries_then_restores_in_place() {
     // transient write fault: with_io_retry absorbs it, the suspend
     // lands on disk as usual
     faultpoint::arm("spool.write:0:io").unwrap();
-    let id = engine.find("s0").unwrap();
-    let h = engine.suspend(id).unwrap();
+    let h = engine.suspend("s0").unwrap();
     assert!(h.path.is_file());
     assert_eq!(engine.suspended_names(), vec!["s0".to_string()]);
     faultpoint::clear();
@@ -357,10 +356,9 @@ fn suspend_write_fault_retries_then_restores_in_place() {
     // persistent write panic: the suspend fails, but the session is
     // rebuilt in place — no work lost, admission unchanged
     faultpoint::arm("spool.write:0:panic:*").unwrap();
-    let id = engine.find("s0").unwrap();
-    let err = format!("{:?}", engine.suspend(id).unwrap_err());
+    let err = format!("{:?}", engine.suspend("s0").unwrap_err());
     assert!(err.contains("restored in place"), "{err}");
-    assert!(engine.find("s0").is_some(),
+    assert!(engine.contains("s0"),
             "failed suspend must not lose the session");
     assert_eq!(engine.len(), 1);
     assert!(engine.suspended_names().is_empty());
@@ -371,8 +369,8 @@ fn suspend_write_fault_retries_then_restores_in_place() {
     let rep = reports[0].train().expect("completed");
     assert_eq!(row_sigs(&rep.rows), serial_rows,
                "rows diverged after suspend faults");
-    let id = engine.find("s0").unwrap();
-    assert_params_eq(&engine.session(id).params(), &serial_params, "s0");
+    assert_params_eq(&engine.session("s0").unwrap().params(),
+                     &serial_params, "s0");
     let _ = std::fs::remove_dir_all(&spool);
 }
 
@@ -388,8 +386,7 @@ fn corrupt_suspend_image_quarantines_at_resume_time() {
     // the write "succeeds" but one byte of the image is flipped — the
     // damage is only detectable by the reader's checksums
     faultpoint::arm("spool.write:0:nan").unwrap();
-    let id = engine.find("s0").unwrap();
-    let h = engine.suspend(id).unwrap();
+    let h = engine.suspend("s0").unwrap();
     assert!(h.path.is_file());
     faultpoint::clear();
     // the resume path detects the corruption, quarantines the file,
@@ -398,7 +395,7 @@ fn corrupt_suspend_image_quarantines_at_resume_time() {
     assert_eq!(reports.len(), 1);
     let rec = reports[0].fault().expect("corrupt image must quarantine");
     assert_eq!(rec.kind, FaultKind::State);
-    assert!(spool.join("s0.quarantine.state").is_file());
+    assert!(spool.join("s0.state.quarantine").is_file());
     assert!(!spool.join("s0.state").exists(),
             "the corrupt original must be renamed away");
     assert!(rec.detail.contains("checksum"), "{}", rec.detail);
@@ -431,9 +428,9 @@ fn failed_eviction_degrades_to_rejected_admission() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("budget"), "{err}");
-    assert!(engine.find("s0").is_some(), "victim must stay resident");
-    assert!(engine.find("s1").is_some());
-    assert!(engine.find("hi").is_none());
+    assert!(engine.contains("s0"), "victim must stay resident");
+    assert!(engine.contains("s1"));
+    assert!(!engine.contains("hi"));
     assert!(engine.suspended_names().is_empty());
     faultpoint::clear();
     // the survivors still finish bit-identically
@@ -443,9 +440,8 @@ fn failed_eviction_degrades_to_rejected_admission() {
         let r = reports.iter().find(|r| r.name == *name).unwrap();
         assert_eq!(row_sigs(&r.train().unwrap().rows), serial[i].0,
                    "{name}");
-        let id = engine.find(name).unwrap();
-        assert_params_eq(&engine.session(id).params(), &serial[i].1,
-                         name);
+        assert_params_eq(&engine.session(name).unwrap().params(),
+                         &serial[i].1, name);
     }
     let _ = std::fs::remove_dir_all(&spool);
 }
@@ -565,8 +561,7 @@ fn duplicate_session_names_are_rejected() {
     let err = engine.admit("s0", &art, cfg(3, 9)).unwrap_err().to_string();
     assert!(err.contains("already resident or suspended"), "{err}");
     // the name stays taken while the session sits in the spool
-    let id = engine.find("s0").unwrap();
-    engine.suspend(id).unwrap();
+    engine.suspend("s0").unwrap();
     let err = engine.admit("s0", &art, cfg(3, 9)).unwrap_err().to_string();
     assert!(err.contains("already resident or suspended"), "{err}");
     let _ = std::fs::remove_dir_all(&spool);
