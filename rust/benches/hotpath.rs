@@ -100,6 +100,34 @@ fn main() {
                  gflops(flops, r.mean_ns));
         results.push(r);
     }
+    println!("-- prepacked B panels: pack once vs repack per call --");
+    {
+        use ambp::runtime::native::gemm::{gemm_packed_into, pack_b_once};
+        let mut c = vec![0f32; m * n];
+        let pb = pack_b_once(&gb, k, n, true);
+        let r = with_threads(1, || {
+            bench("gemm_packed_into 512x768x768 pack-once 1t",
+                  samples(10), || {
+                      gemm_packed_into(black_box(&mut c),
+                                       black_box(&ga), &pb, m, false,
+                                       false);
+                  })
+        });
+        println!("    -> {:.2} GFLOP/s (frozen-base steady state)",
+                 gflops(flops, r.mean_ns));
+        results.push(r);
+        let r = with_threads(1, || {
+            bench("gemm_packed_into 512x768x768 repack-each-call 1t",
+                  samples(10), || {
+                      let pb = pack_b_once(black_box(&gb), k, n, true);
+                      gemm_packed_into(&mut c, &ga, &pb, m, false,
+                                       false);
+                  })
+        });
+        println!("    -> {:.2} GFLOP/s (pre-cache behavior)",
+                 gflops(flops, r.mean_ns));
+        results.push(r);
+    }
 
     println!("\n== packing / codec microbenches (1M elements) ==");
     let mut rng = Rng::new(0);
@@ -231,6 +259,25 @@ fn main() {
         .ok()
         .and_then(|v| v.parse::<f64>().ok())
     {
+        // Fused execution must not be slower than round-robin on the
+        // same 4-session fleet (within tolerance — at bench dims the
+        // win is modest and we only guard against regression). Both
+        // rows are samples/s from this run, so no previous file is
+        // needed.
+        let row = |name: &str| {
+            results.iter().find(|r| r.name == name).map(|r| r.mean_ns)
+        };
+        if let (Some(fused), Some(rr)) =
+            (row("engine 4 sessions fused samples_per_s"),
+             row("engine 4 sessions shared-base samples_per_s"))
+        {
+            let ratio = fused / rr;
+            println!("assert fused/round-robin throughput ratio: \
+                      {ratio:.3} (tol {tol}%)");
+            assert!(ratio >= 1.0 - tol / 100.0,
+                    "fused execution slower than round-robin: \
+                     {fused:.1} vs {rr:.1} samples/s");
+        }
         let Some(prev) = prev else {
             println!("(no previous BENCH_hotpath.json; assert skipped)");
             return;
@@ -345,8 +392,9 @@ fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
     // (secs, fleet peak bytes, resident param bytes) of one engine run;
     // like `ambp serve`, the clock covers the interleaved steps only —
     // admission (each session's one-off warmup fwd/bwd) is setup
-    let run_concurrent = |k: usize| -> (f64, u64, u64) {
+    let run_concurrent = |k: usize, fuse: bool| -> (f64, u64, u64) {
         let mut engine = Engine::unbounded();
+        engine.set_fuse(fuse);
         for i in 0..k {
             engine
                 .admit(&format!("s{i}"), &art, cfg(i as u64))
@@ -354,6 +402,10 @@ fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
         }
         let t0 = std::time::Instant::now();
         while engine.round().expect("round") > 0 {}
+        if fuse {
+            assert!(engine.fusion_stats().fused_passes > 0,
+                    "fused run never ganged");
+        }
         (t0.elapsed().as_secs_f64(), engine.fleet.peak_bytes,
          engine.resident_param_bytes())
     };
@@ -374,8 +426,9 @@ fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
     let mut out = Vec::new();
     let samples_per_run =
         |k: usize| (k * steps * art.manifest.batch) as f64;
-    let (s1, peak1, res1) = run_concurrent(1);
-    let (s4, peak4, res4) = run_concurrent(4);
+    let (s1, peak1, res1) = run_concurrent(1, false);
+    let (s4, peak4, res4) = run_concurrent(4, false);
+    let (sf, fpeak, _) = run_concurrent(4, true);
     let (ss, speak) = run_serial(4);
     println!("1 session : {:.1} samples/s, fleet peak {:.2} MiB, \
               resident params {:.2} MiB",
@@ -385,12 +438,17 @@ fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
               resident params {:.2} MiB (base stored once)",
              samples_per_run(4) / s4, peak4 as f64 / 1048576.0,
              res4 as f64 / 1048576.0);
+    println!("4 fused   : {:.1} samples/s, fleet peak {:.2} MiB \
+              (one physical pass per layer serves the gang)",
+             samples_per_run(4) / sf, fpeak as f64 / 1048576.0);
     println!("4 serial  : {:.1} samples/s, per-job peak {:.2} MiB",
              samples_per_run(4) / ss, speak as f64 / 1048576.0);
     out.push(metric_row("engine 1 session samples_per_s",
                         samples_per_run(1) / s1));
     out.push(metric_row("engine 4 sessions shared-base samples_per_s",
                         samples_per_run(4) / s4));
+    out.push(metric_row("engine 4 sessions fused samples_per_s",
+                        samples_per_run(4) / sf));
     out.push(metric_row("engine 4 serial jobs samples_per_s",
                         samples_per_run(4) / ss));
     out.push(metric_row("engine 4 sessions fleet peak bytes",
@@ -400,12 +458,15 @@ fn bench_engine(rt: &Runtime, iters: usize) -> Vec<BenchResult> {
     out.push(metric_row("engine 4 serial jobs peak bytes",
                         speak as f64));
     out.push(bench("engine 1 session e2e (4 steps)", iters, || {
-        black_box(run_concurrent(1));
+        black_box(run_concurrent(1, false));
     }));
     out.push(bench("engine 4 sessions shared-base e2e (4 steps)", iters,
                    || {
-                       black_box(run_concurrent(4));
+                       black_box(run_concurrent(4, false));
                    }));
+    out.push(bench("engine 4 sessions fused e2e (4 steps)", iters, || {
+        black_box(run_concurrent(4, true));
+    }));
     out.push(bench("engine 4 serial jobs e2e (4 steps)", iters, || {
         black_box(run_serial(4));
     }));

@@ -25,18 +25,21 @@
 //! state), the preempted runs finish bit-identical to uninterrupted
 //! ones.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::memory::MemoryTracker;
-use crate::coordinator::session::{Session, StepOutcome};
+use crate::coordinator::session::{Session, StepCtx, StepOutcome};
 use crate::coordinator::statefile::{self, SavedSession, SessionHandle};
 use crate::coordinator::supervisor::{self, FaultKind, FaultRecord};
 use crate::coordinator::trainer::{TrainCfg, TrainReport};
 use crate::memmodel::{total_bytes, MemCfg};
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::{Artifact, BwdSplitJob, FwdSplitJob, Runtime,
+                     Tensor};
+use crate::util::faultpoint;
 
 /// One job request: a preset plus its trainer hyper-parameters.
 #[derive(Debug, Clone)]
@@ -213,7 +216,31 @@ pub enum StepEventKind {
     Quarantined,
 }
 
+/// Fused-execution observability: how many physical microbatch sweeps
+/// (one fwd+bwd pass through the layer stack) ran fused vs serial, and
+/// the gang occupancy of each fused sweep. One fused pass serving N
+/// sessions replaces N serial passes, so
+/// `Σ occupancy·count + serial_passes` equals the total
+/// session-microbatches executed.
+#[derive(Debug, Clone, Default)]
+pub struct FusionStats {
+    /// Physical fwd+bwd sweeps that served a whole gang at once.
+    pub fused_passes: u64,
+    /// Physical fwd+bwd sweeps that served a single session.
+    pub serial_passes: u64,
+    /// Fused-pass count keyed by gang occupancy (sessions per pass).
+    pub occupancy: BTreeMap<usize, u64>,
+}
+
 /// One per-session event from a [`Engine::round_with`] sweep.
+///
+/// Ordering contract (pinned by `tests/engine.rs`): events within one
+/// sweep are emitted in **admission order** under serial scheduling;
+/// under fusion ([`Engine::set_fuse`]) they are emitted gang-by-gang,
+/// where gangs form in admission order of their first member and
+/// members within a gang stay in admission order — so the event stream
+/// is a pure function of the admitted fleet, never of wall-clock, and
+/// `FleetMetrics` built from it are deterministic in virtual time.
 #[derive(Debug, Clone)]
 pub struct StepEvent {
     /// Session name.
@@ -268,6 +295,12 @@ pub struct Engine<'a> {
     /// Bound on consecutive transient-I/O retries per session before
     /// the fault is treated as terminal and the session quarantined.
     max_retries: u32,
+    /// Cross-tenant fusion: gang compatible sessions per sweep and run
+    /// each gang through one physical pass per microbatch (off by
+    /// default; supervised mode only).
+    fuse: bool,
+    /// Fused-vs-serial pass counters (see [`FusionStats`]).
+    fstats: FusionStats,
     /// Sessions the supervisor removed from the fleet this run, with
     /// the admission they held (if any); drained into
     /// [`EngineReport`]s by [`Engine::run`].
@@ -293,9 +326,30 @@ impl<'a> Engine<'a> {
             suspended: Vec::new(),
             strict: false,
             max_retries: 2,
+            fuse: false,
+            fstats: FusionStats::default(),
             quarantined: Vec::new(),
             fleet: MemoryTracker::new(),
         }
+    }
+
+    /// Enable cross-tenant fused execution: each
+    /// [`Engine::round_with`] sweep gangs unfinished sessions by
+    /// fusion key — frozen-base identity (`Arc` pointer, which implies
+    /// artifact, preset, and batch/seq shape) plus `grad_accum` phase —
+    /// and runs each gang through the executor's `_many` entry points,
+    /// one physical pass per microbatch. Per-session results are
+    /// bit-identical to serial scheduling (DESIGN.md §3.5); a faulting
+    /// member is peeled out and retried/quarantined alone while the
+    /// survivors keep fusing. Ignored under [`Engine::set_strict`]
+    /// (strict mode keeps the historical serial fail-fast sweep).
+    pub fn set_fuse(&mut self, fuse: bool) {
+        self.fuse = fuse;
+    }
+
+    /// Fused-vs-serial pass counters accumulated so far.
+    pub fn fusion_stats(&self) -> &FusionStats {
+        &self.fstats
     }
 
     /// Fail-fast mode: propagate the first session fault out of
@@ -887,6 +941,437 @@ impl<'a> Engine<'a> {
         self.quarantined.push((Some(admission), rec));
     }
 
+    /// The classic sweep: every unfinished resident session steps
+    /// alone, in admission order.
+    fn sweep_serial(&mut self,
+                    events: &mut Vec<StepEvent>) -> Result<usize> {
+        if self.strict {
+            let mut stepped = 0usize;
+            for i in 0..self.slots.len() {
+                if self.slots[i].done {
+                    continue;
+                }
+                let name = self.slots[i].name.clone();
+                let t0 = std::time::Instant::now();
+                match self.slots[i].session.step()? {
+                    StepOutcome::Stepped(_) => {
+                        stepped += 1;
+                        self.fstats.serial_passes +=
+                            self.slots[i].session.grad_accum() as u64;
+                        events.push(StepEvent {
+                            name,
+                            step: self.slots[i].session.steps_done(),
+                            dur_s: t0.elapsed().as_secs_f64(),
+                            kind: StepEventKind::Stepped,
+                        });
+                    }
+                    StepOutcome::Exhausted => {
+                        self.slots[i].done = true;
+                        events.push(StepEvent {
+                            name,
+                            step: self.slots[i].session.steps_done(),
+                            dur_s: 0.0,
+                            kind: StepEventKind::Finished,
+                        });
+                    }
+                }
+            }
+            return Ok(stepped);
+        }
+        // supervised: walk the admission-order name list — quarantine
+        // removes slots mid-sweep, so names are the stable handle
+        let names: Vec<String> =
+            self.slots.iter().map(|s| s.name.clone()).collect();
+        let mut stepped = 0usize;
+        for name in names {
+            stepped += self.step_serial_one(&name, events);
+        }
+        Ok(stepped)
+    }
+
+    /// One supervised single-session step, addressed by name (0 or 1
+    /// units of progress). No-op when the session is done or no longer
+    /// resident. This is both the supervised serial sweep body and the
+    /// singleton-gang path of the fused sweep.
+    fn step_serial_one(&mut self, name: &str,
+                       events: &mut Vec<StepEvent>) -> usize {
+        let Some(i) = self.find(name) else { return 0 };
+        if self.slots[i].done {
+            return 0;
+        }
+        let t0 = std::time::Instant::now();
+        let r = supervisor::supervised_step(
+            name,
+            &mut self.slots[i].session,
+        );
+        match r {
+            Ok(StepOutcome::Stepped(_)) => {
+                self.slots[i].retries = 0;
+                self.fstats.serial_passes +=
+                    self.slots[i].session.grad_accum() as u64;
+                events.push(StepEvent {
+                    name: name.to_string(),
+                    step: self.slots[i].session.steps_done(),
+                    dur_s: t0.elapsed().as_secs_f64(),
+                    kind: StepEventKind::Stepped,
+                });
+                1
+            }
+            Ok(StepOutcome::Exhausted) => {
+                self.slots[i].done = true;
+                events.push(StepEvent {
+                    name: name.to_string(),
+                    step: self.slots[i].session.steps_done(),
+                    dur_s: 0.0,
+                    kind: StepEventKind::Finished,
+                });
+                0
+            }
+            Err(e) => {
+                let mut stepped = 0usize;
+                self.peel_member(name, None, e, events, &mut stepped);
+                stepped
+            }
+        }
+    }
+
+    /// Handle one faulted tenant mid-sweep, by name: abort its
+    /// in-flight step context (when the fused path holds one), then
+    /// apply the supervised policy — transient I/O faults rebuild the
+    /// session bit-exactly from its last good (pre-step) state, up to
+    /// `max_retries` consecutive times (the failed attempt may have
+    /// consumed prefetched batches; resume replays the data stream
+    /// from the committed step counter); everything else quarantines
+    /// the tenant. A scheduled retry counts as progress so `run()`
+    /// comes back for the re-attempt.
+    fn peel_member(&mut self, name: &str, ctx: Option<StepCtx>,
+                   e: anyhow::Error, events: &mut Vec<StepEvent>,
+                   stepped: &mut usize) {
+        let Some(i) = self.find(name) else { return };
+        if let Some(ctx) = ctx {
+            self.slots[i].session.abort_step(ctx);
+        }
+        let kind = supervisor::classify(&e);
+        let step_now = self.slots[i].session.steps_done();
+        if kind == FaultKind::Io
+            && self.slots[i].retries < self.max_retries
+        {
+            self.slots[i].retries += 1;
+            supervisor::backoff(self.slots[i].retries);
+            let art = self.slots[i].session.artifact();
+            let snap = self.slots[i].session.snapshot();
+            let rebuilt = supervisor::catch_fault(|| {
+                Session::resume(art, snap)
+            });
+            match rebuilt {
+                Ok(fresh) => {
+                    self.slots[i].session = fresh;
+                    *stepped += 1;
+                }
+                Err(re) => {
+                    self.quarantine_slot(
+                        i,
+                        kind,
+                        format!("{e:?}; retry rebuild failed: {re:?}"),
+                    );
+                    events.push(StepEvent {
+                        name: name.to_string(),
+                        step: step_now,
+                        dur_s: 0.0,
+                        kind: StepEventKind::Quarantined,
+                    });
+                }
+            }
+        } else {
+            self.quarantine_slot(i, kind, format!("{e:?}"));
+            events.push(StepEvent {
+                name: name.to_string(),
+                step: step_now,
+                dur_s: 0.0,
+                kind: StepEventKind::Quarantined,
+            });
+        }
+    }
+
+    /// The fused sweep: group unfinished sessions into gangs by fusion
+    /// key and run each gang's optimizer step through one physical
+    /// pass per microbatch. Gangs form in admission order (see
+    /// [`StepEvent`] for the pinned event-ordering contract).
+    fn sweep_fused(&mut self,
+                   events: &mut Vec<StepEvent>) -> Result<usize> {
+        // Fusion key: frozen-base Arc identity (which implies
+        // artifact, preset, manifest shapes) + grad_accum phase.
+        // Unfusable sessions (flat-ABI fallback) get singleton gangs.
+        let mut gangs: Vec<(Option<(usize, usize)>, Vec<String>)> =
+            Vec::new();
+        for slot in &self.slots {
+            if slot.done {
+                continue;
+            }
+            let key = if slot.session.fusable() {
+                Some((Arc::as_ptr(slot.session.base()) as usize,
+                      slot.session.grad_accum()))
+            } else {
+                None
+            };
+            match key {
+                Some(k) => {
+                    if let Some((_, members)) = gangs
+                        .iter_mut()
+                        .find(|(gk, _)| *gk == Some(k))
+                    {
+                        members.push(slot.name.clone());
+                    } else {
+                        gangs.push((Some(k), vec![slot.name.clone()]));
+                    }
+                }
+                None => gangs.push((None, vec![slot.name.clone()])),
+            }
+        }
+        let mut stepped = 0usize;
+        for (_, members) in gangs {
+            if members.len() == 1 {
+                stepped += self.step_serial_one(&members[0], events);
+            } else {
+                stepped += self.step_gang(&members, events)?;
+            }
+        }
+        Ok(stepped)
+    }
+
+    /// One fused optimizer step for a gang of ≥ 2 compatible sessions:
+    /// every microbatch runs fwd and bwd through the artifact's `_many`
+    /// entry points — one packed sweep of the shared frozen panels
+    /// serves every member — while all per-member bookkeeping (batch
+    /// draw, loss/grad absorption, optimizer update) runs in the
+    /// member's own fault scope, in admission order. A faulting member
+    /// is peeled out ([`Engine::peel_member`]) and the survivors keep
+    /// fusing; an error from the `_many` call itself is infrastructure
+    /// (it cannot be attributed to one member) and fails the round.
+    fn step_gang(&mut self, members: &[String],
+                 events: &mut Vec<StepEvent>) -> Result<usize> {
+        let Some(i0) = self.find(&members[0]) else { return Ok(0) };
+        // same fusion key ⇒ same frozen-base Arc ⇒ same artifact
+        let art = self.slots[i0].session.artifact();
+        let base = art.frozen_base();
+        let grad_accum = self.slots[i0].session.grad_accum();
+        let t0 = std::time::Instant::now();
+        let mut stepped = 0usize;
+        // open every member's step; budget-exhausted members finish
+        let mut live: Vec<(String, StepCtx)> = Vec::new();
+        for name in members {
+            let Some(i) = self.find(name) else { continue };
+            match self.slots[i].session.begin_step(true) {
+                Some(ctx) => live.push((name.clone(), ctx)),
+                None => {
+                    self.slots[i].done = true;
+                    events.push(StepEvent {
+                        name: name.clone(),
+                        step: self.slots[i].session.steps_done(),
+                        dur_s: 0.0,
+                        kind: StepEventKind::Finished,
+                    });
+                }
+            }
+        }
+        for _micro in 0..grad_accum {
+            if live.is_empty() {
+                break;
+            }
+            // phase 1: each member draws its microbatch (own scope)
+            let mut armed: Vec<(String, StepCtx, Tensor, Tensor)> =
+                Vec::with_capacity(live.len());
+            for (name, ctx) in live.drain(..) {
+                let i = self
+                    .find(&name)
+                    .expect("gang member vanished mid-pass");
+                let r = supervisor::catch_fault(|| {
+                    faultpoint::with_scope(&name, || {
+                        self.slots[i].session.next_micro()
+                    })
+                });
+                match r {
+                    Ok((x, y)) => armed.push((name, ctx, x, y)),
+                    Err(e) => self.peel_member(&name, Some(ctx), e,
+                                               events, &mut stepped),
+                }
+            }
+            if armed.is_empty() {
+                break;
+            }
+            // phase 2: ONE physical forward pass for the whole gang
+            let jobs: Vec<FwdSplitJob<'_>> = armed
+                .iter()
+                .map(|(name, _, x, y)| {
+                    let i = self
+                        .find(name)
+                        .expect("gang member vanished mid-pass");
+                    FwdSplitJob {
+                        trainable: self.slots[i]
+                            .session
+                            .trainable_slice(),
+                        x,
+                        y,
+                    }
+                })
+                .collect();
+            let outs = art.run_fwd_split_many(&base, &jobs)?;
+            drop(jobs);
+            self.fstats.fused_passes += 1;
+            *self.fstats.occupancy.entry(armed.len()).or_insert(0) += 1;
+            // phase 3: absorb each member's forward output (own scope)
+            let mut absorbed: Vec<(String, StepCtx, Tensor, Tensor,
+                                   crate::runtime::FwdOut)> =
+                Vec::with_capacity(armed.len());
+            for ((name, mut ctx, x, y), out) in
+                armed.drain(..).zip(outs)
+            {
+                let i = self
+                    .find(&name)
+                    .expect("gang member vanished mid-pass");
+                let r = supervisor::catch_fault(|| {
+                    faultpoint::with_scope(&name, || {
+                        self.slots[i]
+                            .session
+                            .absorb_fwd(&mut ctx, &out)
+                    })
+                });
+                match r {
+                    Ok(()) => absorbed.push((name, ctx, x, y, out)),
+                    Err(e) => {
+                        art.recycle(out.residuals);
+                        self.peel_member(&name, Some(ctx), e, events,
+                                         &mut stepped);
+                    }
+                }
+            }
+            if absorbed.is_empty() {
+                break;
+            }
+            // phase 4: ONE physical backward pass for the survivors
+            let bjobs: Vec<BwdSplitJob<'_>> = absorbed
+                .iter()
+                .map(|(name, _, x, y, out)| {
+                    let i = self
+                        .find(name)
+                        .expect("gang member vanished mid-pass");
+                    BwdSplitJob {
+                        trainable: self.slots[i]
+                            .session
+                            .trainable_slice(),
+                        residuals: &out.residuals,
+                        x,
+                        y,
+                    }
+                })
+                .collect();
+            let gradss = art.run_bwd_split_many(&base, &bjobs)?;
+            drop(bjobs);
+            // phase 5: absorb gradients per member (own scope)
+            for ((name, mut ctx, _x, _y, out), grads) in
+                absorbed.drain(..).zip(gradss)
+            {
+                let i = self
+                    .find(&name)
+                    .expect("gang member vanished mid-pass");
+                let r = supervisor::catch_fault(|| {
+                    faultpoint::with_scope(&name, || {
+                        self.slots[i].session.absorb_bwd(
+                            &mut ctx,
+                            out.residuals,
+                            grads,
+                        )
+                    })
+                });
+                match r {
+                    Ok(()) => live.push((name, ctx)),
+                    Err(e) => self.peel_member(&name, Some(ctx), e,
+                                               events, &mut stepped),
+                }
+            }
+        }
+        // close every surviving member's step (numeric gates +
+        // optimizer update run per member, in its own scope)
+        let share = t0.elapsed().as_secs_f64() / live.len().max(1) as f64;
+        for (name, ctx) in live {
+            let i = self
+                .find(&name)
+                .expect("gang member vanished mid-pass");
+            let r = supervisor::catch_fault(|| {
+                faultpoint::with_scope(&name, || {
+                    self.slots[i].session.finish_step(ctx)
+                })
+            });
+            match r {
+                Ok(_) => {
+                    self.slots[i].retries = 0;
+                    stepped += 1;
+                    events.push(StepEvent {
+                        name: name.clone(),
+                        step: self.slots[i].session.steps_done(),
+                        dur_s: share,
+                        kind: StepEventKind::Stepped,
+                    });
+                }
+                Err(e) => self.peel_member(&name, None, e, events,
+                                           &mut stepped),
+            }
+        }
+        Ok(stepped)
+    }
+
+    /// Whether admitting `(art, cfg)` at `priority` under preemption
+    /// would *strand* work: simulate the exact victim selection
+    /// [`Engine::admit_prio`] would perform, and report `true` when
+    /// any evicted victim — or, if this admission makes a new frozen
+    /// base resident, any already-suspended session — could never be
+    /// resumed again even into an otherwise-empty fleet (bases never
+    /// leave residency, so `bases + marginal > budget` is permanent:
+    /// the scheduling-deadlock bail in [`Engine::round_with`] would be
+    /// inevitable). Front lines call this before a preempting
+    /// admission and requeue the job instead of dooming the fleet.
+    pub fn preempt_would_strand(&self, art: &'a Artifact, cfg: &TrainCfg,
+                                priority: i64) -> bool {
+        let admission = predict(art, cfg);
+        let base_cost = self.base_cost_for(art);
+        let needed = base_cost + admission.marginal();
+        let mut predicted = self.predicted_bytes();
+        if predicted + needed <= self.budget {
+            return false; // fits without evicting anyone
+        }
+        let bases_after = self.base_bytes() + base_cost;
+        let mut victims: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| {
+                !self.slots[i].done && self.slots[i].priority < priority
+            })
+            .collect();
+        victims.sort_by_key(|&i| (self.slots[i].priority, i));
+        let reclaim: u64 = victims
+            .iter()
+            .map(|&i| Engine::slot_cost(&self.slots[i]))
+            .sum();
+        if predicted + needed > self.budget + reclaim {
+            // admit_prio's all-or-nothing check evicts no one and
+            // rejects normally — no stranding hazard
+            return false;
+        }
+        let mut evicted = Vec::new();
+        for &i in &victims {
+            if predicted + needed <= self.budget {
+                break;
+            }
+            predicted -= Engine::slot_cost(&self.slots[i]);
+            evicted.push(i);
+        }
+        evicted.iter().any(|&i| {
+            bases_after + self.slots[i].admission.marginal()
+                > self.budget
+        }) || (base_cost > 0
+            && self.suspended.iter().any(|s| {
+                bases_after + s.admission.marginal() > self.budget
+            }))
+    }
+
     /// Advance every unfinished resident session by one optimizer
     /// step, in admission order, then resume any suspended sessions
     /// that now fit the freed budget. Returns how many sessions made
@@ -910,122 +1395,11 @@ impl<'a> Engine<'a> {
     /// markers. The scheduling behavior is identical to `round`.
     pub fn round_with(&mut self,
                       events: &mut Vec<StepEvent>) -> Result<usize> {
-        let mut stepped = 0usize;
-        let mut i = 0usize;
-        while i < self.slots.len() {
-            if self.slots[i].done {
-                i += 1;
-                continue;
-            }
-            let name = self.slots[i].name.clone();
-            if self.strict {
-                let t0 = std::time::Instant::now();
-                match self.slots[i].session.step()? {
-                    StepOutcome::Stepped(_) => {
-                        stepped += 1;
-                        events.push(StepEvent {
-                            name,
-                            step: self.slots[i].session.steps_done(),
-                            dur_s: t0.elapsed().as_secs_f64(),
-                            kind: StepEventKind::Stepped,
-                        });
-                    }
-                    StepOutcome::Exhausted => {
-                        self.slots[i].done = true;
-                        events.push(StepEvent {
-                            name,
-                            step: self.slots[i].session.steps_done(),
-                            dur_s: 0.0,
-                            kind: StepEventKind::Finished,
-                        });
-                    }
-                }
-                i += 1;
-                continue;
-            }
-            let t0 = std::time::Instant::now();
-            let r = supervisor::supervised_step(
-                &name,
-                &mut self.slots[i].session,
-            );
-            match r {
-                Ok(StepOutcome::Stepped(_)) => {
-                    self.slots[i].retries = 0;
-                    stepped += 1;
-                    events.push(StepEvent {
-                        name,
-                        step: self.slots[i].session.steps_done(),
-                        dur_s: t0.elapsed().as_secs_f64(),
-                        kind: StepEventKind::Stepped,
-                    });
-                    i += 1;
-                }
-                Ok(StepOutcome::Exhausted) => {
-                    self.slots[i].done = true;
-                    events.push(StepEvent {
-                        name,
-                        step: self.slots[i].session.steps_done(),
-                        dur_s: 0.0,
-                        kind: StepEventKind::Finished,
-                    });
-                    i += 1;
-                }
-                Err(e) => {
-                    let kind = supervisor::classify(&e);
-                    let step_now = self.slots[i].session.steps_done();
-                    if kind == FaultKind::Io
-                        && self.slots[i].retries < self.max_retries
-                    {
-                        // transient: rebuild the session bit-exactly
-                        // from its last good (pre-step) state — the
-                        // failed attempt may have consumed prefetched
-                        // batches, and resume replays the data stream
-                        // from the committed step counter
-                        self.slots[i].retries += 1;
-                        supervisor::backoff(self.slots[i].retries);
-                        let art = self.slots[i].session.artifact();
-                        let snap = self.slots[i].session.snapshot();
-                        let rebuilt = supervisor::catch_fault(|| {
-                            Session::resume(art, snap)
-                        });
-                        match rebuilt {
-                            Ok(fresh) => {
-                                self.slots[i].session = fresh;
-                                // the retry is scheduled work: count it
-                                // as progress so run() comes back for
-                                // the re-attempt
-                                stepped += 1;
-                                i += 1;
-                            }
-                            Err(re) => {
-                                self.quarantine_slot(
-                                    i,
-                                    kind,
-                                    format!(
-                                        "{e:?}; retry rebuild \
-                                         failed: {re:?}"
-                                    ),
-                                );
-                                events.push(StepEvent {
-                                    name,
-                                    step: step_now,
-                                    dur_s: 0.0,
-                                    kind: StepEventKind::Quarantined,
-                                });
-                            }
-                        }
-                    } else {
-                        self.quarantine_slot(i, kind, format!("{e:?}"));
-                        events.push(StepEvent {
-                            name,
-                            step: step_now,
-                            dur_s: 0.0,
-                            kind: StepEventKind::Quarantined,
-                        });
-                    }
-                }
-            }
-        }
+        let stepped = if self.fuse && !self.strict {
+            self.sweep_fused(events)?
+        } else {
+            self.sweep_serial(events)?
+        };
         // capacity-planning peak: resident set + every session's
         // measured tape/grad peak as if all tenants were mid-step
         self.fleet.current_bytes =

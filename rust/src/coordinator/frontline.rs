@@ -99,6 +99,11 @@ pub struct FrontCfg {
     pub spool: Option<PathBuf>,
     /// Allow admissions to evict lower-priority sessions to the spool.
     pub preempt: bool,
+    /// Cross-tenant fused execution ([`Engine::set_fuse`]): gang
+    /// compatible sessions and run each gang through one physical pass
+    /// per layer. Also makes [`Policy::BestFit`] prefer admitting jobs
+    /// that join an already-resident gang.
+    pub fuse: bool,
 }
 
 /// What a front-line run produced: the observability surface plus the
@@ -150,6 +155,7 @@ pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
     if cfg.preempt {
         engine.enable_preempt()?;
     }
+    engine.set_fuse(cfg.fuse);
 
     // --- per-job records, name → index map, preset validation -------
     let mut states: Vec<JobRec> = Vec::with_capacity(trace.len());
@@ -194,16 +200,26 @@ pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
             engine.admit_prio(&rec.name, art, c, rec.job.priority)?;
             true
         } else if cfg.preempt {
-            // over budget: the engine may evict lower-priority victims;
-            // a rejection here is a no-fit, not an error
-            let before = engine.suspended_names().len();
-            match engine.admit_prio(&rec.name, art, c, rec.job.priority) {
-                Ok(()) => {
-                    *preemptions +=
-                        engine.suspended_names().len() - before;
-                    true
+            // over budget: the engine may evict lower-priority victims
+            // — but never for a job whose eviction set cannot produce
+            // a feasible fleet (a stranded victim would make the
+            // engine's scheduling-deadlock bail inevitable). Such a
+            // job stays queued and is retried on a later tick, once
+            // retirements have shrunk the fleet.
+            if engine.preempt_would_strand(art, &c, rec.job.priority) {
+                false
+            } else {
+                // a rejection here is a no-fit, not an error
+                let before = engine.suspended_names().len();
+                match engine.admit_prio(&rec.name, art, c,
+                                        rec.job.priority) {
+                    Ok(()) => {
+                        *preemptions +=
+                            engine.suspended_names().len() - before;
+                        true
+                    }
+                    Err(_) => false,
                 }
-                Err(_) => false,
             }
         } else {
             false
@@ -249,9 +265,22 @@ pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
             Policy::BestFit => {
                 loop {
                     // the fitting job with the smallest predicted cost
-                    // (count-optimal greedy); ties: priority desc,
-                    // arrival asc, index asc
-                    let mut best: Option<(usize, u64)> = None;
+                    // (count-optimal greedy); under --fuse, jobs whose
+                    // preset already has a resident session come first
+                    // — completing an existing gang raises per-pass
+                    // occupancy at the same byte cost; ties: cost asc,
+                    // priority desc, arrival asc, index asc
+                    let resident: std::collections::BTreeSet<String> =
+                        if cfg.fuse {
+                            states
+                                .iter()
+                                .filter(|r| engine.contains(&r.name))
+                                .map(|r| r.job.preset.clone())
+                                .collect()
+                        } else {
+                            Default::default()
+                        };
+                    let mut best: Option<(usize, u64, bool)> = None;
                     for &j in pending.iter() {
                         let art = &arts[&states[j].job.preset];
                         let c = job_cfg(&cfg.base_cfg, &states[j].job);
@@ -259,21 +288,24 @@ pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
                         if !fits {
                             continue;
                         }
+                        let joins =
+                            resident.contains(&states[j].job.preset);
                         let better = match best {
                             None => true,
-                            Some((b, bcost)) => {
-                                (cost, -states[j].job.priority,
+                            Some((b, bcost, bjoins)) => {
+                                (!joins, cost, -states[j].job.priority,
                                  states[j].job.arrival, j)
-                                    < (bcost, -states[b].job.priority,
+                                    < (!bjoins, bcost,
+                                       -states[b].job.priority,
                                        states[b].job.arrival, b)
                             }
                         };
                         if better {
-                            best = Some((j, cost));
+                            best = Some((j, cost, joins));
                         }
                     }
                     let picked = match best {
-                        Some((j, _)) => {
+                        Some((j, _, _)) => {
                             // the plain fit check passed, so this must go in
                             let ok = try_admit(engine, &mut states[j],
                                                preemptions, tick)?;
@@ -472,6 +504,14 @@ pub fn serve<'a>(arts: &'a BTreeMap<String, Artifact>,
             .filter(|r| r.outcome == "quarantined")
             .count(),
         preemptions,
+        fused_passes: engine.fusion_stats().fused_passes,
+        serial_passes: engine.fusion_stats().serial_passes,
+        gang_occupancy: engine
+            .fusion_stats()
+            .occupancy
+            .iter()
+            .map(|(&n, &c)| (n, c))
+            .collect(),
         queue_wait_ticks: Percentiles::from_samples(&queue_waits),
         step_latency_s: Percentiles::from_samples(&all_lat),
         sessions,

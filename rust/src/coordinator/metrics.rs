@@ -260,6 +260,14 @@ pub struct FleetMetrics {
     pub quarantined: usize,
     /// Preemptions (sessions evicted to the spool by admission).
     pub preemptions: usize,
+    /// Physical fwd+bwd sweeps that served a whole gang at once
+    /// (0 unless the engine ran with fusion enabled).
+    pub fused_passes: u64,
+    /// Physical fwd+bwd sweeps that served a single session.
+    pub serial_passes: u64,
+    /// Fused-pass count per gang occupancy, ascending occupancy — e.g.
+    /// `[(4, 120)]` = 120 fused passes each serving 4 sessions.
+    pub gang_occupancy: Vec<(usize, u64)>,
     /// Queue-wait percentiles over admitted jobs, in ticks.
     pub queue_wait_ticks: Percentiles,
     /// Fleet-wide wall-clock step-latency percentiles (seconds).
@@ -291,6 +299,15 @@ impl FleetMetrics {
             ("completed", num(self.completed as f64)),
             ("quarantined", num(self.quarantined as f64)),
             ("preemptions", num(self.preemptions as f64)),
+            ("fused_passes", num(self.fused_passes as f64)),
+            ("serial_passes", num(self.serial_passes as f64)),
+            ("gang_occupancy",
+             Json::Obj(
+                 self.gang_occupancy
+                     .iter()
+                     .map(|&(n, c)| (n.to_string(), num(c as f64)))
+                     .collect(),
+             )),
             ("throughput_jobs_per_tick",
              num(self.throughput_jobs_per_tick())),
             ("queue_wait_ticks", self.queue_wait_ticks.json()),
@@ -345,6 +362,9 @@ mod tests {
             completed: 1,
             quarantined: 0,
             preemptions: 0,
+            fused_passes: 120,
+            serial_passes: 3,
+            gang_occupancy: vec![(2, 20), (4, 100)],
             queue_wait_ticks: Percentiles::from_samples(&[3.0]),
             step_latency_s: Percentiles::from_samples(&[0.1, 0.2]),
             sessions: vec![sess],
@@ -352,6 +372,13 @@ mod tests {
         let j = Json::parse(&fleet.json().to_string()).unwrap();
         assert_eq!(j.get("policy").unwrap().as_str().unwrap(),
                    "best-fit");
+        assert_eq!(j.get("fused_passes").unwrap().as_usize().unwrap(),
+                   120);
+        assert_eq!(j.get("serial_passes").unwrap().as_usize().unwrap(),
+                   3);
+        let occ = j.get("gang_occupancy").unwrap();
+        assert_eq!(occ.get("4").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(occ.get("2").unwrap().as_usize().unwrap(), 20);
         assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
         let qs = j.get("queue_wait_ticks").unwrap();
         assert_eq!(qs.get("p50").unwrap().as_f64().unwrap(), 3.0);

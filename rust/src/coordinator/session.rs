@@ -148,6 +148,27 @@ pub struct StepStats {
     pub activation_bytes: u64,
 }
 
+/// In-flight state of one optimizer step, threaded through the
+/// decomposed step phases ([`Session::begin_step`] →
+/// `grad_accum` × ([`Session::next_micro`] → fwd →
+/// [`Session::absorb_fwd`] → bwd → [`Session::absorb_bwd`]) →
+/// [`Session::finish_step`]). The serial [`Session::step`] drives the
+/// same phases back-to-back; the engine's fused path interleaves them
+/// across gang members, executing the fwd/bwd passes through the
+/// `_many` executor entry points instead.
+pub(crate) struct StepCtx {
+    step: usize,
+    lr: f32,
+    loss_acc: f32,
+    metric_acc: f32,
+    accum: Option<Vec<Tensor>>,
+    /// Whether the step's fwd/bwd ran through the artifact's shared
+    /// executor (the fused path) rather than this session's fork —
+    /// residual and gradient buffers must be recycled where they came
+    /// from.
+    fused: bool,
+}
+
 /// Constructor result that, on failure, carries the caller's
 /// parameters back out (rejoined to the full manifest-ordered vector)
 /// instead of dropping them — so `Trainer::train` can restore a
@@ -451,6 +472,35 @@ impl<'a> Session<'a> {
         self.exec().recycle(tensors);
     }
 
+    /// Route step-scoped tensors back to the arena they came from: a
+    /// fused step's buffers were taken from the artifact's shared
+    /// executor, a serial step's from this session's fork.
+    fn recycle_routed(&self, fused: bool, tensors: Vec<Tensor>) {
+        if fused {
+            self.art.recycle(tensors);
+        } else {
+            self.recycle(tensors);
+        }
+    }
+
+    /// Whether this session can join a fused gang: it must read the
+    /// split parameter ABI (flat-fallback sessions have no shared
+    /// frozen base for the gang to sweep once).
+    pub(crate) fn fusable(&self) -> bool {
+        self.flat.is_none()
+    }
+
+    /// The session's trainable tensors (manifest trainable order) — the
+    /// per-member half of a fused `_many` job.
+    pub(crate) fn trainable_slice(&self) -> &[Tensor] {
+        &self.trainable
+    }
+
+    /// Microbatches per optimizer step.
+    pub(crate) fn grad_accum(&self) -> usize {
+        self.cfg.grad_accum
+    }
+
     /// The artifact this session fine-tunes.
     pub fn artifact(&self) -> &'a Artifact {
         self.art
@@ -497,80 +547,112 @@ impl<'a> Session<'a> {
         self.step >= self.cfg.steps
     }
 
-    /// Run one full optimizer step: `grad_accum` microbatches of
-    /// fwd → observe residuals → bwd → accumulate, then the optimizer
-    /// update over the trainable slice (no raw-pointer disjoint-borrow
-    /// dance: the trainables are a dense per-session vector).
-    pub fn step(&mut self) -> Result<StepOutcome> {
+    /// Open one optimizer step: capture the step index and scheduled
+    /// learning rate. `None` when the step budget is exhausted.
+    /// `fused` marks a step whose fwd/bwd will run through the
+    /// artifact's shared executor (the engine's gang path) — it only
+    /// routes buffer recycling; all arithmetic is identical.
+    pub(crate) fn begin_step(&self, fused: bool) -> Option<StepCtx> {
         if self.is_done() {
-            return Ok(StepOutcome::Exhausted);
+            return None;
         }
         let step = self.step;
-        let cfg_steps = self.cfg.steps;
+        let lr = self.cfg.schedule.lr(self.cfg.lr, step, self.cfg.steps);
+        Some(StepCtx {
+            step,
+            lr,
+            loss_acc: 0.0,
+            metric_acc: 0.0,
+            accum: None,
+            fused,
+        })
+    }
+
+    /// Pull the next microbatch off this session's prefetcher and
+    /// materialize it as input tensors.
+    pub(crate) fn next_micro(&mut self) -> Result<(Tensor, Tensor)> {
+        let batch = self
+            .prefetch
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("prefetcher exhausted"))?;
+        Ok(to_tensors(self.art, batch))
+    }
+
+    /// Absorb one microbatch's forward output: accumulate loss/metric
+    /// and record the measured activation-memory moment. Fault site
+    /// "step.loss" lives here, so fused gangs attribute it to the
+    /// member whose absorb is running.
+    pub(crate) fn absorb_fwd(&mut self, ctx: &mut StepCtx,
+                             out: &FwdOut) -> Result<()> {
         let grad_accum = self.cfg.grad_accum;
-        let lr = self.cfg.schedule.lr(self.cfg.lr, step, cfg_steps);
-        let mut loss_acc = 0f32;
-        let mut metric_acc = 0f32;
-        let mut accum: Option<Vec<Tensor>> = None;
-        for _ in 0..grad_accum {
-            let batch = self
-                .prefetch
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("prefetcher exhausted"))?;
-            let (x, y) = to_tensors(self.art, batch);
-            let out = self.fwd(&x, &y)?;
-            loss_acc += out.loss / grad_accum as f32;
-            metric_acc += out.metric / grad_accum as f32;
-            // fault site "step.loss": `nan` poisons the accumulated
-            // loss; `io`/`panic` abort the microbatch loop here
-            if crate::util::faultpoint::trip("step.loss")? {
-                loss_acc = f32::NAN;
-            }
-            // ---- the measured activation-memory moment ----
-            self.memory.observe_residuals(&self.art.manifest,
-                                          &out.residuals);
-            let mut grads = self.bwd(&out.residuals, &x, &y)?;
-            // fault site "step.compute": `nan` poisons one gradient
-            // element (caught below by the norm gate)
-            if crate::util::faultpoint::trip("step.compute")? {
-                if let Some(v) = grads
-                    .first_mut()
-                    .and_then(|g| g.as_f32_mut().first_mut())
-                {
-                    *v = f32::NAN;
-                }
-            }
-            // at the peak both the fresh gradients and (under
-            // grad_accum > 1) the running accumulator are live
-            let gbytes: u64 =
-                grads.iter().map(|g| g.nbytes() as u64).sum();
-            let abytes: u64 = accum
-                .as_ref()
-                .map(|acc| {
-                    acc.iter().map(|g| g.nbytes() as u64).sum()
-                })
-                .unwrap_or(0);
-            self.memory.observe_extra(gbytes + abytes);
-            self.memory.release();
-            // the residuals are dead past this point — hand their
-            // buffers back to the executor's arena for the next step
-            self.recycle(out.residuals);
-            match &mut accum {
-                None => {
-                    accum = Some(grads);
-                }
-                Some(acc) => {
-                    for (a, g) in acc.iter_mut().zip(&grads) {
-                        let av = a.as_f32_mut();
-                        for (ai, gi) in av.iter_mut().zip(g.as_f32()) {
-                            *ai += gi;
-                        }
-                    }
-                    self.recycle(grads);
-                }
+        ctx.loss_acc += out.loss / grad_accum as f32;
+        ctx.metric_acc += out.metric / grad_accum as f32;
+        // fault site "step.loss": `nan` poisons the accumulated
+        // loss; `io`/`panic` abort the microbatch loop here
+        if crate::util::faultpoint::trip("step.loss")? {
+            ctx.loss_acc = f32::NAN;
+        }
+        // ---- the measured activation-memory moment ----
+        self.memory.observe_residuals(&self.art.manifest,
+                                      &out.residuals);
+        Ok(())
+    }
+
+    /// Absorb one microbatch's backward output: account the gradient
+    /// peak, retire the residuals, and fold the gradients into the
+    /// step's accumulator. Fault site "step.compute" lives here.
+    pub(crate) fn absorb_bwd(&mut self, ctx: &mut StepCtx,
+                             residuals: Vec<Tensor>,
+                             mut grads: Vec<Tensor>) -> Result<()> {
+        // fault site "step.compute": `nan` poisons one gradient
+        // element (caught by the norm gate in `finish_step`)
+        if crate::util::faultpoint::trip("step.compute")? {
+            if let Some(v) = grads
+                .first_mut()
+                .and_then(|g| g.as_f32_mut().first_mut())
+            {
+                *v = f32::NAN;
             }
         }
-        let mut grads = accum.take().unwrap();
+        // at the peak both the fresh gradients and (under
+        // grad_accum > 1) the running accumulator are live
+        let gbytes: u64 =
+            grads.iter().map(|g| g.nbytes() as u64).sum();
+        let abytes: u64 = ctx
+            .accum
+            .as_ref()
+            .map(|acc| acc.iter().map(|g| g.nbytes() as u64).sum())
+            .unwrap_or(0);
+        self.memory.observe_extra(gbytes + abytes);
+        self.memory.release();
+        // the residuals are dead past this point — hand their
+        // buffers back to the executor's arena for the next step
+        self.recycle_routed(ctx.fused, residuals);
+        match &mut ctx.accum {
+            None => {
+                ctx.accum = Some(grads);
+            }
+            Some(acc) => {
+                for (a, g) in acc.iter_mut().zip(&grads) {
+                    let av = a.as_f32_mut();
+                    for (ai, gi) in av.iter_mut().zip(g.as_f32()) {
+                        *ai += gi;
+                    }
+                }
+                self.recycle_routed(ctx.fused, grads);
+            }
+        }
+        Ok(())
+    }
+
+    /// Close one optimizer step: numeric health gates, the optimizer
+    /// update, metrics logging, and the step-counter advance.
+    pub(crate) fn finish_step(&mut self,
+                              mut ctx: StepCtx) -> Result<StepStats> {
+        let mut grads =
+            ctx.accum.take().expect("finish_step before any microbatch");
+        let StepCtx { step, lr, loss_acc, metric_acc, fused, .. } = ctx;
+        let grad_accum = self.cfg.grad_accum;
         if grad_accum > 1 {
             let inv = 1.0 / grad_accum as f32;
             for g in &mut grads {
@@ -624,7 +706,7 @@ impl<'a> Session<'a> {
         self.sync_flat();
         // the gradient tensors' buffers came from the executor's
         // arena (native backend); hand them back for the next step
-        self.recycle(grads);
+        self.recycle_routed(fused, grads);
         let activation_bytes = self.memory.last_residual_bytes;
         self.metrics.log_step(
             StepRow {
@@ -646,13 +728,47 @@ impl<'a> Session<'a> {
             );
         }
         self.step += 1;
-        Ok(StepOutcome::Stepped(StepStats {
+        Ok(StepStats {
             step,
             loss: loss_acc,
             metric: metric_acc,
             lr,
             activation_bytes,
-        }))
+        })
+    }
+
+    /// Discard an in-flight step (the engine peels a faulted gang
+    /// member): hand any accumulated gradient buffers back to their
+    /// arena. No session state changes — the step counter only
+    /// advances in [`Session::finish_step`], so the session is still
+    /// at its last good state afterwards.
+    pub(crate) fn abort_step(&self, ctx: StepCtx) {
+        let StepCtx { accum, fused, .. } = ctx;
+        if let Some(grads) = accum {
+            self.recycle_routed(fused, grads);
+        }
+    }
+
+    /// Run one full optimizer step: `grad_accum` microbatches of
+    /// fwd → observe residuals → bwd → accumulate, then the optimizer
+    /// update over the trainable slice (no raw-pointer disjoint-borrow
+    /// dance: the trainables are a dense per-session vector). The body
+    /// is exactly the decomposed phase sequence the engine's fused path
+    /// drives, so serial and fused steps share every line of per-step
+    /// arithmetic.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let mut ctx = match self.begin_step(false) {
+            Some(c) => c,
+            None => return Ok(StepOutcome::Exhausted),
+        };
+        for _ in 0..self.cfg.grad_accum {
+            let (x, y) = self.next_micro()?;
+            let out = self.fwd(&x, &y)?;
+            self.absorb_fwd(&mut ctx, &out)?;
+            let grads = self.bwd(&out.residuals, &x, &y)?;
+            self.absorb_bwd(&mut ctx, out.residuals, grads)?;
+        }
+        Ok(StepOutcome::Stepped(self.finish_step(ctx)?))
     }
 
     /// Evaluate on held-out batches (forward only), reusing the

@@ -147,6 +147,9 @@ fn serve(args: &Args) -> Result<()> {
             "--halt-after requires --spool");
     let strict = args.bool("strict");
     let max_retries = args.usize_or("max-retries", 2)? as u32;
+    // cross-tenant fused execution (off by default; --no-fuse makes
+    // the serial baseline explicit for A/B runs)
+    let fuse = args.bool("fuse") && !args.bool("no-fuse");
     let metrics_dir = args.get("metrics-dir").map(PathBuf::from);
     if let Some(f) = args.get("faults") {
         ambp::util::faultpoint::arm(f)
@@ -156,7 +159,7 @@ fn serve(args: &Args) -> Result<()> {
     // front-line mode: a job trace + scheduling policy drive the
     // engine through the priority queue instead of a fixed --jobs list
     if args.get("trace").is_some() || args.get("policy").is_some() {
-        return serve_frontline(&rt, args, budget, spool, preempt);
+        return serve_frontline(&rt, args, budget, spool, preempt, fuse);
     }
     // salvaging warm-restart scan: healthy statefiles resume, corrupt
     // ones are quarantined (renamed + report) instead of blocking the
@@ -217,6 +220,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut engine = Engine::new(budget);
     engine.set_strict(strict);
     engine.set_max_retries(max_retries);
+    engine.set_fuse(fuse);
     if let Some(dir) = &spool {
         engine.set_spool(dir.clone());
     }
@@ -364,6 +368,17 @@ fn serve(args: &Args) -> Result<()> {
              budget as f64 / 1048576.0,
              engine.fleet.peak_bytes as f64 / 1048576.0,
              admitted_samples as f64 / wall);
+    if fuse {
+        let fs = engine.fusion_stats();
+        let occ: Vec<String> = fs
+            .occupancy
+            .iter()
+            .map(|(n, c)| format!("{n}-way×{c}"))
+            .collect();
+        println!("fusion: {} fused passes | {} serial passes | gang \
+                  occupancy [{}]",
+                 fs.fused_passes, fs.serial_passes, occ.join(", "));
+    }
     Ok(())
 }
 
@@ -372,8 +387,8 @@ fn serve(args: &Args) -> Result<()> {
 /// `--policy round-robin|first-fit|best-fit`, with fleet metrics
 /// printed and optionally written as JSON (`--fleet-json`).
 fn serve_frontline(rt: &Runtime, args: &Args, budget: u64,
-                   spool: Option<PathBuf>,
-                   preempt: bool) -> Result<()> {
+                   spool: Option<PathBuf>, preempt: bool,
+                   fuse: bool) -> Result<()> {
     let trace_path = PathBuf::from(args.get("trace").context(
         "--policy requires --trace FILE (a JSONL job trace; write one \
          with `ambp bench-fleet --save-trace DIR`)",
@@ -405,6 +420,7 @@ fn serve_frontline(rt: &Runtime, args: &Args, budget: u64,
         max_ticks: args.usize_or("ticks", 0)? as u64,
         spool,
         preempt,
+        fuse,
     };
     println!("front line: {} jobs from {:?}, policy {}, budget {:.1} \
               MiB{}",
@@ -453,6 +469,16 @@ fn print_fleet(m: &FleetMetrics) {
               (wall clock — not deterministic)",
              m.step_latency_s.p50 * 1e3, m.step_latency_s.p90 * 1e3,
              m.step_latency_s.p99 * 1e3);
+    if m.fused_passes > 0 {
+        let occ: Vec<String> = m
+            .gang_occupancy
+            .iter()
+            .map(|(n, c)| format!("{n}-way×{c}"))
+            .collect();
+        println!("  fusion: {} fused passes | {} serial passes | gang \
+                  occupancy [{}]",
+                 m.fused_passes, m.serial_passes, occ.join(", "));
+    }
 }
 
 /// Policy × preset-group serving benchmark: one seeded bursty trace
@@ -465,6 +491,7 @@ fn bench_fleet(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 7)? as u64;
     let jobs = args.usize_or("jobs", 12)?;
     let ticks = args.usize_or("ticks", 24)? as u64;
+    let fuse = args.bool("fuse") && !args.bool("no-fuse");
     // equal-length preset lists so every group consumes the RNG
     // identically: same arrivals/steps/seeds, presets swapped
     let groups: Vec<(&str, Vec<&str>)> = vec![
@@ -516,8 +543,9 @@ fn bench_fleet(args: &Args) -> Result<()> {
         }
     };
     println!("bench-fleet: seed {seed}, {jobs} jobs, horizon {ticks} \
-              ticks, budget {:.2} MiB",
-             budget as f64 / 1048576.0);
+              ticks, budget {:.2} MiB{}",
+             budget as f64 / 1048576.0,
+             if fuse { ", fused execution" } else { "" });
     println!("{:<10} {:<12} {:>8} {:>9} {:>9} {:>10} {:>11}",
              "group", "policy", "admitted", "completed", "rejected",
              "wait p50", "jobs/tick");
@@ -547,6 +575,7 @@ fn bench_fleet(args: &Args) -> Result<()> {
                 max_ticks: ticks,
                 spool: None,
                 preempt: false,
+                fuse,
             };
             let m = frontline::serve(&arts, &trace, &fcfg)?.metrics;
             println!("{:<10} {:<12} {:>8} {:>9} {:>9} {:>10.0} \
@@ -601,6 +630,15 @@ fn bench_fleet(args: &Args) -> Result<()> {
         ensure!(better > 0,
                 "ours/mesa never admitted strictly more jobs than \
                  baseline under the shared budget");
+        if fuse {
+            let fused: u64 =
+                results.iter().map(|(_, m)| m.fused_passes).sum();
+            ensure!(fused > 0,
+                    "--fuse was set but no fused passes were recorded \
+                     anywhere in the grid");
+            println!("assertions passed: {fused} fused passes \
+                      recorded across the grid");
+        }
         println!("assertions passed: best-fit ≥ first-fit ≥ \
                   round-robin per group; ours/mesa ≥ baseline per \
                   policy (strictly better in {better} cells)");
@@ -848,7 +886,8 @@ global: --backend native|pjrt   (default native; presets with no on-disk
   serve   --budget MiB --jobs P[:steps[:seed[:prio]]],...
           [--steps N --lr X --seed S --log-every K --eval-batches E
            --strict --spool DIR --preempt --halt-after R
-           --max-retries K --faults SPEC --metrics-dir DIR]
+           --max-retries K --faults SPEC --metrics-dir DIR
+           --fuse | --no-fuse]
           multi-tenant engine: sessions share frozen bases; admission
           is gated on predicted tape+grads+optimizer bytes
           (--strict: error out if any job is rejected or any fault
@@ -874,8 +913,14 @@ global: --backend native|pjrt   (default native; presets with no on-disk
           step.loss, step.compute, spool.write, spool.read —
           prefix \"name/site\" targets one tenant;
           --metrics-dir DIR writes per-session JSONL loss curves
+          fusion: --fuse gangs sessions on the same frozen base (same
+          preset + grad-accum) and runs each gang through one
+          panel-packed pass per layer — per-session results stay
+          bit-identical to the serial sweep; ignored under --strict;
+          a faulting gang member is peeled and the survivors keep
+          fusing
   bench-fleet [--seed S --jobs N --ticks T --budget MiB --out F
-          --save-trace DIR --assert]
+          --save-trace DIR --assert --fuse]
           policy (round-robin/first-fit/best-fit) × preset group
           (baseline/ours/mesa) grid on one seeded bursty trace shape
           under one byte budget; writes BENCH_fleet.json; --assert

@@ -37,7 +37,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 pub use manifest::Manifest;
-pub use params::{FrozenBase, Params};
+pub use params::{FrozenBase, PanelCache, Params};
 pub use tensor::{DType, Tensor};
 
 /// Output of one forward pass at the residual ABI.
@@ -49,6 +49,30 @@ pub struct FwdOut {
     /// The residual tensors held between fwd and bwd — the *measured*
     /// activation memory of the step, in manifest order.
     pub residuals: Vec<Tensor>,
+}
+
+/// One session's inputs to a fused forward pass at the split parameter
+/// ABI: every job in a [`Executor::run_fwd_split_many`] call shares the
+/// same frozen base and differs only in its trainables and batch.
+pub struct FwdSplitJob<'a> {
+    /// The session's trainable tensors, manifest trainable order.
+    pub trainable: &'a [Tensor],
+    /// Batch inputs.
+    pub x: &'a Tensor,
+    /// Batch labels.
+    pub y: &'a Tensor,
+}
+
+/// One session's inputs to a fused backward pass (see [`FwdSplitJob`]).
+pub struct BwdSplitJob<'a> {
+    /// The session's trainable tensors, manifest trainable order.
+    pub trainable: &'a [Tensor],
+    /// The residuals this session's forward pass produced.
+    pub residuals: &'a [Tensor],
+    /// Batch inputs.
+    pub x: &'a Tensor,
+    /// Batch labels.
+    pub y: &'a Tensor,
 }
 
 /// A compiled fwd/bwd pair. Implementations must honor the residual ABI:
@@ -82,6 +106,36 @@ pub trait Executor {
                      y: &Tensor) -> Result<Vec<Tensor>> {
         let full = Params::Split { base, trainable }.to_vec();
         self.run_bwd(&full, residuals, x, y)
+    }
+
+    /// Fused multi-session forward: run every job's forward pass against
+    /// the one shared frozen base, returning per-job outputs in job
+    /// order. The contract is **bit-identity**: each job's output must
+    /// be exactly what [`Executor::run_fwd_split`] would have produced
+    /// for it alone — fusion may only change *how* the shared frozen
+    /// panels are swept, never any per-job arithmetic. The default runs
+    /// the jobs serially (always correct, no fusion win); the native
+    /// backend overrides it to walk the layer stack once with all jobs'
+    /// activation blocks side by side.
+    fn run_fwd_split_many(&self, base: &FrozenBase,
+                          jobs: &[FwdSplitJob<'_>])
+                          -> Result<Vec<FwdOut>> {
+        jobs.iter()
+            .map(|j| self.run_fwd_split(base, j.trainable, j.x, j.y))
+            .collect()
+    }
+
+    /// Fused multi-session backward (see
+    /// [`Executor::run_fwd_split_many`] for the bit-identity contract).
+    fn run_bwd_split_many(&self, base: &FrozenBase,
+                          jobs: &[BwdSplitJob<'_>])
+                          -> Result<Vec<Vec<Tensor>>> {
+        jobs.iter()
+            .map(|j| {
+                self.run_bwd_split(base, j.trainable, j.residuals, j.x,
+                                   j.y)
+            })
+            .collect()
     }
 
     /// Whether this executor reads the split parameter ABI natively
@@ -330,6 +384,37 @@ impl Artifact {
             self.exec.run_bwd_split(base, trainable, residuals, x, y)?;
         self.verify_bwd(&grads)?;
         Ok(grads)
+    }
+
+    /// [`Artifact::run_fwd_split`] for a gang of sessions through one
+    /// fused pass (see [`Executor::run_fwd_split_many`]); outputs are
+    /// verified per job.
+    pub fn run_fwd_split_many(&self, base: &FrozenBase,
+                              jobs: &[FwdSplitJob<'_>])
+                              -> Result<Vec<FwdOut>> {
+        let outs = self.exec.run_fwd_split_many(base, jobs)?;
+        anyhow::ensure!(outs.len() == jobs.len(),
+                        "fused fwd arity: got {} outputs for {} jobs",
+                        outs.len(), jobs.len());
+        for out in &outs {
+            self.verify_fwd(out)?;
+        }
+        Ok(outs)
+    }
+
+    /// [`Artifact::run_bwd_split`] for a gang of sessions through one
+    /// fused pass; gradient lists are verified per job.
+    pub fn run_bwd_split_many(&self, base: &FrozenBase,
+                              jobs: &[BwdSplitJob<'_>])
+                              -> Result<Vec<Vec<Tensor>>> {
+        let outs = self.exec.run_bwd_split_many(base, jobs)?;
+        anyhow::ensure!(outs.len() == jobs.len(),
+                        "fused bwd arity: got {} outputs for {} jobs",
+                        outs.len(), jobs.len());
+        for grads in &outs {
+            self.verify_bwd(grads)?;
+        }
+        Ok(outs)
     }
 
     /// Return a finished step's residual tensors to the executor's

@@ -97,6 +97,123 @@ pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
     });
 }
 
+/// A B operand packed once into the same NR-column micro-panel layout
+/// `gemm_into` builds per call, reusable across calls (and across
+/// sessions) as long as the underlying weights do not change. The
+/// panels carry their logical `[k, n]` shape so a handle can be
+/// validity-checked against the operand it claims to represent.
+///
+/// Bit-identity: [`gemm_packed_into`] hands these panels to the *same*
+/// `gemm_rows` worker loop `gemm_into` uses, so reusing a pack is
+/// invisible in the result bits — only the `O(k·n)` packing work is
+/// skipped.
+pub struct PackedB {
+    panels: Vec<f32>,
+    k: usize,
+    n: usize,
+    pcols: usize,
+}
+
+impl PackedB {
+    /// Logical shape `(k, n)` of the packed operand.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// Resident bytes of the packed panels (n is padded up to a
+    /// multiple of NR, so this is slightly above `4·k·n`).
+    pub fn nbytes(&self) -> u64 {
+        (self.panels.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Pack `op_b(B)` (`B[k,n]`, or `B[n,k]ᵀ` when `b_trans`) once into an
+/// owned panel buffer. The packing loop is byte-for-byte the one
+/// `gemm_into` runs per call.
+pub fn pack_b_once(b: &[f32], k: usize, n: usize,
+                   b_trans: bool) -> PackedB {
+    assert_eq!(b.len(), k * n, "pack_b_once: bad B length");
+    let pcols = n.div_ceil(NR) * NR;
+    let mut panels = vec![0f32; k * pcols];
+    let mut kz = 0;
+    while kz < k {
+        let kcl = KC.min(k - kz);
+        pack_b(&mut panels[kz * pcols..(kz + kcl) * pcols], b, k, n, kz,
+               kcl, b_trans);
+        kz += KC;
+    }
+    PackedB { panels, k, n, pcols }
+}
+
+/// [`gemm_into`] against an already-packed B: identical worker loop,
+/// identical k-order, identical result bits — minus the per-call
+/// `O(k·n)` packing.
+pub fn gemm_packed_into(c: &mut [f32], a: &[f32], pb: &PackedB,
+                        m: usize, a_trans: bool, acc: bool) {
+    let (k, n) = (pb.k, pb.n);
+    assert_eq!(a.len(), m * k, "gemm_packed: bad A length");
+    assert_eq!(c.len(), m * n, "gemm_packed: bad C length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let panels: &[f32] = &pb.panels;
+    parallel_rows(c, n, grain(2 * k * n), |i0, chunk| {
+        gemm_rows(chunk, i0, a, panels, m, k, n, a_trans, acc);
+    });
+}
+
+/// N independent GEMMs over **one** packed B: for each KC block the
+/// panel is swept through every session's activation block before the
+/// k cursor advances, so the frozen operand is streamed through cache
+/// once per block instead of once per session.
+///
+/// Per session the arithmetic is exactly [`gemm_packed_into`]'s: the
+/// monolithic path also accumulates `C += tile(kz)` block-by-block in
+/// ascending `kz` order (the microkernel writes its local tile back
+/// after every KC block), so dispatching the blocks one at a time
+/// per session leaves every session's result bit-identical to its
+/// serial run.
+pub fn gemm_packed_many(cs: &mut [&mut [f32]], activations: &[&[f32]],
+                        pb: &PackedB, m: usize, a_trans: bool,
+                        acc: bool) {
+    assert_eq!(cs.len(), activations.len(),
+               "gemm_packed_many: C/A arity mismatch");
+    let (k, n) = (pb.k, pb.n);
+    for (c, a) in cs.iter().zip(activations) {
+        assert_eq!(a.len(), m * k, "gemm_packed_many: bad A length");
+        assert_eq!(c.len(), m * n, "gemm_packed_many: bad C length");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            for c in cs.iter_mut() {
+                c.fill(0.0);
+            }
+        }
+        return;
+    }
+    let panels: &[f32] = &pb.panels;
+    let mut kz = 0;
+    while kz < k {
+        let kcl = KC.min(k - kz);
+        for (c, a) in cs.iter_mut().zip(activations) {
+            parallel_rows(c, n, grain(2 * kcl * n), |i0, chunk| {
+                gemm_rows_kblock(chunk, i0, a, panels, m, k, n, kz, kcl,
+                                 a_trans, acc);
+            });
+        }
+        kz += KC;
+    }
+}
+
 /// Pack the `[kz, kz+kcl)` k-rows of B into NR-column micro-panels:
 /// panel `jp` holds `b(kz+t, jp·NR + j)` at `[t·NR + j]`, zero-padded in
 /// `j` past the matrix edge.
@@ -221,6 +338,50 @@ fn gemm_rows(chunk: &mut [f32], i0: usize, a: &[f32], pb: &[f32],
     });
 }
 
+/// One worker's row chunk restricted to a single KC block `[kz,
+/// kz+kcl)` — the body of `gemm_rows`' outer k loop, extracted so
+/// [`gemm_packed_many`] can interleave sessions between blocks. The
+/// chunk is zeroed only on the first block (`kz == 0`, `!acc`), so
+/// successive blocks accumulate exactly as the monolithic loop does.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_kblock(chunk: &mut [f32], i0: usize, a: &[f32], pb: &[f32],
+                    m: usize, k: usize, n: usize, kz: usize, kcl: usize,
+                    a_trans: bool, acc: bool) {
+    let rows = chunk.len() / n;
+    if kz == 0 && !acc {
+        chunk.fill(0.0);
+    }
+    let n_panels = n.div_ceil(NR);
+    let pcols = n_panels * NR;
+    PACK_A.with(|cell| {
+        let mut pa = cell.borrow_mut();
+        if pa.len() < MC * KC {
+            pa.resize(MC * KC, 0.0);
+        }
+        let bblock = &pb[kz * pcols..(kz + kcl) * pcols];
+        let mut ib = 0;
+        while ib < rows {
+            let mcl = MC.min(rows - ib);
+            let mpanels = mcl.div_ceil(MR);
+            pack_a(&mut pa[..mpanels * kcl * MR], a, m, k, i0 + ib, mcl,
+                   kz, kcl, a_trans);
+            for jp in 0..n_panels {
+                let bpanel = &bblock[jp * kcl * NR..(jp + 1) * kcl * NR];
+                let j0 = jp * NR;
+                let nr_eff = NR.min(n - j0);
+                for ip in 0..mpanels {
+                    let apanel = &pa[ip * kcl * MR..(ip + 1) * kcl * MR];
+                    let mr_eff = MR.min(mcl - ip * MR);
+                    let coff = (ib + ip * MR) * n + j0;
+                    micro(apanel, bpanel, &mut chunk[coff..], n, mr_eff,
+                          nr_eff);
+                }
+            }
+            ib += MC;
+        }
+    });
+}
+
 /// The register-tiled microkernel: `C[mr_eff, nr_eff] += Ap · Bp` over
 /// one KC block, with the full `MR × NR` accumulator tile kept local so
 /// the inner loop is a broadcast-multiply-accumulate the compiler can
@@ -331,6 +492,91 @@ mod tests {
         assert_eq!(c, vec![2.0; 4]);
         gemm_into(&mut c, &a, &b, 2, 0, 2, false, false, false);
         assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn packed_reuse_is_bit_identical_to_fresh_pack() {
+        let mut rng = Rng::new(21);
+        // k > KC to cross a block boundary; ragged m/n
+        let (m, k, n) = (37, 300, 29);
+        for bt in [false, true] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            gemm_into(&mut want, &a, &b, m, k, n, false, bt, false);
+            let pb = pack_b_once(&b, k, n, bt);
+            assert_eq!(pb.shape(), (k, n));
+            assert!(pb.nbytes() >= (4 * k * n) as u64);
+            // reuse the pack twice — both results bit-equal to fresh
+            for _ in 0..2 {
+                let mut c = vec![0f32; m * n];
+                gemm_packed_into(&mut c, &a, &pb, m, false, false);
+                assert_eq!(c, want, "bt={bt}");
+            }
+            // and the accumulate path
+            let mut c = vec![1.5f32; m * n];
+            let mut cref = vec![1.5f32; m * n];
+            gemm_packed_into(&mut c, &a, &pb, m, false, true);
+            gemm_into(&mut cref, &a, &b, m, k, n, false, bt, true);
+            assert_eq!(c, cref, "acc bt={bt}");
+        }
+    }
+
+    #[test]
+    fn packed_many_matches_per_session_serial_bitwise() {
+        use crate::runtime::native::pool::with_threads;
+        let mut rng = Rng::new(33);
+        let (m, k, n) = (18, 520, 23); // three KC blocks
+        let b = randv(&mut rng, k * n);
+        let activations: Vec<Vec<f32>> =
+            (0..4).map(|_| randv(&mut rng, m * k)).collect();
+        let pb = pack_b_once(&b, k, n, false);
+        // serial twins, one gemm per session
+        let want: Vec<Vec<f32>> = activations
+            .iter()
+            .map(|a| {
+                let mut c = vec![0f32; m * n];
+                gemm_into(&mut c, a, &b, m, k, n, false, false, false);
+                c
+            })
+            .collect();
+        for nt in [1usize, 4] {
+            let mut cs: Vec<Vec<f32>> =
+                (0..4).map(|_| vec![0f32; m * n]).collect();
+            with_threads(nt, || {
+                let mut crefs: Vec<&mut [f32]> =
+                    cs.iter_mut().map(|c| c.as_mut_slice()).collect();
+                let arefs: Vec<&[f32]> =
+                    activations.iter().map(|a| a.as_slice()).collect();
+                gemm_packed_many(&mut crefs, &arefs, &pb, m, false,
+                                 false);
+            });
+            for (s, (c, w)) in cs.iter().zip(&want).enumerate() {
+                assert_eq!(c, w, "session {s} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_many_k_zero_and_acc_edges() {
+        let b: [f32; 0] = [];
+        let pb = pack_b_once(&b, 0, 2, false);
+        let a: [f32; 0] = [];
+        let mut c0 = vec![2.0f32; 4];
+        let mut c1 = vec![3.0f32; 4];
+        {
+            let mut cs: Vec<&mut [f32]> =
+                vec![c0.as_mut_slice(), c1.as_mut_slice()];
+            gemm_packed_many(&mut cs, &[&a, &a], &pb, 2, false, true);
+        }
+        assert_eq!(c0, vec![2.0; 4]);
+        {
+            let mut cs: Vec<&mut [f32]> =
+                vec![c0.as_mut_slice(), c1.as_mut_slice()];
+            gemm_packed_many(&mut cs, &[&a, &a], &pb, 2, false, false);
+        }
+        assert_eq!(c0, vec![0.0; 4]);
+        assert_eq!(c1, vec![0.0; 4]);
     }
 
     #[test]

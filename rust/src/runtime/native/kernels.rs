@@ -17,10 +17,12 @@
 //! the same reason.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
-use super::gemm::gemm_into;
+use super::gemm::{gemm_into, gemm_packed_into, pack_b_once, PackedB};
 use super::pool::parallel_rows;
 use crate::coeffs::funcs;
+use crate::runtime::params::Params;
 
 /// Epsilon used by every normalization variant.
 pub const NORM_EPS: f32 = 1e-5;
@@ -54,6 +56,49 @@ pub fn matmul_nt_acc_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
 pub fn matmul_tn_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize,
                       k: usize, n: usize) {
     gemm_into(c, a, b, m, k, n, true, false, false);
+}
+
+/// The prepacked panels for parameter `widx` of a split view at B
+/// layout `b_trans`, packing into the base's [`PanelCache`] on first
+/// use. `None` when the view is flat or the parameter trains — those
+/// mutate between steps and must take the per-call packing path.
+///
+/// [`PanelCache`]: crate::runtime::params::PanelCache
+pub fn frozen_packed(params: Params<'_>, widx: usize, k: usize,
+                     n: usize, b_trans: bool) -> Option<Arc<PackedB>> {
+    let (cache, t) = params.frozen_cache(widx)?;
+    let pb = cache.get_or_insert((widx, b_trans), || {
+        let pb = pack_b_once(t.as_f32(), k, n, b_trans);
+        let bytes = pb.nbytes();
+        (pb, bytes)
+    });
+    debug_assert_eq!(pb.shape(), (k, n), "cached panel shape drift");
+    Some(pb)
+}
+
+/// [`matmul_nt_into`] with `b = params[widx]`, served from the shared
+/// base's prepacked-panel cache when the parameter is frozen
+/// (bit-identical — same worker loop, packing skipped), falling back
+/// to the per-call packing path otherwise.
+pub fn matmul_nt_frozen_into(c: &mut [f32], a: &[f32],
+                             params: Params<'_>, widx: usize, m: usize,
+                             k: usize, n: usize) {
+    match frozen_packed(params, widx, k, n, true) {
+        Some(pb) => gemm_packed_into(c, a, &pb, m, false, false),
+        None => matmul_nt_into(c, a, params[widx].as_f32(), m, k, n),
+    }
+}
+
+/// [`matmul_nn_into`] with `b = params[widx]` — cache-served like
+/// [`matmul_nt_frozen_into`], at the untransposed B layout (the
+/// `dx = dy · W` backward product).
+pub fn matmul_nn_frozen_into(c: &mut [f32], a: &[f32],
+                             params: Params<'_>, widx: usize, m: usize,
+                             k: usize, n: usize) {
+    match frozen_packed(params, widx, k, n, false) {
+        Some(pb) => gemm_packed_into(c, a, &pb, m, false, false),
+        None => matmul_nn_into(c, a, params[widx].as_f32(), m, k, n),
+    }
 }
 
 /// Allocating wrapper over [`matmul_nn_into`].

@@ -9,13 +9,16 @@
 use anyhow::Result;
 
 use super::super::arena::Arena;
+use super::super::gemm::gemm_packed_many;
 use super::super::kernels::{
-    add_bias, colsum_into, matmul_nn_acc_into, matmul_nn_into,
-    matmul_nt_acc_into, matmul_nt_into, matmul_tn_into,
+    add_bias, colsum_into, frozen_packed, matmul_nn_acc_into,
+    matmul_nn_frozen_into, matmul_nn_into, matmul_nt_acc_into,
+    matmul_nt_frozen_into, matmul_tn_into,
 };
 use super::super::model::NetCfg;
 use super::tape::{Composer, Kind, SlotId, TapeReader, TapeWriter};
-use super::{BwdCtx, FwdCtx, Layer, ParamReg};
+use super::{bwd_each, fwd_each, BwdCtx, BwdLane, FwdCtx, FwdLane, Layer,
+            ParamReg};
 use crate::runtime::params::Params;
 
 /// Where a linear finds its input residual in the backward pass.
@@ -159,8 +162,8 @@ impl LinOp {
             tape.push_f32(arena, slot, x)?;
         }
         let mut y = arena.take_f32(rows * self.dout);
-        matmul_nt_into(&mut y, x, params[self.w].as_f32(), rows, self.din,
-                       self.dout);
+        matmul_nt_frozen_into(&mut y, x, params, self.w, rows, self.din,
+                              self.dout);
         if let Some(bi) = self.b {
             add_bias(&mut y, params[bi].as_f32());
         }
@@ -169,8 +172,8 @@ impl LinOp {
         {
             let r = self.rank;
             let mut u = arena.take_f32(rows * r);
-            matmul_nt_into(&mut u, x, params[lai].as_f32(), rows,
-                           self.din, r);
+            matmul_nt_frozen_into(&mut u, x, params, lai, rows,
+                                  self.din, r);
             tape.push_f32(arena, us, &u)?;
             matmul_nt_acc_into(&mut y, &u, params[lbi].as_f32(), rows, r,
                                self.dout);
@@ -188,6 +191,17 @@ impl LinOp {
     /// (the Mesa approximation).
     pub fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader,
                dy: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.bwd_with(ctx, tape, dy, rows, None)
+    }
+
+    /// [`LinOp::bwd`] with an optionally precomputed main product
+    /// `dx = dy·W`. The fused cross-session path batches that GEMM
+    /// across lanes before the per-lane chain runs; `dy·W` reads only
+    /// `dy` and the frozen `W`, independent of everything the chain
+    /// computes, so hoisting it is bit-invisible per session.
+    fn bwd_with(&self, ctx: &mut BwdCtx, tape: &mut TapeReader,
+                dy: &[f32], rows: usize,
+                dx_pre: Option<Vec<f32>>) -> Result<Vec<f32>> {
         let u = match self.u_slot {
             Some(s) => Some(tape.pop(s)?),
             None => None,
@@ -211,9 +225,15 @@ impl LinOp {
                 ctx.acc(bi, db);
             }
         }
-        let mut dx = ctx.arena.take_f32(rows * self.din);
-        matmul_nn_into(&mut dx, dy, ctx.params[self.w].as_f32(), rows,
-                       self.dout, self.din);
+        let mut dx = match dx_pre {
+            Some(dx) => dx,
+            None => {
+                let mut dx = ctx.arena.take_f32(rows * self.din);
+                matmul_nn_frozen_into(&mut dx, dy, ctx.params, self.w,
+                                      rows, self.dout, self.din);
+                dx
+            }
+        };
         if let (Some(lai), Some(lbi)) = (self.la, self.lb) {
             let r = self.rank;
             let uu = u.expect("lora_u residual missing").as_f32();
@@ -281,6 +301,134 @@ impl Layer for Linear {
         let dx = self.op.bwd(ctx, tape, &dy, self.rows)?;
         ctx.arena.put_f32(dy);
         ctx.dh = dx;
+        Ok(())
+    }
+
+    /// Fused cross-tenant forward: when every lane reads the same
+    /// frozen `W` through one shared [`PanelCache`], the main product
+    /// `y = x·Wᵀ` runs as a single [`gemm_packed_many`] sweep — each
+    /// KC block of the packed panel visits all N activation blocks
+    /// before the k cursor advances. Bias, LoRA, and tape pushes stay
+    /// per-lane, in the serial op order, so each lane's step remains
+    /// bit-identical to its serial twin. Falls back to the per-lane
+    /// walk whenever `W` trains or the lanes do not share a base.
+    ///
+    /// [`PanelCache`]: crate::runtime::params::PanelCache
+    fn fwd_many(&self, arena: &mut Arena,
+                lanes: &mut [FwdLane<'_>]) -> Result<()> {
+        let fusable = lanes.len() > 1 && {
+            let mut caches =
+                lanes.iter().map(|l| l.params.frozen_cache(self.op.w));
+            match caches.next().flatten() {
+                Some((c0, _)) => caches.all(
+                    |c| matches!(c, Some((c, _)) if std::ptr::eq(c, c0)),
+                ),
+                None => false,
+            }
+        };
+        if !fusable {
+            return fwd_each(self, arena, lanes);
+        }
+        let pb = frozen_packed(lanes[0].params, self.op.w, self.op.din,
+                               self.op.dout, true)
+            .expect("frozen_cache verified for every lane");
+        let rows = self.rows;
+        // per-lane prologue: input save + output buffer
+        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(lanes.len());
+        for lane in lanes.iter_mut() {
+            if let XSrc::Own(slot) = self.op.x_src {
+                lane.tape.push_f32(arena, slot, &lane.h)?;
+            }
+            ys.push(arena.take_f32(rows * self.op.dout));
+        }
+        // one packed sweep across every lane's activation block
+        {
+            let mut crefs: Vec<&mut [f32]> =
+                ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+            let xrefs: Vec<&[f32]> =
+                lanes.iter().map(|l| l.h.as_slice()).collect();
+            gemm_packed_many(&mut crefs, &xrefs, &pb, rows, false,
+                             false);
+        }
+        // per-lane epilogue: bias, LoRA, activation handoff
+        for (lane, mut y) in lanes.iter_mut().zip(ys) {
+            if let Some(bi) = self.op.b {
+                add_bias(&mut y, lane.params[bi].as_f32());
+            }
+            if let (Some(lai), Some(lbi), Some(us)) =
+                (self.op.la, self.op.lb, self.op.u_slot)
+            {
+                let r = self.op.rank;
+                let mut u = arena.take_f32(rows * r);
+                matmul_nt_frozen_into(&mut u, &lane.h, lane.params, lai,
+                                      rows, self.op.din, r);
+                lane.tape.push_f32(arena, us, &u)?;
+                matmul_nt_acc_into(&mut y, &u,
+                                   lane.params[lbi].as_f32(), rows, r,
+                                   self.op.dout);
+                arena.put_f32(u);
+            }
+            let old = std::mem::replace(&mut lane.h, y);
+            arena.put_f32(old);
+        }
+        Ok(())
+    }
+
+    /// Fused cross-tenant backward: the main product `dx = dy·W`
+    /// (frozen `W`, untransposed layout) is batched across lanes, then
+    /// the per-lane chain (tape pops, LoRA gradients) runs with the
+    /// precomputed product — `dy·W` reads nothing the chain writes, so
+    /// hoisting it is bit-invisible per session.
+    fn bwd_many(&self, arena: &mut Arena,
+                lanes: &mut [BwdLane<'_>]) -> Result<()> {
+        let fusable = lanes.len() > 1 && {
+            let mut caches =
+                lanes.iter().map(|l| l.params.frozen_cache(self.op.w));
+            match caches.next().flatten() {
+                Some((c0, _)) => caches.all(
+                    |c| matches!(c, Some((c, _)) if std::ptr::eq(c, c0)),
+                ),
+                None => false,
+            }
+        };
+        if !fusable {
+            return bwd_each(self, arena, lanes);
+        }
+        let pb = frozen_packed(lanes[0].params, self.op.w, self.op.dout,
+                               self.op.din, false)
+            .expect("frozen_cache verified for every lane");
+        let rows = self.rows;
+        let mut dxs: Vec<Vec<f32>> = (0..lanes.len())
+            .map(|_| arena.take_f32(rows * self.op.din))
+            .collect();
+        {
+            let mut crefs: Vec<&mut [f32]> =
+                dxs.iter_mut().map(|d| d.as_mut_slice()).collect();
+            let dyrefs: Vec<&[f32]> =
+                lanes.iter().map(|l| l.dh.as_slice()).collect();
+            gemm_packed_many(&mut crefs, &dyrefs, &pb, rows, false,
+                             false);
+        }
+        for (lane, dx) in lanes.iter_mut().zip(dxs) {
+            let dy = std::mem::take(&mut lane.dh);
+            let dx = {
+                let mut ctx = BwdCtx {
+                    params: lane.params,
+                    infos: lane.infos,
+                    arena: &mut *arena,
+                    x: lane.x,
+                    y: lane.y,
+                    dh: Vec::new(),
+                    grads: lane.grads.as_mut_slice(),
+                    profiler: None,
+                };
+                let dx = self.op.bwd_with(&mut ctx, &mut lane.tape,
+                                          &dy, rows, Some(dx))?;
+                ctx.arena.put_f32(dy);
+                dx
+            };
+            lane.dh = dx;
+        }
         Ok(())
     }
 }

@@ -186,6 +186,98 @@ impl BwdCtx<'_> {
     }
 }
 
+/// One fused session's forward state in the cross-tenant `_many` walk:
+/// the per-session pieces of [`FwdCtx`] (params view, batch, running
+/// activation, tape) — everything except the arena, which the walk
+/// shares across lanes.
+pub struct FwdLane<'a> {
+    /// The session's parameter view (split view onto the shared base).
+    pub params: Params<'a>,
+    /// Input batch.
+    pub x: &'a Tensor,
+    /// Target batch.
+    pub y: &'a Tensor,
+    /// Running activation.
+    pub h: Vec<f32>,
+    /// Loss, set by the head.
+    pub loss: f32,
+    /// Task metric, set by the head.
+    pub metric: f32,
+    /// The session's private residual tape.
+    pub tape: TapeWriter<'a>,
+}
+
+/// One fused session's backward state (see [`FwdLane`]).
+pub struct BwdLane<'a> {
+    /// The session's parameter view.
+    pub params: Params<'a>,
+    /// Parameter layout (trainability gates gradient work).
+    pub infos: &'a [ParamInfo],
+    /// Input batch.
+    pub x: &'a Tensor,
+    /// Target batch.
+    pub y: &'a Tensor,
+    /// Running gradient.
+    pub dh: Vec<f32>,
+    /// Gradient staging slots, one per parameter (manifest order).
+    pub grads: Vec<Option<Vec<f32>>>,
+    /// The session's private tape reader.
+    pub tape: TapeReader<'a>,
+}
+
+/// The generic per-lane forward walk: run `layer.fwd` once per lane
+/// with a context assembled from the lane's state. This is both the
+/// [`Layer::fwd_many`] default body and the fallback layers with a
+/// fused override use when fusion preconditions fail. Bit-identity per
+/// lane is by construction — the exact serial `fwd` runs on the exact
+/// serial state; lanes differ from N serial calls only in arena buffer
+/// interleaving, which is pooling, not arithmetic. Profiling is off in
+/// lane mode.
+pub fn fwd_each<L: Layer + ?Sized>(layer: &L, arena: &mut Arena,
+                                   lanes: &mut [FwdLane<'_>])
+                                   -> Result<()> {
+    for lane in lanes.iter_mut() {
+        let mut ctx = FwdCtx {
+            params: lane.params,
+            arena: &mut *arena,
+            x: lane.x,
+            y: lane.y,
+            h: std::mem::take(&mut lane.h),
+            loss: lane.loss,
+            metric: lane.metric,
+            profiler: None,
+        };
+        let res = layer.fwd(&mut ctx, &mut lane.tape);
+        lane.h = std::mem::take(&mut ctx.h);
+        lane.loss = ctx.loss;
+        lane.metric = ctx.metric;
+        res?;
+    }
+    Ok(())
+}
+
+/// The generic per-lane backward walk (see [`fwd_each`]).
+pub fn bwd_each<L: Layer + ?Sized>(layer: &L, arena: &mut Arena,
+                                   lanes: &mut [BwdLane<'_>])
+                                   -> Result<()> {
+    for lane in lanes.iter_mut() {
+        let mut ctx = BwdCtx {
+            params: lane.params,
+            infos: lane.infos,
+            arena: &mut *arena,
+            x: lane.x,
+            y: lane.y,
+            dh: std::mem::take(&mut lane.dh),
+            grads: lane.grads.as_mut_slice(),
+            profiler: None,
+        };
+        let res = layer.bwd(&mut ctx, &mut lane.tape);
+        lane.dh = std::mem::take(&mut ctx.dh);
+        res?;
+    }
+    Ok(())
+}
+
 /// One composable model stage. Implementations push, in `fwd`, exactly
 /// the slots they minted at construction, in mint order — and pop them
 /// in reverse in `bwd`. The tape cursors verify both.
@@ -205,6 +297,23 @@ pub trait Layer {
     /// Backward: transform `ctx.dh`, pop declared residuals in reverse,
     /// accumulate parameter gradients via [`BwdCtx::acc`].
     fn bwd(&self, ctx: &mut BwdCtx, tape: &mut TapeReader) -> Result<()>;
+
+    /// Forward over N fused session lanes. The default runs the serial
+    /// `fwd` once per lane ([`fwd_each`]) — always bit-identical to N
+    /// serial calls. Combinators override it to recurse lane-wise
+    /// (keeping all lanes at the same layer), and [`Linear`] overrides
+    /// it to sweep every lane's activation block through one packed
+    /// frozen-weight panel per KC block.
+    fn fwd_many(&self, arena: &mut Arena,
+                lanes: &mut [FwdLane<'_>]) -> Result<()> {
+        fwd_each(self, arena, lanes)
+    }
+
+    /// Backward over N fused session lanes (see [`Layer::fwd_many`]).
+    fn bwd_many(&self, arena: &mut Arena,
+                lanes: &mut [BwdLane<'_>]) -> Result<()> {
+        bwd_each(self, arena, lanes)
+    }
 }
 
 /// Sequential composition; `bwd` walks the children in reverse.
@@ -272,6 +381,25 @@ impl Layer for Seq {
         }
         Ok(())
     }
+
+    // Layer-major recursion: every lane advances through child `l`
+    // before any lane sees child `l+1`, which is what lets a fused
+    // leaf see all N activation blocks at once.
+    fn fwd_many(&self, arena: &mut Arena,
+                lanes: &mut [FwdLane<'_>]) -> Result<()> {
+        for l in &self.layers {
+            l.fwd_many(arena, lanes)?;
+        }
+        Ok(())
+    }
+
+    fn bwd_many(&self, arena: &mut Arena,
+                lanes: &mut [BwdLane<'_>]) -> Result<()> {
+        for l in self.layers.iter().rev() {
+            l.bwd_many(arena, lanes)?;
+        }
+        Ok(())
+    }
 }
 
 /// Pre-norm residual branch: `h ← h + inner(h)`. The backward pass adds
@@ -314,5 +442,43 @@ impl Layer for Residual {
         super::kernels::add_inplace(&mut ctx.dh, &dkeep);
         ctx.arena.put_f32(dkeep);
         Ok(())
+    }
+
+    // Per-lane skip saves around a lane-wise branch recursion — the
+    // save/add arithmetic per lane is exactly the serial one.
+    fn fwd_many(&self, arena: &mut Arena,
+                lanes: &mut [FwdLane<'_>]) -> Result<()> {
+        let mut keeps = Vec::with_capacity(lanes.len());
+        for lane in lanes.iter() {
+            let mut keep = arena.take_f32(lane.h.len());
+            keep.copy_from_slice(&lane.h);
+            keeps.push(keep);
+        }
+        let res = self.inner.fwd_many(arena, lanes);
+        for (lane, keep) in lanes.iter_mut().zip(keeps) {
+            if res.is_ok() {
+                super::kernels::add_inplace(&mut lane.h, &keep);
+            }
+            arena.put_f32(keep);
+        }
+        res
+    }
+
+    fn bwd_many(&self, arena: &mut Arena,
+                lanes: &mut [BwdLane<'_>]) -> Result<()> {
+        let mut dkeeps = Vec::with_capacity(lanes.len());
+        for lane in lanes.iter() {
+            let mut dkeep = arena.take_f32(lane.dh.len());
+            dkeep.copy_from_slice(&lane.dh);
+            dkeeps.push(dkeep);
+        }
+        let res = self.inner.bwd_many(arena, lanes);
+        for (lane, dkeep) in lanes.iter_mut().zip(dkeeps) {
+            if res.is_ok() {
+                super::kernels::add_inplace(&mut lane.dh, &dkeep);
+            }
+            arena.put_f32(dkeep);
+        }
+        res
     }
 }

@@ -25,8 +25,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::runtime::{Artifact, Backend, Executor, FrozenBase, FwdOut,
-                     Manifest, Params, Tensor};
+use crate::runtime::{Artifact, Backend, BwdSplitJob, Executor,
+                     FrozenBase, FwdOut, FwdSplitJob, Manifest, Params,
+                     Tensor};
 
 pub use arena::{Arena, ArenaStats};
 pub use layers::Profiler;
@@ -126,6 +127,43 @@ impl Executor for NativeExec {
                      residuals: &[Tensor], x: &Tensor,
                      y: &Tensor) -> Result<Vec<Tensor>> {
         self.bwd_view(Params::Split { base, trainable }, residuals, x, y)
+    }
+
+    fn run_fwd_split_many(&self, base: &FrozenBase,
+                          jobs: &[FwdSplitJob<'_>])
+                          -> Result<Vec<FwdOut>> {
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        let view: Vec<(Params<'_>, &Tensor, &Tensor)> = jobs
+            .iter()
+            .map(|j| {
+                (Params::Split { base, trainable: j.trainable }, j.x, j.y)
+            })
+            .collect();
+        let outs = self.model.forward_many(&mut arena, &view)?;
+        Ok(outs
+            .into_iter()
+            .map(|(loss, metric, residuals)| FwdOut {
+                loss,
+                metric,
+                residuals,
+            })
+            .collect())
+    }
+
+    fn run_bwd_split_many(&self, base: &FrozenBase,
+                          jobs: &[BwdSplitJob<'_>])
+                          -> Result<Vec<Vec<Tensor>>> {
+        let mut arena =
+            self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        let view: Vec<(Params<'_>, &[Tensor], &Tensor, &Tensor)> = jobs
+            .iter()
+            .map(|j| {
+                (Params::Split { base, trainable: j.trainable },
+                 j.residuals, j.x, j.y)
+            })
+            .collect();
+        self.model.backward_many(&mut arena, &view)
     }
 
     fn supports_split(&self) -> bool {

@@ -25,7 +25,7 @@ use super::layers::{
     Linear, Norm as NormLayer, ParamReg, Profiler, Residual, Seq,
     SlotInfo, SwiGlu, TapeReader, TapeWriter,
 };
-use super::layers::{BwdCtx, FwdCtx};
+use super::layers::{BwdCtx, BwdLane, FwdCtx, FwdLane};
 use crate::coeffs::funcs::{ReluComb, PAPER_GELU, PAPER_SILU};
 use crate::runtime::manifest::ParamInfo;
 use crate::runtime::params::Params;
@@ -557,6 +557,86 @@ impl Model {
         ctx.arena.put_f32(h);
         let res = tape.finish()?;
         Ok((ctx.loss, ctx.metric, res))
+    }
+
+    /// Fused multi-session forward: one walk of the layer stack
+    /// advances every job through each layer before the next layer
+    /// runs, so fused leaves (the frozen-weight linears) sweep all N
+    /// activation blocks through one packed panel. Per job the result
+    /// is bit-identical to [`Model::forward_view`] — the lanes share
+    /// only the arena (buffer pooling) and the read-only base.
+    pub fn forward_many(&self, arena: &mut Arena,
+                        jobs: &[(Params<'_>, &Tensor, &Tensor)])
+                        -> Result<Vec<(f32, f32, Vec<Tensor>)>> {
+        let mut lanes: Vec<FwdLane<'_>> =
+            Vec::with_capacity(jobs.len());
+        for &(params, x, y) in jobs {
+            ensure!(params.len() == self.infos.len(),
+                    "param arity: got {}, expected {}", params.len(),
+                    self.infos.len());
+            self.check_batch(x, y)?;
+            lanes.push(FwdLane {
+                params,
+                x,
+                y,
+                h: Vec::new(),
+                loss: 0.0,
+                metric: 0.0,
+                tape: TapeWriter::new(&self.schema),
+            });
+        }
+        self.seq.fwd_many(arena, &mut lanes)?;
+        let mut out = Vec::with_capacity(lanes.len());
+        for lane in lanes {
+            arena.put_f32(lane.h);
+            let res = lane.tape.finish()?;
+            out.push((lane.loss, lane.metric, res));
+        }
+        Ok(out)
+    }
+
+    /// Fused multi-session backward (see [`Model::forward_many`]):
+    /// per-job gradients bit-identical to [`Model::backward_view`], in
+    /// job order.
+    pub fn backward_many(&self, arena: &mut Arena,
+                         jobs: &[(Params<'_>, &[Tensor], &Tensor,
+                                  &Tensor)])
+                         -> Result<Vec<Vec<Tensor>>> {
+        let mut lanes: Vec<BwdLane<'_>> =
+            Vec::with_capacity(jobs.len());
+        for &(params, residuals, x, y) in jobs {
+            ensure!(params.len() == self.infos.len(), "param arity");
+            self.check_batch(x, y)?;
+            let mut grads: Vec<Option<Vec<f32>>> = Vec::new();
+            grads.resize_with(self.infos.len(), || None);
+            lanes.push(BwdLane {
+                params,
+                infos: &self.infos,
+                x,
+                y,
+                dh: Vec::new(),
+                grads,
+                tape: TapeReader::new(&self.schema, residuals)?,
+            });
+        }
+        self.seq.bwd_many(arena, &mut lanes)?;
+        let mut out = Vec::with_capacity(lanes.len());
+        for mut lane in lanes {
+            lane.tape.finish()?;
+            let mut gs = Vec::new();
+            for (i, info) in self.infos.iter().enumerate() {
+                if info.trainable {
+                    let g = lane.grads[i]
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!(
+                            "missing gradient for {}", info.name))?;
+                    gs.push(arena.tensor_from_f32(&info.shape, &g));
+                    arena.put_f32(g);
+                }
+            }
+            out.push(gs);
+        }
+        Ok(out)
     }
 
     /// Backward pass with a throwaway arena (tests / one-shot callers).

@@ -15,13 +15,97 @@
 //! shrinks: the activation tape, plus the (tiny) trainable slice and
 //! its optimizer state.
 
+use std::any::Any;
+use std::collections::HashMap;
 use std::ops::Index;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 use crate::util::hash::Fnv64;
+
+/// Step-persistent cache of derived read-only forms of frozen
+/// parameters — concretely, the native backend's prepacked GEMM
+/// B-panels ([`crate::runtime::native::gemm::PackedB`]), stored
+/// type-erased so this module stays backend-independent.
+///
+/// Safety of the keying: entries are keyed by `(manifest param index,
+/// layout flag)` and the cache lives **inside** the [`FrozenBase`]
+/// that owns the tensors the entries were derived from. Frozen tensors
+/// are immutable for the base's whole lifetime and the cache cannot
+/// outlive them, so an entry can never go stale — there is no
+/// invalidation path because there is nothing to invalidate. Trainable
+/// parameters (which mutate every optimizer step) are *not* cacheable
+/// here by construction: they live outside the base.
+///
+/// The packed panels are derived data and are deliberately **not**
+/// part of the admission memmodel (a packed panel is at most one extra
+/// copy of the frozen operand, shared by every session on the base);
+/// [`PanelCache::nbytes`] reports the residency for observability.
+pub struct PanelCache {
+    entries: Mutex<HashMap<(usize, bool),
+                           (Arc<dyn Any + Send + Sync>, u64)>>,
+}
+
+impl Default for PanelCache {
+    fn default() -> Self {
+        PanelCache::new()
+    }
+}
+
+impl PanelCache {
+    pub fn new() -> PanelCache {
+        PanelCache { entries: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch the cached value for `key`, packing it on first use.
+    /// `make` returns the value plus its resident byte count. The lock
+    /// is held across `make`, so concurrent sessions racing on a cold
+    /// key pack it exactly once.
+    pub fn get_or_insert<T, F>(&self, key: (usize, bool),
+                               make: F) -> Arc<T>
+    where
+        T: Any + Send + Sync,
+        F: FnOnce() -> (T, u64),
+    {
+        let mut map =
+            self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        let (entry, _) = map.entry(key).or_insert_with(|| {
+            let (v, bytes) = make();
+            (Arc::new(v) as Arc<dyn Any + Send + Sync>, bytes)
+        });
+        entry
+            .clone()
+            .downcast::<T>()
+            .expect("PanelCache key reused at a different type")
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.entries
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total resident bytes of the cached derived forms (reported for
+    /// observability; excluded from admission accounting — see type
+    /// docs).
+    pub fn nbytes(&self) -> u64 {
+        self.entries
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .map(|(_, b)| *b)
+            .sum()
+    }
+}
 
 /// The frozen side of a split parameter set: manifest-ordered slots,
 /// `None` where the parameter trains (those live in the per-session
@@ -40,6 +124,9 @@ pub struct FrozenBase {
     /// a resumed session may re-attach to an already-resident base
     /// instead of loading a second copy.
     fingerprint: u64,
+    /// Derived read-only forms of the frozen tensors (prepacked GEMM
+    /// panels). Not serialized, not fingerprinted — pure cache.
+    cache: PanelCache,
 }
 
 impl FrozenBase {
@@ -76,7 +163,14 @@ impl FrozenBase {
         let n_trainable = trainable.len();
         let fingerprint = hash.finish();
         Ok((
-            FrozenBase { slots, rank, n_trainable, nbytes, fingerprint },
+            FrozenBase {
+                slots,
+                rank,
+                n_trainable,
+                nbytes,
+                fingerprint,
+                cache: PanelCache::new(),
+            },
             trainable,
         ))
     }
@@ -114,6 +208,12 @@ impl FrozenBase {
     /// base exactly once in manifest order.
     pub fn slot(&self, i: usize) -> Option<&Tensor> {
         self.slots[i].as_ref()
+    }
+
+    /// The base's cache of derived frozen-parameter forms (prepacked
+    /// GEMM panels). Shared by every session on the base.
+    pub fn panel_cache(&self) -> &PanelCache {
+        &self.cache
     }
 
     /// Reassemble a full manifest-ordered parameter vector: frozen
@@ -183,6 +283,21 @@ impl<'a> Params<'a> {
     /// compatibility path for executors that only speak the flat ABI.
     pub fn to_vec(self) -> Vec<Tensor> {
         (0..self.len()).map(|i| self.get(i).clone()).collect()
+    }
+
+    /// The panel cache and tensor for parameter `i`, iff the view is a
+    /// split view *and* parameter `i` is frozen (lives in the shared
+    /// base). `None` for flat views and trainable parameters — both
+    /// may mutate between steps, so their derived forms can never be
+    /// cached by pointer/index.
+    pub fn frozen_cache(self, i: usize)
+                        -> Option<(&'a PanelCache, &'a Tensor)> {
+        match self {
+            Params::Flat(_) => None,
+            Params::Split { base, .. } => {
+                base.slots[i].as_ref().map(|t| (&base.cache, t))
+            }
+        }
     }
 }
 
@@ -302,6 +417,35 @@ mod tests {
     fn split_rejects_wrong_arity() {
         let m = tiny_manifest(&[true, false]);
         assert!(FrozenBase::split(&m, full_params(3)).is_err());
+    }
+
+    #[test]
+    fn panel_cache_packs_once_and_keys_by_index_and_layout() {
+        let m = tiny_manifest(&[false, true]);
+        let (base, trainable) =
+            FrozenBase::split(&m, full_params(2)).unwrap();
+        let cache = base.panel_cache();
+        assert!(cache.is_empty());
+        let mut packs = 0usize;
+        for _ in 0..3 {
+            let v: Arc<Vec<f32>> = cache.get_or_insert((0, true), || {
+                packs += 1;
+                (vec![1.0f32, 2.0], 8)
+            });
+            assert_eq!(*v, vec![1.0, 2.0]);
+        }
+        assert_eq!(packs, 1, "cold key packs exactly once");
+        let _: Arc<Vec<f32>> =
+            cache.get_or_insert((0, false), || (vec![3.0f32], 4));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.nbytes(), 12);
+
+        // frozen_cache: Some only for split views on frozen slots
+        let split = Params::Split { base: &base, trainable: &trainable };
+        assert!(split.frozen_cache(0).is_some());
+        assert!(split.frozen_cache(1).is_none(), "trainable slot");
+        let full = base.join(trainable);
+        assert!(Params::Flat(&full).frozen_cache(0).is_none());
     }
 
     #[test]

@@ -497,6 +497,325 @@ fn suspend_resume_keeps_the_base_stored_once() {
     let _ = std::fs::remove_dir_all(&spool);
 }
 
+// ===== cross-tenant fused execution ==============================
+
+/// Run K jobs through a fused engine and demand bit-identity with
+/// their serial `Trainer` twins, plus conservation of physical passes:
+/// every session-microbatch ran exactly once, fused or serial.
+fn fused_matches_serial(preset: &str) {
+    let rt = rt();
+    let art = Artifact::synth(&rt, preset).unwrap();
+    // uneven budgets: the gang shrinks 3-way → 2-way → singleton
+    let cfgs = [cfg(4, 3), cfg(6, 9), cfg(5, 7)];
+    let serial = serial_runs(&art, &cfgs);
+
+    let mut engine = Engine::unbounded();
+    engine.set_fuse(true);
+    for (i, c) in cfgs.iter().enumerate() {
+        engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
+    }
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 3, "{preset}");
+
+    let fs = engine.fusion_stats();
+    assert!(fs.fused_passes > 0,
+            "{preset}: concurrent same-base sessions never fused");
+    assert_eq!(fs.fused_passes,
+               fs.occupancy.values().sum::<u64>(), "{preset}");
+    // conservation: Σ occupancy·count + serial = total microbatches
+    let micro: u64 = fs
+        .occupancy
+        .iter()
+        .map(|(&n, &c)| n as u64 * c)
+        .sum::<u64>()
+        + fs.serial_passes;
+    let want: u64 = cfgs.iter().map(|c| c.steps as u64).sum();
+    assert_eq!(micro, want, "{preset}: pass accounting leaked");
+
+    for (i, (rows, params)) in serial.iter().enumerate() {
+        let name = format!("s{i}");
+        let r = reports
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("{preset}: {name} missing"));
+        let rep = r.train().expect("completed");
+        assert_eq!(rep.steps, cfgs[i].steps, "{preset}/{name}");
+        let got: Vec<StepSig> = rep
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(&got, rows,
+                   "{preset}/{name}: fused rows diverged from serial");
+        assert_params_eq(&engine.session(&name).unwrap().params(),
+                         params, &format!("{preset}/{name}"));
+    }
+}
+
+#[test]
+fn fused_gang_bit_identical_to_serial_1_thread() {
+    with_threads(1, || fused_matches_serial("vitt_loraqv_regelu2_msln"));
+}
+
+#[test]
+fn fused_gang_bit_identical_to_serial_4_threads() {
+    with_threads(4, || fused_matches_serial("vitt_loraqv_regelu2_msln"));
+}
+
+#[test]
+fn fused_gang_bit_identical_across_presets() {
+    // every residual-ABI flavor: int8 mesa saves, swiglu's gated MLP,
+    // activation checkpointing's recompute path
+    for preset in ["vitt_loraqv_gelu_ln_mesa",
+                   "llama_loraall_silu_rms_swiglu",
+                   "vitt_loraqv_gelu_ln_ckpt"] {
+        fused_matches_serial(preset);
+    }
+}
+
+#[test]
+fn mixed_key_fleet_splits_into_per_base_gangs() {
+    // interleaved admission across two frozen bases: fusion must gang
+    // by base, never across, and everyone still matches their twin
+    let rt = rt();
+    let vit = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let llama = Artifact::synth(&rt, "llama_loraall_silu_rms").unwrap();
+    let vcfgs = [cfg(3, 1), cfg(3, 2)];
+    let lcfgs = [cfg(3, 4), cfg(3, 5)];
+    let vit_serial = serial_runs(&vit, &vcfgs);
+    let llama_serial = serial_runs(&llama, &lcfgs);
+
+    let mut engine = Engine::unbounded();
+    engine.set_fuse(true);
+    engine.admit("v0", &vit, vcfgs[0].clone()).unwrap();
+    engine.admit("l0", &llama, lcfgs[0].clone()).unwrap();
+    engine.admit("v1", &vit, vcfgs[1].clone()).unwrap();
+    engine.admit("l1", &llama, lcfgs[1].clone()).unwrap();
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 4);
+
+    let fs = engine.fusion_stats();
+    // two 2-way gangs per round for 3 rounds; never a cross-base 4-way
+    assert_eq!(fs.occupancy.keys().copied().collect::<Vec<_>>(),
+               vec![2], "gangs crossed a frozen-base boundary");
+    assert_eq!(fs.occupancy[&2], 6);
+    assert_eq!(fs.serial_passes, 0);
+
+    for (name, serial) in [("v0", &vit_serial[0]), ("v1", &vit_serial[1]),
+                           ("l0", &llama_serial[0]),
+                           ("l1", &llama_serial[1])] {
+        let r = reports.iter().find(|r| r.name == name).unwrap();
+        let got: Vec<StepSig> = r
+            .train()
+            .expect("completed")
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(got, serial.0, "{name}: rows diverged");
+        assert_params_eq(&engine.session(name).unwrap().params(),
+                         &serial.1, name);
+    }
+}
+
+#[test]
+fn grad_accum_mismatch_splits_the_gang() {
+    // same frozen base, different grad-accum phase: the fusion key
+    // must separate them (their microbatch cadences disagree), so both
+    // ride singleton gangs through the serial path — and still match
+    // their twins
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let a = cfg(3, 4);
+    let mut b = cfg(3, 5);
+    b.grad_accum = 2;
+    let serial = serial_runs(&art, &[a.clone(), b.clone()]);
+
+    let mut engine = Engine::unbounded();
+    engine.set_fuse(true);
+    engine.admit("s0", &art, a).unwrap();
+    engine.admit("s1", &art, b).unwrap();
+    let reports = engine.run().unwrap();
+    let fs = engine.fusion_stats();
+    assert_eq!(fs.fused_passes, 0,
+               "mismatched grad-accum must never fuse");
+    // 3 steps × 1 micro + 3 steps × 2 micros
+    assert_eq!(fs.serial_passes, 9);
+    for (i, (rows, params)) in serial.iter().enumerate() {
+        let name = format!("s{i}");
+        let r = reports.iter().find(|r| r.name == name).unwrap();
+        let got: Vec<StepSig> = r
+            .train()
+            .expect("completed")
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(&got, rows, "{name}: rows diverged");
+        assert_params_eq(&engine.session(&name).unwrap().params(),
+                         params, &name);
+    }
+}
+
+#[test]
+fn mid_run_suspend_breaks_gang_survivors_bit_identical() {
+    // two 3-way fused rounds, then s1 is evicted mid-run: the gang
+    // must shrink to the survivors (who keep fusing 2-way) and, once
+    // s1 resumes, regrow — with every session, round-tripped or not,
+    // bit-identical to its serial twin
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(5, 3), cfg(5, 9), cfg(5, 7)];
+    let serial = serial_runs(&art, &cfgs);
+    let spool = spool_dir("fuse_suspend");
+
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.set_fuse(true);
+    for (i, c) in cfgs.iter().enumerate() {
+        engine.admit(&format!("s{i}"), &art, c.clone()).unwrap();
+    }
+    assert_eq!(engine.round().unwrap(), 3);
+    assert_eq!(engine.round().unwrap(), 3);
+    engine.suspend("s1").unwrap();
+    assert_eq!(engine.suspended_names(), vec!["s1".to_string()]);
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 3);
+    assert!(engine.suspended_names().is_empty(),
+            "unbounded engine must resume the evictee");
+
+    let fs = engine.fusion_stats();
+    assert!(fs.occupancy.contains_key(&3), "full gang never formed");
+    assert!(fs.occupancy.contains_key(&2),
+            "survivors should have fused 2-way while s1 was out: {:?}",
+            fs.occupancy);
+
+    for (i, (rows, params)) in serial.iter().enumerate() {
+        let name = format!("s{i}");
+        let r = reports.iter().find(|r| r.name == name).unwrap();
+        let got: Vec<StepSig> = r
+            .train()
+            .expect("completed")
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(&got, rows, "{name}: rows diverged");
+        assert_params_eq(&engine.session(&name).unwrap().params(),
+                         params, &name);
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn fault_in_gang_member_quarantines_only_that_member() {
+    use ambp::coordinator::supervisor::FaultKind;
+    use ambp::util::faultpoint;
+    let _g = faultpoint::exclusive();
+    faultpoint::clear();
+    // gb trips a NaN loss on its second step, mid-gang
+    faultpoint::arm("gb/step.loss:1:nan").unwrap();
+
+    let rt = rt();
+    let art = Artifact::synth(&rt, "vitt_loraqv_regelu2_msln").unwrap();
+    let cfgs = [cfg(4, 3), cfg(4, 9), cfg(4, 7)];
+    let serial = serial_runs(&art, &cfgs);
+    let spool = spool_dir("fuse_fault");
+
+    let mut engine = Engine::unbounded();
+    engine.set_spool(spool.clone());
+    engine.set_fuse(true);
+    for (name, c) in ["ga", "gb", "gc"].iter().zip(&cfgs) {
+        engine.admit(name, &art, c.clone()).unwrap();
+    }
+    let reports = engine.run().unwrap();
+    assert_eq!(reports.len(), 3);
+    assert!(engine.fusion_stats().fused_passes > 0,
+            "the fleet should have been fusing when the fault hit");
+
+    // exactly the faulted member is quarantined, at its last good step
+    let rec = reports
+        .iter()
+        .find(|r| r.name == "gb")
+        .unwrap()
+        .fault()
+        .expect("gb should be quarantined");
+    assert_eq!(rec.kind, FaultKind::Numeric);
+    assert_eq!(rec.step, 1, "last good step");
+    assert!(!engine.contains("gb"));
+
+    // the survivors kept fusing and finished bit-identically
+    for (i, name) in [(0usize, "ga"), (2usize, "gc")] {
+        let r = reports.iter().find(|r| r.name == name).unwrap();
+        let got: Vec<StepSig> = r
+            .train()
+            .unwrap_or_else(|| panic!("{name} should complete"))
+            .rows
+            .iter()
+            .map(|row| {
+                (row.loss.to_bits(), row.metric.to_bits(),
+                 row.activation_bytes)
+            })
+            .collect();
+        assert_eq!(got, serial[i].0, "{name}: rows diverged");
+        assert_params_eq(&engine.session(name).unwrap().params(),
+                         &serial[i].1, name);
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn step_events_follow_admission_order_serial_and_fused() {
+    // the StepEvent ordering contract: serial sweeps emit in admission
+    // order; fused sweeps emit gang-by-gang, gangs ordered by their
+    // first member's admission, members in admission order — so the
+    // event stream is a pure function of the admitted fleet
+    use ambp::coordinator::engine::{StepEvent, StepEventKind};
+    let rt = rt();
+    let vit = Artifact::synth(&rt, "vitt_loraqv_gelu_ln").unwrap();
+    let llama = Artifact::synth(&rt, "llama_loraall_silu_rms").unwrap();
+    let stepped_names = |engine: &mut Engine| -> Vec<String> {
+        let mut events: Vec<StepEvent> = Vec::new();
+        engine.round_with(&mut events).unwrap();
+        events
+            .iter()
+            .filter(|e| e.kind == StepEventKind::Stepped)
+            .map(|e| e.name.clone())
+            .collect()
+    };
+
+    let mut serial = Engine::unbounded();
+    serial.admit("v0", &vit, cfg(2, 1)).unwrap();
+    serial.admit("l0", &llama, cfg(2, 2)).unwrap();
+    serial.admit("v1", &vit, cfg(2, 3)).unwrap();
+    assert_eq!(stepped_names(&mut serial), ["v0", "l0", "v1"],
+               "serial sweep must emit in admission order");
+
+    let mut fused = Engine::unbounded();
+    fused.set_fuse(true);
+    fused.admit("v0", &vit, cfg(2, 1)).unwrap();
+    fused.admit("l0", &llama, cfg(2, 2)).unwrap();
+    fused.admit("v1", &vit, cfg(2, 3)).unwrap();
+    // the vit gang (first member v0) precedes l0's singleton gang,
+    // and v1 joins its gang behind v0 despite admitting after l0
+    assert_eq!(stepped_names(&mut fused), ["v0", "v1", "l0"],
+               "fused sweep must emit gang-by-gang in admission order");
+    assert_eq!(stepped_names(&mut fused), ["v0", "v1", "l0"],
+               "ordering must be stable across rounds");
+}
+
 #[test]
 fn names_stay_stable_across_suspension() {
     // regression for the slot-id footgun: evicting slot 0 used to

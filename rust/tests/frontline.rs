@@ -10,8 +10,8 @@ use std::collections::BTreeMap;
 
 use ambp::coordinator::engine::predict;
 use ambp::coordinator::{
-    frontline, traffic, FrontCfg, FrontReport, Policy, TrafficCfg,
-    TrafficJob, TrainCfg, Trainer,
+    frontline, Engine, FrontCfg, FrontReport, Policy, TrafficCfg,
+    TrafficJob, TrainCfg, Trainer, traffic,
 };
 use ambp::runtime::native::pool::with_threads;
 use ambp::runtime::{Artifact, Runtime};
@@ -58,7 +58,18 @@ fn front(policy: Policy, budget: u64, ticks: u64) -> FrontCfg {
         max_ticks: ticks,
         spool: None,
         preempt: false,
+        fuse: false,
     }
+}
+
+/// Fresh per-test spool directory under the OS temp dir.
+fn spool_dir(label: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ambp_frontline_test_{}_{label}", std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
 }
 
 fn arts_for(rt: &Runtime, presets: &[&str]) -> BTreeMap<String, Artifact> {
@@ -254,6 +265,129 @@ fn completed_jobs_bit_identical_to_serial_twins_under_every_policy() {
                    "{policy:?}: completed jobs must be bit-identical \
                     to serial twins");
     }
+}
+
+#[test]
+fn preemption_that_would_strand_the_victim_is_requeued_not_an_error() {
+    // KNOWN.md regression. Resident: one baseline job filling a budget
+    // of exactly (both bases + ours' marginal). Arrival: a
+    // higher-priority ours job on a *different* frozen base. Evicting
+    // the baseline victim admits the new base — which never leaves
+    // residency — after which the victim could never refit
+    // (bases + its marginal > budget): the old behavior evicted
+    // anyway, and once the high-priority job drained, the engine's
+    // scheduling-deadlock detector failed the entire run. The front
+    // line must instead leave the arrival queued until the resident
+    // job retires, then admit it normally — everyone completes.
+    let rt = rt();
+    let arts = arts_for(&rt, &[OURS, BASELINE]);
+    let (bo, co) = costs(&arts, OURS);
+    let (bb, cb) = costs(&arts, BASELINE);
+    assert!(!std::sync::Arc::ptr_eq(&arts[OURS].frozen_base(),
+                                    &arts[BASELINE].frozen_base()),
+            "distinct presets must carry distinct frozen bases");
+    // scenario preconditions, in the memmodel's own numbers
+    assert!(co < cb, "ours marginal {co} must undercut baseline {cb}");
+    assert!(cb <= bo + co,
+            "baseline marginal {cb} must not outweigh ours' whole \
+             session {bo}+{co}");
+    let budget = bb + bo + co;
+    assert!(bb + cb <= budget, "the baseline job must fit alone");
+    assert!(bo + co <= budget, "ours must pass the arrival floor");
+    assert!(bb + cb + bo + co > budget,
+            "ours must not fit beside the baseline job");
+
+    // the engine probe sees the strand coming — and only for the
+    // base-adding job, not for a same-base preemption
+    {
+        let spool = spool_dir("strand_probe");
+        let mut engine = Engine::new(budget);
+        engine.set_spool(spool.clone());
+        engine.enable_preempt().unwrap();
+        engine
+            .admit_prio("j0", &arts[BASELINE], job_cfg(2, 3), 0)
+            .unwrap();
+        assert!(engine.preempt_would_strand(&arts[OURS],
+                                            &job_cfg(2, 5), 10),
+                "evicting the victim for a new-base job leaves it \
+                 unable to ever refit");
+        assert!(!engine.preempt_would_strand(&arts[BASELINE],
+                                             &job_cfg(2, 5), 10),
+                "a same-base preemption keeps the victim refittable");
+        let _ = std::fs::remove_dir_all(&spool);
+    }
+
+    let trace = [job(0, BASELINE, 2, 3, 0), job(1, OURS, 2, 5, 10)];
+    let spool = spool_dir("strand_serve");
+    let mut cfg = front(Policy::FirstFit, budget, 0);
+    cfg.spool = Some(spool.clone());
+    cfg.preempt = true;
+    let rep = frontline::serve(&arts, &trace, &cfg).expect(
+        "a stranding preemption must requeue the arrival, not fail \
+         the run",
+    );
+    let m = &rep.metrics;
+    assert_eq!(m.preemptions, 0, "no doomed eviction may happen");
+    assert_eq!(m.sessions[0].outcome, "completed",
+               "the resident job must run to completion undisturbed");
+    assert_eq!(m.sessions[0].steps, 2);
+    // budget = bases + ours' marginal: after the retire, the arrival
+    // fits exactly and completes
+    assert_eq!(m.sessions[1].outcome, "completed",
+               "the requeued job must be admitted once the victim \
+                retires");
+    assert_eq!(m.completed, 2);
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+#[test]
+fn fused_front_line_bit_identical_with_fused_passes_recorded() {
+    // same binding-budget trace as the serial-twin test, but with
+    // cross-tenant fusion on: per-job results must still match the
+    // serial Trainer twins bit-for-bit, and the fleet metrics must
+    // show that gangs actually formed (fused passes > 0, occupancy
+    // recorded at ≥ 2-way)
+    let rt = rt();
+    let arts = arts_for(&rt, &[OURS]);
+    let (b, c) = costs(&arts, OURS);
+    let budget = b + 2 * c;
+    let trace = seeded_trace();
+
+    let twins: BTreeMap<String, Vec<(u32, u32, u64)>> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, j)| {
+            let mut t = Trainer::new(&arts[OURS],
+                                     job_cfg(j.steps, j.seed))
+                .unwrap();
+            let rows = t
+                .train()
+                .unwrap()
+                .rows
+                .iter()
+                .map(|w| {
+                    (w.loss.to_bits(), w.metric.to_bits(),
+                     w.activation_bytes)
+                })
+                .collect();
+            (format!("j{i}"), rows)
+        })
+        .collect();
+
+    let mut cfg = front(Policy::BestFit, budget, 0);
+    cfg.fuse = true;
+    let rep = frontline::serve(&arts, &trace, &cfg).unwrap();
+    assert_eq!(rep.metrics.completed, trace.len());
+    assert_eq!(row_sigs(&rep), twins,
+               "fused jobs must be bit-identical to serial twins");
+    assert!(rep.metrics.fused_passes > 0,
+            "two concurrent same-preset sessions must have fused");
+    assert!(rep.metrics
+                .gang_occupancy
+                .iter()
+                .any(|&(n, count)| n >= 2 && count > 0),
+            "occupancy histogram must record a ≥2-way gang: {:?}",
+            rep.metrics.gang_occupancy);
 }
 
 #[test]
